@@ -1,0 +1,50 @@
+//! Quickstart: load the AOT artifacts, run inference and a few LRT
+//! training steps through the PJRT runtime — the minimal end-to-end
+//! round trip of the three-layer stack.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+use lrt_nvm::data::online::{Env, OnlineStream, Partition};
+use lrt_nvm::lrt::Variant;
+use lrt_nvm::nn::model::Params;
+use lrt_nvm::runtime::{ArtifactDevice, Runtime};
+use lrt_nvm::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. Load + compile the HLO artifacts (python never runs here).
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    println!(
+        "loaded {} artifacts (rank {} model)",
+        rt.manifest.artifacts.len(),
+        rt.manifest.model.rank
+    );
+
+    // 2. Deploy a fresh model onto the simulated NVM edge device.
+    let mut cfg = RunConfig::default();
+    cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
+    cfg.batch = [5, 5, 5, 5, 10, 10]; // small batches for the demo
+    let params = Params::init(&mut Rng::new(0), cfg.w_bits);
+    let mut dev = ArtifactDevice::new(&rt, cfg, &params)?;
+
+    // 3. Stream a handful of online samples through the fused train step.
+    let stream = OnlineStream::new(0, Partition::Online, Env::Control);
+    for t in 0..25u64 {
+        let s = stream.sample(t);
+        let (loss, correct) = dev.step(&s.image, s.label)?;
+        println!(
+            "step {t:>2}: label={} loss={loss:.3} correct={correct} \
+             nvm_writes={}",
+            s.label,
+            dev.total_writes()
+        );
+    }
+    println!(
+        "done: {} total cell writes, worst cell {} writes, {} kappa skips",
+        dev.total_writes(),
+        dev.max_cell_writes(),
+        dev.kappa_skips
+    );
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Transfer-learning recovery (Table 1 scenario): a noise-degraded
+//! pretrained head over synthetic ResNet-34-like features recovers its
+//! accuracy online. Compares SGD / UORO / biased / unbiased LRT at one
+//! learning rate.
+//!
+//!   cargo run --release --example transfer_recovery
+
+use lrt_nvm::transfer::{make_problem, recover, Algo};
+
+fn main() {
+    let n_classes = 20;
+    let samples = 2_000;
+    let (gen, head, start_acc) = make_problem(n_classes, 1);
+    println!(
+        "pretrained head degraded to {:.1}% top-1 over {n_classes} \
+         classes x 512 synthetic features (paper starts at 52.7%)\n",
+        start_acc * 100.0
+    );
+    println!("online recovery, {samples} samples, B=100, max-norm, lr=0.01:");
+    for algo in [
+        Algo::Sgd,
+        Algo::Uoro,
+        Algo::LrtBiased(4),
+        Algo::LrtUnbiased(4),
+    ] {
+        let t0 = std::time::Instant::now();
+        let acc = recover(&gen, &head, algo, 0.01, samples, 500, 42);
+        println!(
+            "  {:<18} final acc {:.1}%  (recovery {:+.1} pts, {:.1}s)",
+            algo.name(),
+            acc * 100.0,
+            (acc - start_acc) * 100.0,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!(
+        "\nexpected shape (paper Table 1): LRT variants recover several \
+         points beyond inference; SGD/UORO are weak at this lr."
+    );
+}

@@ -1,0 +1,206 @@
+"""AOT compilation: lower the L2/L1 computations to HLO text artifacts.
+
+Emits into ``artifacts/``:
+
+  forward.hlo.txt    inference:            params+bn -> logits, pred
+  step_lrt.hlo.txt   fused LRT train step: everything -> new aux state
+  step_sgd.hlo.txt   baseline SGD step:    everything -> new params/state
+  flush_lrt.hlo.txt  LRT -> candidate quantized weights + update density
+  manifest.json      ordered input/output name/shape/dtype tables + the
+                     model/quant/LRT configuration the rust side mirrors
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: the
+xla crate's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Python runs ONCE here at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, quant
+
+# ---------------------------------------------------------------------------
+# Canonical name orders — the rust runtime marshals literals in exactly
+# this order (runtime/manifest.rs).
+# ---------------------------------------------------------------------------
+
+N = model.N_LAYERS
+NC = len(model.CONVS)
+
+WEIGHTS = [f"w{i}" for i in range(1, N + 1)]
+BIASES = [f"b{i}" for i in range(1, N + 1)]
+GAMMAS = [f"g{i}" for i in range(1, NC + 1)]
+BETAS = [f"be{i}" for i in range(1, NC + 1)]
+PARAMS = WEIGHTS + BIASES + GAMMAS + BETAS
+
+BN_STATE = [f"bnmu{i}" for i in range(1, NC + 1)] + [
+    f"bnsq{i}" for i in range(1, NC + 1)
+]
+LRT_STATE = (
+    [f"ql{i}" for i in range(1, N + 1)]
+    + [f"qr{i}" for i in range(1, N + 1)]
+    + [f"cx{i}" for i in range(1, N + 1)]
+)
+MN_STATE = [f"mn{i}" for i in range(1, N + 1)] + ["mnk"]
+STATES = BN_STATE + LRT_STATE + MN_STATE
+
+SCALARS_LRT = ["lr_b", "unbiased", "use_maxnorm", "kappa_th", "bn_eta", "bn_stream"]
+SCALARS_SGD = [
+    "lr_w", "lr_b", "train_weights", "train_bias", "use_maxnorm",
+    "bn_eta", "bn_stream",
+]
+
+OUT_LRT = (
+    ["loss", "pred", "diag"] + BIASES + GAMMAS + BETAS + BN_STATE
+    + LRT_STATE + MN_STATE
+)
+OUT_SGD = (
+    ["loss", "pred"] + WEIGHTS + BIASES + GAMMAS + BETAS + BN_STATE + MN_STATE
+)
+OUT_FLUSH = WEIGHTS + ["density"]
+OUT_FWD = ["logits", "pred"]
+
+
+def _example_values(rank: int):
+    """Example arrays fixing every input's shape/dtype for lowering."""
+    params = model.init_params(jax.random.PRNGKey(0))
+    states = model.init_states(rank)
+    ex = dict(params)
+    ex.update(states)
+    ex["image"] = jnp.zeros(model.IMG_SHAPE, jnp.float32)
+    ex["label"] = jnp.zeros((), jnp.int32)
+    ex["key"] = jnp.zeros((2,), jnp.uint32)
+    for s in set(SCALARS_LRT + SCALARS_SGD):
+        ex[s] = jnp.zeros((), jnp.float32)
+    ex["lr_eff"] = jnp.zeros((N,), jnp.float32)
+    return ex
+
+
+def _split(names, args):
+    return {n: a for n, a in zip(names, args)}
+
+
+# Each artifact = (input name order, output name order, fn(*arrays)->tuple).
+
+
+def _fn_forward(*args):
+    d = _split(PARAMS + BN_STATE + ["image"], args)
+    out = model.forward_infer(d, d, d["image"])
+    return tuple(out[k] for k in OUT_FWD)
+
+
+def _fn_step_lrt(*args):
+    names = PARAMS + STATES + ["image", "label", "key"] + SCALARS_LRT
+    d = _split(names, args)
+    out = model.train_step_lrt(
+        d, d, d["image"], d["label"], d["key"], d["lr_b"], d["unbiased"],
+        d["use_maxnorm"], d["kappa_th"], d["bn_eta"], d["bn_stream"],
+    )
+    return tuple(out[k] for k in OUT_LRT)
+
+
+def _fn_step_sgd(*args):
+    names = PARAMS + BN_STATE + MN_STATE + ["image", "label"] + SCALARS_SGD
+    d = _split(names, args)
+    out = model.train_step_sgd(
+        d, d, d["image"], d["label"], d["lr_w"], d["lr_b"],
+        d["train_weights"], d["train_bias"], d["use_maxnorm"], d["bn_eta"],
+        d["bn_stream"],
+    )
+    return tuple(out[k] for k in OUT_SGD)
+
+
+def _fn_flush(*args):
+    names = LRT_STATE + WEIGHTS + ["lr_eff"]
+    d = _split(names, args)
+    out = model.flush(d, d, d["lr_eff"])
+    return tuple(out[k] for k in OUT_FLUSH)
+
+
+ARTIFACTS = {
+    "forward": (PARAMS + BN_STATE + ["image"], OUT_FWD, _fn_forward),
+    "step_lrt": (
+        PARAMS + STATES + ["image", "label", "key"] + SCALARS_LRT,
+        OUT_LRT,
+        _fn_step_lrt,
+    ),
+    "step_sgd": (
+        PARAMS + BN_STATE + MN_STATE + ["image", "label"] + SCALARS_SGD,
+        OUT_SGD,
+        _fn_step_sgd,
+    ),
+    "flush_lrt": (LRT_STATE + WEIGHTS + ["lr_eff"], OUT_FLUSH, _fn_flush),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def build(outdir: str, rank: int):
+    os.makedirs(outdir, exist_ok=True)
+    ex = _example_values(rank)
+    manifest = {
+        "model": {
+            "layer_dims": model.LAYER_DIMS,
+            "alphas": model.ALPHAS,
+            "convs": [list(c) for c in model.CONVS],
+            "fcs": [list(f) for f in model.FCS],
+            "rank": rank,
+            "default_batch": model.DEFAULT_BATCH,
+            "num_classes": model.NUM_CLASSES,
+            "img_shape": list(model.IMG_SHAPE),
+            "w_bits": quant.W_BITS,
+        },
+        "artifacts": {},
+    }
+    for name, (in_names, out_names, fn) in ARTIFACTS.items():
+        args = [ex[n] for n in in_names]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [dict(name=n, **_spec(ex[n])) for n in in_names],
+            "outputs": [
+                dict(name=n, **_spec(o)) for n, o in zip(out_names, outs)
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(in_names)} in / "
+              f"{len(out_names)} out)")
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--rank", type=int, default=model.DEFAULT_RANK)
+    args = ap.parse_args()
+    build(args.out, args.rank)
+
+
+if __name__ == "__main__":
+    main()

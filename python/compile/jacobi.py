@@ -1,0 +1,72 @@
+"""Portable small-matrix SVD via one-sided Jacobi rotations.
+
+``jnp.linalg.svd`` lowers to a LAPACK custom-call that the rust PJRT CPU
+client cannot execute, so the (q x q) SVD at the heart of the LRT update
+(Section 4.1.1) is implemented here with plain jnp ops only. One-sided
+Jacobi (Hestenes) orthogonalizes the columns of ``A V`` by plane rotations;
+after ``sweeps`` full sweeps the column norms are the singular values.
+
+q is tiny (rank r + 1, typically 3..17), so a fixed number of sweeps is
+both fast and accurate to ~1e-6 for well-conditioned inputs; LRT gates
+badly-conditioned updates anyway (the kappa_th heuristic, Section 7.2).
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def _rotate(aw, v, i, j):
+    """One Jacobi rotation zeroing the (i, j) off-diagonal Gram entry."""
+    ai = aw[:, i]
+    aj = aw[:, j]
+    alpha = jnp.dot(ai, ai)
+    beta = jnp.dot(aj, aj)
+    gamma = jnp.dot(ai, aj)
+
+    # Stable rotation computation (Rutishauser). When gamma ~ 0 the columns
+    # are already orthogonal and we use the identity rotation.
+    zeta = (beta - alpha) / (2.0 * jnp.where(jnp.abs(gamma) < EPS, 1.0, gamma))
+    t = jnp.sign(zeta) / (jnp.abs(zeta) + jnp.sqrt(1.0 + zeta * zeta))
+    t = jnp.where(jnp.abs(gamma) < EPS, 0.0, t)
+    c = 1.0 / jnp.sqrt(1.0 + t * t)
+    s = c * t
+
+    new_ai = c * ai - s * aj
+    new_aj = s * ai + c * aj
+    aw = aw.at[:, i].set(new_ai).at[:, j].set(new_aj)
+
+    vi = v[:, i]
+    vj = v[:, j]
+    v = v.at[:, i].set(c * vi - s * vj).at[:, j].set(s * vi + c * vj)
+    return aw, v
+
+
+def svd_jacobi(a, sweeps: int = 8):
+    """SVD of a small square matrix: ``a = u @ diag(s) @ v.T``.
+
+    Returns ``(u, s, v)`` with singular values sorted descending. Columns
+    of ``u`` corresponding to (near-)zero singular values are zero vectors;
+    this preserves ``u @ diag(s) @ v.T == a`` exactly, which is the only
+    property the LRT update needs (Section 4.1.1).
+    """
+    n = a.shape[0]
+    pairs = [(i, j) for i in range(n - 1) for j in range(i + 1, n)]
+
+    def sweep(carry, _):
+        aw, v = carry
+        for i, j in pairs:
+            aw, v = _rotate(aw, v, i, j)
+        return (aw, v), jnp.float32(0)
+
+    (aw, v), _ = jax.lax.scan(
+        sweep, (a, jnp.eye(n, dtype=a.dtype)), None, length=sweeps
+    )
+
+    s = jnp.sqrt(jnp.sum(aw * aw, axis=0))
+    u = aw / jnp.where(s > EPS, s, 1.0)[None, :]
+    u = jnp.where((s > EPS)[None, :], u, 0.0)
+
+    order = jnp.argsort(-s)
+    return u[:, order], s[order], v[:, order]

@@ -1,0 +1,117 @@
+"""Pallas kernels for the LRT rank-update hot-spot (Section 4.2).
+
+Two kernels:
+
+- ``mgs_project``: one inner loop of modified Gram-Schmidt — project a new
+  sample vector onto the r tracked basis columns, write the basis
+  coefficients and install the normalized residual as column q-1. This is
+  the sequential, bandwidth-bound part of Algorithm 1.
+- ``basis_update``: the basis rotation ``Q <- Q @ M`` with
+  ``M = U_C @ Q_x`` (n x q times q x q). This is the MXU-friendly part; on
+  TPU the (n, q) operand stays resident in VMEM across the per-pixel scan
+  while only the small M changes.
+
+Both run with ``interpret=True`` — the CPU PJRT client cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and real-TPU
+performance is estimated statically (DESIGN.md section 3).
+
+TPU mapping notes (Hardware-Adaptation): q is padded to the 128-wide lane
+tile; rows are tiled in 8-row sublanes. For the paper's largest layer
+(n_i = 512, q = 5) Q_L + Q_R occupy 512*128*4 B = 256 KiB of VMEM after
+padding — ~1.6% of a v4 core's 16 MiB VMEM, so double-buffering of the
+dz/a streams is trivially affordable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-12
+
+# Row tile for the basis-update kernel grid. 128 keeps blocks well inside
+# VMEM for every layer in the paper's CNN while giving the grid enough
+# parallelism for wide fc layers.
+ROW_TILE = 128
+
+
+def _mgs_kernel(q_ref, v_ref, c_ref, qout_ref, r: int):
+    """Sequential MGS: data dependence across j forces the fori_loop."""
+    v = v_ref[...]
+
+    def body(j, carry):
+        v, _ = carry
+        qj = q_ref[:, j]
+        cj = jnp.sum(qj * v)
+        v = v - cj * qj
+        return v, cj
+
+    # Unrolled store of coefficients: r is tiny (rank+0..1), so the loop is
+    # staged out at trace time to avoid dynamic stores into c_ref.
+    v_cur = v
+    for j in range(r):
+        qj = q_ref[:, j]
+        cj = jnp.sum(qj * v_cur)
+        v_cur = v_cur - cj * qj
+        c_ref[j] = cj
+        qout_ref[:, j] = qj
+    norm = jnp.sqrt(jnp.sum(v_cur * v_cur))
+    inv = jnp.where(norm > EPS, 1.0 / jnp.where(norm > EPS, norm, 1.0), 0.0)
+    c_ref[r] = norm
+    qout_ref[:, r] = v_cur * inv
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mgs_project(q_mat, v):
+    """Pallas MGS projection; see `ref.mgs_project_ref` for the oracle.
+
+    Args:
+      q_mat: (n, q) basis, columns 0..r-1 orthonormal-or-zero.
+      v:     (n,) new sample vector (dz or a).
+
+    Returns:
+      c:     (q,) basis coefficients, c[r] = residual norm.
+      q_new: (n, q) basis with the normalized residual in column r.
+    """
+    n, q = q_mat.shape
+    r = q - 1
+    c, q_new = pl.pallas_call(
+        functools.partial(_mgs_kernel, r=r),
+        out_shape=(
+            jax.ShapeDtypeStruct((q,), q_mat.dtype),
+            jax.ShapeDtypeStruct((n, q), q_mat.dtype),
+        ),
+        interpret=True,
+    )(q_mat, v)
+    return c, q_new
+
+
+def _basis_update_kernel(q_ref, m_ref, out_ref):
+    """One row-tile of Q times the small rotation M, f32 accumulation."""
+    out_ref[...] = jnp.dot(
+        q_ref[...], m_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def basis_update(q_mat, m):
+    """Pallas basis rotation Q @ M, tiled over rows of Q.
+
+    The grid dimension walks ROW_TILE-row stripes of Q; M is broadcast to
+    every grid step (index_map pins it to block (0, 0)), which on real TPU
+    keeps it pinned in VMEM.
+    """
+    n, q = q_mat.shape
+    grid = (max(1, (n + ROW_TILE - 1) // ROW_TILE),)
+    return pl.pallas_call(
+        _basis_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, q), lambda i: (i, 0)),
+            pl.BlockSpec((q, q), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, q), q_mat.dtype),
+        interpret=True,
+    )(q_mat, m)

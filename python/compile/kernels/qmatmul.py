@@ -1,0 +1,66 @@
+"""Pallas tiled matmul for the quantized forward datapath.
+
+Computes ``alpha * a @ w.T`` where `a` holds Qa-quantized activations
+(im2col patches for conv layers, feature vectors for dense layers) and `w`
+holds Qw-quantized weights read from NVM. `alpha` is the per-layer
+power-of-2 He gain (Appendix C), so the kernel is exactly the crossbar
+MAC + gain stage of the paper's Figure 8 datapath.
+
+TPU mapping (Hardware-Adaptation, DESIGN.md section 3): the grid tiles the
+(M = pixels, N = out-channels) output; K (= kh*kw*cin, at most 512 in the
+paper's CNN) is kept whole per block, so each step is one
+(TILE_M x K) @ (K x TILE_N) MXU contraction with f32 accumulation —
+int8-weight grids on real RRAM map to bf16/int8 MXU passes here. VMEM per
+step = (TILE_M + TILE_N) * K * 4B <= (64+64)*512*4 = 256 KiB.
+
+interpret=True throughout: correctness path for the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 64
+TILE_N = 64
+
+
+def _qmatmul_kernel(a_ref, w_ref, alpha_ref, out_ref):
+    acc = jnp.dot(
+        a_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+    out_ref[...] = acc * alpha_ref[0]
+
+
+@jax.jit
+def qmatmul(a, w, alpha):
+    """alpha * a @ w.T with (TILE_M, TILE_N) output tiling.
+
+    Args:
+      a: (m, k) quantized activations.
+      w: (n, k) quantized weights (row-major out-channels, NVM layout).
+      alpha: scalar (or ()-shaped array) power-of-2 layer gain.
+    Returns:
+      (m, n) pre-activations.
+    """
+    m, k = a.shape
+    n, k2 = w.shape
+    assert k == k2, (a.shape, w.shape)
+    alpha = jnp.asarray(alpha, jnp.float32).reshape((1,))
+    grid = (
+        max(1, (m + TILE_M - 1) // TILE_M),
+        max(1, (n + TILE_N - 1) // TILE_N),
+    )
+    return pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), w.astype(jnp.float32), alpha)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between kernel and oracle across hypothesis-driven shape
+and seed sweeps (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def mgs_project_ref(q_mat, v):
+    """Modified Gram-Schmidt projection of `v` onto the first r columns of
+    `q_mat` (n x q), returning (c, q_new) per Algorithm 1:
+
+      for j in 0..r-1:  c_j = Q_j . v ;  v -= c_j Q_j
+      c_{q-1} = ||v|| ;  Q_{q-1} = v / c_{q-1}   (zero-norm guarded)
+
+    The sequential (modified, not classical) order is what gives numerical
+    stability (Bjorck 1967); the oracle reproduces it exactly.
+    """
+    n, q = q_mat.shape
+    r = q - 1
+    c = jnp.zeros((q,), q_mat.dtype)
+    v = v.astype(q_mat.dtype)
+    for j in range(r):
+        cj = jnp.dot(q_mat[:, j], v)
+        v = v - cj * q_mat[:, j]
+        c = c.at[j].set(cj)
+    norm = jnp.sqrt(jnp.dot(v, v))
+    qcol = jnp.where(norm > EPS, v / jnp.where(norm > EPS, norm, 1.0), 0.0)
+    c = c.at[r].set(norm)
+    q_new = q_mat.at[:, r].set(qcol)
+    return c, q_new
+
+
+def basis_update_ref(q_mat, m):
+    """Oracle for the basis rotation Q <- Q @ M (n x q times q x q)."""
+    return q_mat @ m
+
+
+def qmatmul_ref(a, w, alpha):
+    """Oracle for the quantized-datapath matmul: alpha * a @ w.T."""
+    return alpha * (a @ w.T)

@@ -1,0 +1,181 @@
+"""Low-Rank Training (Algorithm 1) in JAX.
+
+State per trainable weight matrix W (n_o x n_i):
+
+  qL (n_o, q), qR (n_i, q), cx (q,)     with q = r + 1
+
+maintaining the invariant
+
+  sum_i dz^(i) (x) a^(i)  ~=  qL @ diag(cx) @ qR.T        (cx[q-1] == 0)
+
+so the final gradient estimate is L~ R~^T with
+L~ = (qL @ diag(sqrt(cx)))[:, :r],  R~ = (qR @ diag(sqrt(cx)))[:, :r].
+
+Per sample (Section 4.2):
+  1. MGS-project dz / a into the tracked bases (Pallas `mgs_project`),
+     installing the normalized residuals as column q-1.
+  2. C = cL cR^T + diag(cx); kappa-gate the update with the paper's
+     C[0,0]/C[q-1,q-1] heuristic (Section 7.2).
+  3. SVD of C via portable Jacobi rotations (jacobi.svd_jacobi).
+  4. Rank-reduce Sigma back to r: either biased truncation or the
+     minimum-variance unbiased OK mixing (Section 4.1.2), chosen by a
+     *runtime* 0/1 scalar so a single HLO artifact serves both variants.
+  5. Rotate the bases: qL <- qL @ (U_C @ Q_x) (Pallas `basis_update`).
+
+All branches are fixed-shape jnp.where selections — the whole update
+lowers to portable HLO (no custom-calls), verified by the AOT round-trip
+integration test on the rust side.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import jacobi
+from .kernels.lrt_update import basis_update, mgs_project
+
+EPS = 1e-12
+
+
+class LrtState(NamedTuple):
+    """Rank-r Kronecker-sum accumulator for one weight matrix."""
+
+    qL: jax.Array  # (n_o, q)
+    qR: jax.Array  # (n_i, q)
+    cx: jax.Array  # (q,)
+
+
+def init_state(n_o: int, n_i: int, rank: int) -> LrtState:
+    q = rank + 1
+    return LrtState(
+        qL=jnp.zeros((n_o, q), jnp.float32),
+        qR=jnp.zeros((n_i, q), jnp.float32),
+        cx=jnp.zeros((q,), jnp.float32),
+    )
+
+
+def _mix_matrices(sigma, key, unbiased):
+    """Rank-reduction of the singular-value matrix (Section 4.1.2).
+
+    Args:
+      sigma: (q,) singular values sorted descending.
+      key: PRNG key for the Rademacher signs.
+      unbiased: 0/1 scalar — 1 selects the minimum-variance unbiased OK
+        estimator, 0 the biased top-r truncation.
+
+    Returns:
+      (q_x, cx_new): q_x (q, q) with zero last column; cx_new (q,) with
+      zero last entry, such that Sigma~ = q_x @ diag(cx_new) @ q_x.T is the
+      rank-r estimate of diag(sigma).
+    """
+    q = sigma.shape[0]
+    r = q - 1
+    idx = jnp.arange(q)
+
+    # ---- biased branch: keep top-r singular values -----------------------
+    qx_b = jnp.eye(q, dtype=jnp.float32).at[:, r].set(0.0)
+    cx_b = sigma.at[r].set(0.0)
+
+    # ---- unbiased branch: OK mixing --------------------------------------
+    # m = min i s.t. (q - i) * sigma_i <= sum_{j>=i} sigma_j   (1-based i)
+    suffix = jnp.cumsum(sigma[::-1])[::-1]  # suffix[i] = sum_{j>=i} sigma_j
+    cond = (q - (idx + 1.0)) * sigma <= suffix + EPS
+    m0 = jnp.argmax(cond)  # 0-based m-1; cond[q-1] always true
+    k = (q - 1) - m0  # number of mixed columns
+    s1 = suffix[m0]
+    safe_s1 = jnp.where(s1 > EPS, s1, 1.0)
+    safe_k = jnp.maximum(k, 1)
+
+    in_block = idx >= m0
+    x0 = jnp.where(
+        in_block,
+        jnp.sqrt(jnp.clip(1.0 - sigma * k / safe_s1, 0.0, 1.0)),
+        0.0,
+    )
+    # Householder H = I + v v^T / v1 with v = x0 - e_{m0}: first block
+    # column is x0, remaining block columns are the orthonormal basis X
+    # with left-nullspace span{x0} (Section 4.2.3).
+    e1 = (idx == m0).astype(jnp.float32)
+    v = x0 - e1
+    v1 = jnp.take(v, m0)
+    h = jnp.eye(q, dtype=jnp.float32) + jnp.outer(v, v) / jnp.where(
+        jnp.abs(v1) > EPS, v1, 1.0
+    )
+    h = jnp.where(jnp.abs(v1) > EPS, h, jnp.eye(q, dtype=jnp.float32))
+    # Random signs on the block rows make the estimator unbiased;
+    # E[X_s X_s^T] = I - diag(x0^2) (Section 4.1.2).
+    signs = jax.random.rademacher(key, (q,), jnp.float32)
+    hs = jnp.where(in_block[:, None], signs[:, None] * h, h)
+    # Column j of q_x: e_j for j < m0 (identity part of hs), X column
+    # j - m0 for m0 <= j < r (hs columns shifted past the dropped x0
+    # column), zero for j = r.
+    src = jnp.clip(idx + (idx >= m0), 0, q - 1)
+    qx_u = jnp.take(hs, src, axis=1) * (idx < r)[None, :].astype(jnp.float32)
+    cx_u = jnp.where(
+        idx < m0, sigma, jnp.where(idx < r, s1 / safe_k, 0.0)
+    )
+    # Degenerate tail (s1 ~ 0): nothing to mix, the biased truncation is
+    # exact — fall back to it to avoid 0/0.
+    use_unbiased = jnp.logical_and(unbiased > 0.5, s1 > EPS)
+    q_x = jnp.where(use_unbiased, qx_u, qx_b)
+    cx_new = jnp.where(use_unbiased, cx_u, cx_b)
+    return q_x, cx_new
+
+
+def lrt_update(state: LrtState, dz, a, key, unbiased, kappa_th):
+    """One per-sample rank update (Algorithm 1 inner loop).
+
+    Args:
+      state: current LrtState.
+      dz: (n_o,) backpropagated error for this sample/pixel.
+      a:  (n_i,) input activation slice.
+      key: PRNG key (consumed only by the unbiased mixing).
+      unbiased: 0/1 runtime scalar.
+      kappa_th: condition-number gate; updates with
+        C[0,0]/C[q-1,q-1] > kappa_th are skipped (Section 7.2).
+
+    Returns:
+      (new_state, diag) where diag = (sigma_1, sigma_q, kappa_hat,
+      skipped) for the scheduler/metrics.
+    """
+    cL, qL_m = mgs_project(state.qL, dz)
+    cR, qR_m = mgs_project(state.qR, a)
+    c_mat = jnp.outer(cL, cR) + jnp.diag(state.cx)
+
+    q = state.cx.shape[0]
+    c00 = jnp.abs(c_mat[0, 0])
+    cqq = jnp.abs(c_mat[q - 1, q - 1])
+    kappa_hat = c00 / jnp.maximum(cqq, EPS)
+    # Gate only meaningful once the accumulator is non-empty; a fresh
+    # state has c00 == 0 which passes trivially.
+    skip = jnp.logical_and(c00 > kappa_th * cqq, cqq <= c00)
+
+    u_c, sigma, v_c = jacobi.svd_jacobi(c_mat)
+    q_x, cx_new = _mix_matrices(sigma, key, unbiased)
+
+    qL_new = basis_update(qL_m, u_c @ q_x)
+    qR_new = basis_update(qR_m, v_c @ q_x)
+
+    new_state = LrtState(
+        qL=jnp.where(skip, state.qL, qL_new),
+        qR=jnp.where(skip, state.qR, qR_new),
+        cx=jnp.where(skip, state.cx, cx_new),
+    )
+    diag = (sigma[0], sigma[q - 1], kappa_hat, skip.astype(jnp.float32))
+    return new_state, diag
+
+
+def lrt_factors(state: LrtState):
+    """Extract L~, R~ with L~ @ R~.T the accumulated gradient estimate."""
+    root = jnp.sqrt(jnp.maximum(state.cx, 0.0))
+    r = state.cx.shape[0] - 1
+    l_t = state.qL * root[None, :]
+    r_t = state.qR * root[None, :]
+    return l_t[:, :r], r_t[:, :r]
+
+
+def lrt_delta(state: LrtState):
+    """Dense gradient estimate sum_i dz (x) a ~= L~ @ R~.T (n_o, n_i)."""
+    l_t, r_t = lrt_factors(state)
+    return l_t @ r_t.T

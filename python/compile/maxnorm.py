@@ -1,0 +1,48 @@
+"""Gradient max-norming (paper Appendix D).
+
+Per-tensor normalization by max(|x|) blended with an EMA of past maxima —
+an O(1)-state substitute for Adam's per-element second moment, chosen
+because NVM edge devices cannot afford an auxiliary variable per weight.
+
+State per gradient tensor: the moving average ``mv``. The evaluation
+counter ``k`` (for EMA bias correction) is shared across tensors and
+stored once.
+
+Defaults from the paper: beta = 0.999, floor eps = 1e-4.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BETA = 0.999
+FLOOR = 1e-4
+
+
+class MaxNormState(NamedTuple):
+    mv: jax.Array  # () EMA of max |x|
+
+
+def init_state() -> MaxNormState:
+    return MaxNormState(mv=jnp.asarray(FLOOR, jnp.float32))
+
+
+def apply(state: MaxNormState, x, k, enabled):
+    """Normalize tensor `x`; returns (x_norm, new_state).
+
+    Args:
+      state: per-tensor MaxNormState.
+      x: gradient tensor.
+      k: () f32 — number of evaluations so far *including* this one
+        (caller increments once per sample and shares it across tensors).
+      enabled: 0/1 runtime scalar; when 0 the tensor passes through but
+        the state still tracks maxima so the scheme can be toggled
+        mid-stream without a cold state.
+    """
+    xmax = jnp.max(jnp.abs(x)) + FLOOR
+    mv = BETA * state.mv + (1.0 - BETA) * xmax
+    corr = mv / (1.0 - jnp.exp(k * jnp.log(BETA)))
+    denom = jnp.maximum(xmax, corr)
+    x_norm = jnp.where(enabled > 0.5, x / denom, x)
+    return x_norm, MaxNormState(mv=mv)

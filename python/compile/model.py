@@ -1,0 +1,500 @@
+"""The paper's representative CNN with the full quantized training step.
+
+Architecture (Section 7.1): four 3x3 convolutions + two fully-connected
+layers on 28x28x1 images, 10 classes. Downsampling uses stride-2
+convolutions (the paper does not specify pooling; strided conv keeps every
+layer an im2col matmul, which is exactly the Kronecker-sum structure LRT
+exploits — Appendix B.2):
+
+  conv1 1->8  s2 (14x14)   conv2 8->16 s2 (7x7)
+  conv3 16->16 s1 (7x7)    conv4 16->32 s2 (4x4)
+  fc5 512->64              fc6 64->10
+
+All convolutions use explicit (1,1)x(1,1) padding. Weights are stored
+flattened (n_o, K) with K = cin*kh*kw (the `conv_general_dilated_patches`
+feature ordering), the same layout the rust NVM arrays use.
+
+The training step follows Appendix C's signal-flow graph (Figure 8):
+Qa-quantized activations, Qw weights, Qb biases, Qg gradients, with
+straight-through estimators, per-layer power-of-2 He gains `alpha`,
+streaming batch-norm after each conv, gradient max-norming, and LRT
+accumulation of the weight gradients. Weight *application* happens in the
+separate `flush` computation so the rust coordinator controls the NVM
+write policy (rho_min density / kappa_th gates, sqrt-B learning-rate
+scaling).
+
+Everything here is traced into the AOT artifacts by `aot.py`; nothing in
+this module runs at request time.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import lrt, maxnorm, quant, streambn
+from .kernels.qmatmul import qmatmul
+
+# ---------------------------------------------------------------------------
+# Architecture description
+# ---------------------------------------------------------------------------
+
+
+class ConvSpec(NamedTuple):
+    cin: int
+    cout: int
+    stride: int
+    h_in: int
+    w_in: int
+
+    @property
+    def k(self) -> int:  # im2col row width
+        return self.cin * 9
+
+    @property
+    def h_out(self) -> int:
+        return (self.h_in + 2 - 3) // self.stride + 1
+
+    @property
+    def w_out(self) -> int:
+        return (self.w_in + 2 - 3) // self.stride + 1
+
+    @property
+    def pixels(self) -> int:
+        return self.h_out * self.w_out
+
+
+class FcSpec(NamedTuple):
+    n_in: int
+    n_out: int
+
+
+CONVS = [
+    ConvSpec(1, 8, 2, 28, 28),
+    ConvSpec(8, 16, 2, 14, 14),
+    ConvSpec(16, 16, 1, 7, 7),
+    ConvSpec(16, 32, 2, 7, 7),
+]
+FCS = [FcSpec(4 * 4 * 32, 64), FcSpec(64, 10)]
+N_LAYERS = len(CONVS) + len(FCS)  # 6 trainable weight matrices
+NUM_CLASSES = 10
+IMG_SHAPE = (28, 28, 1)
+
+# (n_o, n_i) of each weight matrix in im2col form, layers 1..6.
+LAYER_DIMS = [(c.cout, c.k) for c in CONVS] + [(f.n_out, f.n_in) for f in FCS]
+# Per-layer power-of-2 He gain (Appendix C).
+ALPHAS = [quant.he_alpha(k) for (_, k) in LAYER_DIMS]
+
+DEFAULT_RANK = 4
+# Per-layer LRT flush batch sizes (Appendix G): 10 for convs, 100 for fcs.
+DEFAULT_BATCH = [10, 10, 10, 10, 100, 100]
+
+
+# ---------------------------------------------------------------------------
+# Parameter / state initialization (mirrored by rust `nn::model`)
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, w_bits: int = quant.W_BITS):
+    """He-initialized, Qw-quantized parameters as a flat name->array dict."""
+    params = {}
+    qw = quant.make_qw(w_bits)
+    for i, (n_o, n_i) in enumerate(LAYER_DIMS, start=1):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (n_o, n_i), jnp.float32) * jnp.sqrt(
+            2.0 / n_i
+        ) / ALPHAS[i - 1]
+        params[f"w{i}"] = qw(jnp.clip(w, quant.W_LO, quant.W_HI))
+        params[f"b{i}"] = jnp.zeros((n_o,), jnp.float32)
+    for i, c in enumerate(CONVS, start=1):
+        params[f"g{i}"] = jnp.ones((c.cout,), jnp.float32)
+        params[f"be{i}"] = jnp.zeros((c.cout,), jnp.float32)
+    return params
+
+
+def init_states(rank: int = DEFAULT_RANK):
+    """Non-NVM auxiliary state: BN stats, LRT accumulators, max-norm EMAs."""
+    st = {}
+    for i, c in enumerate(CONVS, start=1):
+        bn = streambn.init_state(c.cout)
+        st[f"bnmu{i}"] = bn.mu_s
+        st[f"bnsq{i}"] = bn.sq_s
+    for i, (n_o, n_i) in enumerate(LAYER_DIMS, start=1):
+        ls = lrt.init_state(n_o, n_i, rank)
+        st[f"ql{i}"] = ls.qL
+        st[f"qr{i}"] = ls.qR
+        st[f"cx{i}"] = ls.cx
+        st[f"mn{i}"] = jnp.asarray(maxnorm.FLOOR, jnp.float32)
+    st["mnk"] = jnp.asarray(0.0, jnp.float32)
+    return st
+
+
+def _q16_dyn(x):
+    """16-bit dynamic-range quantization of the L/R accumulators (App. C)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 32767.0
+    return jnp.round(x / scale) * scale
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _patches(a_hwc, spec: ConvSpec):
+    """(H,W,C) -> (P, K) im2col rows, K ordered (cin, kh, kw)."""
+    p = lax.conv_general_dilated_patches(
+        a_hwc[None],
+        (3, 3),
+        (spec.stride, spec.stride),
+        [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return p.reshape(spec.pixels, spec.k)
+
+
+def forward(params, states, x, bn_eta, bn_stream, w_bits=quant.W_BITS,
+            train: bool = True):
+    """Quantized forward pass.
+
+    Returns (logits, caches, new_bn) where caches holds everything the
+    manual backward pass needs. With train=False the BN stats are frozen
+    (inference path used by the `forward` artifact).
+    """
+    qw = quant.make_qw(w_bits)
+    a = quant.qa(x)  # input treated as an activation in [0, 2)
+    caches = []
+    new_bn = {}
+    for i, spec in enumerate(CONVS, start=1):
+        pat = _patches(a.reshape(spec.h_in, spec.w_in, spec.cin), spec)
+        w = qw(params[f"w{i}"])
+        z = qmatmul(pat, w, ALPHAS[i - 1]) + params[f"b{i}"][None, :]
+        bn_state = streambn.StreamBnState(
+            mu_s=states[f"bnmu{i}"], sq_s=states[f"bnsq{i}"]
+        )
+        if train:
+            y_bn, z_hat, inv, bn2 = streambn.apply(
+                bn_state, z, params[f"g{i}"], params[f"be{i}"], bn_eta,
+                bn_stream,
+            )
+            new_bn[f"bnmu{i}"] = bn2.mu_s
+            new_bn[f"bnsq{i}"] = bn2.sq_s
+        else:
+            y_bn = streambn.apply_inference(
+                bn_state, z, params[f"g{i}"], params[f"be{i}"]
+            )
+            z_hat, inv = y_bn, jnp.ones((spec.cout,), jnp.float32)
+        y = jnp.maximum(y_bn, 0.0)
+        a_next = quant.qa(y)
+        caches.append(
+            dict(pat=pat, z=z, z_hat=z_hat, inv=inv, y_bn=y_bn, y=y)
+        )
+        a = a_next.reshape(spec.h_out, spec.w_out, spec.cout)
+    a = a.reshape(-1)
+    for j, spec in enumerate(FCS, start=1):
+        i = len(CONVS) + j
+        w = qw(params[f"w{i}"])
+        z = qmatmul(a[None, :], w, ALPHAS[i - 1])[0] + params[f"b{i}"]
+        if j < len(FCS):
+            y = jnp.maximum(z, 0.0)
+            a_next = quant.qa(y)
+            caches.append(dict(a_in=a, z=z, y=y))
+            a = a_next
+        else:
+            caches.append(dict(a_in=a, z=z, y=z))
+            logits = z
+    return logits, caches, new_bn
+
+
+# ---------------------------------------------------------------------------
+# Loss and manual backward (Figure 8 signal flow)
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, label):
+    logz = jax.nn.logsumexp(logits)
+    loss = logz - logits[label]
+    p = jnp.exp(logits - logz)
+    dlogits = p - jax.nn.one_hot(label, NUM_CLASSES, dtype=jnp.float32)
+    return loss, dlogits
+
+
+def backward(params, states, caches, dlogits, use_maxnorm, w_bits=quant.W_BITS):
+    """Manual backward pass producing per-layer Kronecker factors.
+
+    Returns:
+      grads: dict with per-layer
+        - (dzw{i}, ain{i}): Qg-quantized, max-normed weight-gradient
+          factors ((P, n_o) x (P, K) for convs, (n_o,) x (n_i,) for fcs)
+          whose outer-product sum is the weight gradient LRT accumulates;
+        - db{i}, dg{i}, dbe{i}: bias / BN-affine gradients.
+      new_mn: updated max-norm states (+ shared counter mnk).
+    """
+    qw = quant.make_qw(w_bits)
+    grads = {}
+    new_mn = {}
+    k = states["mnk"] + 1.0
+    new_mn["mnk"] = k
+
+    # ---- fc layers, last to first ----------------------------------------
+    dz = dlogits  # logits layer: derivative of CE
+    for j in range(len(FCS), 0, -1):
+        i = len(CONVS) + j
+        cache = caches[i - 1]
+        if j < len(FCS):
+            # back through Qa (STE on [0,2]) and ReLU
+            pass_q = jnp.logical_and(
+                cache["y"] >= quant.A_LO, cache["y"] <= quant.A_HI
+            )
+            dz = dz * pass_q.astype(jnp.float32)
+            dz = dz * (cache["z"] > 0.0).astype(jnp.float32)
+            dz = quant.qg(dz)
+        mn_st = maxnorm.MaxNormState(mv=states[f"mn{i}"])
+        dzn, mn2 = maxnorm.apply(mn_st, dz, k, use_maxnorm)
+        new_mn[f"mn{i}"] = mn2.mv
+        grads[f"dzw{i}"] = quant.qg(ALPHAS[i - 1] * dzn)
+        grads[f"ain{i}"] = cache["a_in"]
+        grads[f"db{i}"] = quant.qg(dzn)
+        # propagate to previous activation
+        dz = ALPHAS[i - 1] * (qw(params[f"w{i}"]).T @ dz)
+
+    # ---- conv layers, last to first ---------------------------------------
+    da = dz.reshape(CONVS[-1].h_out, CONVS[-1].w_out, CONVS[-1].cout)
+    for i in range(len(CONVS), 0, -1):
+        spec = CONVS[i - 1]
+        cache = caches[i - 1]
+        dy = da.reshape(spec.pixels, spec.cout)
+        # STE through Qa, ReLU derivative, then Qg (Figure 8 order)
+        pass_q = jnp.logical_and(
+            cache["y"] >= quant.A_LO, cache["y"] <= quant.A_HI
+        )
+        dy = dy * pass_q.astype(jnp.float32)
+        dy = dy * (cache["y_bn"] > 0.0).astype(jnp.float32)
+        dy = quant.qg(dy)
+        # streaming-BN backward with stats treated as constants
+        grads[f"dg{i}"] = jnp.sum(dy * cache["z_hat"], axis=0)
+        grads[f"dbe{i}"] = jnp.sum(dy, axis=0)
+        dz_pre = dy * (params[f"g{i}"] * cache["inv"])[None, :]
+
+        mn_st = maxnorm.MaxNormState(mv=states[f"mn{i}"])
+        dzn, mn2 = maxnorm.apply(mn_st, dz_pre, k, use_maxnorm)
+        new_mn[f"mn{i}"] = mn2.mv
+        grads[f"dzw{i}"] = quant.qg(ALPHAS[i - 1] * dzn)
+        grads[f"ain{i}"] = cache["pat"]
+        grads[f"db{i}"] = quant.qg(jnp.sum(dzn, axis=0))
+
+        if i > 1:
+            # back through the convolution to the previous activation
+            wk = (
+                qw(params[f"w{i}"])
+                .reshape(spec.cout, spec.cin, 3, 3)
+                .transpose(2, 3, 1, 0)
+            )  # (n_o, K=ci*kh*kw) -> HWIO
+            prev = CONVS[i - 2]
+            a_shape = (1, spec.h_in, spec.w_in, spec.cin)
+
+            def conv_fn(x):
+                return lax.conv_general_dilated(
+                    x,
+                    wk,
+                    (spec.stride, spec.stride),
+                    [(1, 1), (1, 1)],
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )
+
+            _, vjp = jax.vjp(conv_fn, jnp.zeros(a_shape, jnp.float32))
+            dzhw = (ALPHAS[i - 1] * dz_pre).reshape(
+                1, spec.h_out, spec.w_out, spec.cout
+            )
+            da_full = vjp(dzhw)[0][0]
+            # STE through the previous layer's Qa + its ReLU
+            prev_cache = caches[i - 2]
+            da = da_full.reshape(prev.pixels, prev.cout)
+            pass_prev = jnp.logical_and(
+                prev_cache["y"] >= quant.A_LO, prev_cache["y"] <= quant.A_HI
+            )
+            da = da * pass_prev.astype(jnp.float32)
+            da = da.reshape(prev.h_out, prev.w_out, prev.cout)
+    return grads, new_mn
+
+
+# ---------------------------------------------------------------------------
+# Per-sample training steps
+# ---------------------------------------------------------------------------
+
+
+def _apply_bias_updates(params, grads, lr_b, train_bias):
+    new = {}
+    for i in range(1, N_LAYERS + 1):
+        delta = jnp.where(train_bias > 0.5, lr_b * grads[f"db{i}"], 0.0)
+        new[f"b{i}"] = quant.qb(params[f"b{i}"] - delta)
+    for i in range(1, len(CONVS) + 1):
+        dg = jnp.where(train_bias > 0.5, lr_b * grads[f"dg{i}"], 0.0)
+        dbe = jnp.where(train_bias > 0.5, lr_b * grads[f"dbe{i}"], 0.0)
+        new[f"g{i}"] = quant.qb(params[f"g{i}"] - dg)
+        new[f"be{i}"] = quant.qb(params[f"be{i}"] - dbe)
+    return new
+
+
+def _lrt_accumulate(states, grads, key, unbiased, kappa_th):
+    """Run the per-pixel / per-sample LRT rank updates for every layer."""
+    new_state = {}
+    diags = []
+    for i in range(1, N_LAYERS + 1):
+        st = lrt.LrtState(
+            qL=states[f"ql{i}"], qR=states[f"qr{i}"], cx=states[f"cx{i}"]
+        )
+        dzw = grads[f"dzw{i}"]
+        ain = grads[f"ain{i}"]
+        layer_key = jax.random.fold_in(key, i)
+        if dzw.ndim == 2:
+            # conv: one Kronecker update per output pixel (Appendix B.2)
+            def body(carry, inputs):
+                st_c, kk = carry
+                dz_p, a_p, pix = inputs
+                st2, dg = lrt.lrt_update(
+                    st_c,
+                    dz_p,
+                    a_p,
+                    jax.random.fold_in(kk, pix),
+                    unbiased,
+                    kappa_th,
+                )
+                return (st2, kk), jnp.stack(dg)
+
+            (st, _), dgs = lax.scan(
+                body,
+                (st, layer_key),
+                (dzw, ain, jnp.arange(dzw.shape[0])),
+            )
+            diag = jnp.concatenate(
+                [dgs[:, :3].mean(axis=0), dgs[:, 3:4].sum(axis=0)]
+            )
+        else:
+            st, dg = lrt.lrt_update(
+                st, dzw, ain, layer_key, unbiased, kappa_th
+            )
+            diag = jnp.stack(dg)
+        new_state[f"ql{i}"] = _q16_dyn(st.qL)
+        new_state[f"qr{i}"] = _q16_dyn(st.qR)
+        new_state[f"cx{i}"] = _q16_dyn(st.cx)
+        diags.append(diag)
+    return new_state, jnp.stack(diags)  # (6, 4)
+
+
+def train_step_lrt(
+    params,
+    states,
+    image,
+    label,
+    key,
+    lr_b,
+    unbiased,
+    use_maxnorm,
+    kappa_th,
+    bn_eta,
+    bn_stream,
+):
+    """Fused per-sample step for the LRT schemes.
+
+    Forward + manual backward + LRT accumulation + per-sample bias/BN-affine
+    updates. Weights are NOT touched — `flush` (and the rust scheduler's
+    rho_min / effective-batch policy) owns NVM writes.
+
+    Returns (outputs dict) — see aot.py for the artifact signature.
+    """
+    logits, caches, new_bn = forward(
+        params, states, image, bn_eta, bn_stream, train=True
+    )
+    loss, dlogits = softmax_xent(logits, label)
+    pred = jnp.argmax(logits).astype(jnp.int32)
+    grads, new_mn = backward(params, states, caches, dlogits, use_maxnorm)
+    new_lrt, diag = _lrt_accumulate(states, grads, key, unbiased, kappa_th)
+    new_bias = _apply_bias_updates(params, grads, lr_b, jnp.float32(1.0))
+    out = {"loss": loss, "pred": pred, "diag": diag}
+    out.update({k: v for k, v in new_bias.items()})
+    out.update(new_bn)
+    out.update(new_lrt)
+    out.update(new_mn)
+    return out
+
+
+def train_step_sgd(
+    params,
+    states,
+    image,
+    label,
+    lr_w,
+    lr_b,
+    train_weights,
+    train_bias,
+    use_maxnorm,
+    bn_eta,
+    bn_stream,
+    w_bits=quant.W_BITS,
+):
+    """Baseline per-sample quantized SGD step (Section 7.1 baselines).
+
+    train_weights=0, train_bias=1 gives the "bias-only" scheme;
+    train_weights=0, train_bias=0 gives pure inference (with BN tracking).
+    Weight updates are applied every sample, quantized to the weight LSB —
+    exactly the scheme whose write density LRT improves on.
+    """
+    qw = quant.make_qw(w_bits)
+    logits, caches, new_bn = forward(
+        params, states, image, bn_eta, bn_stream, w_bits=w_bits, train=True
+    )
+    loss, dlogits = softmax_xent(logits, label)
+    pred = jnp.argmax(logits).astype(jnp.int32)
+    grads, new_mn = backward(
+        params, states, caches, dlogits, use_maxnorm, w_bits=w_bits
+    )
+    out = {"loss": loss, "pred": pred}
+    for i in range(1, N_LAYERS + 1):
+        dzw = grads[f"dzw{i}"]
+        ain = grads[f"ain{i}"]
+        if dzw.ndim == 2:
+            dw = dzw.T @ ain
+        else:
+            dw = jnp.outer(dzw, ain)
+        neww = qw(params[f"w{i}"] - jnp.where(train_weights > 0.5, lr_w, 0.0) * dw)
+        out[f"w{i}"] = neww
+    new_bias = _apply_bias_updates(params, grads, lr_b, train_bias)
+    out.update(new_bias)
+    out.update(new_bn)
+    out.update(new_mn)
+    return out
+
+
+def flush(states, params, lr_eff, w_bits=quant.W_BITS):
+    """Candidate NVM weight update from the accumulated LRT state.
+
+    lr_eff: (6,) per-layer effective learning rates (the rust scheduler
+    applies the sqrt effective-batch scaling of Appendix C/G).
+
+    Returns new quantized weights + per-layer update density (fraction of
+    cells whose code changes — the rho_min gate input).
+    """
+    qw = quant.make_qw(w_bits)
+    out = {}
+    dens = []
+    for i in range(1, N_LAYERS + 1):
+        st = lrt.LrtState(
+            qL=states[f"ql{i}"], qR=states[f"qr{i}"], cx=states[f"cx{i}"]
+        )
+        delta = lrt.lrt_delta(st)
+        neww = qw(params[f"w{i}"] - lr_eff[i - 1] * delta)
+        changed = jnp.abs(neww - params[f"w{i}"]) > quant.w_lsb(w_bits) / 2
+        dens.append(jnp.mean(changed.astype(jnp.float32)))
+        out[f"w{i}"] = neww
+    out["density"] = jnp.stack(dens)
+    return out
+
+
+def forward_infer(params, states, image):
+    """Inference-only path (the `forward` artifact)."""
+    logits, _, _ = forward(
+        params, states, image, jnp.float32(0.99), jnp.float32(1.0),
+        train=False,
+    )
+    return {"logits": logits, "pred": jnp.argmax(logits).astype(jnp.int32)}

@@ -1,0 +1,117 @@
+"""Hardware quantization model (paper Appendix C).
+
+Uniform power-of-2 quantizers with fixed clipping ranges and
+straight-through-estimator (STE) gradients:
+
+  Qw: weights      8b  in [-1, 1]
+  Qb: biases      16b  in [-8, 8]
+  Qa: activations  8b  in [0, 2]
+  Qg: gradients    8b  in [-1, 1]
+
+Weights and weight updates share the same LSB so the NVM array cannot be
+used as a sub-LSB accumulator (the whole point of the paper's analysis).
+Mid-rise variants are used for 1-2 bit weights in the Fig. 7 ablation.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def lsb(bits: int, lo: float, hi: float) -> float:
+    """Least significant bit of a `bits`-wide uniform quantizer on [lo, hi]."""
+    return (hi - lo) / (2**bits)
+
+
+def quantize_mid_tread(x, bits: int, lo: float, hi: float):
+    """Round-to-nearest-level quantization (mid-tread: 0 is a level).
+
+    Levels are ``lo + k*Δ`` with ``Δ = (hi-lo)/2^bits``; the top code is
+    clipped at ``hi - Δ`` so codes fit in `bits` signed/unsigned integers.
+    """
+    delta = lsb(bits, lo, hi)
+    q = jnp.round((x - lo) / delta)
+    q = jnp.clip(q, 0.0, 2.0**bits - 1.0)
+    return lo + q * delta
+
+
+def quantize_mid_rise(x, bits: int, lo: float, hi: float):
+    """Mid-rise quantization: levels at ``lo + (k+0.5)*Δ`` (no zero level).
+
+    Used for 1-2 bit weights in Fig. 7 (1 bit -> {-0.5, +0.5} on [-1,1]).
+    """
+    delta = lsb(bits, lo, hi)
+    q = jnp.floor((x - lo) / delta)
+    q = jnp.clip(q, 0.0, 2.0**bits - 1.0)
+    return lo + (q + 0.5) * delta
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def ste_quantize(x, bits, lo, hi, mid_rise):
+    """Quantize with a straight-through gradient estimator.
+
+    Forward: uniform quantization onto the fixed grid. Backward: identity
+    inside the clipping range, zero outside (Bengio et al., 2013).
+    """
+    if mid_rise:
+        return quantize_mid_rise(x, bits, lo, hi)
+    return quantize_mid_tread(x, bits, lo, hi)
+
+
+def _ste_fwd(x, bits, lo, hi, mid_rise):
+    return ste_quantize(x, bits, lo, hi, mid_rise), x
+
+
+def _ste_bwd(bits, lo, hi, mid_rise, x, g):
+    pass_mask = jnp.logical_and(x >= lo, x <= hi).astype(g.dtype)
+    return (g * pass_mask,)
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+# The paper's four quantizers (Appendix C / Section 6). `W_BITS` is the
+# default; Fig. 7 sweeps it via `make_qw`.
+W_BITS, W_LO, W_HI = 8, -1.0, 1.0
+B_BITS, B_LO, B_HI = 16, -8.0, 8.0
+A_BITS, A_LO, A_HI = 8, 0.0, 2.0
+G_BITS, G_LO, G_HI = 8, -1.0, 1.0
+
+
+def make_qw(bits: int = W_BITS):
+    """Weight quantizer; mid-rise below 3 bits per Fig. 7."""
+    mid_rise = bits <= 2
+    return lambda x: ste_quantize(x, bits, W_LO, W_HI, mid_rise)
+
+
+def qw(x, bits: int = W_BITS):
+    return make_qw(bits)(x)
+
+
+def qb(x):
+    return ste_quantize(x, B_BITS, B_LO, B_HI, False)
+
+
+def qa(x):
+    return ste_quantize(x, A_BITS, A_LO, A_HI, False)
+
+
+def qg(x):
+    return ste_quantize(x, G_BITS, G_LO, G_HI, False)
+
+
+def w_lsb(bits: int = W_BITS) -> float:
+    return lsb(bits, W_LO, W_HI)
+
+
+def he_alpha(fan_in: int) -> float:
+    """Closest power-of-2 to the He-initialization scale sqrt(2/fan_in).
+
+    The paper folds this per-layer power-of-2 gain `alpha` into the
+    pre-activation so weights can live in [-1, 1] (Appendix C).
+    """
+    import math
+
+    target = math.sqrt(2.0 / fan_in)
+    return 2.0 ** round(math.log2(target))

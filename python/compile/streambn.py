@@ -1,0 +1,69 @@
+"""Streaming batch normalization (paper Appendix E).
+
+Online training sees one sample at a time, so batch statistics are
+replaced by exponential moving averages of the per-sample statistics:
+
+  mu_s  <- eta * mu_s  + (1 - eta) * mu_i
+  sq_s  <- eta * sq_s  + (1 - eta) * (sigma_i^2 + mu_i^2)
+  sigma_b^2 = sq_s - mu_s^2          (eq. 23/24 with EMA weighting)
+
+With eta = 1 - 1/B the current sample carries weight 1/B like a size-B
+batch average, but *every* sample gets equally clean statistics — the
+paper's point versus naive partial-batch accumulation.
+
+The `streaming` runtime flag implements the "no streaming batch norm"
+ablation (Table 3): when 0, the layer normalizes with the current
+sample's own statistics (classic BN collapsed to B = 1).
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BN_EPS = 1e-5
+
+
+class StreamBnState(NamedTuple):
+    mu_s: jax.Array  # (C,)
+    sq_s: jax.Array  # (C,) EMA of E[x^2]
+
+
+def init_state(channels: int) -> StreamBnState:
+    return StreamBnState(
+        mu_s=jnp.zeros((channels,), jnp.float32),
+        sq_s=jnp.ones((channels,), jnp.float32),
+    )
+
+
+def apply(state: StreamBnState, z, gamma, beta, eta, streaming):
+    """Normalize (P, C) pre-activations; returns (y, z_hat, new_state).
+
+    z_hat (the normalized, pre-affine value) is returned for the backward
+    pass (d_gamma = sum dz * z_hat).
+    """
+    mu_i = jnp.mean(z, axis=0)
+    sq_i = jnp.mean(z * z, axis=0)
+
+    mu_s = eta * state.mu_s + (1.0 - eta) * mu_i
+    sq_s = eta * state.sq_s + (1.0 - eta) * sq_i
+
+    var_stream = jnp.maximum(sq_s - mu_s * mu_s, 0.0)
+    var_sample = jnp.maximum(sq_i - mu_i * mu_i, 0.0)
+
+    use_stream = streaming > 0.5
+    mu = jnp.where(use_stream, mu_s, mu_i)
+    var = jnp.where(use_stream, var_stream, var_sample)
+
+    inv = 1.0 / jnp.sqrt(var + BN_EPS)
+    z_hat = (z - mu[None, :]) * inv[None, :]
+    y = gamma[None, :] * z_hat + beta[None, :]
+    return y, z_hat, inv, StreamBnState(mu_s=mu_s, sq_s=sq_s)
+
+
+def apply_inference(state: StreamBnState, z, gamma, beta):
+    """Inference-path normalization with frozen streaming statistics."""
+    var = jnp.maximum(state.sq_s - state.mu_s * state.mu_s, 0.0)
+    inv = 1.0 / jnp.sqrt(var + BN_EPS)
+    z_hat = (z - state.mu_s[None, :]) * inv[None, :]
+    return gamma[None, :] * z_hat + beta[None, :]

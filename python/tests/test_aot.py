@@ -1,0 +1,62 @@
+"""AOT artifact and manifest consistency."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_artifacts():
+    m = _manifest()
+    assert set(m["artifacts"]) == {
+        "forward", "step_lrt", "step_sgd", "flush_lrt"
+    }
+    for name, art in m["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, art["file"])), name
+
+
+def test_no_custom_calls_in_hlo():
+    """Custom-calls (LAPACK etc.) would break the rust PJRT CPU client."""
+    m = _manifest()
+    for art in m["artifacts"].values():
+        with open(os.path.join(ART, art["file"])) as f:
+            text = f.read()
+        assert "custom-call" not in text, art["file"]
+
+
+def test_manifest_shapes_match_model():
+    m = _manifest()
+    dims = {tuple(d) for d in m["model"]["layer_dims"]}
+    assert dims == set(model.LAYER_DIMS)
+    step = m["artifacts"]["step_lrt"]
+    names = [i["name"] for i in step["inputs"]]
+    assert names[: len(aot.PARAMS)] == aot.PARAMS
+    assert "image" in names and "key" in names
+    by_name = {i["name"]: i for i in step["inputs"]}
+    assert by_name["image"]["shape"] == [28, 28, 1]
+    assert by_name["key"]["dtype"] == "uint32"
+    rank = m["model"]["rank"]
+    assert by_name["ql1"]["shape"] == [8, rank + 1]
+    assert by_name["qr5"]["shape"] == [512, rank + 1]
+
+
+def test_input_output_orders_are_canonical():
+    m = _manifest()
+    out_names = [o["name"] for o in m["artifacts"]["step_lrt"]["outputs"]]
+    assert out_names == aot.OUT_LRT
+    out_sgd = [o["name"] for o in m["artifacts"]["step_sgd"]["outputs"]]
+    assert out_sgd == aot.OUT_SGD
+    fl = [o["name"] for o in m["artifacts"]["flush_lrt"]["outputs"]]
+    assert fl == aot.WEIGHTS + ["density"]

@@ -1,0 +1,59 @@
+"""Portable Jacobi SVD vs numpy.linalg (the LAPACK ground truth)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.jacobi import svd_jacobi
+
+
+def _check(mat, atol=1e-5):
+    u, s, v = jax.jit(svd_jacobi)(jnp.array(mat))
+    u, s, v = np.array(u), np.array(s), np.array(v)
+    n = mat.shape[0]
+    assert np.all(np.diff(s) <= 1e-6), "singular values not sorted desc"
+    recon = u @ np.diag(s) @ v.T
+    assert np.abs(recon - mat).max() < atol * max(1.0, np.abs(mat).max())
+    s_ref = np.linalg.svd(mat, compute_uv=False)
+    assert np.abs(s - s_ref).max() < atol * max(1.0, s_ref.max())
+    assert np.abs(v.T @ v - np.eye(n)).max() < 1e-4
+
+
+@given(st.integers(0, 10_000), st.sampled_from([2, 3, 5, 9, 17]))
+@settings(max_examples=40, deadline=None)
+def test_random_matrices(seed, n):
+    rng = np.random.default_rng(seed)
+    _check(rng.normal(size=(n, n)).astype(np.float32))
+
+
+@given(st.integers(0, 10_000), st.integers(0, 4))
+@settings(max_examples=25, deadline=None)
+def test_rank_deficient(seed, rank):
+    rng = np.random.default_rng(seed)
+    n = 5
+    mat = np.zeros((n, n), np.float32)
+    for _ in range(rank):
+        mat += np.outer(
+            rng.normal(size=n), rng.normal(size=n)
+        ).astype(np.float32)
+    _check(mat)
+
+
+def test_zero_matrix():
+    _check(np.zeros((5, 5), np.float32))
+
+
+def test_diagonal_passthrough():
+    _check(np.diag([9.0, 4.0, 1.0, 0.25, 0.0]).astype(np.float32))
+
+
+def test_lrt_like_structure():
+    """C = outer(cL, cR) + diag(cx): the exact shape LRT decomposes."""
+    rng = np.random.default_rng(7)
+    cl = rng.normal(size=5).astype(np.float32)
+    cr = rng.normal(size=5).astype(np.float32)
+    cx = np.abs(rng.normal(size=5)).astype(np.float32)
+    cx[-1] = 0.0
+    _check(np.outer(cl, cr) + np.diag(cx))

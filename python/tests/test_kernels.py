@@ -1,0 +1,87 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and seeds; assert_allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.lrt_update import basis_update, mgs_project
+from compile.kernels.qmatmul import qmatmul
+
+
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from([8, 9, 64, 72, 144, 512]),
+    st.sampled_from([2, 3, 5, 9]),
+)
+@settings(max_examples=30, deadline=None)
+def test_mgs_project_matches_ref(seed, n, q):
+    if q > n:  # basis cannot have more orthonormal columns than rows
+        return
+    rng = np.random.default_rng(seed)
+    q_mat = np.linalg.qr(rng.normal(size=(n, max(q, 2))))[0][:, :q]
+    q_mat = q_mat.astype(np.float32)
+    q_mat[:, q - 1] = 0.0
+    v = rng.normal(size=(n,)).astype(np.float32)
+    c, qn = mgs_project(jnp.array(q_mat), jnp.array(v))
+    cr, qr = ref.mgs_project_ref(jnp.array(q_mat), jnp.array(v))
+    assert_allclose(np.array(c), np.array(cr), atol=1e-5)
+    assert_allclose(np.array(qn), np.array(qr), atol=1e-5)
+
+
+def test_mgs_zero_basis_and_zero_vector():
+    n, q = 16, 5
+    v = np.ones((n,), np.float32)
+    c, qn = mgs_project(jnp.zeros((n, q)), jnp.array(v))
+    assert float(c[q - 1]) == np.float32(np.sqrt(n))
+    c0, qn0 = mgs_project(jnp.zeros((n, q)), jnp.zeros((n,)))
+    assert np.all(np.array(c0) == 0.0)
+    assert np.all(np.array(qn0) == 0.0)
+
+
+def test_mgs_reconstruction_invariant():
+    """After MGS, v == Q_new @ c exactly (the Algorithm 1 invariant)."""
+    rng = np.random.default_rng(3)
+    n, q = 72, 5
+    q_mat = np.linalg.qr(rng.normal(size=(n, q)))[0].astype(np.float32)
+    q_mat[:, q - 1] = 0.0
+    v = rng.normal(size=(n,)).astype(np.float32)
+    c, qn = mgs_project(jnp.array(q_mat), jnp.array(v))
+    assert_allclose(np.array(qn) @ np.array(c), v, atol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([8, 130, 512, 1568]))
+@settings(max_examples=20, deadline=None)
+def test_basis_update_matches_ref(seed, n):
+    rng = np.random.default_rng(seed)
+    q = 5
+    q_mat = rng.normal(size=(n, q)).astype(np.float32)
+    m = rng.normal(size=(q, q)).astype(np.float32)
+    out = basis_update(jnp.array(q_mat), jnp.array(m))
+    assert_allclose(
+        np.array(out), np.array(ref.basis_update_ref(q_mat, m)), atol=1e-4
+    )
+
+
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from([(196, 9, 8), (49, 72, 16), (1, 512, 64), (16, 144, 32),
+                     (7, 64, 10), (100, 100, 100)]),
+)
+@settings(max_examples=20, deadline=None)
+def test_qmatmul_matches_ref(seed, dims):
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    alpha = float(2.0 ** rng.integers(-4, 3))
+    out = qmatmul(jnp.array(a), jnp.array(w), alpha)
+    assert_allclose(
+        np.array(out), np.array(ref.qmatmul_ref(a, w, alpha)),
+        rtol=1e-4, atol=1e-4,
+    )

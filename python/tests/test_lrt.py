@@ -1,0 +1,127 @@
+"""LRT algorithm invariants (Sections 4.1-4.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import lrt
+
+UPD = jax.jit(lrt.lrt_update)
+
+
+def _run(dzs, as_, rank, unbiased, seed=0, kappa_th=1e9):
+    st_ = lrt.init_state(dzs.shape[1], as_.shape[1], rank)
+    key = jax.random.PRNGKey(seed)
+    for d, a in zip(dzs, as_):
+        key, k2 = jax.random.split(key)
+        st_, diag = UPD(
+            st_, jnp.array(d), jnp.array(a), k2,
+            jnp.float32(unbiased), jnp.float32(kappa_th),
+        )
+    return st_
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_exact_when_under_rank(seed, nsamp):
+    """With <= r samples the rank-r accumulator is exact (no truncation)."""
+    rng = np.random.default_rng(seed)
+    r = 4
+    dzs = rng.normal(size=(nsamp, 8)).astype(np.float32)
+    as_ = rng.normal(size=(nsamp, 12)).astype(np.float32)
+    g = sum(np.outer(d, a) for d, a in zip(dzs, as_))
+    est = np.array(lrt.lrt_delta(_run(dzs, as_, r, unbiased=0.0)))
+    assert np.abs(est - g).max() < 1e-3 * max(1.0, np.abs(g).max())
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_biased_error_bounded_by_singular_tail(seed):
+    """Greedy truncation error stays within a small factor of optimal."""
+    rng = np.random.default_rng(seed)
+    r, B = 4, 32
+    dzs = rng.normal(size=(B, 10)).astype(np.float32)
+    as_ = rng.normal(size=(B, 14)).astype(np.float32)
+    g = sum(np.outer(d, a) for d, a in zip(dzs, as_))
+    est = np.array(lrt.lrt_delta(_run(dzs, as_, r, unbiased=0.0)))
+    err = np.linalg.norm(est - g)
+    sv = np.linalg.svd(g, compute_uv=False)
+    best = np.sqrt((sv[r:] ** 2).sum())
+    assert err < 4.0 * best + 1e-3
+
+
+def test_unbiasedness_statistical():
+    """E[estimate] == true sum for the unbiased variant (OK estimator)."""
+    rng = np.random.default_rng(11)
+    r, B, trials = 2, 4, 300
+    dzs = rng.normal(size=(B, 6)).astype(np.float32)
+    as_ = rng.normal(size=(B, 8)).astype(np.float32)
+    g = sum(np.outer(d, a) for d, a in zip(dzs, as_))
+    acc = np.zeros_like(g)
+    for t in range(trials):
+        acc += np.array(
+            lrt.lrt_delta(_run(dzs, as_, r, unbiased=1.0, seed=t))
+        )
+    rel_bias = np.linalg.norm(acc / trials - g) / np.linalg.norm(g)
+    assert rel_bias < 0.10, rel_bias
+
+
+def test_biased_is_deterministic_unbiased_is_not():
+    rng = np.random.default_rng(5)
+    dzs = rng.normal(size=(8, 6)).astype(np.float32)
+    as_ = rng.normal(size=(8, 8)).astype(np.float32)
+    b1 = np.array(lrt.lrt_delta(_run(dzs, as_, 2, 0.0, seed=1)))
+    b2 = np.array(lrt.lrt_delta(_run(dzs, as_, 2, 0.0, seed=2)))
+    assert np.allclose(b1, b2)
+    u1 = np.array(lrt.lrt_delta(_run(dzs, as_, 2, 1.0, seed=1)))
+    u2 = np.array(lrt.lrt_delta(_run(dzs, as_, 2, 1.0, seed=2)))
+    assert not np.allclose(u1, u2)
+
+
+def test_kappa_gate_skips_low_information_samples():
+    """A tiny new sample against a big accumulator trips the gate."""
+    rng = np.random.default_rng(3)
+    r = 2
+    st_ = lrt.init_state(6, 8, r)
+    key = jax.random.PRNGKey(0)
+    big_d = rng.normal(size=6).astype(np.float32) * 10
+    big_a = rng.normal(size=8).astype(np.float32) * 10
+    st_, _ = UPD(st_, jnp.array(big_d), jnp.array(big_a), key,
+                 jnp.float32(0.0), jnp.float32(100.0))
+    before = np.array(lrt.lrt_delta(st_))
+    tiny_d = rng.normal(size=6).astype(np.float32) * 1e-6
+    tiny_a = rng.normal(size=8).astype(np.float32) * 1e-6
+    st2, diag = UPD(st_, jnp.array(tiny_d), jnp.array(tiny_a), key,
+                    jnp.float32(0.0), jnp.float32(100.0))
+    assert float(diag[3]) == 1.0  # skipped
+    assert np.allclose(np.array(lrt.lrt_delta(st2)), before)
+    # with the ablation threshold the sample is accepted
+    st3, diag3 = UPD(st_, jnp.array(tiny_d), jnp.array(tiny_a), key,
+                     jnp.float32(0.0), jnp.float32(1e18))
+    assert float(diag3[3]) == 0.0
+
+
+def test_basis_columns_unit_or_zero():
+    """qL/qR columns stay orthonormal-or-zero across updates."""
+    rng = np.random.default_rng(9)
+    st_ = _run(
+        rng.normal(size=(20, 8)).astype(np.float32),
+        rng.normal(size=(20, 12)).astype(np.float32),
+        4, unbiased=1.0,
+    )
+    for q_mat in (np.array(st_.qL), np.array(st_.qR)):
+        norms = np.linalg.norm(q_mat, axis=0)
+        for c in norms:
+            assert c < 1e-5 or abs(c - 1.0) < 1e-3, norms
+        gram = q_mat.T @ q_mat
+        off = gram - np.diag(np.diag(gram))
+        assert np.abs(off).max() < 1e-3
+
+
+def test_factors_shapes():
+    st_ = lrt.init_state(8, 12, 4)
+    l_t, r_t = lrt.lrt_factors(st_)
+    assert l_t.shape == (8, 4) and r_t.shape == (12, 4)

@@ -1,0 +1,49 @@
+"""Gradient max-norming (Appendix D)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import maxnorm
+
+
+def test_normalizes_to_at_most_unit_max():
+    st = maxnorm.init_state()
+    x = jnp.array([0.5, -2.0, 1.0])
+    y, _ = maxnorm.apply(st, x, jnp.float32(1.0), jnp.float32(1.0))
+    m = float(jnp.max(jnp.abs(y)))
+    assert 0.9 < m <= 1.0 + 1e-5
+
+
+def test_quiet_region_not_amplified():
+    """After big gradients, tiny ones must stay tiny (EMA denominator)."""
+    st = maxnorm.init_state()
+    for k in range(1, 51):
+        _, st = maxnorm.apply(
+            st, jnp.array([10.0, -10.0]), jnp.float32(k), jnp.float32(1.0)
+        )
+    y, _ = maxnorm.apply(
+        st, jnp.array([1e-3, -1e-3]), jnp.float32(51.0), jnp.float32(1.0)
+    )
+    assert float(jnp.max(jnp.abs(y))) < 1e-2
+
+
+def test_disabled_passthrough_still_tracks():
+    st = maxnorm.init_state()
+    x = jnp.array([3.0])
+    y, st2 = maxnorm.apply(st, x, jnp.float32(1.0), jnp.float32(0.0))
+    assert float(y[0]) == 3.0
+    assert float(st2.mv) > maxnorm.FLOOR
+
+
+def test_bias_correction_early_steps():
+    """At k=1 the EMA correction must recover ~the full max, not 0.001x."""
+    st = maxnorm.init_state()
+    x = jnp.array([5.0])
+    y, st2 = maxnorm.apply(st, x, jnp.float32(1.0), jnp.float32(1.0))
+    # corrected denominator ~ max(|x|) -> output ~ 1
+    assert 0.5 < float(y[0]) <= 1.0 + 1e-5
+
+
+def test_matches_rust_constants():
+    assert maxnorm.BETA == 0.999
+    assert maxnorm.FLOOR == 1e-4

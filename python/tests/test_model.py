@@ -1,0 +1,134 @@
+"""Model-level tests: shapes, quantized training dynamics, flush."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, quant
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.init_params(KEY)
+    states = model.init_states()
+    img = jnp.clip(
+        jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (28, 28, 1))), 0, 2
+    )
+    return params, states, img
+
+
+def test_architecture_dims():
+    assert model.LAYER_DIMS == [
+        (8, 9), (16, 72), (16, 144), (32, 144), (64, 512), (10, 64)
+    ]
+    assert [c.pixels for c in model.CONVS] == [196, 49, 49, 16]
+
+
+def test_params_quantized_on_grid(setup):
+    params, _, _ = setup
+    delta = quant.w_lsb(8)
+    for i in range(1, 7):
+        w = np.array(params[f"w{i}"])
+        k = (w + 1.0) / delta
+        assert np.abs(k - np.round(k)).max() < 1e-4
+        assert np.abs(w).max() <= 1.0
+
+
+def test_forward_shapes(setup):
+    params, states, img = setup
+    out = jax.jit(model.forward_infer)(params, states, img)
+    assert out["logits"].shape == (10,)
+    assert out["pred"].shape == ()
+
+
+def test_lrt_step_updates_state_not_weights(setup):
+    params, states, img = setup
+    out = jax.jit(model.train_step_lrt)(
+        params, states, img, jnp.int32(3), jax.random.PRNGKey(2),
+        jnp.float32(0.01), jnp.float32(0.0), jnp.float32(1.0),
+        jnp.float32(100.0), jnp.float32(0.9), jnp.float32(1.0),
+    )
+    assert "w1" not in out  # weights untouched by the step
+    assert not np.allclose(np.array(out["cx5"]), 0.0)  # fc accumulated
+    assert out["diag"].shape == (6, 4)
+    assert float(out["loss"]) > 0.0
+
+
+def test_sgd_step_moves_weights_on_grid(setup):
+    params, states, img = setup
+    out = jax.jit(model.train_step_sgd)(
+        params, states, img, jnp.int32(3), jnp.float32(0.3),
+        jnp.float32(0.3), jnp.float32(1.0), jnp.float32(1.0),
+        jnp.float32(1.0), jnp.float32(0.9), jnp.float32(1.0),
+    )
+    delta = quant.w_lsb(8)
+    moved = 0
+    for i in range(1, 7):
+        w = np.array(out[f"w{i}"])
+        k = (w + 1.0) / delta
+        assert np.abs(k - np.round(k)).max() < 1e-4
+        moved += int((w != np.array(params[f"w{i}"])).sum())
+    assert moved > 0
+
+
+def test_bias_only_leaves_weights(setup):
+    params, states, img = setup
+    out = jax.jit(model.train_step_sgd)(
+        params, states, img, jnp.int32(3), jnp.float32(0.3),
+        jnp.float32(0.3), jnp.float32(0.0), jnp.float32(1.0),
+        jnp.float32(1.0), jnp.float32(0.9), jnp.float32(1.0),
+    )
+    for i in range(1, 7):
+        assert np.array_equal(
+            np.array(out[f"w{i}"]), np.array(params[f"w{i}"])
+        )
+
+
+def test_flush_after_accumulation_changes_weights(setup):
+    params, states, img = setup
+    step = jax.jit(model.train_step_lrt)
+    st = dict(states)
+    for t in range(4):
+        out = step(
+            params, st, img, jnp.int32(t % 10), jax.random.PRNGKey(t),
+            jnp.float32(0.01), jnp.float32(0.0), jnp.float32(1.0),
+            jnp.float32(100.0), jnp.float32(0.9), jnp.float32(1.0),
+        )
+        for k in st:
+            if k in out:
+                st[k] = out[k]
+    fl = jax.jit(model.flush)(st, params, jnp.full((6,), 4.0, jnp.float32))
+    dens = np.array(fl["density"])
+    assert dens.shape == (6,)
+    assert dens.max() > 0.0  # a big lr_eff must flip some cells
+    for i in range(1, 7):
+        w = np.array(fl[f"w{i}"])
+        assert np.abs(w).max() <= 1.0
+
+
+def test_loss_decreases_with_sgd_on_repeated_sample(setup):
+    """Sanity: overfitting one sample reduces its loss."""
+    params, states, img = setup
+    step = jax.jit(model.train_step_sgd)
+    p = dict(params)
+    st = dict(states)
+    first = last = None
+    for t in range(30):
+        out = step(
+            p, st, img, jnp.int32(7), jnp.float32(0.05), jnp.float32(0.05),
+            jnp.float32(1.0), jnp.float32(1.0), jnp.float32(1.0),
+            jnp.float32(0.9), jnp.float32(1.0),
+        )
+        for k in p:
+            if k in out:
+                p[k] = out[k]
+        for k in st:
+            if k in out:
+                st[k] = out[k]
+        loss = float(out["loss"])
+        first = first if first is not None else loss
+        last = loss
+    assert last < first, (first, last)

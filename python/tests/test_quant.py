@@ -1,0 +1,69 @@
+"""Quantizer properties (Appendix C model)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+
+
+def test_lsb_values():
+    assert quant.w_lsb(8) == pytest.approx(2.0 / 256)
+    assert quant.lsb(16, -8, 8) == pytest.approx(16.0 / 65536)
+
+
+@given(st.floats(-2, 2), st.sampled_from([2, 4, 8]))
+@settings(max_examples=60, deadline=None)
+def test_mid_tread_on_grid(x, bits):
+    y = float(quant.quantize_mid_tread(jnp.float32(x), bits, -1.0, 1.0))
+    delta = quant.lsb(bits, -1.0, 1.0)
+    k = (y + 1.0) / delta
+    assert abs(k - round(k)) < 1e-4
+    assert -1.0 <= y <= 1.0
+
+
+@given(st.floats(-2, 2))
+@settings(max_examples=40, deadline=None)
+def test_mid_rise_1bit_binary(x):
+    y = float(quant.quantize_mid_rise(jnp.float32(x), 1, -1.0, 1.0))
+    assert y in (-0.5, 0.5)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(32,)).astype(np.float32))
+    for q in (quant.qw, quant.qb, quant.qa, quant.qg):
+        y = q(x)
+        assert np.allclose(np.array(q(y)), np.array(y), atol=1e-6)
+
+
+def test_ste_gradient_passthrough_and_clip():
+    g = jax.grad(lambda x: jnp.sum(quant.qw(x)))(
+        jnp.array([0.5, -0.25, 3.0, -3.0], jnp.float32)
+    )
+    assert np.allclose(np.array(g), [1.0, 1.0, 0.0, 0.0])
+
+
+def test_activation_range():
+    x = jnp.array([-1.0, 0.3, 1.9, 5.0], jnp.float32)
+    y = np.array(quant.qa(x))
+    assert y.min() >= 0.0 and y.max() <= 2.0
+    assert y[0] == 0.0
+
+
+def test_he_alpha_power_of_two():
+    for fan_in in (9, 72, 144, 512, 64):
+        a = quant.he_alpha(fan_in)
+        assert 2.0 ** round(np.log2(a)) == a
+
+
+def test_weight_update_cannot_subaccumulate():
+    """Updates below half an LSB vanish — the paper's SGD failure mode."""
+    w = quant.qw(jnp.float32(0.5))
+    tiny = quant.w_lsb(8) / 4.0
+    assert float(quant.qw(w - tiny)) == float(w)

@@ -1,0 +1,84 @@
+"""Streaming batch norm (Appendix E)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import streambn
+
+
+def test_per_sample_stats_normalize_exactly():
+    rng = np.random.default_rng(0)
+    z = jnp.array(rng.normal(3.0, 2.0, size=(49, 8)).astype(np.float32))
+    st_ = streambn.init_state(8)
+    y, z_hat, inv, _ = streambn.apply(
+        st_, z, jnp.ones(8), jnp.zeros(8), 0.9, jnp.float32(0.0)
+    )
+    y = np.array(y)
+    assert np.abs(y.mean(axis=0)).max() < 1e-4
+    assert np.abs(y.var(axis=0) - 1.0).max() < 1e-2
+    assert np.allclose(np.array(z_hat), y, atol=1e-6)  # gamma=1 beta=0
+
+
+def test_streaming_stats_converge():
+    rng = np.random.default_rng(1)
+    st_ = streambn.init_state(4)
+    eta = 1.0 - 1.0 / 100.0
+    for _ in range(1500):
+        z = jnp.array(rng.normal(5.0, 3.0, size=(16, 4)).astype(np.float32))
+        _, _, _, st_ = streambn.apply(
+            st_, z, jnp.ones(4), jnp.zeros(4), eta, jnp.float32(1.0)
+        )
+    mu = np.array(st_.mu_s)
+    var = np.array(st_.sq_s) - mu**2
+    assert np.abs(mu - 5.0).max() < 0.5
+    assert np.abs(var - 9.0).max() < 2.0
+
+
+def test_variance_identity_not_mean_of_variances():
+    """The paper's point: batch var != mean of per-sample vars (eq. 24)."""
+    rng = np.random.default_rng(2)
+    # two samples with disjoint means: per-sample variance is small, but
+    # the batch variance must capture the mean spread
+    st_ = streambn.init_state(1)
+    eta = 0.5
+    for mean in (0.0, 10.0, 0.0, 10.0, 0.0, 10.0):
+        z = jnp.array(
+            rng.normal(mean, 0.1, size=(8, 1)).astype(np.float32)
+        )
+        _, _, _, st_ = streambn.apply(
+            st_, z, jnp.ones(1), jnp.zeros(1), eta, jnp.float32(1.0)
+        )
+    var = float(st_.sq_s[0] - st_.mu_s[0] ** 2)
+    assert var > 5.0, f"streaming var {var} lost the mean spread"
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_affine_params_applied(seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.array(rng.normal(size=(10, 3)).astype(np.float32))
+    st_ = streambn.init_state(3)
+    gamma = jnp.array([2.0, 0.5, 1.0])
+    beta = jnp.array([1.0, -1.0, 0.0])
+    y, z_hat, _, _ = streambn.apply(
+        st_, z, gamma, beta, 0.9, jnp.float32(0.0)
+    )
+    assert np.allclose(
+        np.array(y),
+        np.array(z_hat) * np.array(gamma) + np.array(beta),
+        atol=1e-5,
+    )
+
+
+def test_inference_uses_frozen_stats():
+    st_ = streambn.StreamBnState(
+        mu_s=jnp.array([1.0, -1.0]), sq_s=jnp.array([5.0, 2.0])
+    )
+    z = jnp.array([[3.0, 0.0]])
+    y = streambn.apply_inference(
+        st_, z, jnp.array([1.0, 2.0]), jnp.array([0.5, 0.0])
+    )
+    assert abs(float(y[0, 0]) - (0.5 + 2.0 / 2.0)) < 1e-3
+    assert abs(float(y[0, 1]) - 2.0) < 1e-3

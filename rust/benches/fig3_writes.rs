@@ -1,0 +1,6 @@
+//! Bench: regenerate Figure 3 (auxiliary area vs inverse write density).
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", lrt_nvm::experiments::fig3());
+    println!("[fig3_writes] {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Figure 6 (adaptation, 4 environments x 5 schemes).
+//! Default is CI-sized (2k online / 2k offline samples); LRT_FULL=1 runs
+//! 20k online / 10k offline per cell.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let full = lrt_nvm::util::cli::full_scale();
+    let (samples, offline) = if full { (20_000, 10_000) } else { (2_000, 2_000) };
+    let (text, cells) = lrt_nvm::experiments::fig6(samples, offline, 0);
+    println!("{text}");
+    println!("accuracy-EMA series (step: value):");
+    for c in &cells {
+        let pts: Vec<String> = c
+            .series
+            .iter()
+            .step_by((c.series.len() / 8).max(1))
+            .map(|(s, a, _)| format!("{s}:{a:.3}"))
+            .collect();
+        println!("  {:>13} {:<13} {}", c.env, c.scheme, pts.join(" "));
+    }
+    println!("[fig6_adapt] {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 7 (rank x weight-bitwidth heat map) and
+//! Figure 11 (learning-rate heat maps). LRT_FULL=1 uses the paper's 2k /
+//! 10k sample counts with more seeds folded into the CLI variants.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let full = lrt_nvm::util::cli::full_scale();
+    let s7 = 2_000; // the paper's 2k-sample protocol
+    let s11 = if full { 10_000 } else { 1_500 };
+    println!("{}", lrt_nvm::experiments::fig7(s7, 0));
+    println!();
+    println!("{}", lrt_nvm::experiments::fig11(s11, 0));
+    println!("[fig7_sweep] {:.2}s", t0.elapsed().as_secs_f64());
+}

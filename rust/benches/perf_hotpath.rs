@@ -1,0 +1,165 @@
+//! Bench: hot-path microbenchmarks + the Section 4.2.4 efficiency
+//! comparison (LRT O((n_i+n_o+q)q^2) per sample vs dense accumulation
+//! O(n_i n_o)), plus end-to-end step costs for both backends.
+//!
+//! Hand-rolled harness (no criterion in the offline vendored set):
+//! median-of-runs wall clock with warmup, printed as a table.
+
+use lrt_nvm::lrt::{LrtState, Variant};
+use lrt_nvm::tensor::Mat;
+use lrt_nvm::util::rng::Rng;
+use lrt_nvm::util::table::Table;
+
+fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e6); // us
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    println!("== Section 4.2.4: per-sample cost, LRT vs dense accumulation ==");
+    println!("(us per Kronecker update; dense = add_outer into an");
+    println!(" (n_o x n_i) accumulator, the memory LRT eliminates)\n");
+    let mut t = Table::new(vec![
+        "layer (n_o x n_i)", "rank", "LRT us/upd", "dense us/upd",
+        "LRT aux B", "dense acc B",
+    ]);
+    for &(n_o, n_i, label) in &[
+        (8usize, 9usize, "conv1 8x9"),
+        (16, 72, "conv2 16x72"),
+        (32, 144, "conv4 32x144"),
+        (64, 512, "fc5 64x512"),
+        (256, 1024, "linreg 256x1024"),
+    ] {
+        for &rank in &[1usize, 4, 8] {
+            let mut st = LrtState::new(n_o, n_i, rank);
+            let dz = rng.normal_vec(n_o, 1.0);
+            let a = rng.normal_vec(n_i, 1.0);
+            let mut r2 = Rng::new(7);
+            let lrt_us = time_median(200, || {
+                st.update(&dz, &a, &mut r2, Variant::Biased, 1e18);
+            });
+            let mut acc = Mat::zeros(n_o, n_i);
+            let dense_us = time_median(200, || {
+                acc.add_outer(1.0, &dz, &a);
+            });
+            t.row(vec![
+                label.to_string(),
+                format!("{rank}"),
+                format!("{lrt_us:.2}"),
+                format!("{dense_us:.2}"),
+                format!("{}", st.aux_bytes(16)),
+                format!("{}", n_o * n_i * 2),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nShape check: LRT per-update cost is ~O((n_i+n_o+q)q^2), so the \
+         dense path wins on raw time for small layers but costs n_o*n_i \
+         accumulator memory; the paper's LAM constraint is the point.\n"
+    );
+
+    println!("== unbiased-mixing overhead ==");
+    {
+        let (n_o, n_i, rank) = (64usize, 512usize, 4usize);
+        let mut st = LrtState::new(n_o, n_i, rank);
+        let dz = rng.normal_vec(n_o, 1.0);
+        let a = rng.normal_vec(n_i, 1.0);
+        let mut r2 = Rng::new(7);
+        let b = time_median(200, || {
+            st.update(&dz, &a, &mut r2, Variant::Biased, 1e18);
+        });
+        let u = time_median(200, || {
+            st.update(&dz, &a, &mut r2, Variant::Unbiased, 1e18);
+        });
+        println!("fc5 r=4: biased {b:.2} us, unbiased {u:.2} us ({:.1}% overhead)\n",
+                 (u / b - 1.0) * 100.0);
+    }
+
+    println!("== end-to-end per-sample step cost (native engine) ==");
+    {
+        use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+        use lrt_nvm::coordinator::device::NativeDevice;
+        use lrt_nvm::nn::model::Params;
+        let image: Vec<f32> = {
+            let mut r = Rng::new(3);
+            (0..784).map(|_| r.normal_f32(0.5, 0.5).clamp(0.0, 2.0)).collect()
+        };
+        let mut t2 = Table::new(vec!["scheme", "us/sample"]);
+        for (name, scheme) in [
+            ("inference", Scheme::Inference),
+            ("sgd", Scheme::Sgd),
+            ("lrt-biased", Scheme::Lrt { variant: Variant::Biased }),
+            ("lrt-unbiased", Scheme::Lrt { variant: Variant::Unbiased }),
+        ] {
+            let mut cfg = RunConfig::default();
+            cfg.scheme = scheme;
+            let params = Params::init(&mut Rng::new(1), 8);
+            let mut dev = NativeDevice::new(
+                cfg,
+                params,
+                lrt_nvm::nn::model::AuxState::new(),
+            );
+            let mut lab = 0usize;
+            let us = time_median(30, || {
+                dev.step(&image, lab % 10);
+                lab += 1;
+            });
+            t2.row(vec![name.to_string(), format!("{us:.0}")]);
+        }
+        t2.print();
+    }
+
+    println!("\n== artifact (PJRT) step cost, if artifacts are built ==");
+    {
+        use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+        use lrt_nvm::nn::model::Params;
+        use lrt_nvm::runtime::{ArtifactDevice, Runtime};
+        // cargo runs benches with cwd = the package dir (rust/)
+        let dir = if std::path::Path::new("artifacts/manifest.json").exists()
+        {
+            std::path::Path::new("artifacts")
+        } else {
+            std::path::Path::new("../artifacts")
+        };
+        match Runtime::load(dir) {
+            Ok(rt) => {
+                let image: Vec<f32> = {
+                    let mut r = Rng::new(3);
+                    (0..784)
+                        .map(|_| r.normal_f32(0.5, 0.5).clamp(0.0, 2.0))
+                        .collect()
+                };
+                let mut t3 = Table::new(vec!["artifact scheme", "us/sample"]);
+                for (name, scheme) in [
+                    ("forward", Scheme::Inference),
+                    ("step_sgd", Scheme::Sgd),
+                    ("step_lrt", Scheme::Lrt { variant: Variant::Biased }),
+                ] {
+                    let mut cfg = RunConfig::default();
+                    cfg.scheme = scheme;
+                    let params = Params::init(&mut Rng::new(1), 8);
+                    let mut dev =
+                        ArtifactDevice::new(&rt, cfg, &params).unwrap();
+                    let mut lab = 0usize;
+                    let us = time_median(10, || {
+                        dev.step(&image, lab % 10).unwrap();
+                        lab += 1;
+                    });
+                    t3.row(vec![name.to_string(), format!("{us:.0}")]);
+                }
+                t3.print();
+            }
+            Err(e) => println!("(skipped: {e:#})"),
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Table 2 (biased/unbiased SVD per layer group).
+fn main() {
+    let t0 = std::time::Instant::now();
+    let full = lrt_nvm::util::cli::full_scale();
+    let (samples, seeds) = if full { (10_000, 5) } else { (1_500, 3) };
+    println!("{}", lrt_nvm::experiments::table2(samples, seeds));
+    println!("[table2_bias] {:.2}s", t0.elapsed().as_secs_f64());
+}

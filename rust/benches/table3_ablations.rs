@@ -1,0 +1,10 @@
+//! Bench: regenerate Table 3 (ablations) + Figure 9 (gradient trace).
+fn main() {
+    let t0 = std::time::Instant::now();
+    let full = lrt_nvm::util::cli::full_scale();
+    let (samples, seeds) = if full { (10_000, 5) } else { (1_500, 3) };
+    println!("{}", lrt_nvm::experiments::table3(samples, seeds));
+    println!();
+    println!("{}", lrt_nvm::experiments::fig9(if full { 2_000 } else { 300 }, 0));
+    println!("[table3_ablations] {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,8 @@
+//! Baseline training algorithms the paper compares against:
+//! online SGD, bias-only, and inference-only are configurations of the
+//! coordinator's scheme enum; UORO (Tallec & Ollivier 2017) — the
+//! high-variance rank-1 unbiased estimator of Table 1 — lives here.
+
+pub mod uoro;
+
+pub use uoro::UoroState;

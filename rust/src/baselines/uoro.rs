@@ -1,0 +1,148 @@
+//! UORO: Unbiased Online Recurrent Optimization (Tallec & Ollivier 2017)
+//! adapted to Kronecker-sum gradient accumulation, as the paper does for
+//! Table 1. Maintains a *rank-1* unbiased estimate of the accumulated
+//! gradient: with fresh Rademacher signs s1, s2 and variance-minimizing
+//! scales rho,
+//!
+//!   l' = s1 rho1 l + s2 rho2 dz
+//!   r' = s1 r / rho1 + s2 a / rho2
+//!
+//! E[l' r'^T] = l r^T + dz (x) a^T, but the variance grows with the batch
+//! — the effect Table 1 shows (weak/non-existent recovery).
+
+use crate::tensor::{norm2, Mat};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct UoroState {
+    pub l: Vec<f32>,
+    pub r: Vec<f32>,
+    pub updates: u64,
+}
+
+const EPS: f32 = 1e-12;
+
+impl UoroState {
+    pub fn new(n_o: usize, n_i: usize) -> UoroState {
+        UoroState { l: vec![0.0; n_o], r: vec![0.0; n_i], updates: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.l.fill(0.0);
+        self.r.fill(0.0);
+        self.updates = 0;
+    }
+
+    /// Accumulate one Kronecker term dz (x) a.
+    pub fn update(&mut self, dz: &[f32], a: &[f32], rng: &mut Rng) {
+        let s1 = rng.rademacher();
+        let s2 = rng.rademacher();
+        let nl = norm2(&self.l);
+        let nr = norm2(&self.r);
+        let ndz = norm2(dz);
+        let na = norm2(a);
+        // variance-minimizing scale factors (guarded for cold start)
+        let rho1 = if nl > EPS { (nr / nl).sqrt().max(EPS) } else { 1.0 };
+        let rho2 = if ndz > EPS { (na / ndz).sqrt().max(EPS) } else { 1.0 };
+        for i in 0..self.l.len() {
+            self.l[i] = s1 * rho1 * self.l[i] + s2 * rho2 * dz[i];
+        }
+        for i in 0..self.r.len() {
+            self.r[i] = s1 * self.r[i] / rho1 + s2 * a[i] / rho2;
+        }
+        self.updates += 1;
+    }
+
+    /// Dense estimate of the accumulated gradient.
+    pub fn delta(&self) -> Mat {
+        let mut m = Mat::zeros(self.l.len(), self.r.len());
+        m.add_outer(1.0, &self.l, &self.r);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_over_trials() {
+        let mut rng = Rng::new(5);
+        let b = 4;
+        let dzs: Vec<Vec<f32>> =
+            (0..b).map(|_| rng.normal_vec(6, 1.0)).collect();
+        let as_: Vec<Vec<f32>> =
+            (0..b).map(|_| rng.normal_vec(8, 1.0)).collect();
+        let mut g = Mat::zeros(6, 8);
+        for (d, a) in dzs.iter().zip(as_.iter()) {
+            g.add_outer(1.0, d, a);
+        }
+        let trials = 3000;
+        let mut acc = Mat::zeros(6, 8);
+        for t in 0..trials {
+            let mut st = UoroState::new(6, 8);
+            let mut trng = Rng::new(1000 + t);
+            for (d, a) in dzs.iter().zip(as_.iter()) {
+                st.update(d, a, &mut trng);
+            }
+            acc.add(&st.delta());
+        }
+        acc.scale(1.0 / trials as f32);
+        let mut diff = acc.clone();
+        diff.scale(-1.0);
+        diff.add(&g);
+        let rel = diff.frob_norm() / g.frob_norm();
+        assert!(rel < 0.15, "relative bias {rel}");
+    }
+
+    #[test]
+    fn higher_variance_than_lrt() {
+        // The paper's Table 1 rationale: UORO's single-run error is much
+        // larger than biased LRT's at the same memory-ish budget.
+        let mut rng = Rng::new(6);
+        let b = 16;
+        let dzs: Vec<Vec<f32>> =
+            (0..b).map(|_| rng.normal_vec(10, 1.0)).collect();
+        let as_: Vec<Vec<f32>> =
+            (0..b).map(|_| rng.normal_vec(14, 1.0)).collect();
+        let mut g = Mat::zeros(10, 14);
+        for (d, a) in dzs.iter().zip(as_.iter()) {
+            g.add_outer(1.0, d, a);
+        }
+        let mut uoro_err = 0.0;
+        let mut lrt_err = 0.0;
+        for seed in 0..10u64 {
+            let mut u = UoroState::new(10, 14);
+            let mut l = crate::lrt::LrtState::new(10, 14, 1);
+            l.quantize_state = false;
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            for (d, a) in dzs.iter().zip(as_.iter()) {
+                u.update(d, a, &mut r1);
+                l.update(d, a, &mut r2, crate::lrt::Variant::Biased, 1e18);
+            }
+            let mut du = u.delta();
+            du.scale(-1.0);
+            du.add(&g);
+            uoro_err += du.frob_norm();
+            let mut dl = l.delta();
+            dl.scale(-1.0);
+            dl.add(&g);
+            lrt_err += dl.frob_norm();
+        }
+        assert!(
+            uoro_err > lrt_err,
+            "UORO err {uoro_err} should exceed biased-LRT err {lrt_err}"
+        );
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut rng = Rng::new(7);
+        let mut st = UoroState::new(4, 4);
+        st.update(&rng.normal_vec(4, 1.0), &rng.normal_vec(4, 1.0), &mut rng);
+        assert!(st.delta().frob_norm() > 0.0);
+        st.reset();
+        assert_eq!(st.delta().frob_norm(), 0.0);
+    }
+}

@@ -1,0 +1,282 @@
+//! Convex-convergence substrate (paper Section 5 / Appendix A, Figure 5).
+//!
+//! Linear regression on a static batch: X (n_i x B), Y (n_o x B),
+//! f(W) = ||W X - Y||_F^2 / (2 B). The Hessian in flattened weight space
+//! is (X X^T (x) I)/B, so the strong-convexity constants are
+//! c~ = lambda_min_nonzero(X X^T)/B and C = lambda_max(X X^T)/B
+//! (Appendix A.1 — with B < n_i the Hessian is rank-deficient and the
+//! distance to optimum is measured in the nonzero eigenspace).
+//!
+//! Three gradient channels reproduce the figure: exact gradients +
+//! artificial Gaussian noise (5a), and biased/unbiased LRT estimates (5b).
+
+use crate::lrt::{LrtState, Variant};
+use crate::lrt::svd::{svd_jacobi, DEFAULT_SWEEPS};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// The regression problem with its spectral data precomputed.
+pub struct LinReg {
+    pub x: Mat,      // (n_i, B)
+    pub y: Mat,      // (n_o, B)
+    pub w_star: Mat, // (n_o, n_i) min-norm optimum
+    /// Eigenvectors of X X^T (columns) and eigenvalues, sorted desc.
+    pub eigvecs: Mat,
+    pub eigvals: Vec<f32>,
+    /// Strong-convexity constants of the batch loss (already / B).
+    pub c_min_nonzero: f32,
+    pub c_max: f32,
+}
+
+impl LinReg {
+    /// Random instance: Y = W_true X + noise.
+    pub fn new(n_i: usize, n_o: usize, batch: usize, rng: &mut Rng) -> LinReg {
+        let x = Mat::from_fn(n_i, batch, |_, _| rng.normal_f32(0.0, 1.0));
+        let w_true = Mat::from_fn(n_o, n_i, |_, _| {
+            rng.normal_f32(0.0, 1.0 / (n_i as f32).sqrt())
+        });
+        let mut y = w_true.matmul(&x);
+        for v in &mut y.data {
+            *v += rng.normal_f32(0.0, 0.01);
+        }
+
+        // Spectral data of X X^T (symmetric PSD).
+        let gram = x.matmul_transb(&x); // (n_i, n_i)
+        let (u, s, _v) = svd_jacobi(&gram, DEFAULT_SWEEPS);
+        let tol = s[0] * 1e-5;
+        let nonzero: Vec<f32> =
+            s.iter().copied().filter(|&e| e > tol).collect();
+        let c_min_nonzero =
+            nonzero.last().copied().unwrap_or(0.0) / batch as f32;
+        let c_max = s[0] / batch as f32;
+
+        // Min-norm optimum W* = Y X^T (X X^T)^+.
+        let yxt = y.matmul_transb(&x); // (n_o, n_i)
+        // pinv via eigendecomposition: (XX^T)^+ = U diag(1/s) U^T
+        let mut pinv = Mat::zeros(gram.rows, gram.cols);
+        for k in 0..s.len() {
+            if s[k] > tol {
+                let uk = u.col(k);
+                pinv.add_outer(1.0 / s[k], &uk, &uk);
+            }
+        }
+        let w_star = yxt.matmul(&pinv);
+
+        LinReg {
+            x,
+            y,
+            w_star,
+            eigvecs: u,
+            eigvals: s,
+            c_min_nonzero,
+            c_max,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Batch loss ||W X - Y||^2 / (2B).
+    pub fn loss(&self, w: &Mat) -> f32 {
+        let mut r = w.matmul(&self.x);
+        r.scale(-1.0);
+        r.add(&self.y);
+        let n = r.frob_norm();
+        n * n / (2.0 * self.batch() as f32)
+    }
+
+    /// Exact batch gradient (W X - Y) X^T / B.
+    pub fn grad(&self, w: &Mat) -> Mat {
+        let mut r = w.matmul(&self.x);
+        for (rv, yv) in r.data.iter_mut().zip(self.y.data.iter()) {
+            *rv -= yv;
+        }
+        let mut g = r.matmul_transb(&self.x);
+        g.scale(1.0 / self.batch() as f32);
+        g
+    }
+
+    /// ||W - W*|| restricted to the nonzero eigenspace of X X^T
+    /// (Appendix A.1's w~ distance).
+    pub fn dist_to_opt(&self, w: &Mat) -> f32 {
+        let mut diff = w.clone();
+        diff.scale(-1.0);
+        diff.add(&self.w_star);
+        // project rows onto span of nonzero eigenvectors
+        let tol = self.eigvals[0] * 1e-5;
+        let mut total = 0.0f32;
+        for k in 0..self.eigvals.len() {
+            if self.eigvals[k] <= tol {
+                continue;
+            }
+            let uk = self.eigvecs.col(k);
+            let proj = diff.matvec(&uk); // (n_o)
+            total += proj.iter().map(|v| v * v).sum::<f32>();
+        }
+        total.sqrt()
+    }
+}
+
+/// One step's record for the Fig. 5 series.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStat {
+    pub step: usize,
+    pub loss: f32,
+    /// ||epsilon|| — the gradient-estimate error norm (LHS of eq. 4).
+    pub eps_norm: f32,
+    /// (c~/2) ||w - w*|| — RHS of eq. 4 with the min nonzero eigenvalue.
+    pub rhs_c: f32,
+    /// Same with C (the paper's right dashed line).
+    pub rhs_cmax: f32,
+}
+
+/// Fig. 5(a): SGD with exact gradients + Gaussian noise of std `sigma`.
+pub fn run_noisy_sgd(
+    prob: &LinReg,
+    sigma: f32,
+    lr0: f32,
+    steps: usize,
+    rng: &mut Rng,
+) -> Vec<StepStat> {
+    let mut w = Mat::zeros(prob.y.rows, prob.x.rows);
+    let mut out = Vec::with_capacity(steps);
+    for t in 0..steps {
+        let g = prob.grad(&w);
+        let mut noise = Mat::from_fn(g.rows, g.cols, |_, _| {
+            rng.normal_f32(0.0, sigma)
+        });
+        let eps_norm = noise.frob_norm();
+        let dist = prob.dist_to_opt(&w);
+        out.push(StepStat {
+            step: t,
+            loss: prob.loss(&w),
+            eps_norm,
+            rhs_c: 0.5 * prob.c_min_nonzero * dist,
+            rhs_cmax: 0.5 * prob.c_max * dist,
+        });
+        noise.add(&g);
+        let lr = lr0 / ((t + 1) as f32).sqrt();
+        for (wv, gv) in w.data.iter_mut().zip(noise.data.iter()) {
+            *wv -= lr * gv;
+        }
+    }
+    out
+}
+
+/// Fig. 5(b): LRT-estimated batch gradients (rank r, biased/unbiased).
+pub fn run_lrt(
+    prob: &LinReg,
+    variant: Variant,
+    rank: usize,
+    lr0: f32,
+    steps: usize,
+    rng: &mut Rng,
+) -> Vec<StepStat> {
+    let n_o = prob.y.rows;
+    let n_i = prob.x.rows;
+    let b = prob.batch();
+    let mut w = Mat::zeros(n_o, n_i);
+    let mut st = LrtState::new(n_o, n_i, rank);
+    st.quantize_state = false; // float-precision analysis (Section 5.1)
+    let mut out = Vec::with_capacity(steps);
+    for t in 0..steps {
+        st.reset();
+        // accumulate the batch sample-by-sample
+        let mut resid = w.matmul(&prob.x);
+        for (rv, yv) in resid.data.iter_mut().zip(prob.y.data.iter()) {
+            *rv -= yv;
+        }
+        for i in 0..b {
+            let dz: Vec<f32> =
+                (0..n_o).map(|r| resid.at(r, i) / b as f32).collect();
+            let a: Vec<f32> = (0..n_i).map(|r| prob.x.at(r, i)).collect();
+            st.update(&dz, &a, rng, variant, 1e18);
+        }
+        let mut est = st.delta();
+        let g = prob.grad(&w);
+        let mut err = est.clone();
+        err.scale(-1.0);
+        err.add(&g);
+        let dist = prob.dist_to_opt(&w);
+        out.push(StepStat {
+            step: t,
+            loss: prob.loss(&w),
+            eps_norm: err.frob_norm(),
+            rhs_c: 0.5 * prob.c_min_nonzero * dist,
+            rhs_cmax: 0.5 * prob.c_max * dist,
+        });
+        let lr = lr0 / ((t + 1) as f32).sqrt();
+        est.scale(lr);
+        for (wv, gv) in w.data.iter_mut().zip(est.data.iter()) {
+            *wv -= gv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (LinReg, Rng) {
+        let mut rng = Rng::new(1);
+        let prob = LinReg::new(24, 8, 12, &mut rng);
+        (prob, rng)
+    }
+
+    #[test]
+    fn optimum_has_zero_projected_gradient() {
+        let (prob, _) = small();
+        let g = prob.grad(&prob.w_star);
+        assert!(g.frob_norm() < 1e-2, "{}", g.frob_norm());
+        assert!(prob.dist_to_opt(&prob.w_star) < 1e-3);
+    }
+
+    #[test]
+    fn constants_ordered() {
+        let (prob, _) = small();
+        assert!(prob.c_min_nonzero > 0.0);
+        assert!(prob.c_max >= prob.c_min_nonzero);
+    }
+
+    #[test]
+    fn clean_sgd_converges() {
+        let (prob, mut rng) = small();
+        let stats = run_noisy_sgd(&prob, 0.0, 0.5, 60, &mut rng);
+        assert!(
+            stats.last().unwrap().loss < 0.2 * stats[0].loss,
+            "{} -> {}", stats[0].loss, stats.last().unwrap().loss
+        );
+    }
+
+    #[test]
+    fn big_noise_stalls_convergence() {
+        let (prob, mut rng) = small();
+        let clean = run_noisy_sgd(&prob, 0.0, 0.5, 50, &mut rng);
+        let noisy = run_noisy_sgd(&prob, 5.0, 0.5, 50, &mut rng);
+        assert!(noisy.last().unwrap().loss > clean.last().unwrap().loss);
+        // noise pushes the error past the eq.-4 wall
+        let s = &noisy[25];
+        assert!(s.eps_norm > s.rhs_c);
+    }
+
+    #[test]
+    fn lrt_biased_converges_and_tracks_wall() {
+        let (prob, mut rng) = small();
+        let stats =
+            run_lrt(&prob, Variant::Biased, 10, 0.5, 50, &mut rng);
+        assert!(stats.last().unwrap().loss < stats[0].loss * 0.7);
+        // error should shrink as training progresses (Fig. 5b behavior)
+        assert!(stats.last().unwrap().eps_norm <= stats[2].eps_norm * 2.0);
+    }
+
+    #[test]
+    fn lrt_unbiased_runs() {
+        let (prob, mut rng) = small();
+        let stats =
+            run_lrt(&prob, Variant::Unbiased, 10, 0.3, 30, &mut rng);
+        assert_eq!(stats.len(), 30);
+        assert!(stats.iter().all(|s| s.loss.is_finite()));
+    }
+}

@@ -1,0 +1,224 @@
+//! Run configuration: every experiment in the paper is a point in this
+//! space. Parsed from CLI options (and JSON for fleet specs).
+
+use crate::data::Env;
+use crate::lrt::Variant;
+use crate::nn::arch::DEFAULT_BATCH;
+use crate::nvm::drift::DriftCfg;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// The five training schemes of Fig. 6 (LRT twice: no-norm / max-norm).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    Inference,
+    BiasOnly,
+    Sgd,
+    Lrt { variant: Variant },
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "inference" => Some(Scheme::Inference),
+            "bias" | "bias-only" => Some(Scheme::BiasOnly),
+            "sgd" => Some(Scheme::Sgd),
+            "lrt" | "lrt-biased" => {
+                Some(Scheme::Lrt { variant: Variant::Biased })
+            }
+            "lrt-unbiased" => {
+                Some(Scheme::Lrt { variant: Variant::Unbiased })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Inference => "inference",
+            Scheme::BiasOnly => "bias-only",
+            Scheme::Sgd => "sgd",
+            Scheme::Lrt { variant: Variant::Biased } => "lrt-biased",
+            Scheme::Lrt { variant: Variant::Unbiased } => "lrt-unbiased",
+        }
+    }
+
+    pub fn trains_weights(&self) -> bool {
+        matches!(self, Scheme::Sgd | Scheme::Lrt { .. })
+    }
+
+    pub fn trains_bias(&self) -> bool {
+        !matches!(self, Scheme::Inference)
+    }
+}
+
+/// Full configuration of one online-adaptation run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub scheme: Scheme,
+    pub env: Env,
+    pub seed: u64,
+    /// Online samples to stream.
+    pub samples: usize,
+    /// Offline pretraining samples before deployment.
+    pub offline_samples: usize,
+    pub lr_w: f32,
+    pub lr_b: f32,
+    pub rank: usize,
+    pub use_maxnorm: bool,
+    pub bn_stream: bool,
+    /// Streaming-BN EMA horizon (eta = 1 - 1/bn_batch).
+    pub bn_batch: f32,
+    pub kappa_th: f32,
+    /// Per-layer LRT flush batch sizes.
+    pub batch: [usize; 6],
+    /// Minimum update density to commit a flush (Appendix C).
+    pub rho_min: f64,
+    pub w_bits: u32,
+    pub drift: DriftCfg,
+    /// Record (step, acc, writes) every `log_every` samples.
+    pub log_every: usize,
+    /// Samples per distribution-shift segment (paper: 10_000; CI-sized
+    /// runs shrink it so shifts actually occur within the run).
+    pub shift_period: u64,
+    /// Per-layer LRT variant override (Table 2 mixes biased convs with
+    /// unbiased fcs etc.); defaults to the scheme's variant everywhere.
+    pub lrt_variants: Option<[Variant; 6]>,
+    /// Disable per-sample bias training (Table 3 "no bias training").
+    pub train_bias: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            scheme: Scheme::Lrt { variant: Variant::Biased },
+            env: Env::Control,
+            seed: 0,
+            samples: 10_000,
+            offline_samples: 4_000,
+            lr_w: 0.01,
+            lr_b: 0.01,
+            rank: 4,
+            use_maxnorm: true,
+            bn_stream: true,
+            bn_batch: 100.0,
+            kappa_th: 100.0,
+            batch: DEFAULT_BATCH,
+            rho_min: 0.01,
+            w_bits: 8,
+            drift: DriftCfg::NONE,
+            log_every: 250,
+            shift_period: 10_000,
+            lrt_variants: None,
+            train_bias: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from CLI args (`adapt` subcommand options).
+    pub fn from_args(args: &Args) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        if let Some(s) = Scheme::parse(&args.str_opt("scheme", "lrt")) {
+            cfg.scheme = s;
+        }
+        if let Some(e) = Env::parse(&args.str_opt("env", "control")) {
+            cfg.env = e;
+        }
+        cfg.seed = args.u64_opt("seed", cfg.seed);
+        cfg.samples = args.usize_opt("samples", cfg.samples);
+        cfg.offline_samples =
+            args.usize_opt("offline", cfg.offline_samples);
+        cfg.lr_w = args.f64_opt("lr", cfg.lr_w as f64) as f32;
+        cfg.lr_b = args.f64_opt("lr-bias", cfg.lr_w as f64) as f32;
+        cfg.rank = args.usize_opt("rank", cfg.rank);
+        cfg.use_maxnorm = !args.flag("no-norm");
+        cfg.bn_stream = !args.flag("no-stream-bn");
+        cfg.kappa_th = args.f64_opt("kappa", cfg.kappa_th as f64) as f32;
+        cfg.rho_min = args.f64_opt("rho-min", cfg.rho_min);
+        cfg.w_bits = args.usize_opt("w-bits", cfg.w_bits as usize) as u32;
+        cfg.log_every = args.usize_opt("log-every", cfg.log_every);
+        cfg.drift = match cfg.env {
+            Env::AnalogDrift => {
+                crate::nvm::drift::DriftCfg::analog(
+                    args.f64_opt("sigma0", 10.0),
+                )
+            }
+            Env::DigitalDrift => {
+                crate::nvm::drift::DriftCfg::digital(args.f64_opt("p0", 10.0))
+            }
+            _ => DriftCfg::NONE,
+        };
+        cfg
+    }
+
+    /// Variant when running LRT (Biased otherwise, unused).
+    pub fn variant(&self) -> Variant {
+        match self.scheme {
+            Scheme::Lrt { variant } => variant,
+            _ => Variant::Biased,
+        }
+    }
+
+    pub fn bn_eta(&self) -> f32 {
+        1.0 - 1.0 / self.bn_batch
+    }
+
+    /// JSON summary written into reports.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("scheme".into(), Json::Str(self.scheme.name().into()));
+        m.insert("env".into(), Json::Str(self.env.name().into()));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("samples".into(), Json::Num(self.samples as f64));
+        m.insert("lr_w".into(), Json::Num(self.lr_w as f64));
+        m.insert("rank".into(), Json::Num(self.rank as f64));
+        m.insert("maxnorm".into(), Json::Bool(self.use_maxnorm));
+        m.insert("w_bits".into(), Json::Num(self.w_bits as f64));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(Scheme::parse("sgd"), Some(Scheme::Sgd));
+        assert_eq!(
+            Scheme::parse("lrt-unbiased"),
+            Some(Scheme::Lrt { variant: Variant::Unbiased })
+        );
+        assert_eq!(Scheme::parse("nope"), None);
+        assert!(!Scheme::Inference.trains_bias());
+        assert!(Scheme::BiasOnly.trains_bias());
+        assert!(!Scheme::BiasOnly.trains_weights());
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let args = Args::parse(
+            [
+                "adapt", "--scheme", "sgd", "--env", "analog", "--lr",
+                "0.03", "--samples", "500", "--no-norm",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args);
+        assert_eq!(cfg.scheme, Scheme::Sgd);
+        assert_eq!(cfg.env, Env::AnalogDrift);
+        assert!(cfg.drift.enabled());
+        assert!((cfg.lr_w - 0.03).abs() < 1e-9);
+        assert_eq!(cfg.samples, 500);
+        assert!(!cfg.use_maxnorm);
+    }
+
+    #[test]
+    fn bn_eta_formula() {
+        let cfg = RunConfig::default();
+        assert!((cfg.bn_eta() - 0.99).abs() < 1e-6);
+    }
+}

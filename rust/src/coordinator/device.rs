@@ -1,0 +1,306 @@
+//! A simulated NVM edge device running the native engine: weight arrays
+//! in simulated RRAM, auxiliary training state in (simulated) SRAM, and
+//! the per-sample step for every training scheme of Section 7.1.
+
+use super::config::{RunConfig, Scheme};
+use super::scheduler::{FlushDecision, FlushScheduler};
+use crate::lrt::LrtState;
+use crate::nn::arch::{LAYER_DIMS, N_LAYERS};
+use crate::nn::model::{
+    self, apply_bias_updates, argmax, softmax_xent, AuxState, Params,
+};
+use crate::nvm::{drift, NvmArray};
+use crate::quant::qw_bits;
+use crate::util::rng::Rng;
+
+pub struct NativeDevice {
+    pub cfg: RunConfig,
+    pub params: Params,
+    pub arrays: Vec<NvmArray>,
+    pub aux: AuxState,
+    pub lrt: Vec<LrtState>,
+    pub sched: Vec<FlushScheduler>,
+    pub kappa_skips: u64,
+    /// Weights in `params` are stale vs the NVM arrays (after a commit
+    /// or drift round); cleared by `read_weights`.
+    weights_dirty: bool,
+    rng: Rng,
+    drift_rng: Rng,
+}
+
+impl NativeDevice {
+    /// Deploy: program the NVM arrays from (offline-trained) parameters.
+    pub fn new(
+        cfg: RunConfig,
+        params: Params,
+        aux: AuxState,
+    ) -> NativeDevice {
+        let qw = qw_bits(cfg.w_bits);
+        let arrays = params
+            .w
+            .iter()
+            .map(|w| NvmArray::program(w, qw))
+            .collect();
+        let lrt = LAYER_DIMS
+            .iter()
+            .map(|&(n_o, n_i)| LrtState::new(n_o, n_i, cfg.rank))
+            .collect();
+        let sched = cfg
+            .batch
+            .iter()
+            .map(|&b| FlushScheduler::new(b, cfg.rho_min))
+            .collect();
+        let mut rng = Rng::new(cfg.seed ^ 0xDE71CE);
+        let drift_rng = rng.fork(0xD217F7);
+        NativeDevice {
+            cfg,
+            params,
+            arrays,
+            aux,
+            lrt,
+            sched,
+            kappa_skips: 0,
+            weights_dirty: true,
+            rng,
+            drift_rng,
+        }
+    }
+
+    /// Refresh the logical weights from NVM (drift may have moved them).
+    /// No-op when nothing was committed or drifted since the last sync.
+    pub fn read_weights(&mut self) {
+        if !self.weights_dirty {
+            return;
+        }
+        for (i, arr) in self.arrays.iter().enumerate() {
+            self.params.w[i] = arr.read();
+        }
+        self.weights_dirty = false;
+    }
+
+    /// Supervised online step: predict, learn from the revealed label.
+    pub fn step(&mut self, image: &[f32], label: usize) -> (f32, bool) {
+        self.read_weights();
+        let cfg = &self.cfg;
+        let train = cfg.scheme != Scheme::Inference;
+        let caches = model::forward(
+            &self.params,
+            &mut self.aux,
+            image,
+            cfg.bn_eta(),
+            cfg.bn_stream,
+            cfg.w_bits,
+            train,
+        );
+        let pred = argmax(&caches.logits);
+        let (loss, dlogits) = softmax_xent(&caches.logits, label);
+        let correct = pred == label;
+        if !train {
+            return (loss, correct);
+        }
+
+        let use_mn = cfg.use_maxnorm;
+        let grads = model::backward(
+            &self.params,
+            &mut self.aux,
+            caches,
+            &dlogits,
+            use_mn,
+            cfg.w_bits,
+        );
+        apply_bias_updates(
+            &mut self.params,
+            &grads,
+            cfg.lr_b,
+            cfg.scheme.trains_bias() && cfg.train_bias,
+        );
+
+        match cfg.scheme {
+            Scheme::Sgd => self.sgd_weight_step(&grads),
+            Scheme::Lrt { variant } => {
+                self.lrt_weight_step(&grads, variant)
+            }
+            _ => {}
+        }
+        (loss, correct)
+    }
+
+    fn sgd_weight_step(&mut self, grads: &model::Grads) {
+        let qw = qw_bits(self.cfg.w_bits);
+        for i in 0..N_LAYERS {
+            let dw = grads.full(i);
+            let mut cand = self.params.w[i].clone();
+            for (wv, &g) in cand.data.iter_mut().zip(dw.data.iter()) {
+                *wv = qw.q(*wv - self.cfg.lr_w * g);
+            }
+            if self.arrays[i].commit(&cand) > 0 {
+                self.weights_dirty = true;
+            }
+        }
+    }
+
+    fn lrt_weight_step(
+        &mut self,
+        grads: &model::Grads,
+        variant: crate::lrt::Variant,
+    ) {
+        let qw = qw_bits(self.cfg.w_bits);
+        for i in 0..N_LAYERS {
+            // conv layers: one Kronecker update per output pixel
+            // (Appendix B.2); fc layers: one per sample.
+            let dzw = &grads.dzw[i];
+            let ain = &grads.ain[i];
+            let layer_variant = self
+                .cfg
+                .lrt_variants
+                .map(|v| v[i])
+                .unwrap_or(variant);
+            for p in 0..dzw.rows {
+                let d = self.lrt[i].update(
+                    dzw.row(p),
+                    ain.row(p),
+                    &mut self.rng,
+                    layer_variant,
+                    self.cfg.kappa_th,
+                );
+                if d.skipped {
+                    self.kappa_skips += 1;
+                }
+            }
+            if let FlushDecision::Evaluate { lr_scale } =
+                self.sched[i].on_sample()
+            {
+                let delta = self.lrt[i].delta();
+                let lr_eff = self.cfg.lr_w * lr_scale;
+                let mut cand = self.params.w[i].clone();
+                for (wv, &g) in
+                    cand.data.iter_mut().zip(delta.data.iter())
+                {
+                    *wv = qw.q(*wv - lr_eff * g);
+                }
+                let density = self.arrays[i].density_of(&cand);
+                if self.sched[i].decide(density) {
+                    if self.arrays[i].commit(&cand) > 0 {
+                        self.weights_dirty = true;
+                    }
+                    self.lrt[i].reset();
+                }
+            }
+        }
+    }
+
+    /// Inject one round of the configured NVM drift.
+    pub fn drift(&mut self) {
+        if !self.cfg.drift.enabled() {
+            return;
+        }
+        let cfg = self.cfg.drift;
+        for arr in &mut self.arrays {
+            drift::apply(arr, &mut self.drift_rng, &cfg);
+        }
+        self.weights_dirty = true;
+    }
+
+    pub fn max_cell_writes(&self) -> u64 {
+        self.arrays.iter().map(|a| a.max_cell_writes()).max().unwrap_or(0)
+    }
+
+    pub fn total_writes(&self) -> u64 {
+        self.arrays.iter().map(|a| a.total_writes).sum()
+    }
+
+    pub fn flush_stats(&self) -> (u64, u64) {
+        (
+            self.sched.iter().map(|s| s.commits).sum(),
+            self.sched.iter().map(|s| s.deferrals).sum(),
+        )
+    }
+
+    /// Forward-only prediction (validation / accuracy probes).
+    pub fn infer(&mut self, image: &[f32]) -> usize {
+        self.read_weights();
+        let caches = model::forward(
+            &self.params,
+            &mut self.aux,
+            image,
+            self.cfg.bn_eta(),
+            self.cfg.bn_stream,
+            self.cfg.w_bits,
+            false,
+        );
+        argmax(&caches.logits)
+    }
+
+    /// Auxiliary SRAM the LRT accumulators occupy at 16-bit (LAM check).
+    pub fn lrt_aux_bytes(&self) -> usize {
+        self.lrt.iter().map(|s| s.aux_bytes(16)).sum()
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::RunConfig;
+
+    fn mk(scheme: Scheme) -> NativeDevice {
+        let mut cfg = RunConfig::default();
+        cfg.scheme = scheme;
+        cfg.batch = [2, 2, 2, 2, 4, 4]; // small for tests
+        let mut rng = Rng::new(1);
+        let params = Params::init(&mut rng, cfg.w_bits);
+        NativeDevice::new(cfg, params, AuxState::new())
+    }
+
+    fn image(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..784).map(|_| rng.normal_f32(0.5, 0.5).clamp(0.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn inference_never_writes() {
+        let mut dev = mk(Scheme::Inference);
+        for t in 0..5 {
+            dev.step(&image(t), (t % 10) as usize);
+        }
+        assert_eq!(dev.total_writes(), 0);
+    }
+
+    #[test]
+    fn bias_only_never_writes_weights() {
+        let mut dev = mk(Scheme::BiasOnly);
+        for t in 0..5 {
+            dev.step(&image(t), (t % 10) as usize);
+        }
+        assert_eq!(dev.total_writes(), 0);
+        // but biases moved
+        assert!(dev.params.b.iter().any(|b| b.iter().any(|&v| v != 0.0)));
+    }
+
+    #[test]
+    fn sgd_writes_every_sample_lrt_batches() {
+        let mut sgd = mk(Scheme::Sgd);
+        let mut lrt = mk(Scheme::Lrt { variant: crate::lrt::Variant::Biased });
+        for t in 0..8 {
+            sgd.step(&image(t), (t % 10) as usize);
+            lrt.step(&image(t), (t % 10) as usize);
+        }
+        assert!(sgd.arrays.iter().map(|a| a.commits).sum::<u64>() >= 8);
+        // LRT commits at most every batch samples per layer
+        let lrt_commits: u64 = lrt.arrays.iter().map(|a| a.commits).sum();
+        assert!(lrt_commits <= 4 * 6, "{lrt_commits}");
+        assert!(lrt.lrt_aux_bytes() > 0);
+    }
+
+    #[test]
+    fn drift_moves_weights() {
+        let mut dev = mk(Scheme::Inference);
+        dev.cfg.drift = crate::nvm::drift::DriftCfg::analog(100.0);
+        let before = dev.arrays[4].read();
+        for _ in 0..50 {
+            dev.drift();
+        }
+        let after = dev.arrays[4].read();
+        assert_ne!(before.data, after.data);
+    }
+}

@@ -1,0 +1,198 @@
+//! Multi-device fleet orchestration.
+//!
+//! The paper's conclusion motivates LRT for *networks of devices* that
+//! exchange compressed training information (federated-style). The fleet
+//! runner deploys the same pretrained model to N simulated edge devices,
+//! each adapting on its own shard of the online stream (distinct seeds =
+//! distinct environments), then aggregates the L~ R~^T gradient factors
+//! size-weighted — the rank-r factors are exactly the compressed payload
+//! LRT would put on the wire.
+//!
+//! std::thread-based: the vendored crate set has no tokio (DESIGN.md
+//! section 6, substitution 5); devices are CPU-bound simulations, so a
+//! thread per device is the right shape anyway.
+
+use super::config::RunConfig;
+use super::metrics::RunReport;
+use super::trainer::{pretrain, Trainer};
+use crate::lrt::LrtState;
+use crate::tensor::Mat;
+use crate::util::stats;
+
+/// Aggregate statistics of a fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub devices: Vec<RunReport>,
+    pub mean_final_ema: f64,
+    pub std_final_ema: f64,
+    pub worst_cell_writes: u64,
+    pub total_energy_pj: f64,
+    /// Bytes each device would upload per flush if federating its
+    /// rank-r factors (vs the dense-gradient alternative).
+    pub federated_payload_bytes: usize,
+    pub dense_payload_bytes: usize,
+}
+
+/// Run `n_devices` trainers in parallel on shard seeds derived from
+/// `cfg.seed`; every device deploys the same pretrained weights.
+pub fn run_fleet(cfg: &RunConfig, n_devices: usize) -> FleetReport {
+    let (params, aux) = pretrain(cfg, false);
+    let mut handles = Vec::new();
+    for d in 0..n_devices {
+        let mut dcfg = cfg.clone();
+        dcfg.seed = cfg.seed.wrapping_add(1000 + d as u64);
+        let p = params.clone();
+        let a = aux.clone();
+        handles.push(std::thread::spawn(move || {
+            Trainer::new(dcfg, p, a).run()
+        }));
+    }
+    let devices: Vec<RunReport> =
+        handles.into_iter().map(|h| h.join().expect("device panicked")).collect();
+
+    let emas: Vec<f64> = devices.iter().map(|r| r.final_ema).collect();
+    let rank = cfg.rank;
+    let fed: usize = crate::nn::arch::LAYER_DIMS
+        .iter()
+        .map(|&(n_o, n_i)| (n_o + n_i) * rank * 2) // 16-bit factors
+        .sum();
+    let dense: usize = crate::nn::arch::LAYER_DIMS
+        .iter()
+        .map(|&(n_o, n_i)| n_o * n_i * 2)
+        .sum();
+    FleetReport {
+        mean_final_ema: stats::mean(&emas),
+        std_final_ema: stats::std_unbiased(&emas),
+        worst_cell_writes: devices
+            .iter()
+            .map(|r| r.max_cell_writes)
+            .max()
+            .unwrap_or(0),
+        total_energy_pj: devices.iter().map(|r| r.write_energy_pj).sum(),
+        federated_payload_bytes: fed,
+        dense_payload_bytes: dense,
+        devices,
+    }
+}
+
+/// Federated aggregation of per-device LRT factors (the paper's §8
+/// speculation made concrete): each device uploads its rank-r factors
+/// (L~, R~) for one layer; the server reconstitutes the average gradient
+/// by re-compressing the sum of the device estimates into a fresh rank-r
+/// accumulator — the same OK machinery, reused as a gradient-compression
+/// codec. Returns the aggregated LrtState and the exact-vs-compressed
+/// reconstruction error (Frobenius) for telemetry.
+pub fn aggregate_factors(
+    devices: &[&LrtState],
+    rank: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> (LrtState, f32) {
+    assert!(!devices.is_empty());
+    let n_o = devices[0].n_o();
+    let n_i = devices[0].n_i();
+    let mut agg = LrtState::new(n_o, n_i, rank);
+    agg.quantize_state = false;
+    // Feed each device's rank-r factors into the accumulator as r
+    // Kronecker terms, scaled by 1/N for the average.
+    let scale = 1.0 / devices.len() as f32;
+    let mut exact = Mat::zeros(n_o, n_i);
+    for dev in devices {
+        let (lf, rf) = dev.factors();
+        for j in 0..lf.cols {
+            let lcol: Vec<f32> =
+                lf.col(j).iter().map(|v| v * scale).collect();
+            let rcol = rf.col(j);
+            exact.add_outer(1.0, &lcol, &rcol);
+            agg.update(
+                &lcol,
+                &rcol,
+                rng,
+                crate::lrt::Variant::Biased,
+                1e18,
+            );
+        }
+    }
+    let mut err = agg.delta();
+    err.scale(-1.0);
+    err.add(&exact);
+    let rel = if exact.frob_norm() > 0.0 {
+        err.frob_norm() / exact.frob_norm()
+    } else {
+        0.0
+    };
+    (agg, rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Scheme;
+    use crate::lrt::Variant;
+
+    #[test]
+    fn aggregate_factors_reconstructs_common_signal() {
+        use crate::util::rng::Rng;
+        // Devices that observed the SAME dominant gradient direction:
+        // the aggregate must preserve it almost exactly even at low rank.
+        let mut rng = Rng::new(21);
+        let (n_o, n_i, r) = (10, 14, 4);
+        let common_d = rng.normal_vec(n_o, 1.0);
+        let common_a = rng.normal_vec(n_i, 1.0);
+        let mut states = Vec::new();
+        for _ in 0..3 {
+            let mut st = LrtState::new(n_o, n_i, r);
+            st.quantize_state = false;
+            for _ in 0..6 {
+                // common signal + small device-local noise
+                let d: Vec<f32> = common_d
+                    .iter()
+                    .map(|v| v + rng.normal_f32(0.0, 0.05))
+                    .collect();
+                let a: Vec<f32> = common_a
+                    .iter()
+                    .map(|v| v + rng.normal_f32(0.0, 0.05))
+                    .collect();
+                st.update(&d, &a, &mut rng, crate::lrt::Variant::Biased, 1e18);
+            }
+            states.push(st);
+        }
+        let refs: Vec<&LrtState> = states.iter().collect();
+        let (agg, rel) = aggregate_factors(&refs, r, &mut rng);
+        assert!(rel < 0.15, "aggregation error {rel}");
+        // the aggregate's top direction aligns with the common signal
+        let delta = agg.delta();
+        let proj = delta.matvec(&common_a);
+        let cos = crate::tensor::dot(&proj, &common_d)
+            / (crate::tensor::norm2(&proj)
+                * crate::tensor::norm2(&common_d));
+        assert!(cos > 0.95, "top direction lost: cos={cos}");
+    }
+
+    #[test]
+    fn aggregate_factors_empty_rank_ok() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let st = LrtState::new(4, 6, 2);
+        let (agg, rel) = aggregate_factors(&[&st], 2, &mut rng);
+        assert_eq!(agg.delta().frob_norm(), 0.0);
+        assert_eq!(rel, 0.0);
+    }
+
+    #[test]
+    fn fleet_runs_in_parallel_and_aggregates() {
+        let mut cfg = RunConfig::default();
+        cfg.samples = 30;
+        cfg.offline_samples = 60;
+        cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
+        cfg.batch = [5, 5, 5, 5, 10, 10];
+        let rep = run_fleet(&cfg, 3);
+        assert_eq!(rep.devices.len(), 3);
+        assert!((0.0..=1.0).contains(&rep.mean_final_ema));
+        // devices saw different shards
+        let s0 = &rep.devices[0].series;
+        let s1 = &rep.devices[1].series;
+        assert!(s0 != s1 || rep.devices[0].final_ema != rep.devices[1].final_ema);
+        // LRT federated payload is much smaller than a dense gradient
+        assert!(rep.federated_payload_bytes * 5 < rep.dense_payload_bytes);
+    }
+}

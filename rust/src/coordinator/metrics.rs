@@ -1,0 +1,131 @@
+//! Online metrics: per-sample accuracy EMA (0.999 like Fig. 6), NVM write
+//! and energy accounting, and the run report benches print.
+
+use crate::nvm::energy;
+use crate::util::stats::Ema;
+
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub acc_ema: Ema,
+    pub seen: usize,
+    pub correct: usize,
+    /// Correct count over the trailing `tail_window` samples.
+    tail: std::collections::VecDeque<bool>,
+    pub tail_window: usize,
+    /// (step, ema accuracy, max cell writes) series for figures.
+    pub series: Vec<(usize, f64, u64)>,
+    pub loss_sum: f64,
+}
+
+impl Metrics {
+    pub fn new(tail_window: usize) -> Metrics {
+        Metrics {
+            acc_ema: Ema::new(0.999),
+            seen: 0,
+            correct: 0,
+            tail: std::collections::VecDeque::new(),
+            tail_window,
+            series: Vec::new(),
+            loss_sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, correct: bool, loss: f64) {
+        self.seen += 1;
+        self.correct += correct as usize;
+        self.acc_ema.update(correct as u8 as f64);
+        self.loss_sum += loss;
+        self.tail.push_back(correct);
+        if self.tail.len() > self.tail_window {
+            self.tail.pop_front();
+        }
+    }
+
+    pub fn log_point(&mut self, step: usize, max_writes: u64) {
+        self.series.push((step, self.acc_ema.get(), max_writes));
+    }
+
+    /// Accuracy over the trailing window (the paper's "last 500 samples").
+    pub fn tail_acc(&self) -> f64 {
+        if self.tail.is_empty() {
+            return 0.0;
+        }
+        self.tail.iter().filter(|&&b| b).count() as f64
+            / self.tail.len() as f64
+    }
+
+    pub fn overall_acc(&self) -> f64 {
+        if self.seen == 0 {
+            return 0.0;
+        }
+        self.correct as f64 / self.seen as f64
+    }
+}
+
+/// Final report of one online run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub scheme: String,
+    pub env: String,
+    pub final_ema: f64,
+    pub tail_acc: f64,
+    pub overall_acc: f64,
+    /// Worst-case per-cell writes across all weight arrays (Fig. 6).
+    pub max_cell_writes: u64,
+    pub total_writes: u64,
+    pub write_energy_pj: f64,
+    pub endurance_used: f64,
+    pub series: Vec<(usize, f64, u64)>,
+    pub flush_commits: u64,
+    pub flush_deferrals: u64,
+    pub kappa_skips: u64,
+    pub wall_secs: f64,
+}
+
+impl RunReport {
+    pub fn energy_from_writes(total_writes: u64, bits: u32) -> f64 {
+        energy::write_energy_pj(total_writes, bits)
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<13} {:<13} ema={:.3} tail={:.3} maxW={:<8} totW={:<10} \
+             E={:.1}uJ flush={}({} defer) skips={} {:.1}s",
+            self.scheme,
+            self.env,
+            self.final_ema,
+            self.tail_acc,
+            self.max_cell_writes,
+            self.total_writes,
+            self.write_energy_pj / 1e6,
+            self.flush_commits,
+            self.flush_deferrals,
+            self.kappa_skips,
+            self.wall_secs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_and_overall() {
+        let mut m = Metrics::new(4);
+        for b in [true, false, true, true, true, true] {
+            m.record(b, 0.5);
+        }
+        assert!((m.overall_acc() - 5.0 / 6.0).abs() < 1e-12);
+        assert_eq!(m.tail_acc(), 1.0); // last 4 all correct
+        assert!(m.acc_ema.get() > 0.5);
+    }
+
+    #[test]
+    fn series_logging() {
+        let mut m = Metrics::new(10);
+        m.record(true, 0.1);
+        m.log_point(1, 42);
+        assert_eq!(m.series, vec![(1, m.acc_ema.get(), 42)]);
+    }
+}

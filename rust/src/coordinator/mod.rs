@@ -1,0 +1,19 @@
+//! L3 coordinator: the online-adaptation control plane.
+//!
+//! Owns the pieces the paper's "system" consists of beyond the algorithm:
+//! the per-layer NVM flush scheduler (rho_min update-density gate,
+//! kappa_th condition gate, sqrt effective-batch learning-rate scaling —
+//! Appendix C), the online metrics (EMA accuracy, worst-case cell writes,
+//! energy), drift injection, the single-device trainer, and the
+//! multi-device fleet orchestrator.
+
+pub mod config;
+pub mod device;
+pub mod fleet;
+pub mod metrics;
+pub mod scheduler;
+pub mod trainer;
+
+pub use config::{RunConfig, Scheme};
+pub use metrics::{Metrics, RunReport};
+pub use trainer::Trainer;

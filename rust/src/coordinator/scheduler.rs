@@ -1,0 +1,140 @@
+//! Per-layer NVM flush scheduling (paper Appendix C).
+//!
+//! LRT accumulates B samples before a candidate weight flush; the commit
+//! is gated on a minimum update density rho_min = 0.01 — if fewer cells
+//! would change, the flush is deferred and accumulation continues,
+//! growing the *effective* batch. When a deferred flush finally commits,
+//! the learning rate is scaled by sqrt(effective/nominal) (the paper
+//! finds sqrt scaling beats the linear rule of Goyal et al.).
+
+/// Scheduler state for one layer.
+#[derive(Debug, Clone)]
+pub struct FlushScheduler {
+    /// Nominal batch size B (samples between flush attempts).
+    pub batch: usize,
+    /// Minimum commit density.
+    pub rho_min: f64,
+    /// Samples accumulated since the last *committed* flush.
+    samples_pending: usize,
+    /// Samples since the last flush attempt.
+    since_attempt: usize,
+    /// Committed flushes / deferred flushes (telemetry).
+    pub commits: u64,
+    pub deferrals: u64,
+}
+
+/// Outcome of a flush attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FlushDecision {
+    /// Not at a batch boundary yet.
+    NotYet,
+    /// At a boundary: caller must evaluate the candidate and report back.
+    Evaluate {
+        /// Learning-rate scale sqrt(effective_batch / nominal_batch).
+        lr_scale: f32,
+    },
+}
+
+impl FlushScheduler {
+    pub fn new(batch: usize, rho_min: f64) -> FlushScheduler {
+        FlushScheduler {
+            batch,
+            rho_min,
+            samples_pending: 0,
+            since_attempt: 0,
+            commits: 0,
+            deferrals: 0,
+        }
+    }
+
+    /// Record one accumulated sample; says whether to evaluate a flush.
+    pub fn on_sample(&mut self) -> FlushDecision {
+        self.samples_pending += 1;
+        self.since_attempt += 1;
+        if self.since_attempt < self.batch {
+            return FlushDecision::NotYet;
+        }
+        self.since_attempt = 0;
+        let eff = self.samples_pending as f32 / self.batch as f32;
+        FlushDecision::Evaluate { lr_scale: eff.sqrt() }
+    }
+
+    /// Report the candidate's update density; returns true to commit.
+    pub fn decide(&mut self, density: f64) -> bool {
+        if density >= self.rho_min {
+            self.commits += 1;
+            self.samples_pending = 0;
+            true
+        } else {
+            self.deferrals += 1;
+            false
+        }
+    }
+
+    /// Effective batch currently pending (for telemetry).
+    pub fn effective_batch(&self) -> usize {
+        self.samples_pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluates_every_batch() {
+        let mut s = FlushScheduler::new(10, 0.01);
+        for t in 1..=9 {
+            assert_eq!(s.on_sample(), FlushDecision::NotYet, "t={t}");
+        }
+        match s.on_sample() {
+            FlushDecision::Evaluate { lr_scale } => {
+                assert!((lr_scale - 1.0).abs() < 1e-6)
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn deferral_grows_effective_batch_and_lr_scale() {
+        let mut s = FlushScheduler::new(10, 0.01);
+        // first boundary: low density -> defer
+        for _ in 0..10 {
+            s.on_sample();
+        }
+        assert!(!s.decide(0.001));
+        assert_eq!(s.deferrals, 1);
+        // second boundary: effective batch 20 -> lr scale sqrt(2)
+        let mut last = FlushDecision::NotYet;
+        for _ in 0..10 {
+            last = s.on_sample();
+        }
+        match last {
+            FlushDecision::Evaluate { lr_scale } => {
+                assert!((lr_scale - 2.0f32.sqrt()).abs() < 1e-5)
+            }
+            d => panic!("{d:?}"),
+        }
+        assert!(s.decide(0.5));
+        assert_eq!(s.commits, 1);
+        assert_eq!(s.effective_batch(), 0);
+    }
+
+    #[test]
+    fn commit_resets_pending() {
+        let mut s = FlushScheduler::new(5, 0.01);
+        for _ in 0..5 {
+            s.on_sample();
+        }
+        assert!(s.decide(1.0));
+        for _ in 0..4 {
+            assert_eq!(s.on_sample(), FlushDecision::NotYet);
+        }
+        match s.on_sample() {
+            FlushDecision::Evaluate { lr_scale } => {
+                assert!((lr_scale - 1.0).abs() < 1e-6)
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Single-device online adaptation loop (the Fig. 6 experiment driver):
+//! offline pretraining -> deployment -> supervised online stream with
+//! drift injection and metrics.
+
+use super::config::{RunConfig, Scheme};
+use super::device::NativeDevice;
+use super::metrics::{Metrics, RunReport};
+use crate::data::online::{OnlineStream, Partition};
+use crate::nn::model::{self, Params};
+use crate::util::rng::Rng;
+
+/// Offline pretraining: quantized SGD with max-norm on the offline
+/// partition (the paper's cloud-side phase before deployment).
+pub fn pretrain(cfg: &RunConfig, verbose: bool) -> (Params, model::AuxState) {
+    let mut rng = Rng::new(cfg.seed ^ 0x0FF11E);
+    let mut params = Params::init(&mut rng, cfg.w_bits);
+    let mut aux = model::AuxState::new();
+    let stream =
+        OnlineStream::new(cfg.seed ^ 0x0FF, Partition::Offline, crate::data::Env::Control);
+    let qw = crate::quant::qw_bits(cfg.w_bits);
+    let lr_w = 0.02f32;
+    let lr_b = 0.02f32;
+    let mut correct_recent = 0usize;
+    for t in 0..cfg.offline_samples {
+        let s = stream.sample(t as u64);
+        let caches = model::forward(
+            &params, &mut aux, &s.image, cfg.bn_eta(), true, cfg.w_bits,
+            true,
+        );
+        let pred = model::argmax(&caches.logits);
+        if pred == s.label {
+            correct_recent += 1;
+        }
+        let (_, dlogits) = model::softmax_xent(&caches.logits, s.label);
+        let grads = model::backward(
+            &params, &mut aux, caches, &dlogits, true, cfg.w_bits,
+        );
+        for i in 0..crate::nn::arch::N_LAYERS {
+            let dw = grads.full(i);
+            for (wv, &g) in params.w[i].data.iter_mut().zip(dw.data.iter())
+            {
+                *wv = qw.q(*wv - lr_w * g);
+            }
+        }
+        model::apply_bias_updates(&mut params, &grads, lr_b, true);
+        if verbose && (t + 1) % 1000 == 0 {
+            eprintln!(
+                "  pretrain {t}: acc(last 1k) = {:.3}",
+                correct_recent as f64 / 1000.0
+            );
+            correct_recent = 0;
+        }
+    }
+    (params, aux)
+}
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub device: NativeDevice,
+    pub stream: OnlineStream,
+    pub metrics: Metrics,
+}
+
+impl Trainer {
+    /// Pretrain + deploy. Pass cached `params` to share the offline phase
+    /// across the schemes of one figure (they deploy the same model).
+    pub fn new(
+        cfg: RunConfig,
+        params: Params,
+        aux: model::AuxState,
+    ) -> Trainer {
+        let mut stream =
+            OnlineStream::new(cfg.seed, Partition::Online, cfg.env);
+        stream.shift_period = cfg.shift_period;
+        let metrics = Metrics::new(500);
+        let device = NativeDevice::new(cfg.clone(), params, aux);
+        Trainer { cfg, device, stream, metrics }
+    }
+
+    pub fn with_pretraining(cfg: RunConfig) -> Trainer {
+        let (params, aux) = pretrain(&cfg, false);
+        Trainer::new(cfg, params, aux)
+    }
+
+    /// Stream `cfg.samples` online samples; returns the run report.
+    pub fn run(&mut self) -> RunReport {
+        let t0 = std::time::Instant::now();
+        for t in 0..self.cfg.samples {
+            let s = self.stream.sample(t as u64);
+            let (loss, correct) = self.device.step(&s.image, s.label);
+            self.metrics.record(correct, loss as f64);
+            if self.cfg.drift.enabled()
+                && (t + 1) as u64 % self.cfg.drift.every == 0
+            {
+                self.device.drift();
+            }
+            if (t + 1) % self.cfg.log_every == 0 {
+                let w = self.device.max_cell_writes();
+                self.metrics.log_point(t + 1, w);
+            }
+        }
+        let (commits, deferrals) = self.device.flush_stats();
+        let total_writes = self.device.total_writes();
+        RunReport {
+            scheme: self.cfg.scheme.name().to_string(),
+            env: self.cfg.env.name().to_string(),
+            final_ema: self.metrics.acc_ema.get(),
+            tail_acc: self.metrics.tail_acc(),
+            overall_acc: self.metrics.overall_acc(),
+            max_cell_writes: self.device.max_cell_writes(),
+            total_writes,
+            write_energy_pj: RunReport::energy_from_writes(
+                total_writes,
+                self.cfg.w_bits,
+            ),
+            endurance_used: self.device.max_cell_writes() as f64
+                / crate::nvm::energy::ENDURANCE_WRITES,
+            series: self.metrics.series.clone(),
+            flush_commits: commits,
+            flush_deferrals: deferrals,
+            kappa_skips: self.device.kappa_skips,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Validation accuracy of parameters on the held-out partition.
+pub fn validate(params: &Params, w_bits: u32, n: usize, seed: u64) -> f64 {
+    let stream = OnlineStream::new(
+        seed,
+        Partition::Validation,
+        crate::data::Env::Control,
+    );
+    let mut aux = model::AuxState::new();
+    // burn in BN stats on a few validation samples
+    for t in 0..100.min(n) {
+        let s = stream.sample(t as u64);
+        model::forward(params, &mut aux, &s.image, 0.99, true, w_bits, true);
+    }
+    let mut correct = 0;
+    for t in 0..n {
+        let s = stream.sample((1000 + t) as u64);
+        let caches = model::forward(
+            params, &mut aux, &s.image, 0.99, true, w_bits, false,
+        );
+        if model::argmax(&caches.logits) == s.label {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Convenience: run one scheme end-to-end (pretrain included).
+pub fn run_scheme(mut cfg: RunConfig, scheme: Scheme) -> RunReport {
+    cfg.scheme = scheme;
+    Trainer::with_pretraining(cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lrt::Variant;
+
+    #[test]
+    fn short_run_all_schemes_complete() {
+        let mut base = RunConfig::default();
+        base.samples = 60;
+        base.offline_samples = 120;
+        base.log_every = 20;
+        base.batch = [2, 2, 2, 2, 4, 4];
+        let (params, aux) = pretrain(&base, false);
+        for scheme in [
+            Scheme::Inference,
+            Scheme::BiasOnly,
+            Scheme::Sgd,
+            Scheme::Lrt { variant: Variant::Biased },
+        ] {
+            let mut cfg = base.clone();
+            cfg.scheme = scheme;
+            let mut tr = Trainer::new(cfg, params.clone(), aux.clone());
+            let rep = tr.run();
+            assert_eq!(rep.series.len(), 3);
+            assert!((0.0..=1.0).contains(&rep.final_ema), "{rep:?}");
+            if scheme == Scheme::Sgd {
+                assert!(rep.total_writes > 0);
+            }
+            if scheme == Scheme::Inference {
+                assert_eq!(rep.total_writes, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn lrt_writes_far_fewer_than_sgd() {
+        let mut base = RunConfig::default();
+        base.samples = 40;
+        base.offline_samples = 60;
+        base.batch = [10, 10, 10, 10, 20, 20];
+        let (params, aux) = pretrain(&base, false);
+        let mut cfg_sgd = base.clone();
+        cfg_sgd.scheme = Scheme::Sgd;
+        let sgd = Trainer::new(cfg_sgd, params.clone(), aux.clone()).run();
+        let mut cfg_lrt = base.clone();
+        cfg_lrt.scheme = Scheme::Lrt { variant: Variant::Biased };
+        let lrt = Trainer::new(cfg_lrt, params, aux).run();
+        assert!(
+            lrt.max_cell_writes * 4 < sgd.max_cell_writes.max(4),
+            "lrt {} vs sgd {}",
+            lrt.max_cell_writes,
+            sgd.max_cell_writes
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! Distribution-shift augmentation families (paper Appendix F, Fig. 10):
+//! spatial transforms, background gradients, white noise, and
+//! class-distribution clustering.
+
+use super::elastic::bilinear;
+use super::{IMG, NPIX};
+use crate::util::rng::Rng;
+
+/// Which augmentations are active in a stream segment (Fig. 6b legend:
+/// CD = class distribution, ST = spatial transforms, BG = background
+/// gradients, WN = white noise).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AugSet {
+    pub class_dist: bool,
+    pub spatial: bool,
+    pub background: bool,
+    pub white_noise: bool,
+}
+
+impl AugSet {
+    pub const NONE: AugSet = AugSet {
+        class_dist: false,
+        spatial: false,
+        background: false,
+        white_noise: false,
+    };
+
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.class_dist {
+            parts.push("CD");
+        }
+        if self.spatial {
+            parts.push("ST");
+        }
+        if self.background {
+            parts.push("BG");
+        }
+        if self.white_noise {
+            parts.push("WN");
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+/// Random affine: rotation +-20 deg, scale 0.8-1.2, shift +-3 px.
+pub fn spatial(img: &[f32], rng: &mut Rng) -> Vec<f32> {
+    let theta = rng.range(-0.35, 0.35) as f32;
+    let scale = rng.range(0.8, 1.2) as f32;
+    let tx = rng.range(-3.0, 3.0) as f32;
+    let ty = rng.range(-3.0, 3.0) as f32;
+    let (sin, cos) = theta.sin_cos();
+    let c = (IMG / 2) as f32;
+    let mut out = vec![0.0f32; NPIX];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            // inverse map around the center
+            let xr = (x as f32 - c - tx) / scale;
+            let yr = (y as f32 - c - ty) / scale;
+            let xs = cos * xr + sin * yr + c;
+            let ys = -sin * xr + cos * yr + c;
+            out[y * IMG + x] = bilinear(img, xs, ys);
+        }
+    }
+    out
+}
+
+/// Contrast scaling + a linear black-white ramp across the image.
+pub fn background(img: &[f32], rng: &mut Rng) -> Vec<f32> {
+    let contrast = rng.range(0.5, 1.0) as f32;
+    let gx = rng.range(-0.5, 0.5) as f32;
+    let gy = rng.range(-0.5, 0.5) as f32;
+    let base = rng.range(0.0, 0.5) as f32;
+    let mut out = vec![0.0f32; NPIX];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let ramp = base
+                + gx * (x as f32 / IMG as f32 - 0.5)
+                + gy * (y as f32 / IMG as f32 - 0.5);
+            let v = contrast * img[y * IMG + x] + ramp.max(0.0);
+            out[y * IMG + x] = v.clamp(0.0, 2.0);
+        }
+    }
+    out
+}
+
+/// Additive Gaussian pixel noise.
+pub fn white_noise(img: &[f32], rng: &mut Rng, sigma: f32) -> Vec<f32> {
+    img.iter()
+        .map(|&v| (v + rng.normal_f32(0.0, sigma)).clamp(0.0, 2.0))
+        .collect()
+}
+
+/// Class-distribution clustering: bias the label toward a slowly-rotating
+/// subset of classes so nearby stream indices share classes (App. F).
+pub fn clustered_label(idx: u64, rng: &mut Rng) -> usize {
+    // Window of 1000 samples focuses on 3 "hot" classes with 80% mass.
+    let window = idx / 1000;
+    let mut wrng = Rng::new(0xC1A55 ^ window);
+    let hot = [wrng.below(10), wrng.below(10), wrng.below(10)];
+    if rng.bernoulli(0.8) {
+        hot[rng.below(3)]
+    } else {
+        rng.below(10)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits;
+
+    #[test]
+    fn labels() {
+        assert_eq!(AugSet::NONE.label(), "none");
+        let all = AugSet {
+            class_dist: true,
+            spatial: true,
+            background: true,
+            white_noise: true,
+        };
+        assert_eq!(all.label(), "CD+ST+BG+WN");
+    }
+
+    #[test]
+    fn spatial_keeps_range_and_changes_image() {
+        let mut rng = Rng::new(11);
+        let img = digits::render(4, &mut rng);
+        let out = spatial(&img, &mut rng);
+        assert!(out.iter().all(|&v| (0.0..=2.0).contains(&v)));
+        assert_ne!(img, out);
+    }
+
+    #[test]
+    fn background_raises_floor() {
+        let mut rng = Rng::new(12);
+        let img = vec![0.0f32; NPIX];
+        let out = background(&img, &mut rng);
+        let mean: f32 = out.iter().sum::<f32>() / NPIX as f32;
+        assert!(mean > 0.0);
+        assert!(out.iter().all(|&v| (0.0..=2.0).contains(&v)));
+    }
+
+    #[test]
+    fn white_noise_perturbs_every_run_differently() {
+        let mut rng = Rng::new(13);
+        let img = digits::render(7, &mut rng);
+        let a = white_noise(&img, &mut rng, 0.3);
+        let b = white_noise(&img, &mut rng, 0.3);
+        assert_ne!(a, b);
+        assert!(a.iter().all(|&v| (0.0..=2.0).contains(&v)));
+    }
+
+    #[test]
+    fn clustering_concentrates_classes() {
+        let mut rng = Rng::new(14);
+        let mut counts = [0usize; 10];
+        for i in 0..1000u64 {
+            counts[clustered_label(i, &mut rng)] += 1; // same window
+        }
+        let mut sorted = counts;
+        sorted.sort_unstable();
+        let top3: usize = sorted[7..].iter().sum();
+        assert!(top3 > 600, "top-3 classes got {top3}/1000");
+    }
+}

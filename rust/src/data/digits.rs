@@ -1,0 +1,131 @@
+//! Procedural digit rendering: a 5x7 stroke font upsampled to 28x28 with
+//! bilinear anti-aliasing and per-sample jitter. Together with the
+//! elastic transform this produces an MNIST-like 10-class task.
+
+use super::{IMG, INK, NPIX};
+use crate::util::rng::Rng;
+
+/// 5x7 bitmap font, row-major, one string per digit.
+const FONT: [[&str; 7]; 10] = [
+    [" ### ", "#   #", "#  ##", "# # #", "##  #", "#   #", " ### "], // 0
+    ["  #  ", " ##  ", "  #  ", "  #  ", "  #  ", "  #  ", " ### "], // 1
+    [" ### ", "#   #", "    #", "   # ", "  #  ", " #   ", "#####"], // 2
+    [" ### ", "#   #", "    #", "  ## ", "    #", "#   #", " ### "], // 3
+    ["   # ", "  ## ", " # # ", "#  # ", "#####", "   # ", "   # "], // 4
+    ["#####", "#    ", "#### ", "    #", "    #", "#   #", " ### "], // 5
+    [" ### ", "#    ", "#    ", "#### ", "#   #", "#   #", " ### "], // 6
+    ["#####", "    #", "   # ", "  #  ", "  #  ", "  #  ", "  #  "], // 7
+    [" ### ", "#   #", "#   #", " ### ", "#   #", "#   #", " ### "], // 8
+    [" ### ", "#   #", "#   #", " ####", "    #", "    #", " ### "], // 9
+];
+
+/// Render digit `d` into a 28x28 image with random sub-pixel placement,
+/// scale jitter, and slant — the base variability before elastic
+/// deformation. Pixels are in [0, INK].
+pub fn render(d: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(d < 10);
+    let glyph = &FONT[d];
+    let mut img = vec![0.0f32; NPIX];
+
+    // Glyph box ~ 15x21 px inside the 28x28 canvas, jittered.
+    let scale_x = rng.range(2.6, 3.4) as f32;
+    let scale_y = rng.range(2.6, 3.4) as f32;
+    let slant = rng.range(-0.15, 0.15) as f32;
+    let off_x = 14.0 - 2.5 * scale_x + rng.range(-1.5, 1.5) as f32;
+    let off_y = 14.0 - 3.5 * scale_y + rng.range(-1.5, 1.5) as f32;
+
+    // Inverse-map each canvas pixel into glyph space, bilinear sample.
+    for py in 0..IMG {
+        for px in 0..IMG {
+            let gy = (py as f32 - off_y) / scale_y;
+            let gx =
+                (px as f32 - off_x - slant * (py as f32 - 14.0)) / scale_x;
+            let v = sample_glyph(glyph, gx - 0.5, gy - 0.5);
+            if v > 0.0 {
+                img[py * IMG + px] = v * INK;
+            }
+        }
+    }
+    img
+}
+
+fn glyph_at(glyph: &[&str; 7], x: i32, y: i32) -> f32 {
+    if (0..5).contains(&x) && (0..7).contains(&y) {
+        if glyph[y as usize].as_bytes()[x as usize] == b'#' {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        0.0
+    }
+}
+
+fn sample_glyph(glyph: &[&str; 7], x: f32, y: f32) -> f32 {
+    let x0 = x.floor();
+    let y0 = y.floor();
+    let fx = x - x0;
+    let fy = y - y0;
+    let (xi, yi) = (x0 as i32, y0 as i32);
+    let v00 = glyph_at(glyph, xi, yi);
+    let v01 = glyph_at(glyph, xi + 1, yi);
+    let v10 = glyph_at(glyph, xi, yi + 1);
+    let v11 = glyph_at(glyph, xi + 1, yi + 1);
+    v00 * (1.0 - fx) * (1.0 - fy)
+        + v01 * fx * (1.0 - fy)
+        + v10 * (1.0 - fx) * fy
+        + v11 * fx * fy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn renders_all_digits_with_ink() {
+        let mut rng = Rng::new(1);
+        for d in 0..10 {
+            let img = render(d, &mut rng);
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 20.0, "digit {d} nearly empty: {ink}");
+            assert!(img.iter().all(|&v| (0.0..=INK).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn digits_are_distinguishable() {
+        // Average images of different digits should differ substantially.
+        let mean_img = |d: usize| {
+            let mut acc = vec![0.0f32; NPIX];
+            for s in 0..20u64 {
+                let mut rng = Rng::new(100 + s);
+                let img = render(d, &mut rng);
+                for (a, v) in acc.iter_mut().zip(img.iter()) {
+                    *a += v / 20.0;
+                }
+            }
+            acc
+        };
+        let m0 = mean_img(0);
+        let m1 = mean_img(1);
+        let dist: f32 = m0
+            .iter()
+            .zip(m1.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        assert!(dist > 3.0, "digits 0/1 too similar: {dist}");
+    }
+
+    #[test]
+    fn jitter_produces_variation() {
+        prop::check("digit-jitter", 10, |rng| {
+            let d = rng.below(10);
+            let a = render(d, rng);
+            let b = render(d, rng);
+            crate::prop_assert!(a != b, "no variation for digit {d}");
+            Ok(())
+        });
+    }
+}

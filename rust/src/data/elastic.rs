@@ -1,0 +1,142 @@
+//! Elastic deformation (Simard et al. 2003), the augmentation the paper
+//! uses to expand its 9k/1k/50k MNIST partitions into the offline and
+//! online training sets (Appendix F).
+
+use super::{IMG, NPIX};
+use crate::util::rng::Rng;
+
+/// Classic parameters for 28x28 digits.
+pub const ALPHA: f32 = 30.0;
+pub const SIGMA: f32 = 4.0;
+
+/// Apply an elastic deformation: random displacement fields smoothed by a
+/// Gaussian of std `sigma`, scaled by `alpha`, sampled bilinearly.
+pub fn elastic(img: &[f32], rng: &mut Rng, alpha: f32, sigma: f32) -> Vec<f32> {
+    let mut dx = vec![0.0f32; NPIX];
+    let mut dy = vec![0.0f32; NPIX];
+    for i in 0..NPIX {
+        dx[i] = rng.range(-1.0, 1.0) as f32;
+        dy[i] = rng.range(-1.0, 1.0) as f32;
+    }
+    gaussian_blur(&mut dx, sigma);
+    gaussian_blur(&mut dy, sigma);
+    // Normalize each field to unit max so alpha sets the pixel scale.
+    for f in [&mut dx, &mut dy] {
+        let m = f.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        for v in f.iter_mut() {
+            *v *= alpha / m;
+        }
+    }
+    let mut out = vec![0.0f32; NPIX];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let i = y * IMG + x;
+            out[i] = bilinear(img, x as f32 + dx[i], y as f32 + dy[i]);
+        }
+    }
+    out
+}
+
+/// Separable Gaussian blur in place.
+pub fn gaussian_blur(field: &mut [f32], sigma: f32) {
+    let radius = (2.5 * sigma).ceil() as i32;
+    let mut kernel = Vec::with_capacity((2 * radius + 1) as usize);
+    let mut ksum = 0.0f32;
+    for k in -radius..=radius {
+        let w = (-0.5 * (k as f32 / sigma).powi(2)).exp();
+        kernel.push(w);
+        ksum += w;
+    }
+    for w in &mut kernel {
+        *w /= ksum;
+    }
+    let mut tmp = vec![0.0f32; NPIX];
+    // horizontal
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let mut acc = 0.0;
+            for (ki, k) in (-radius..=radius).enumerate() {
+                let xx = (x as i32 + k).clamp(0, IMG as i32 - 1) as usize;
+                acc += kernel[ki] * field[y * IMG + xx];
+            }
+            tmp[y * IMG + x] = acc;
+        }
+    }
+    // vertical
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let mut acc = 0.0;
+            for (ki, k) in (-radius..=radius).enumerate() {
+                let yy = (y as i32 + k).clamp(0, IMG as i32 - 1) as usize;
+                acc += kernel[ki] * tmp[yy * IMG + x];
+            }
+            field[y * IMG + x] = acc;
+        }
+    }
+}
+
+/// Bilinear image sampling with zero padding outside the canvas.
+pub fn bilinear(img: &[f32], x: f32, y: f32) -> f32 {
+    let x0 = x.floor();
+    let y0 = y.floor();
+    let fx = x - x0;
+    let fy = y - y0;
+    let at = |xi: i32, yi: i32| -> f32 {
+        if (0..IMG as i32).contains(&xi) && (0..IMG as i32).contains(&yi) {
+            img[yi as usize * IMG + xi as usize]
+        } else {
+            0.0
+        }
+    };
+    let (xi, yi) = (x0 as i32, y0 as i32);
+    at(xi, yi) * (1.0 - fx) * (1.0 - fy)
+        + at(xi + 1, yi) * fx * (1.0 - fy)
+        + at(xi, yi + 1) * (1.0 - fx) * fy
+        + at(xi + 1, yi + 1) * fx * fy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits;
+
+    #[test]
+    fn preserves_mass_roughly() {
+        let mut rng = Rng::new(5);
+        let img = digits::render(3, &mut rng);
+        let out = elastic(&img, &mut rng, ALPHA / 4.0, SIGMA);
+        let m_in: f32 = img.iter().sum();
+        let m_out: f32 = out.iter().sum();
+        assert!(
+            (m_out - m_in).abs() < 0.35 * m_in,
+            "mass {m_in} -> {m_out}"
+        );
+    }
+
+    #[test]
+    fn deforms_but_keeps_range() {
+        let mut rng = Rng::new(6);
+        let img = digits::render(8, &mut rng);
+        let out = elastic(&img, &mut rng, ALPHA, SIGMA);
+        assert_ne!(img, out);
+        assert!(out.iter().all(|&v| (0.0..=2.0).contains(&v)));
+    }
+
+    #[test]
+    fn blur_preserves_constant_field() {
+        let mut f = vec![1.0f32; NPIX];
+        gaussian_blur(&mut f, 4.0);
+        for v in f {
+            assert!((v - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bilinear_exact_on_grid() {
+        let mut img = vec![0.0f32; NPIX];
+        img[5 * IMG + 7] = 1.5;
+        assert_eq!(bilinear(&img, 7.0, 5.0), 1.5);
+        assert_eq!(bilinear(&img, -3.0, 5.0), 0.0);
+        assert!((bilinear(&img, 6.5, 5.0) - 0.75).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,25 @@
+//! SynthDigits: the MNIST substitute (DESIGN.md section 6, substitution 1).
+//!
+//! No network access is available in this environment, so the paper's
+//! MNIST-derived online dataset (Appendix F) is rebuilt procedurally:
+//! digit glyphs rendered from a stroke font, deformed by the paper's own
+//! elastic-transform augmentation, split into offline / validation /
+//! online partitions from disjoint base-seed pools (mirroring the 9k/1k/
+//! 50k source-image split, including the deliberate source reuse in the
+//! online set), plus the four distribution-shift augmentation families of
+//! Fig. 6(b): class-distribution clustering, spatial transforms,
+//! background gradients, white noise.
+
+pub mod augment;
+pub mod digits;
+pub mod elastic;
+pub mod online;
+
+pub use online::{Env, OnlineStream, Sample};
+
+/// Image side length (28 x 28 grayscale like MNIST).
+pub const IMG: usize = 28;
+/// Pixel count.
+pub const NPIX: usize = IMG * IMG;
+/// Pixel value range matches the Qa activation range [0, 2).
+pub const INK: f32 = 1.99;

@@ -1,0 +1,225 @@
+//! Online stream construction (paper Appendix F).
+//!
+//! The paper partitions MNIST's 60k train images into 9k offline / 1k
+//! validation / 50k online source pools, augments each with elastic
+//! transforms (offline 50k, validation 10k, online 100k — sources drawn
+//! *with replacement*, deliberately allowing repeats to mimic a deployed
+//! device's repetitive world). We mirror this with disjoint base-seed
+//! pools per partition. The distribution-shift environment re-augments
+//! every contiguous 10k-sample segment with a fresh augmentation subset.
+
+use super::augment::{self, AugSet};
+use super::digits;
+use super::elastic;
+use crate::util::rng::Rng;
+
+/// One labelled 28x28 sample, pixels in [0, 2).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub image: Vec<f32>,
+    pub label: usize,
+}
+
+/// The four Fig. 6 environments (drift environments configure the NVM
+/// simulator, not the data — see `nvm::drift`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Env {
+    /// Same statistics as offline training.
+    Control,
+    /// Augmentation subset changes every `shift_period` samples.
+    DistShift,
+    /// Data as control; analog NVM drift injected by the coordinator.
+    AnalogDrift,
+    /// Data as control; digital bit-flip drift injected by the coordinator.
+    DigitalDrift,
+}
+
+impl Env {
+    pub fn parse(s: &str) -> Option<Env> {
+        match s {
+            "control" => Some(Env::Control),
+            "shift" | "dist-shift" => Some(Env::DistShift),
+            "analog" | "analog-drift" => Some(Env::AnalogDrift),
+            "digital" | "bitflip" | "digital-drift" => Some(Env::DigitalDrift),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Env::Control => "control",
+            Env::DistShift => "dist-shift",
+            Env::AnalogDrift => "analog-drift",
+            Env::DigitalDrift => "digital-drift",
+        }
+    }
+}
+
+/// Which partition a stream draws its base digits from; partitions use
+/// disjoint seed pools like the paper's disjoint source-image splits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    Offline,
+    Validation,
+    Online,
+}
+
+impl Partition {
+    /// (seed-space offset, pool size) — online reuses a small pool with
+    /// replacement, per the paper's deliberate data-leakage note.
+    fn pool(&self) -> (u64, u64) {
+        match self {
+            Partition::Offline => (0, 9_000),
+            Partition::Validation => (1_000_000, 1_000),
+            Partition::Online => (2_000_000, 50_000),
+        }
+    }
+}
+
+/// Deterministic sample stream: `sample(i)` is a pure function of
+/// (stream seed, partition, environment, index), so fleet shards can
+/// generate their slices independently and runs replay exactly.
+#[derive(Debug, Clone)]
+pub struct OnlineStream {
+    pub seed: u64,
+    pub partition: Partition,
+    pub env: Env,
+    /// Samples per distribution-shift segment (paper: 10_000).
+    pub shift_period: u64,
+    /// White-noise sigma when WN is active.
+    pub noise_sigma: f32,
+}
+
+impl OnlineStream {
+    pub fn new(seed: u64, partition: Partition, env: Env) -> OnlineStream {
+        OnlineStream {
+            seed,
+            partition,
+            env,
+            shift_period: 10_000,
+            noise_sigma: 0.3,
+        }
+    }
+
+    /// Augmentations active at stream index `idx`.
+    pub fn augs_at(&self, idx: u64) -> AugSet {
+        if self.env != Env::DistShift {
+            return AugSet::NONE;
+        }
+        let segment = idx / self.shift_period;
+        if segment == 0 {
+            return AugSet::NONE; // first segment matches offline stats
+        }
+        let mut srng = Rng::new(self.seed ^ 0x5E67 ^ segment);
+        // Enable each family independently; ensure at least one active.
+        loop {
+            let set = AugSet {
+                class_dist: srng.bernoulli(0.4),
+                spatial: srng.bernoulli(0.4),
+                background: srng.bernoulli(0.4),
+                white_noise: srng.bernoulli(0.4),
+            };
+            if set != AugSet::NONE {
+                return set;
+            }
+        }
+    }
+
+    /// Generate sample `idx`.
+    pub fn sample(&self, idx: u64) -> Sample {
+        let (pool_base, pool_size) = self.partition.pool();
+        let mut rng = Rng::new(
+            self.seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(idx)
+                ^ 0xDA7A,
+        );
+        let augs = self.augs_at(idx);
+
+        let label = if augs.class_dist {
+            augment::clustered_label(idx, &mut rng)
+        } else {
+            rng.below(10)
+        };
+
+        // Draw a base image from the partition's pool (with replacement),
+        // then apply the paper's elastic expansion.
+        let base_id = pool_base + rng.next_u64() % pool_size;
+        let mut base_rng = Rng::new(base_id ^ (label as u64) << 32);
+        let mut img = digits::render(label, &mut base_rng);
+        img = elastic::elastic(
+            &img, &mut rng, elastic::ALPHA / 3.0, elastic::SIGMA,
+        );
+
+        if augs.spatial {
+            img = augment::spatial(&img, &mut rng);
+        }
+        if augs.background {
+            img = augment::background(&img, &mut rng);
+        }
+        if augs.white_noise {
+            img = augment::white_noise(&img, &mut rng, self.noise_sigma);
+        }
+        Sample { image: img, label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_replay() {
+        let s = OnlineStream::new(7, Partition::Online, Env::Control);
+        let a = s.sample(123);
+        let b = s.sample(123);
+        assert_eq!(a.image, b.image);
+        assert_eq!(a.label, b.label);
+        let c = s.sample(124);
+        assert_ne!(a.image, c.image);
+    }
+
+    #[test]
+    fn control_has_no_augs() {
+        let s = OnlineStream::new(1, Partition::Online, Env::Control);
+        assert_eq!(s.augs_at(50_000), AugSet::NONE);
+    }
+
+    #[test]
+    fn shift_changes_per_segment_and_first_is_clean() {
+        let s = OnlineStream::new(1, Partition::Online, Env::DistShift);
+        assert_eq!(s.augs_at(5_000), AugSet::NONE);
+        let segs: Vec<AugSet> =
+            (1..6).map(|k| s.augs_at(k * 10_000 + 5)).collect();
+        assert!(segs.iter().any(|a| *a != AugSet::NONE));
+        // within a segment the set is constant
+        assert_eq!(s.augs_at(10_001), s.augs_at(19_999));
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let s = OnlineStream::new(3, Partition::Online, Env::Control);
+        let mut seen = [false; 10];
+        for i in 0..200 {
+            seen[s.sample(i).label] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn partitions_differ() {
+        let on = OnlineStream::new(3, Partition::Online, Env::Control);
+        let off = OnlineStream::new(3, Partition::Offline, Env::Control);
+        assert_ne!(on.sample(0).image, off.sample(0).image);
+    }
+
+    #[test]
+    fn pixel_range() {
+        let s = OnlineStream::new(9, Partition::Online, Env::DistShift);
+        for idx in [0u64, 15_000, 25_000, 35_000] {
+            let smp = s.sample(idx);
+            assert!(smp.image.iter().all(|&v| (0.0..=2.0).contains(&v)));
+            assert_eq!(smp.image.len(), super::super::NPIX);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! lrt-nvm: Low-Rank Training of deep neural networks for emerging
+//! non-volatile memory (NVM) technology.
+//!
+//! Reproduction of Gural, Nadeau, Tikekar & Murmann, "Low-Rank Training of
+//! Deep Neural Networks for Emerging Memory Technology" (2020).
+//!
+//! Three-layer architecture:
+//! - L3 (this crate): rust coordinator — online adaptation loop, NVM write
+//!   scheduling, fleet orchestration, metrics — plus native reference
+//!   implementations of the algorithm and model used by the sweeps,
+//!   baselines, and property tests.
+//! - L2 (python/compile): JAX quantized CNN fwd/bwd, AOT-lowered to HLO
+//!   text artifacts executed through `runtime`.
+//! - L1 (python/compile/kernels): Pallas kernels for the LRT rank update
+//!   and quantized matmul hot-spots.
+
+pub mod baselines;
+pub mod convex;
+pub mod data;
+pub mod experiments;
+pub mod lrt;
+pub mod transfer;
+pub mod nn;
+pub mod nvm;
+pub mod coordinator;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

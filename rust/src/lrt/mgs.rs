@@ -1,0 +1,117 @@
+//! Modified Gram-Schmidt step of Algorithm 1 (the rust twin of the
+//! Pallas `mgs_project` kernel).
+
+use crate::tensor::{dot, norm2, Mat};
+
+const EPS: f32 = 1e-12;
+
+/// Project `v` onto the first r = q-1 columns of `q_mat`, install the
+/// normalized residual as column q-1, and return the coefficients.
+///
+/// `v` is consumed as scratch (it holds the running residual); `c` is the
+/// preallocated output (len q). Zero-norm residuals leave a zero column —
+/// the invariant `v_original == Q_new @ c` holds either way.
+pub fn mgs_project(q_mat: &mut Mat, v: &mut [f32], c: &mut [f32]) {
+    let q = q_mat.cols;
+    let r = q - 1;
+    assert_eq!(v.len(), q_mat.rows);
+    assert_eq!(c.len(), q);
+    for j in 0..r {
+        // c_j = Q_j . v ; v -= c_j Q_j   (sequential: modified GS)
+        let mut cj = 0.0f32;
+        for i in 0..q_mat.rows {
+            cj += q_mat.at(i, j) * v[i];
+        }
+        c[j] = cj;
+        if cj != 0.0 {
+            for i in 0..q_mat.rows {
+                v[i] -= cj * q_mat.at(i, j);
+            }
+        }
+    }
+    let norm = norm2(v);
+    c[r] = norm;
+    if norm > EPS {
+        let inv = 1.0 / norm;
+        for i in 0..q_mat.rows {
+            *q_mat.at_mut(i, r) = v[i] * inv;
+        }
+    } else {
+        c[r] = 0.0;
+        for i in 0..q_mat.rows {
+            *q_mat.at_mut(i, r) = 0.0;
+        }
+    }
+}
+
+/// Reconstruction check used by tests: Q @ c.
+pub fn reconstruct(q_mat: &Mat, c: &[f32]) -> Vec<f32> {
+    (0..q_mat.rows)
+        .map(|i| dot(q_mat.row(i), c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn reconstruction_invariant() {
+        prop::check("mgs-reconstruct", 40, |rng| {
+            let n = [8, 9, 72, 512][rng.below(4)];
+            let q = 5;
+            // random orthonormal first r columns via repeated MGS
+            let mut qm = Mat::zeros(n, q);
+            for _ in 0..q - 1 {
+                let mut v: Vec<f32> =
+                    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let mut c = vec![0.0; q];
+                mgs_project(&mut qm, &mut v, &mut c);
+                // rotate the residual column into a free slot
+                let col = qm.col(q - 1);
+                for j in 0..q - 1 {
+                    if crate::tensor::norm2(&qm.col(j)) < 0.5 {
+                        qm.set_col(j, &col);
+                        break;
+                    }
+                }
+                let zero = vec![0.0; n];
+                qm.set_col(q - 1, &zero);
+            }
+            let v0: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut v = v0.clone();
+            let mut c = vec![0.0; q];
+            mgs_project(&mut qm, &mut v, &mut c);
+            let rec = reconstruct(&qm, &c);
+            for (x, y) in rec.iter().zip(v0.iter()) {
+                crate::prop_assert!(
+                    (x - y).abs() < 1e-3,
+                    "reconstruction {x} vs {y}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_basis_takes_full_norm() {
+        let mut qm = Mat::zeros(16, 5);
+        let mut v = vec![1.0f32; 16];
+        let mut c = vec![0.0; 5];
+        mgs_project(&mut qm, &mut v, &mut c);
+        assert!((c[4] - 4.0).abs() < 1e-6);
+        assert!((crate::tensor::norm2(&qm.col(4)) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_vector_leaves_zero_column() {
+        let mut qm = Mat::zeros(8, 3);
+        let mut v = vec![0.0f32; 8];
+        let mut c = vec![0.0; 3];
+        mgs_project(&mut qm, &mut v, &mut c);
+        assert!(c.iter().all(|&x| x == 0.0));
+        assert!(qm.col(2).iter().all(|&x| x == 0.0));
+    }
+}

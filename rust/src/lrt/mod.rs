@@ -1,0 +1,14 @@
+//! Low-Rank Training (paper Section 4) — native rust implementation.
+//!
+//! This is the L3 reference implementation of Algorithm 1, mirroring
+//! `python/compile/lrt.py` (which is what the AOT artifacts execute). It
+//! backs the native experiment engine (figure/table sweeps), the Table 1
+//! transfer-learning substrate, the Fig. 5 convex-convergence runs, and
+//! the property-test suite; the integration tests cross-check it against
+//! the HLO artifact numerics.
+
+pub mod mgs;
+pub mod state;
+pub mod svd;
+
+pub use state::{LrtDiag, LrtState, Variant};

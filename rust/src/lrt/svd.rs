@@ -1,0 +1,182 @@
+//! One-sided Jacobi SVD for the small (q x q) matrices of the LRT update,
+//! mirroring `python/compile/jacobi.py` (same algorithm, same guards), so
+//! the native engine and the HLO artifacts agree to float tolerance.
+
+use crate::tensor::Mat;
+
+const EPS: f32 = 1e-12;
+
+/// SVD of a small square matrix: `a == u * diag(s) * v^T`.
+///
+/// Singular values are sorted descending; u-columns for (near-)zero
+/// singular values are zero vectors (preserving the product exactly,
+/// which is the only property the LRT update needs).
+pub fn svd_jacobi(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut aw = a.clone();
+    let mut v = Mat::eye(n);
+
+    for _ in 0..sweeps {
+        for i in 0..n - 1 {
+            for j in i + 1..n {
+                rotate(&mut aw, &mut v, i, j);
+            }
+        }
+    }
+
+    let mut s: Vec<f32> = (0..n)
+        .map(|j| {
+            let c = aw.col(j);
+            crate::tensor::norm2(&c)
+        })
+        .collect();
+    let mut u = Mat::zeros(n, n);
+    for j in 0..n {
+        if s[j] > EPS {
+            for i in 0..n {
+                *u.at_mut(i, j) = aw.at(i, j) / s[j];
+            }
+        } else {
+            s[j] = 0.0;
+        }
+    }
+
+    // Sort descending, permuting u and v columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| s[y].partial_cmp(&s[x]).unwrap());
+    let su: Vec<f32> = order.iter().map(|&k| s[k]).collect();
+    let mut uo = Mat::zeros(n, n);
+    let mut vo = Mat::zeros(n, n);
+    for (j, &k) in order.iter().enumerate() {
+        uo.set_col(j, &u.col(k));
+        vo.set_col(j, &v.col(k));
+    }
+    (uo, su, vo)
+}
+
+/// One Jacobi rotation zeroing the (i, j) Gram entry (Rutishauser form).
+fn rotate(aw: &mut Mat, v: &mut Mat, i: usize, j: usize) {
+    let n = aw.rows;
+    let (mut alpha, mut beta, mut gamma) = (0.0f32, 0.0f32, 0.0f32);
+    for r in 0..n {
+        let ai = aw.at(r, i);
+        let aj = aw.at(r, j);
+        alpha += ai * ai;
+        beta += aj * aj;
+        gamma += ai * aj;
+    }
+    if gamma.abs() < EPS {
+        return;
+    }
+    let zeta = (beta - alpha) / (2.0 * gamma);
+    let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    let s = c * t;
+    for r in 0..n {
+        let ai = aw.at(r, i);
+        let aj = aw.at(r, j);
+        *aw.at_mut(r, i) = c * ai - s * aj;
+        *aw.at_mut(r, j) = s * ai + c * aj;
+        let vi = v.at(r, i);
+        let vj = v.at(r, j);
+        *v.at_mut(r, i) = c * vi - s * vj;
+        *v.at_mut(r, j) = s * vi + c * vj;
+    }
+}
+
+/// Default sweep count — quadratic convergence makes 12 ample for q <= 17.
+pub const DEFAULT_SWEEPS: usize = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn check(a: &Mat, atol: f32) -> Result<(), String> {
+        let n = a.rows;
+        let (u, s, v) = svd_jacobi(a, DEFAULT_SWEEPS);
+        for w in s.windows(2) {
+            crate::prop_assert!(w[0] >= w[1] - 1e-6, "not sorted: {s:?}");
+        }
+        // reconstruction
+        let mut us = u.clone();
+        for j in 0..n {
+            for i in 0..n {
+                *us.at_mut(i, j) *= s[j];
+            }
+        }
+        let recon = us.matmul_transb(&v);
+        let scale = a.max_abs().max(1.0);
+        for (x, y) in recon.data.iter().zip(a.data.iter()) {
+            crate::prop_assert!(
+                (x - y).abs() < atol * scale,
+                "recon err {} vs {}", x, y
+            );
+        }
+        // v orthogonal
+        let g = v.t().matmul(&v);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                crate::prop_assert!(
+                    (g.at(i, j) - want).abs() < 1e-3,
+                    "v not orthogonal"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn random_matrices() {
+        prop::check("svd-random", 30, |rng| {
+            let n = [2, 3, 5, 9][rng.below(4)];
+            let a = Mat::from_fn(n, n, |_, _| rng.normal_f32(0.0, 1.0));
+            check(&a, 1e-4)
+        });
+    }
+
+    #[test]
+    fn rank_deficient() {
+        prop::check("svd-rank-deficient", 20, |rng| {
+            let n = 5;
+            let rank = rng.below(5);
+            let mut a = Mat::zeros(n, n);
+            for _ in 0..rank {
+                let u: Vec<f32> =
+                    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> =
+                    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                a.add_outer(1.0, &u, &v);
+            }
+            check(&a, 1e-4)
+        });
+    }
+
+    #[test]
+    fn zero_and_diagonal() {
+        check(&Mat::zeros(5, 5), 1e-6).unwrap();
+        let d = Mat::from_fn(4, 4, |i, j| {
+            if i == j { [9.0, 4.0, 1.0, 0.0][i] } else { 0.0 }
+        });
+        let (_, s, _) = svd_jacobi(&d, DEFAULT_SWEEPS);
+        assert_eq!(s, vec![9.0, 4.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn singular_values_match_gram_trace() {
+        // sum(s^2) == ||A||_F^2 — a cheap global invariant.
+        prop::check("svd-frobenius", 20, |rng| {
+            let a = Mat::from_fn(5, 5, |_, _| rng.normal_f32(0.0, 2.0));
+            let (_, s, _) = svd_jacobi(&a, DEFAULT_SWEEPS);
+            let ss: f32 = s.iter().map(|x| x * x).sum();
+            let fr = a.frob_norm();
+            crate::prop_assert!(
+                (ss - fr * fr).abs() < 1e-3 * fr * fr,
+                "{ss} vs {}", fr * fr
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,247 @@
+//! lrt-nvm CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands map onto the paper's experiments (DESIGN.md section 5):
+//!
+//!   info                       PJRT platform + artifact inventory
+//!   adapt    [--scheme --env]  one online-adaptation run (Fig. 6 cell)
+//!   fleet    [--devices N]     multi-device federated-style adaptation
+//!   convex                     Fig. 5 convergence experiments
+//!   writes                     Fig. 3 area / write-density analysis
+//!   sweep    [--what fig7|fig11]  rank/bitwidth + LR sweeps
+//!   table1|table2|table3       the paper's tables
+//!   grads                      Fig. 9 gradient-magnitude trace
+//!
+//! `adapt --backend artifact` drives the AOT HLO executables through the
+//! PJRT runtime (the production path); the default native backend runs
+//! the rust twin engine (used by the large sweeps).
+
+use anyhow::{bail, Result};
+use lrt_nvm::coordinator::config::RunConfig;
+use lrt_nvm::coordinator::fleet::run_fleet;
+use lrt_nvm::coordinator::trainer::{pretrain, Trainer};
+use lrt_nvm::experiments as exp;
+use lrt_nvm::runtime::{ArtifactDevice, Runtime};
+use lrt_nvm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_str() {
+        "info" => info(&args),
+        "adapt" => adapt(&args),
+        "fleet" => fleet(&args),
+        "convex" => {
+            println!("{}", exp::fig5());
+            Ok(())
+        }
+        "writes" => {
+            println!("{}", exp::fig3());
+            Ok(())
+        }
+        "sweep" => sweep(&args),
+        "table1" => {
+            let seeds = args.usize_opt("seeds", 3);
+            let samples = args.usize_opt("samples", 2000);
+            let classes = args.usize_opt("classes", 20);
+            println!("{}", exp::table1(seeds, samples, classes));
+            Ok(())
+        }
+        "table2" => {
+            println!(
+                "{}",
+                exp::table2(
+                    args.usize_opt("samples", 2000),
+                    args.usize_opt("seeds", 3),
+                )
+            );
+            Ok(())
+        }
+        "table3" => {
+            println!(
+                "{}",
+                exp::table3(
+                    args.usize_opt("samples", 2000),
+                    args.usize_opt("seeds", 3),
+                )
+            );
+            Ok(())
+        }
+        "grads" => {
+            println!(
+                "{}",
+                exp::fig9(args.usize_opt("steps", 400), args.u64_opt("seed", 0))
+            );
+            Ok(())
+        }
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `lrt-nvm help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "lrt-nvm — Low-Rank Training for NVM edge devices\n\n\
+         USAGE: lrt-nvm <subcommand> [--opt value]...\n\n\
+         SUBCOMMANDS:\n\
+           info     PJRT platform + compiled artifact inventory\n\
+           adapt    online adaptation run (--scheme inference|bias|sgd|\n\
+                    lrt|lrt-unbiased, --env control|shift|analog|digital,\n\
+                    --samples N, --backend native|artifact, --no-norm)\n\
+           fleet    multi-device adaptation (--devices N)\n\
+           convex   Fig. 5 convex-convergence experiments\n\
+           writes   Fig. 3 auxiliary-area vs write-density analysis\n\
+           sweep    --what fig7 (rank x bitwidth) | fig11 (LR heatmaps)\n\
+           table1   transfer-learning recovery (--seeds --samples --classes)\n\
+           table2   biased/unbiased per layer group\n\
+           table3   miscellaneous ablations\n\
+           grads    Fig. 9 gradient-magnitude trace\n\n\
+         Set LRT_FULL=1 for paper-scale workloads."
+    );
+}
+
+fn info(args: &Args) -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    println!(
+        "PJRT platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let dir = args.str_opt("artifacts", "artifacts");
+    match Runtime::load(std::path::Path::new(&dir)) {
+        Ok(rt) => {
+            println!("artifacts ({dir}):");
+            for (name, _) in &rt.manifest.artifacts {
+                let a = rt.artifact(name)?;
+                println!(
+                    "  {name:<10} {:>3} inputs {:>3} outputs ({})",
+                    a.spec.inputs.len(),
+                    a.spec.outputs.len(),
+                    a.spec.file
+                );
+            }
+            println!(
+                "model: {} layers, rank {}, w_bits {}",
+                rt.manifest.model.layer_dims.len(),
+                rt.manifest.model.rank,
+                rt.manifest.model.w_bits
+            );
+        }
+        Err(e) => println!("artifacts not loaded: {e:#}"),
+    }
+    Ok(())
+}
+
+fn adapt(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args);
+    let backend = args.str_opt("backend", "native");
+    println!(
+        "adapt: scheme={} env={} samples={} backend={backend}",
+        cfg.scheme.name(),
+        cfg.env.name(),
+        cfg.samples
+    );
+    eprintln!("offline pretraining ({} samples)...", cfg.offline_samples);
+    let (params, aux) = pretrain(&cfg, true);
+    match backend.as_str() {
+        "native" => {
+            let mut tr = Trainer::new(cfg, params, aux);
+            let rep = tr.run();
+            println!("{}", rep.summary_line());
+            println!("\n  step    accEMA   maxWrites");
+            for (s, a, w) in &rep.series {
+                println!("  {s:>6}  {a:.4}   {w}");
+            }
+        }
+        "artifact" => {
+            let dir = args.str_opt("artifacts", "artifacts");
+            let rt = Runtime::load(std::path::Path::new(&dir))?;
+            let mut dev =
+                ArtifactDevice::with_aux(&rt, cfg.clone(), &params, &aux)?;
+            let stream = lrt_nvm::data::online::OnlineStream::new(
+                cfg.seed,
+                lrt_nvm::data::online::Partition::Online,
+                cfg.env,
+            );
+            let mut metrics =
+                lrt_nvm::coordinator::metrics::Metrics::new(500);
+            let t0 = std::time::Instant::now();
+            for t in 0..cfg.samples {
+                let s = stream.sample(t as u64);
+                let (loss, correct) = dev.step(&s.image, s.label)?;
+                metrics.record(correct, loss as f64);
+                if cfg.drift.enabled()
+                    && (t + 1) as u64 % cfg.drift.every == 0
+                {
+                    dev.drift();
+                }
+                if (t + 1) % cfg.log_every == 0 {
+                    metrics.log_point(t + 1, dev.max_cell_writes());
+                    eprintln!(
+                        "  step {:>6}: accEMA={:.3} writes={} \
+                         ({:.1} ms/sample)",
+                        t + 1,
+                        metrics.acc_ema.get(),
+                        dev.max_cell_writes(),
+                        t0.elapsed().as_millis() as f64 / (t + 1) as f64
+                    );
+                }
+            }
+            println!(
+                "final: accEMA={:.3} tail={:.3} maxCellWrites={} \
+                 totalWrites={} kappaSkips={}",
+                metrics.acc_ema.get(),
+                metrics.tail_acc(),
+                dev.max_cell_writes(),
+                dev.total_writes(),
+                dev.kappa_skips,
+            );
+        }
+        other => bail!("unknown backend '{other}'"),
+    }
+    Ok(())
+}
+
+fn fleet(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args);
+    let n = args.usize_opt("devices", 4);
+    println!(
+        "fleet: {n} devices, scheme={} env={} samples={}/device",
+        cfg.scheme.name(),
+        cfg.env.name(),
+        cfg.samples
+    );
+    let rep = run_fleet(&cfg, n);
+    for d in &rep.devices {
+        println!("  {}", d.summary_line());
+    }
+    println!(
+        "mean accEMA = {:.3} ± {:.3} | worst cell writes = {} | total \
+         write energy = {:.1} uJ",
+        rep.mean_final_ema,
+        rep.std_final_ema,
+        rep.worst_cell_writes,
+        rep.total_energy_pj / 1e6
+    );
+    println!(
+        "federated payload/flush: LRT factors {} B vs dense gradient {} B \
+         ({}x compression)",
+        rep.federated_payload_bytes,
+        rep.dense_payload_bytes,
+        rep.dense_payload_bytes / rep.federated_payload_bytes.max(1)
+    );
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let what = args.str_opt("what", "fig7");
+    let samples = args.usize_opt("samples", 2000);
+    let seed = args.u64_opt("seed", 0);
+    match what.as_str() {
+        "fig7" => println!("{}", exp::fig7(samples, seed)),
+        "fig11" => println!("{}", exp::fig11(samples, seed)),
+        other => bail!("unknown sweep '{other}' (fig7|fig11)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! The representative CNN architecture (paper Section 7.1), identical to
+//! `python/compile/model.py`: four 3x3 convs + two fully-connected layers
+//! on 28x28x1 images, stride-2 downsampling, explicit (1,1) padding.
+
+/// One convolutional layer (3x3 kernel, explicit pad 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+}
+
+impl ConvSpec {
+    pub const fn k(&self) -> usize {
+        self.cin * 9
+    }
+
+    pub const fn h_out(&self) -> usize {
+        (self.h_in + 2 - 3) / self.stride + 1
+    }
+
+    pub const fn w_out(&self) -> usize {
+        (self.w_in + 2 - 3) / self.stride + 1
+    }
+
+    pub const fn pixels(&self) -> usize {
+        self.h_out() * self.w_out()
+    }
+}
+
+pub const CONVS: [ConvSpec; 4] = [
+    ConvSpec { cin: 1, cout: 8, stride: 2, h_in: 28, w_in: 28 },
+    ConvSpec { cin: 8, cout: 16, stride: 2, h_in: 14, w_in: 14 },
+    ConvSpec { cin: 16, cout: 16, stride: 1, h_in: 7, w_in: 7 },
+    ConvSpec { cin: 16, cout: 32, stride: 2, h_in: 7, w_in: 7 },
+];
+
+/// (n_in, n_out) of the two fully-connected layers.
+pub const FCS: [(usize, usize); 2] = [(512, 64), (64, 10)];
+
+pub const N_LAYERS: usize = 6;
+pub const NUM_CLASSES: usize = 10;
+
+/// (n_o, n_i) of every trainable weight matrix in im2col form.
+pub const LAYER_DIMS: [(usize, usize); 6] = [
+    (8, 9),
+    (16, 72),
+    (16, 144),
+    (32, 144),
+    (64, 512),
+    (10, 64),
+];
+
+/// Per-layer power-of-2 He gains (must equal python `model.ALPHAS`).
+pub fn alphas() -> [f32; 6] {
+    let mut a = [0.0f32; 6];
+    for (i, (_, k)) in LAYER_DIMS.iter().enumerate() {
+        a[i] = crate::quant::he_alpha(*k);
+    }
+    a
+}
+
+/// Default LRT flush batch sizes (Appendix G: conv 10, fc 100).
+pub const DEFAULT_BATCH: [usize; 6] = [10, 10, 10, 10, 100, 100];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match_python_manifest() {
+        assert_eq!(CONVS[0].pixels(), 196);
+        assert_eq!(CONVS[1].pixels(), 49);
+        assert_eq!(CONVS[2].pixels(), 49);
+        assert_eq!(CONVS[3].pixels(), 16);
+        assert_eq!(CONVS[3].pixels() * CONVS[3].cout, FCS[0].0);
+        for (i, c) in CONVS.iter().enumerate() {
+            assert_eq!(LAYER_DIMS[i], (c.cout, c.k()));
+        }
+        assert_eq!(LAYER_DIMS[4], (FCS[0].1, FCS[0].0));
+        assert_eq!(LAYER_DIMS[5], (FCS[1].1, FCS[1].0));
+    }
+
+    #[test]
+    fn alpha_values() {
+        assert_eq!(alphas(), [0.5, 0.125, 0.125, 0.125, 0.0625, 0.25]);
+    }
+}

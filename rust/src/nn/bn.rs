@@ -1,0 +1,152 @@
+//! Streaming batch normalization (paper Appendix E), rust twin of
+//! `python/compile/streambn.py`.
+
+use crate::tensor::Mat;
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// Per-layer streaming statistics.
+#[derive(Debug, Clone)]
+pub struct BnState {
+    pub mu_s: Vec<f32>,
+    pub sq_s: Vec<f32>,
+}
+
+impl BnState {
+    pub fn new(channels: usize) -> BnState {
+        BnState { mu_s: vec![0.0; channels], sq_s: vec![1.0; channels] }
+    }
+}
+
+/// Outputs of the training-path normalization needed by backward.
+pub struct BnFwd {
+    pub y: Mat,
+    pub z_hat: Mat,
+    pub inv: Vec<f32>,
+}
+
+/// Training path: update EMA stats, normalize with streaming (or, for the
+/// "no streaming batch norm" ablation, per-sample) statistics.
+pub fn forward_train(
+    state: &mut BnState,
+    z: &Mat,
+    gamma: &[f32],
+    beta: &[f32],
+    eta: f32,
+    streaming: bool,
+) -> BnFwd {
+    let c = z.cols;
+    let p = z.rows as f32;
+    let mut mu_i = vec![0.0f32; c];
+    let mut sq_i = vec![0.0f32; c];
+    for i in 0..z.rows {
+        for j in 0..c {
+            let v = z.at(i, j);
+            mu_i[j] += v / p;
+            sq_i[j] += v * v / p;
+        }
+    }
+    for j in 0..c {
+        state.mu_s[j] = eta * state.mu_s[j] + (1.0 - eta) * mu_i[j];
+        state.sq_s[j] = eta * state.sq_s[j] + (1.0 - eta) * sq_i[j];
+    }
+    let (mu, var): (Vec<f32>, Vec<f32>) = if streaming {
+        (
+            state.mu_s.clone(),
+            (0..c)
+                .map(|j| {
+                    (state.sq_s[j] - state.mu_s[j] * state.mu_s[j]).max(0.0)
+                })
+                .collect(),
+        )
+    } else {
+        (
+            mu_i.clone(),
+            (0..c).map(|j| (sq_i[j] - mu_i[j] * mu_i[j]).max(0.0)).collect(),
+        )
+    };
+    let inv: Vec<f32> =
+        var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+    let mut z_hat = Mat::zeros(z.rows, c);
+    let mut y = Mat::zeros(z.rows, c);
+    for i in 0..z.rows {
+        for j in 0..c {
+            let zh = (z.at(i, j) - mu[j]) * inv[j];
+            *z_hat.at_mut(i, j) = zh;
+            *y.at_mut(i, j) = gamma[j] * zh + beta[j];
+        }
+    }
+    BnFwd { y, z_hat, inv }
+}
+
+/// Inference path with frozen streaming statistics.
+pub fn forward_infer(
+    state: &BnState,
+    z: &Mat,
+    gamma: &[f32],
+    beta: &[f32],
+) -> Mat {
+    let c = z.cols;
+    let inv: Vec<f32> = (0..c)
+        .map(|j| {
+            let var = (state.sq_s[j] - state.mu_s[j] * state.mu_s[j]).max(0.0);
+            1.0 / (var + BN_EPS).sqrt()
+        })
+        .collect();
+    Mat::from_fn(z.rows, c, |i, j| {
+        gamma[j] * (z.at(i, j) - state.mu_s[j]) * inv[j] + beta[j]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn per_sample_stats_normalize_exactly() {
+        let mut rng = Rng::new(1);
+        let z = Mat::from_fn(49, 8, |_, _| rng.normal_f32(3.0, 2.0));
+        let mut st = BnState::new(8);
+        let gamma = vec![1.0; 8];
+        let beta = vec![0.0; 8];
+        let f = forward_train(&mut st, &z, &gamma, &beta, 0.9, false);
+        for j in 0..8 {
+            let col: Vec<f32> = (0..49).map(|i| f.y.at(i, j)).collect();
+            let m: f32 = col.iter().sum::<f32>() / 49.0;
+            let v: f32 =
+                col.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / 49.0;
+            assert!(m.abs() < 1e-4, "{m}");
+            assert!((v - 1.0).abs() < 1e-2, "{v}");
+        }
+    }
+
+    #[test]
+    fn streaming_stats_converge_to_distribution() {
+        let mut rng = Rng::new(2);
+        let mut st = BnState::new(4);
+        let gamma = vec![1.0; 4];
+        let beta = vec![0.0; 4];
+        let eta = 1.0 - 1.0 / 100.0;
+        for _ in 0..2000 {
+            let z = Mat::from_fn(16, 4, |_, _| rng.normal_f32(5.0, 3.0));
+            forward_train(&mut st, &z, &gamma, &beta, eta, true);
+        }
+        for j in 0..4 {
+            assert!((st.mu_s[j] - 5.0).abs() < 0.4, "{}", st.mu_s[j]);
+            let var = st.sq_s[j] - st.mu_s[j] * st.mu_s[j];
+            assert!((var - 9.0).abs() < 1.5, "{var}");
+        }
+    }
+
+    #[test]
+    fn infer_uses_frozen_stats() {
+        let mut st = BnState::new(2);
+        st.mu_s = vec![1.0, -1.0];
+        st.sq_s = vec![5.0, 2.0]; // var = 4, 1
+        let z = Mat::from_vec(1, 2, vec![3.0, 0.0]);
+        let y = forward_infer(&st, &z, &[1.0, 2.0], &[0.5, 0.0]);
+        assert!((y.at(0, 0) - (0.5 + (3.0 - 1.0) / 2.0)).abs() < 1e-3);
+        assert!((y.at(0, 1) - 2.0).abs() < 1e-3);
+    }
+}

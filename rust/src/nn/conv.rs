@@ -1,0 +1,184 @@
+//! im2col convolution helpers, matching XLA's
+//! `conv_general_dilated_patches` layout: patch feature index
+//! K = ci*9 + kh*3 + kw, output pixels row-major.
+
+use super::arch::ConvSpec;
+use crate::tensor::Mat;
+
+/// Extract im2col patches: input (h_in, w_in, cin) row-major HWC ->
+/// (pixels, K) with K ordered (cin, kh, kw) and explicit (1,1) padding.
+pub fn im2col(spec: &ConvSpec, input: &[f32]) -> Mat {
+    assert_eq!(input.len(), spec.h_in * spec.w_in * spec.cin);
+    let (h_out, w_out) = (spec.h_out(), spec.w_out());
+    let mut out = Mat::zeros(h_out * w_out, spec.k());
+    for oy in 0..h_out {
+        for ox in 0..w_out {
+            let p = oy * w_out + ox;
+            let row = out.row_mut(p);
+            for ci in 0..spec.cin {
+                for kh in 0..3 {
+                    let iy = (oy * spec.stride + kh) as isize - 1;
+                    if iy < 0 || iy >= spec.h_in as isize {
+                        continue;
+                    }
+                    for kw in 0..3 {
+                        let ix = (ox * spec.stride + kw) as isize - 1;
+                        if ix < 0 || ix >= spec.w_in as isize {
+                            continue;
+                        }
+                        let src = (iy as usize * spec.w_in + ix as usize)
+                            * spec.cin
+                            + ci;
+                        row[ci * 9 + kh * 3 + kw] = input[src];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Backward of the convolution w.r.t. its input: scatter-add of
+/// dz (pixels, cout) through the weights (cout, K) into (h_in*w_in*cin).
+/// This is the exact vjp of `im2col(..) @ w.T`.
+pub fn conv_input_grad(spec: &ConvSpec, dz: &Mat, w: &Mat) -> Vec<f32> {
+    assert_eq!(dz.rows, spec.pixels());
+    assert_eq!(dz.cols, spec.cout);
+    assert_eq!(w.rows, spec.cout);
+    assert_eq!(w.cols, spec.k());
+    let (h_out, w_out) = (spec.h_out(), spec.w_out());
+    let mut da = vec![0.0f32; spec.h_in * spec.w_in * spec.cin];
+    // dpatch = dz @ w : (pixels, K), then scatter rows back.
+    let dpatch = dz.matmul(w);
+    for oy in 0..h_out {
+        for ox in 0..w_out {
+            let p = oy * w_out + ox;
+            let row = dpatch.row(p);
+            for ci in 0..spec.cin {
+                for kh in 0..3 {
+                    let iy = (oy * spec.stride + kh) as isize - 1;
+                    if iy < 0 || iy >= spec.h_in as isize {
+                        continue;
+                    }
+                    for kw in 0..3 {
+                        let ix = (ox * spec.stride + kw) as isize - 1;
+                        if ix < 0 || ix >= spec.w_in as isize {
+                            continue;
+                        }
+                        let dst = (iy as usize * spec.w_in + ix as usize)
+                            * spec.cin
+                            + ci;
+                        da[dst] += row[ci * 9 + kh * 3 + kw];
+                    }
+                }
+            }
+        }
+    }
+    da
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    const SPEC: ConvSpec =
+        ConvSpec { cin: 2, cout: 3, stride: 2, h_in: 6, w_in: 6 };
+
+    fn conv_direct(spec: &ConvSpec, input: &[f32], w: &Mat) -> Mat {
+        // reference: direct convolution loop
+        let (h_out, w_out) = (spec.h_out(), spec.w_out());
+        let mut z = Mat::zeros(h_out * w_out, spec.cout);
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                for co in 0..spec.cout {
+                    let mut acc = 0.0;
+                    for ci in 0..spec.cin {
+                        for kh in 0..3 {
+                            for kw in 0..3 {
+                                let iy =
+                                    (oy * spec.stride + kh) as isize - 1;
+                                let ix =
+                                    (ox * spec.stride + kw) as isize - 1;
+                                if iy < 0
+                                    || ix < 0
+                                    || iy >= spec.h_in as isize
+                                    || ix >= spec.w_in as isize
+                                {
+                                    continue;
+                                }
+                                acc += input[(iy as usize * spec.w_in
+                                    + ix as usize)
+                                    * spec.cin
+                                    + ci]
+                                    * w.at(co, ci * 9 + kh * 3 + kw);
+                            }
+                        }
+                    }
+                    *z.at_mut(oy * w_out + ox, co) = acc;
+                }
+            }
+        }
+        z
+    }
+
+    #[test]
+    fn im2col_matmul_equals_direct_conv() {
+        prop::check("im2col-direct", 15, |rng| {
+            let input: Vec<f32> = (0..SPEC.h_in * SPEC.w_in * SPEC.cin)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let w = Mat::from_fn(SPEC.cout, SPEC.k(), |_, _| {
+                rng.normal_f32(0.0, 0.5)
+            });
+            let z1 = im2col(&SPEC, &input).matmul_transb(&w);
+            let z2 = conv_direct(&SPEC, &input, &w);
+            for (a, b) in z1.data.iter().zip(z2.data.iter()) {
+                crate::prop_assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn input_grad_matches_finite_difference() {
+        let mut rng = Rng::new(3);
+        let n_in = SPEC.h_in * SPEC.w_in * SPEC.cin;
+        let input: Vec<f32> =
+            (0..n_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let w = Mat::from_fn(SPEC.cout, SPEC.k(), |_, _| {
+            rng.normal_f32(0.0, 0.5)
+        });
+        let dz = Mat::from_fn(SPEC.pixels(), SPEC.cout, |_, _| {
+            rng.normal_f32(0.0, 1.0)
+        });
+        let da = conv_input_grad(&SPEC, &dz, &w);
+        // loss = sum(dz * conv(input)); d loss/d input_k by central diff
+        let loss = |inp: &[f32]| -> f32 {
+            let z = im2col(&SPEC, inp).matmul_transb(&w);
+            z.data.iter().zip(dz.data.iter()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2;
+        for k in [0usize, 17, 35, n_in - 1] {
+            let mut ip = input.clone();
+            ip[k] += eps;
+            let mut im = input.clone();
+            im[k] -= eps;
+            let fd = (loss(&ip) - loss(&im)) / (2.0 * eps);
+            assert!(
+                (fd - da[k]).abs() < 1e-2 * fd.abs().max(1.0),
+                "k={k}: fd {fd} vs analytic {}", da[k]
+            );
+        }
+    }
+
+    #[test]
+    fn paper_layer_shapes() {
+        for spec in super::super::arch::CONVS.iter() {
+            let input = vec![0.5f32; spec.h_in * spec.w_in * spec.cin];
+            let p = im2col(spec, &input);
+            assert_eq!(p.rows, spec.pixels());
+            assert_eq!(p.cols, spec.k());
+        }
+    }
+}

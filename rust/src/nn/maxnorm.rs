@@ -1,0 +1,59 @@
+//! Gradient max-norming (paper Appendix D), rust twin of
+//! `python/compile/maxnorm.py`. One EMA scalar per gradient tensor plus a
+//! shared evaluation counter.
+
+pub const BETA: f32 = 0.999;
+pub const FLOOR: f32 = 1e-4;
+
+/// Normalize `x` in place; `mv` is the per-tensor EMA state, `k` the
+/// shared (already incremented) evaluation count. Returns nothing when
+/// disabled but still tracks the maxima so the scheme can be toggled.
+pub fn apply(x: &mut [f32], mv: &mut f32, k: f32, enabled: bool) {
+    let xmax = x.iter().fold(0.0f32, |m, v| m.max(v.abs())) + FLOOR;
+    *mv = BETA * *mv + (1.0 - BETA) * xmax;
+    let corr = *mv / (1.0 - (k * BETA.ln()).exp());
+    if enabled {
+        let denom = xmax.max(corr);
+        for v in x.iter_mut() {
+            *v /= denom;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_to_unit_max() {
+        let mut x = vec![0.5, -2.0, 1.0];
+        let mut mv = FLOOR;
+        apply(&mut x, &mut mv, 1.0, true);
+        let m = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(m <= 1.0 + 1e-5 && m > 0.9, "{m}");
+    }
+
+    #[test]
+    fn quiet_region_uses_moving_average() {
+        // After large gradients, a tiny gradient must NOT be blown up to
+        // unit scale — the EMA denominator dominates.
+        let mut mv = FLOOR;
+        for k in 1..=50 {
+            let mut x = vec![10.0f32, -10.0];
+            apply(&mut x, &mut mv, k as f32, true);
+        }
+        let mut x = vec![1e-3f32, -1e-3];
+        apply(&mut x, &mut mv, 51.0, true);
+        let m = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(m < 1e-2, "quiet gradient magnified to {m}");
+    }
+
+    #[test]
+    fn disabled_tracks_but_does_not_scale() {
+        let mut x = vec![3.0f32];
+        let mut mv = FLOOR;
+        apply(&mut x, &mut mv, 1.0, false);
+        assert_eq!(x[0], 3.0);
+        assert!(mv > FLOOR);
+    }
+}

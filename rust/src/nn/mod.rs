@@ -1,0 +1,16 @@
+//! Native quantized NN engine — the rust twin of `python/compile/model.py`.
+//!
+//! Used by (a) the baseline schemes and hyperparameter sweeps, where
+//! native execution avoids per-sample PJRT dispatch, and (b) the
+//! integration tests that cross-check the HLO artifacts. The architecture,
+//! quantizer placement, streaming BN, max-norm, and backward signal flow
+//! (paper Fig. 8 / Appendix C) match the python definition op-for-op.
+
+pub mod arch;
+pub mod bn;
+pub mod conv;
+pub mod maxnorm;
+pub mod model;
+
+pub use arch::{ConvSpec, CONVS, FCS, LAYER_DIMS, N_LAYERS, NUM_CLASSES};
+pub use model::{AuxState, Caches, Grads, Params};

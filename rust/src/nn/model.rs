@@ -1,0 +1,468 @@
+//! Forward/backward of the representative CNN with the full quantized
+//! signal flow of paper Fig. 8 — the rust twin of `model.py`'s
+//! `forward` / `backward` / step functions.
+
+use super::arch::{alphas, ConvSpec, CONVS, FCS, LAYER_DIMS, N_LAYERS, NUM_CLASSES};
+#[allow(unused_imports)]
+use NUM_CLASSES as _NC;
+use super::bn::{self, BnState};
+use super::conv::{conv_input_grad, im2col};
+use super::maxnorm;
+use crate::quant::{qw_bits, Quantizer, QA, QB, QG};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Trainable parameters. Weights are the *logical* values; at the device
+/// level they live in `nvm::NvmArray`s and are read back before each step.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub w: Vec<Mat>,        // 6 weight matrices, (n_o, n_i) im2col form
+    pub b: Vec<Vec<f32>>,   // 6 biases
+    pub gamma: Vec<Vec<f32>>, // 4 BN scales
+    pub beta: Vec<Vec<f32>>,  // 4 BN offsets
+}
+
+impl Params {
+    /// He-initialized, Qw-quantized (matches python `init_params`).
+    pub fn init(rng: &mut Rng, w_bits: u32) -> Params {
+        let qw = qw_bits(w_bits);
+        let al = alphas();
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        for (i, &(n_o, n_i)) in LAYER_DIMS.iter().enumerate() {
+            let std = (2.0 / n_i as f32).sqrt() / al[i];
+            let m = Mat::from_fn(n_o, n_i, |_, _| {
+                qw.q(rng.normal_f32(0.0, std).clamp(-1.0, 1.0))
+            });
+            w.push(m);
+            b.push(vec![0.0; n_o]);
+        }
+        let gamma = CONVS.iter().map(|c| vec![1.0; c.cout]).collect();
+        let beta = CONVS.iter().map(|c| vec![0.0; c.cout]).collect();
+        Params { w, b, gamma, beta }
+    }
+}
+
+/// Auxiliary (non-NVM) training state: BN stats + max-norm EMAs.
+#[derive(Debug, Clone)]
+pub struct AuxState {
+    pub bn: Vec<BnState>,
+    pub mn: Vec<f32>,
+    pub mnk: f32,
+}
+
+impl AuxState {
+    pub fn new() -> AuxState {
+        AuxState {
+            bn: CONVS.iter().map(|c| BnState::new(c.cout)).collect(),
+            mn: vec![maxnorm::FLOOR; N_LAYERS],
+            mnk: 0.0,
+        }
+    }
+}
+
+impl Default for AuxState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-layer forward caches for the manual backward pass.
+pub struct Caches {
+    /// conv layers: (patches, z_hat, inv, y_bn, y)
+    pub conv: Vec<ConvCache>,
+    /// fc layers: (a_in, z, y)
+    pub fc: Vec<FcCache>,
+    pub logits: Vec<f32>,
+}
+
+pub struct ConvCache {
+    pub pat: Mat,
+    pub z_hat: Mat,
+    pub inv: Vec<f32>,
+    pub y_bn: Mat,
+    pub y: Mat,
+}
+
+pub struct FcCache {
+    pub a_in: Vec<f32>,
+    pub z: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+/// Quantized forward pass; `train` updates BN state (streaming path).
+pub fn forward(
+    params: &Params,
+    aux: &mut AuxState,
+    image: &[f32],
+    bn_eta: f32,
+    bn_stream: bool,
+    w_bits: u32,
+    train: bool,
+) -> Caches {
+    let _ = qw_bits(w_bits); // grid fixed at programming time
+    let al = alphas();
+    let mut a: Vec<f32> = image.iter().map(|&v| QA.q(v)).collect();
+    let mut conv_caches = Vec::new();
+    for (i, spec) in CONVS.iter().enumerate() {
+        let pat = im2col(spec, &a);
+        // NVM reads are already on the Qw grid (quantization is
+        // idempotent), so no per-step re-quantization copy is needed.
+        let w = &params.w[i];
+        let mut z = pat.matmul_transb(w);
+        z.scale(al[i]);
+        for p in 0..z.rows {
+            for j in 0..z.cols {
+                *z.at_mut(p, j) += params.b[i][j];
+            }
+        }
+        let f = if train {
+            bn::forward_train(
+                &mut aux.bn[i], &z, &params.gamma[i], &params.beta[i],
+                bn_eta, bn_stream,
+            )
+        } else {
+            let y = bn::forward_infer(
+                &aux.bn[i], &z, &params.gamma[i], &params.beta[i],
+            );
+            bn::BnFwd {
+                z_hat: y.clone(),
+                inv: vec![1.0; spec.cout],
+                y,
+            }
+        };
+        let mut y = f.y.clone();
+        for v in &mut y.data {
+            *v = v.max(0.0);
+        }
+        a = y.data.iter().map(|&v| QA.q(v)).collect();
+        conv_caches.push(ConvCache {
+            pat,
+            z_hat: f.z_hat,
+            inv: f.inv,
+            y_bn: f.y,
+            y,
+        });
+    }
+    // a is now (pixels * cout) of conv4 = 512, already row-major HWC
+    let mut fc_caches = Vec::new();
+    let mut logits = Vec::new();
+    for (j, &(_, _n_out)) in FCS.iter().enumerate() {
+        let i = CONVS.len() + j;
+        let w = &params.w[i];
+        let mut z = w.matvec(&a);
+        for (k, v) in z.iter_mut().enumerate() {
+            *v = *v * al[i] + params.b[i][k];
+        }
+        if j + 1 < FCS.len() {
+            let y: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
+            let a_next: Vec<f32> = y.iter().map(|&v| QA.q(v)).collect();
+            fc_caches.push(FcCache { a_in: a.clone(), z: z.clone(), y });
+            a = a_next;
+        } else {
+            logits = z.clone();
+            fc_caches.push(FcCache {
+                a_in: a.clone(),
+                z: z.clone(),
+                y: z.clone(),
+            });
+        }
+    }
+    Caches { conv: conv_caches, fc: fc_caches, logits }
+}
+
+/// Softmax cross-entropy loss + dlogits.
+pub fn softmax_xent(logits: &[f32], label: usize) -> (f32, Vec<f32>) {
+    let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - maxl).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    let logz = maxl + sum.ln();
+    let loss = logz - logits[label];
+    let mut d: Vec<f32> = exps.iter().map(|&e| e / sum).collect();
+    d[label] -= 1.0;
+    (loss, d)
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Per-layer Kronecker factors + bias/BN gradients (Fig. 8 flow).
+pub struct Grads {
+    /// Weight-gradient factors per layer: (dzw (P x n_o), ain (P x n_i));
+    /// fc layers have P = 1. Gradient = dzw^T @ ain.
+    pub dzw: Vec<Mat>,
+    pub ain: Vec<Mat>,
+    pub db: Vec<Vec<f32>>,
+    pub dg: Vec<Vec<f32>>,
+    pub dbe: Vec<Vec<f32>>,
+}
+
+impl Grads {
+    /// Dense weight gradient of layer `i` (the SGD baseline path).
+    pub fn full(&self, i: usize) -> Mat {
+        self.dzw[i].t().matmul(&self.ain[i])
+    }
+}
+
+/// Manual backward pass (mirrors `model.backward`); consumes the caches.
+pub fn backward(
+    params: &Params,
+    aux: &mut AuxState,
+    caches: Caches,
+    dlogits: &[f32],
+    use_maxnorm: bool,
+    w_bits: u32,
+) -> Grads {
+    let _ = qw_bits(w_bits);
+    let al = alphas();
+    aux.mnk += 1.0;
+    let k = aux.mnk;
+
+    let mut dzw: Vec<Mat> = (0..N_LAYERS).map(|_| Mat::zeros(0, 0)).collect();
+    let mut ain: Vec<Mat> = (0..N_LAYERS).map(|_| Mat::zeros(0, 0)).collect();
+    let mut db: Vec<Vec<f32>> = vec![Vec::new(); N_LAYERS];
+    let mut dg: Vec<Vec<f32>> = vec![Vec::new(); 4];
+    let mut dbe: Vec<Vec<f32>> = vec![Vec::new(); 4];
+
+    // ---- fc layers, last to first -----------------------------------
+    let mut dz: Vec<f32> = dlogits.to_vec();
+    for j in (0..FCS.len()).rev() {
+        let i = CONVS.len() + j;
+        let cache = &caches.fc[j];
+        if j + 1 < FCS.len() {
+            for (t, v) in dz.iter_mut().enumerate() {
+                let pass =
+                    cache.y[t] >= QA.lo && cache.y[t] <= QA.hi;
+                let relu = cache.z[t] > 0.0;
+                *v = if pass && relu { QG.q(*v) } else { 0.0 };
+            }
+        }
+        let mut dzn = dz.clone();
+        maxnorm::apply(&mut dzn, &mut aux.mn[i], k, use_maxnorm);
+        let mut dzw_i: Vec<f32> =
+            dzn.iter().map(|&v| QG.q(al[i] * v)).collect();
+        db[i] = dzn.iter().map(|&v| QG.q(v)).collect();
+        dzw[i] = Mat::from_vec(1, dzw_i.len(), std::mem::take(&mut dzw_i));
+        ain[i] = Mat::from_vec(1, cache.a_in.len(), cache.a_in.clone());
+        // propagate: dz_prev = alpha * W^T dz
+        let mut prev = params.w[i].t_matvec(&dz);
+        for v in &mut prev {
+            *v *= al[i];
+        }
+        dz = prev;
+    }
+
+    // ---- conv layers, last to first ---------------------------------
+    // dz currently holds d/d(flattened conv4 activation).
+    let mut da = dz;
+    for i in (0..CONVS.len()).rev() {
+        let spec: &ConvSpec = &CONVS[i];
+        let cache = &caches.conv[i];
+        let p = spec.pixels();
+        let mut dy = Mat::from_vec(p, spec.cout, da.clone());
+        for t in 0..p {
+            for c in 0..spec.cout {
+                let pass = cache.y.at(t, c) >= QA.lo
+                    && cache.y.at(t, c) <= QA.hi;
+                let relu = cache.y_bn.at(t, c) > 0.0;
+                let v = dy.at(t, c);
+                *dy.at_mut(t, c) =
+                    if pass && relu { QG.q(v) } else { 0.0 };
+            }
+        }
+        // streaming-BN backward, stats as constants
+        let mut dgi = vec![0.0f32; spec.cout];
+        let mut dbei = vec![0.0f32; spec.cout];
+        let mut dz_pre = Mat::zeros(p, spec.cout);
+        for t in 0..p {
+            for c in 0..spec.cout {
+                dgi[c] += dy.at(t, c) * cache.z_hat.at(t, c);
+                dbei[c] += dy.at(t, c);
+                *dz_pre.at_mut(t, c) =
+                    dy.at(t, c) * params.gamma[i][c] * cache.inv[c];
+            }
+        }
+        dg[i] = dgi;
+        dbe[i] = dbei;
+
+        let mut dzn = dz_pre.clone();
+        maxnorm::apply(&mut dzn.data, &mut aux.mn[i], k, use_maxnorm);
+        let mut dzw_i = dzn.clone();
+        for v in &mut dzw_i.data {
+            *v = QG.q(al[i] * *v);
+        }
+        dzw[i] = dzw_i;
+        ain[i] = cache.pat.clone();
+        let mut dbi = vec![0.0f32; spec.cout];
+        for t in 0..p {
+            for c in 0..spec.cout {
+                dbi[c] += dzn.at(t, c);
+            }
+        }
+        db[i] = dbi.iter().map(|&v| QG.q(v)).collect();
+
+        if i > 0 {
+            let mut dz_scaled = dz_pre;
+            dz_scaled.scale(al[i]);
+            let mut prev =
+                conv_input_grad(spec, &dz_scaled, &params.w[i]);
+            // STE through the previous layer's Qa
+            let prev_cache = &caches.conv[i - 1];
+            for (t, v) in prev.iter_mut().enumerate() {
+                let y = prev_cache.y.data[t];
+                if !(QA.lo..=QA.hi).contains(&y) {
+                    *v = 0.0;
+                }
+            }
+            da = prev;
+        }
+    }
+
+    Grads { dzw, ain, db, dg, dbe }
+}
+
+/// Per-sample bias / BN-affine SGD update (Qb-quantized), applied at
+/// every sample like the paper (biases live in auxiliary memory).
+pub fn apply_bias_updates(
+    params: &mut Params,
+    grads: &Grads,
+    lr_b: f32,
+    train_bias: bool,
+) {
+    if !train_bias {
+        // still re-quantize (no-op for on-grid values)
+        return;
+    }
+    for i in 0..N_LAYERS {
+        for (bv, &g) in params.b[i].iter_mut().zip(grads.db[i].iter()) {
+            *bv = QB.q(*bv - lr_b * g);
+        }
+    }
+    for i in 0..CONVS.len() {
+        for (gv, &g) in params.gamma[i].iter_mut().zip(grads.dg[i].iter()) {
+            *gv = QB.q(*gv - lr_b * g);
+        }
+        for (bv, &g) in params.beta[i].iter_mut().zip(grads.dbe[i].iter()) {
+            *bv = QB.q(*bv - lr_b * g);
+        }
+    }
+}
+
+/// Quantizer for the weights at a given bitwidth (re-export convenience).
+pub fn weight_quantizer(w_bits: u32) -> Quantizer {
+    qw_bits(w_bits)
+}
+
+/// Count of trainable weight cells (for write-density denominators).
+pub fn total_weight_cells() -> usize {
+    LAYER_DIMS.iter().map(|(o, i)| o * i).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Params, AuxState, Vec<f32>) {
+        let mut rng = Rng::new(0);
+        let params = Params::init(&mut rng, 8);
+        let aux = AuxState::new();
+        let image: Vec<f32> = (0..784)
+            .map(|_| rng.normal_f32(0.5, 0.5).clamp(0.0, 2.0))
+            .collect();
+        (params, aux, image)
+    }
+
+    #[test]
+    fn forward_shapes_and_ranges() {
+        let (params, mut aux, image) = setup();
+        let caches =
+            forward(&params, &mut aux, &image, 0.99, true, 8, true);
+        assert_eq!(caches.logits.len(), NUM_CLASSES);
+        assert_eq!(caches.conv.len(), 4);
+        assert_eq!(caches.fc.len(), 2);
+        assert_eq!(caches.conv[0].pat.rows, 196);
+        assert_eq!(caches.conv[3].y.data.len(), 512);
+        assert!(caches.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn backward_produces_all_factors() {
+        let (params, mut aux, image) = setup();
+        let caches =
+            forward(&params, &mut aux, &image, 0.99, true, 8, true);
+        let (_, dlogits) = softmax_xent(&caches.logits, 3);
+        let grads =
+            backward(&params, &mut aux, caches, &dlogits, true, 8);
+        for i in 0..N_LAYERS {
+            let (n_o, n_i) = LAYER_DIMS[i];
+            assert_eq!(grads.dzw[i].cols, n_o, "layer {i}");
+            assert_eq!(grads.ain[i].cols, n_i, "layer {i}");
+            assert_eq!(grads.dzw[i].rows, grads.ain[i].rows);
+            let full = grads.full(i);
+            assert_eq!((full.rows, full.cols), (n_o, n_i));
+        }
+        assert!(grads.db[5].iter().any(|&v| v != 0.0), "logit bias grad");
+        assert_eq!(aux.mnk, 1.0);
+    }
+
+    #[test]
+    fn loss_decreases_overfitting_one_sample() {
+        let (mut params, mut aux, image) = setup();
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let caches =
+                forward(&params, &mut aux, &image, 0.9, true, 8, true);
+            let (loss, dlogits) = softmax_xent(&caches.logits, 7);
+            let grads =
+                backward(&params, &mut aux, caches, &dlogits, true, 8);
+            // full SGD: weights + biases
+            let qw = qw_bits(8);
+            for i in 0..N_LAYERS {
+                let dw = grads.full(i);
+                for (wv, &g) in
+                    params.w[i].data.iter_mut().zip(dw.data.iter())
+                {
+                    *wv = qw.q(*wv - 0.05 * g);
+                }
+            }
+            apply_bias_updates(&mut params, &grads, 0.05, true);
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap(), "{:?} -> {last}", first);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero() {
+        let (loss, d) = softmax_xent(&[1.0, 2.0, 0.5, -1.0], 1);
+        assert!(loss > 0.0);
+        assert!(d.iter().sum::<f32>().abs() < 1e-6);
+        assert!(d[1] < 0.0);
+    }
+
+    #[test]
+    fn inference_is_deterministic_and_leaves_state() {
+        let (params, mut aux, image) = setup();
+        let bn_before = aux.bn[0].mu_s.clone();
+        let c1 = forward(&params, &mut aux, &image, 0.99, true, 8, false);
+        let c2 = forward(&params, &mut aux, &image, 0.99, true, 8, false);
+        assert_eq!(c1.logits, c2.logits);
+        assert_eq!(aux.bn[0].mu_s, bn_before);
+    }
+
+    #[test]
+    fn weight_cell_count() {
+        assert_eq!(
+            total_weight_cells(),
+            8 * 9 + 16 * 72 + 16 * 144 + 32 * 144 + 64 * 512 + 10 * 64
+        );
+    }
+}

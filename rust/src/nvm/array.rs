@@ -1,0 +1,211 @@
+//! Quantized NVM weight array with per-cell write accounting.
+
+use crate::quant::Quantizer;
+use crate::tensor::Mat;
+
+/// One NVM array holding a quantized weight matrix.
+///
+/// Cells store *analog* levels (multi-level RRAM): the canonical value of
+/// a cell is `quant.decode(code)`, but drift perturbs the analog value
+/// continuously; reads re-quantize. Writes are counted per cell whenever
+/// the committed code differs from the stored one — the quantity that
+/// determines both energy and endurance.
+#[derive(Debug, Clone)]
+pub struct NvmArray {
+    pub rows: usize,
+    pub cols: usize,
+    pub quant: Quantizer,
+    /// Analog cell values (dequantized domain, drift accumulates here).
+    values: Vec<f32>,
+    /// Per-cell write counters.
+    writes: Vec<u64>,
+    /// Total committed cell writes.
+    pub total_writes: u64,
+    /// Number of commit operations (array-level program pulses).
+    pub commits: u64,
+}
+
+impl NvmArray {
+    /// Program an array from an (already conceptually quantized) matrix.
+    /// The initial programming is not counted as online writes.
+    pub fn program(m: &Mat, quant: Quantizer) -> NvmArray {
+        let values = m.data.iter().map(|&x| quant.q(x)).collect();
+        NvmArray {
+            rows: m.rows,
+            cols: m.cols,
+            quant,
+            values,
+            writes: vec![0; m.data.len()],
+            total_writes: 0,
+            commits: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Read the full array as a weight matrix (re-quantized — the sense
+    /// amplifier snaps the analog level to the nearest code).
+    pub fn read(&self) -> Mat {
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.values.iter().map(|&v| self.quant.q(v)).collect(),
+        )
+    }
+
+    /// Raw analog values (for drift bookkeeping / tests).
+    pub fn raw(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn raw_mut(&mut self) -> &mut [f32] {
+        &mut self.values
+    }
+
+    /// Commit a new weight matrix. Only cells whose *code* changes are
+    /// written (write-verify skips unchanged levels). Returns the number
+    /// of cells written; the update density is `written / len`.
+    pub fn commit(&mut self, new: &Mat) -> u64 {
+        assert_eq!(new.rows, self.rows);
+        assert_eq!(new.cols, self.cols);
+        let mut written = 0;
+        for (i, (&nv, cell)) in
+            new.data.iter().zip(self.values.iter_mut()).enumerate()
+        {
+            let new_code = self.quant.code(nv);
+            let old_code = self.quant.code(*cell);
+            if new_code != old_code {
+                *cell = self.quant.decode(new_code);
+                self.writes[i] += 1;
+                written += 1;
+            }
+        }
+        self.total_writes += written;
+        self.commits += 1;
+        written
+    }
+
+    /// Density a hypothetical commit would have, without applying it
+    /// (the scheduler's rho_min gate input when running natively).
+    pub fn density_of(&self, new: &Mat) -> f64 {
+        let changed = new
+            .data
+            .iter()
+            .zip(self.values.iter())
+            .filter(|(&nv, &cv)| self.quant.code(nv) != self.quant.code(cv))
+            .count();
+        changed as f64 / self.values.len() as f64
+    }
+
+    /// Worst-case per-cell write count — the paper's Fig. 6 bottom plots
+    /// ("maximum number of updates applied to any given ... cell").
+    pub fn max_cell_writes(&self) -> u64 {
+        self.writes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean writes per cell.
+    pub fn mean_cell_writes(&self) -> f64 {
+        if self.writes.is_empty() {
+            return 0.0;
+        }
+        self.total_writes as f64 / self.writes.len() as f64
+    }
+
+    /// Fraction of the endurance budget consumed by the worst cell.
+    pub fn endurance_used(&self) -> f64 {
+        self.max_cell_writes() as f64 / super::energy::ENDURANCE_WRITES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QW;
+    use crate::util::prop;
+
+    #[test]
+    fn program_then_read_roundtrip() {
+        let m = Mat::from_vec(2, 2, vec![0.5, -0.25, 0.999, -1.0]);
+        let arr = NvmArray::program(&m, QW);
+        let r = arr.read();
+        for (a, b) in r.data.iter().zip(m.data.iter()) {
+            assert!((a - QW.q(*b)).abs() < 1e-7);
+        }
+        assert_eq!(arr.total_writes, 0);
+    }
+
+    #[test]
+    fn commit_counts_only_changed_codes() {
+        let m = Mat::from_vec(1, 4, vec![0.5, 0.5, 0.5, 0.5]);
+        let mut arr = NvmArray::program(&m, QW);
+        let mut new = m.clone();
+        new.data[0] = 0.5 + QW.lsb(); // one code step
+        new.data[1] = 0.5 + QW.lsb() / 4.0; // sub-LSB: same code
+        let written = arr.commit(&new);
+        assert_eq!(written, 1);
+        assert_eq!(arr.total_writes, 1);
+        assert_eq!(arr.max_cell_writes(), 1);
+        assert_eq!(arr.commits, 1);
+    }
+
+    #[test]
+    fn density_matches_commit() {
+        prop::check("nvm-density", 20, |rng| {
+            let m = Mat::from_fn(4, 8, |_, _| rng.normal_f32(0.0, 0.3));
+            let mut arr = NvmArray::program(&m, QW);
+            let new = Mat::from_fn(4, 8, |i, j| {
+                m.at(i, j) + rng.normal_f32(0.0, 0.02)
+            });
+            let dens = arr.density_of(&new);
+            let written = arr.commit(&new);
+            crate::prop_assert!(
+                (dens - written as f64 / 32.0).abs() < 1e-12,
+                "density {dens} vs written {written}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn write_count_conservation() {
+        // sum of per-cell writes == total_writes across many commits
+        prop::check("nvm-write-conservation", 10, |rng| {
+            let m = Mat::from_fn(3, 3, |_, _| rng.normal_f32(0.0, 0.3));
+            let mut arr = NvmArray::program(&m, QW);
+            for _ in 0..20 {
+                let new = Mat::from_fn(3, 3, |i, j| {
+                    arr.read().at(i, j) + rng.normal_f32(0.0, 0.05)
+                });
+                arr.commit(&new);
+            }
+            let sum: u64 = arr.writes.iter().sum();
+            crate::prop_assert!(
+                sum == arr.total_writes,
+                "sum {sum} != total {}", arr.total_writes
+            );
+            crate::prop_assert!(
+                arr.max_cell_writes() <= arr.total_writes,
+                "max > total"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn endurance_fraction() {
+        let m = Mat::from_vec(1, 1, vec![0.0]);
+        let mut arr = NvmArray::program(&m, QW);
+        for k in 1..=100u64 {
+            let v = if k % 2 == 0 { 0.1 } else { -0.1 };
+            arr.commit(&Mat::from_vec(1, 1, vec![v]));
+        }
+        assert_eq!(arr.max_cell_writes(), 100);
+        assert!((arr.endurance_used() - 1e-4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,174 @@
+//! NVM weight-drift processes (paper Appendix F).
+//!
+//! Analog drift: each cell's analog value receives independent additive
+//! Gaussian noise every `d` steps with sigma = sigma0 / sqrt(1M / d), then
+//! is re-clipped — a Brownian walk with cumulative sigma = sigma0 after
+//! one million steps (paper default sigma0 = 10 on weights in [-1, 1]).
+//!
+//! Digital drift: each *bit* of each b-bit cell code flips independently
+//! every `d` steps with p = p0 / (1M / d) — an average of p0 flips per
+//! cell per million steps (paper default p0 = 10).
+
+use super::array::NvmArray;
+use crate::util::rng::Rng;
+
+pub const MILLION: f64 = 1_000_000.0;
+
+/// Configuration for periodic drift injection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftCfg {
+    /// Apply drift every `every` online samples.
+    pub every: u64,
+    /// Analog cumulative sigma over 1M steps (0 disables).
+    pub sigma0: f64,
+    /// Digital expected flips per cell over 1M steps (0 disables).
+    pub p0: f64,
+}
+
+impl DriftCfg {
+    pub const NONE: DriftCfg = DriftCfg { every: 10, sigma0: 0.0, p0: 0.0 };
+
+    pub fn analog(sigma0: f64) -> DriftCfg {
+        DriftCfg { every: 10, sigma0, p0: 0.0 }
+    }
+
+    pub fn digital(p0: f64) -> DriftCfg {
+        DriftCfg { every: 10, sigma0: 0.0, p0: 0.0 + p0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sigma0 > 0.0 || self.p0 > 0.0
+    }
+
+    /// Per-application analog sigma.
+    pub fn sigma_step(&self) -> f64 {
+        self.sigma0 / (MILLION / self.every as f64).sqrt()
+    }
+
+    /// Per-application per-bit flip probability.
+    pub fn p_step(&self) -> f64 {
+        self.p0 / (MILLION / self.every as f64)
+    }
+}
+
+/// Apply one round of analog Gaussian drift to every cell.
+pub fn apply_analog(arr: &mut NvmArray, rng: &mut Rng, sigma_step: f64) {
+    let (lo, hi) = (arr.quant.lo, arr.quant.hi);
+    for v in arr.raw_mut() {
+        *v = (*v + rng.normal_f32(0.0, sigma_step as f32)).clamp(lo, hi);
+    }
+}
+
+/// Apply one round of independent bit flips to every cell's code.
+pub fn apply_digital(arr: &mut NvmArray, rng: &mut Rng, p_bit: f64) {
+    let bits = arr.quant.bits;
+    let quant = arr.quant;
+    for v in arr.raw_mut() {
+        let mut code = quant.code(*v) as u32;
+        let mut flipped = false;
+        for b in 0..bits {
+            if rng.bernoulli(p_bit) {
+                code ^= 1 << b;
+                flipped = true;
+            }
+        }
+        if flipped {
+            *v = quant.decode((code & (quant.levels() - 1)) as i32);
+        }
+    }
+}
+
+/// Apply the configured drift processes for one injection round.
+pub fn apply(arr: &mut NvmArray, rng: &mut Rng, cfg: &DriftCfg) {
+    if cfg.sigma0 > 0.0 {
+        apply_analog(arr, rng, cfg.sigma_step());
+    }
+    if cfg.p0 > 0.0 {
+        apply_digital(arr, rng, cfg.p_step());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QW;
+    use crate::tensor::Mat;
+    use crate::util::stats;
+
+    #[test]
+    fn analog_drift_matches_brownian_scaling() {
+        // After n rounds the per-cell deviation should have
+        // std ~ sigma_step * sqrt(n).
+        let n_cells = 4096;
+        let m = Mat::zeros(1, n_cells);
+        let mut arr = NvmArray::program(&m, QW);
+        let mut rng = Rng::new(9);
+        let cfg = DriftCfg::analog(10.0);
+        let rounds = 50;
+        for _ in 0..rounds {
+            apply_analog(&mut arr, &mut rng, cfg.sigma_step());
+        }
+        let vals: Vec<f64> = arr.raw().iter().map(|&x| x as f64).collect();
+        let sd = stats::std_unbiased(&vals);
+        let expect = cfg.sigma_step() * (rounds as f64).sqrt();
+        assert!(
+            (sd - expect).abs() < 0.25 * expect,
+            "sd {sd} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn analog_drift_clips() {
+        let m = Mat::from_vec(1, 8, vec![0.99; 8]);
+        let mut arr = NvmArray::program(&m, QW);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            apply_analog(&mut arr, &mut rng, 0.5);
+        }
+        assert!(arr.raw().iter().all(|&v| (-1.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn digital_flip_rate() {
+        let n_cells = 20_000;
+        let m = Mat::zeros(1, n_cells);
+        let mut arr = NvmArray::program(&m, QW);
+        let mut rng = Rng::new(3);
+        let before: Vec<i32> =
+            arr.raw().iter().map(|&v| QW.code(v)).collect();
+        let p_bit = 0.01;
+        apply_digital(&mut arr, &mut rng, p_bit);
+        let changed = arr
+            .raw()
+            .iter()
+            .zip(before.iter())
+            .filter(|(&v, &c)| QW.code(v) != c)
+            .count();
+        // P(cell changed) ~ 1 - (1-p)^8 ~ 7.7%
+        let expect = (1.0 - (1.0f64 - p_bit).powi(8)) * n_cells as f64;
+        assert!(
+            (changed as f64 - expect).abs() < 0.15 * expect,
+            "changed {changed} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn none_config_is_noop() {
+        let m = Mat::from_vec(1, 4, vec![0.5, -0.5, 0.25, 0.0]);
+        let mut arr = NvmArray::program(&m, QW);
+        let before = arr.raw().to_vec();
+        let mut rng = Rng::new(4);
+        apply(&mut arr, &mut rng, &DriftCfg::NONE);
+        assert_eq!(arr.raw(), &before[..]);
+        assert!(!DriftCfg::NONE.enabled());
+        assert!(DriftCfg::analog(10.0).enabled());
+    }
+
+    #[test]
+    fn paper_scalings() {
+        let cfg = DriftCfg::analog(10.0);
+        assert!((cfg.sigma_step() - 10.0 / (100_000f64).sqrt()).abs() < 1e-12);
+        let cfg = DriftCfg::digital(10.0);
+        assert!((cfg.p_step() - 1e-4).abs() < 1e-12);
+    }
+}

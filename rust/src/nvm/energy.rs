@@ -1,0 +1,122 @@
+//! Energy, endurance, and area constants + models for the NVM analysis.
+//!
+//! Sources (as cited in the paper):
+//! - RRAM write/read energy: Wu et al., ISSCC 2019 (10.9 / 1.76 pJ/bit).
+//! - RRAM endurance: Grossi et al., TED 2019 (~1e6 writes).
+//! - RRAM 1T-1R bitcell area @40nm: Chou et al., ISSCC 2018 (0.085 um^2).
+//! - 6T SRAM bitcell area @40nm: TSMC (0.242 um^2).
+
+pub const WRITE_PJ_PER_BIT: f64 = 10.9;
+pub const READ_PJ_PER_BIT: f64 = 1.76;
+pub const ENDURANCE_WRITES: f64 = 1e6;
+pub const RRAM_UM2_PER_BIT: f64 = 0.085;
+pub const SRAM_UM2_PER_BIT: f64 = 0.242;
+
+/// Energy (pJ) for `cells` cell-writes at `bits` per cell.
+pub fn write_energy_pj(cells: u64, bits: u32) -> f64 {
+    cells as f64 * bits as f64 * WRITE_PJ_PER_BIT
+}
+
+/// Energy (pJ) for `cells` cell-reads at `bits` per cell.
+pub fn read_energy_pj(cells: u64, bits: u32) -> f64 {
+    cells as f64 * bits as f64 * READ_PJ_PER_BIT
+}
+
+/// Silicon area (um^2) of an SRAM buffer of `bits` total bits.
+pub fn sram_area_um2(bits: usize) -> f64 {
+    bits as f64 * SRAM_UM2_PER_BIT
+}
+
+/// Silicon area (um^2) of an RRAM array of `bits` total bits.
+pub fn rram_area_um2(bits: usize) -> f64 {
+    bits as f64 * RRAM_UM2_PER_BIT
+}
+
+/// Auxiliary-memory model for the five training algorithms of Fig. 3.
+///
+/// Given a weight matrix (n_o x n_i) at `wb`-bit weights, batch size B,
+/// LRT rank r and accumulator bitwidth `ab`, returns
+/// (auxiliary area um^2, inverse write density rho^-1) per algorithm.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerGeom {
+    pub n_o: usize,
+    pub n_i: usize,
+    pub wb: u32,
+}
+
+impl LayerGeom {
+    fn n(&self) -> usize {
+        self.n_o * self.n_i
+    }
+
+    /// Naive batch: full-gradient SRAM accumulator, writes every B.
+    pub fn naive_batch(&self, batch: usize, ab: u32) -> (f64, f64) {
+        (sram_area_um2(self.n() * ab as usize), batch as f64)
+    }
+
+    /// Batch-SRAM: per-sample activations/errors buffered in SRAM.
+    pub fn batch_sram(&self, batch: usize, ab: u32) -> (f64, f64) {
+        let bits = batch * (self.n_i + self.n_o) * ab as usize;
+        (sram_area_um2(bits), batch as f64)
+    }
+
+    /// Batch-RRAM: the sample buffer lives in (cheap) RRAM instead;
+    /// auxiliary *SRAM* area ~ 0 but the buffer itself is written every
+    /// sample, so effective write density is ~1 per buffered cell.
+    pub fn batch_rram(&self, batch: usize, ab: u32) -> (f64, f64) {
+        let bits = batch * (self.n_i + self.n_o) * ab as usize;
+        (rram_area_um2(bits), 1.0)
+    }
+
+    /// Online SGD (batch = 1): no buffer, writes every sample.
+    pub fn online(&self) -> (f64, f64) {
+        (0.0, 1.0)
+    }
+
+    /// LRT rank r: (n_i + n_o) q accumulator at `ab` bits in SRAM;
+    /// write density decoupled from the batch size.
+    pub fn lrt(&self, rank: usize, batch: usize, ab: u32) -> (f64, f64) {
+        let bits = (self.n_i + self.n_o) * (rank + 1) * ab as usize;
+        (sram_area_um2(bits), batch as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GEOM: LayerGeom = LayerGeom { n_o: 64, n_i: 512, wb: 8 };
+
+    #[test]
+    fn energy_units() {
+        assert!((write_energy_pj(1, 1) - 10.9).abs() < 1e-12);
+        assert!((read_energy_pj(2, 8) - 28.16).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rram_denser_than_sram() {
+        assert!(rram_area_um2(1000) < sram_area_um2(1000));
+        // the paper's 2.8x density claim
+        let ratio = SRAM_UM2_PER_BIT / RRAM_UM2_PER_BIT;
+        assert!((ratio - 2.85).abs() < 0.05, "{ratio}");
+    }
+
+    #[test]
+    fn lrt_decouples_area_from_batch() {
+        let (a10, d10) = GEOM.lrt(4, 10, 16);
+        let (a1000, d1000) = GEOM.lrt(4, 1000, 16);
+        assert_eq!(a10, a1000, "LRT area must not depend on batch");
+        assert!(d1000 > d10);
+        // while batch-SRAM area grows linearly with batch
+        let (s10, _) = GEOM.batch_sram(10, 8);
+        let (s1000, _) = GEOM.batch_sram(1000, 8);
+        assert!((s1000 / s10 - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lrt_beats_naive_accumulator_area() {
+        let (naive, _) = GEOM.naive_batch(100, 16);
+        let (lrt, _) = GEOM.lrt(4, 100, 16);
+        assert!(lrt < naive / 10.0, "lrt {lrt} vs naive {naive}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Non-volatile memory (RRAM) array simulator.
+//!
+//! Models everything the paper's evaluation needs from the memory system:
+//! per-cell write counting (LWD — low write density), energy accounting
+//! (Wu et al. 2019: 10.9 pJ/bit write vs 1.76 pJ/bit read), endurance
+//! budgeting (Grossi et al. 2019: ~1e6 writes), area modelling for the
+//! Fig. 3 auxiliary-memory analysis (Chou et al. 2018 RRAM bitcell vs
+//! TSMC 40nm 6T SRAM), and the two weight-drift processes of Appendix F
+//! (analog Brownian drift and digital bit flips).
+
+pub mod array;
+pub mod drift;
+pub mod energy;
+
+pub use array::NvmArray;

@@ -1,0 +1,203 @@
+//! Hardware quantization model (paper Appendix C), mirroring
+//! `python/compile/quant.py` bit-exactly.
+//!
+//! Fixed clipping ranges, uniform power-of-2 grids:
+//!   Qw 8b [-1,1) | Qb 16b [-8,8) | Qa 8b [0,2) | Qg 8b [-1,1)
+//! Mid-rise variants serve the 1-2 bit weight sweep of Figure 7.
+
+/// A uniform quantizer with a fixed clipping range.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub lo: f32,
+    pub hi: f32,
+    pub mid_rise: bool,
+}
+
+impl Quantizer {
+    pub const fn new(bits: u32, lo: f32, hi: f32, mid_rise: bool) -> Self {
+        Quantizer { bits, lo, hi, mid_rise }
+    }
+
+    /// LSB step of the grid.
+    pub fn lsb(&self) -> f32 {
+        (self.hi - self.lo) / (1u64 << self.bits) as f32
+    }
+
+    /// Number of representable codes.
+    pub fn levels(&self) -> u32 {
+        1 << self.bits
+    }
+
+    /// Quantize a value onto the grid.
+    pub fn q(&self, x: f32) -> f32 {
+        let delta = self.lsb();
+        if self.mid_rise {
+            let k = ((x - self.lo) / delta).floor();
+            let k = k.clamp(0.0, (self.levels() - 1) as f32);
+            self.lo + (k + 0.5) * delta
+        } else {
+            let k = ((x - self.lo) / delta).round();
+            let k = k.clamp(0.0, (self.levels() - 1) as f32);
+            self.lo + k * delta
+        }
+    }
+
+    /// Integer code of a value (the representation an NVM cell stores).
+    pub fn code(&self, x: f32) -> i32 {
+        let delta = self.lsb();
+        let k = if self.mid_rise {
+            ((x - self.lo) / delta).floor()
+        } else {
+            ((x - self.lo) / delta).round()
+        };
+        (k.clamp(0.0, (self.levels() - 1) as f32)) as i32
+    }
+
+    /// Value of an integer code.
+    pub fn decode(&self, code: i32) -> f32 {
+        let delta = self.lsb();
+        let k = code.clamp(0, self.levels() as i32 - 1) as f32;
+        if self.mid_rise {
+            self.lo + (k + 0.5) * delta
+        } else {
+            self.lo + k * delta
+        }
+    }
+
+    pub fn q_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.q(*x);
+        }
+    }
+}
+
+/// Weight quantizer at a given bitwidth (mid-rise below 3 bits, Fig. 7).
+pub fn qw_bits(bits: u32) -> Quantizer {
+    Quantizer::new(bits, -1.0, 1.0, bits <= 2)
+}
+
+pub const QW: Quantizer = Quantizer::new(8, -1.0, 1.0, false);
+pub const QB: Quantizer = Quantizer::new(16, -8.0, 8.0, false);
+pub const QA: Quantizer = Quantizer::new(8, 0.0, 2.0, false);
+pub const QG: Quantizer = Quantizer::new(8, -1.0, 1.0, false);
+
+/// 16-bit dynamic-range quantization of the L/R accumulators (Appendix C:
+/// "quantized to 16 bits with clipping ranges determined dynamically by
+/// the max absolute value of elements").
+pub fn q16_dyn(xs: &mut [f32]) {
+    let maxabs = xs.iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1e-12);
+    let scale = maxabs / 32767.0;
+    for x in xs {
+        *x = (*x / scale).round() * scale;
+    }
+}
+
+/// Closest power-of-2 to the He-initialization gain sqrt(2 / fan_in).
+///
+/// Exponent rounding is half-to-even to match Python's `round()` (the
+/// fan_in = 64 layer lands exactly on log2 = -2.5).
+pub fn he_alpha(fan_in: usize) -> f32 {
+    let target = (2.0 / fan_in as f64).sqrt();
+    let e = target.log2();
+    let lo = e.floor();
+    let frac = e - lo;
+    let rounded = if (frac - 0.5).abs() < 1e-12 {
+        if (lo as i64) % 2 == 0 {
+            lo
+        } else {
+            lo + 1.0
+        }
+    } else {
+        e.round()
+    };
+    (2.0f64).powi(rounded as i32) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn lsb_matches_python() {
+        assert!((QW.lsb() - 2.0 / 256.0).abs() < 1e-9);
+        assert!((QB.lsb() - 16.0 / 65536.0).abs() < 1e-9);
+        assert!((QA.lsb() - 2.0 / 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idempotent_and_on_grid() {
+        prop::check("quant-idempotent", 50, |rng| {
+            let q = [QW, QB, QA, QG][rng.below(4)];
+            let x = rng.normal_f32(0.0, 3.0);
+            let y = q.q(x);
+            crate::prop_assert!((q.q(y) - y).abs() < 1e-7, "not idempotent");
+            crate::prop_assert!(
+                y >= q.lo && y <= q.hi - 0.5 * q.lsb(),
+                "{y} out of [{}, {})", q.lo, q.hi
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        prop::check("code-roundtrip", 50, |rng| {
+            let q = if rng.bernoulli(0.5) { QW } else { qw_bits(2) };
+            let x = rng.normal_f32(0.0, 1.0);
+            let c = q.code(x);
+            crate::prop_assert!(
+                (q.decode(c) - q.q(x)).abs() < 1e-7,
+                "decode(code(x)) != q(x)"
+            );
+            crate::prop_assert!(
+                c >= 0 && c < q.levels() as i32,
+                "code {c} out of range"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mid_rise_one_bit() {
+        let q = qw_bits(1);
+        assert_eq!(q.q(0.3), 0.5);
+        assert_eq!(q.q(-0.3), -0.5);
+        assert_eq!(q.q(5.0), 0.5);
+        assert_eq!(q.q(-5.0), -0.5);
+    }
+
+    #[test]
+    fn sub_lsb_updates_vanish() {
+        // The paper's SGD failure mode: |update| < LSB/2 cannot accumulate.
+        let w = QW.q(0.5);
+        assert_eq!(QW.q(w - QW.lsb() / 4.0), w);
+    }
+
+    #[test]
+    fn q16_dyn_preserves_max() {
+        let mut xs = vec![0.5, -1.5, 0.001];
+        q16_dyn(&mut xs);
+        assert!((xs[1] + 1.5).abs() < 1e-4);
+        assert!((xs[2] - 0.001).abs() < 1e-4);
+    }
+
+    #[test]
+    fn he_alpha_powers_of_two() {
+        for fan_in in [9usize, 72, 144, 512, 64] {
+            let a = he_alpha(fan_in);
+            assert_eq!(a.log2().fract(), 0.0, "{a}");
+        }
+    }
+
+    #[test]
+    fn matches_python_alphas() {
+        // python: quant.he_alpha for the six layers
+        assert_eq!(he_alpha(9), 0.5);
+        assert_eq!(he_alpha(72), 0.125);
+        assert_eq!(he_alpha(144), 0.125);
+        assert_eq!(he_alpha(512), 0.0625);
+        assert_eq!(he_alpha(64), 0.25);
+    }
+}

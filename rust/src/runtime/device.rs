@@ -1,0 +1,299 @@
+//! Artifact-backed edge device: the production configuration where all
+//! compute (forward, backward, LRT updates, flush candidates) runs inside
+//! the AOT-compiled HLO executables and rust only coordinates — streams
+//! samples, holds state buffers, owns the NVM write policy.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::{Buffers, Host, Runtime};
+use crate::coordinator::config::{RunConfig, Scheme};
+use crate::coordinator::scheduler::{FlushDecision, FlushScheduler};
+use crate::nn::arch::{CONVS, LAYER_DIMS, N_LAYERS};
+use crate::nn::model::{AuxState, Params};
+use crate::nvm::{drift, NvmArray};
+use crate::quant::qw_bits;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+pub struct ArtifactDevice<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    pub bufs: Buffers,
+    pub arrays: Vec<NvmArray>,
+    pub sched: Vec<FlushScheduler>,
+    pub kappa_skips: u64,
+    step_count: u64,
+    drift_rng: Rng,
+}
+
+impl<'rt> ArtifactDevice<'rt> {
+    /// Deploy pretrained parameters onto the simulated NVM and build the
+    /// state buffers the artifacts thread through.
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: RunConfig,
+        params: &Params,
+    ) -> Result<ArtifactDevice<'rt>> {
+        Self::with_aux(rt, cfg, params, &AuxState::new())
+    }
+
+    /// Deploy with pretrained auxiliary state (BN statistics, max-norm
+    /// EMAs) carried over from the offline phase.
+    pub fn with_aux(
+        rt: &'rt Runtime,
+        cfg: RunConfig,
+        params: &Params,
+        aux: &AuxState,
+    ) -> Result<ArtifactDevice<'rt>> {
+        let rank = rt.manifest.model.rank;
+        if rank != cfg.rank {
+            return Err(anyhow!(
+                "artifact rank {rank} != configured rank {} \
+                 (rebuild with `make artifacts`)",
+                cfg.rank
+            ));
+        }
+        let qw = qw_bits(cfg.w_bits);
+        let arrays: Vec<NvmArray> =
+            params.w.iter().map(|w| NvmArray::program(w, qw)).collect();
+        let mut bufs = BTreeMap::new();
+        for i in 0..N_LAYERS {
+            let (n_o, n_i) = LAYER_DIMS[i];
+            let q = rank + 1;
+            bufs.insert(
+                format!("w{}", i + 1),
+                Host::F32(vec![n_o, n_i], params.w[i].data.clone()),
+            );
+            bufs.insert(
+                format!("b{}", i + 1),
+                Host::F32(vec![n_o], params.b[i].clone()),
+            );
+            bufs.insert(
+                format!("ql{}", i + 1),
+                Host::F32(vec![n_o, q], vec![0.0; n_o * q]),
+            );
+            bufs.insert(
+                format!("qr{}", i + 1),
+                Host::F32(vec![n_i, q], vec![0.0; n_i * q]),
+            );
+            bufs.insert(
+                format!("cx{}", i + 1),
+                Host::F32(vec![q], vec![0.0; q]),
+            );
+            bufs.insert(
+                format!("mn{}", i + 1),
+                Host::scalar_f32(aux.mn[i]),
+            );
+        }
+        for (i, c) in CONVS.iter().enumerate() {
+            bufs.insert(
+                format!("g{}", i + 1),
+                Host::F32(vec![c.cout], params.gamma[i].clone()),
+            );
+            bufs.insert(
+                format!("be{}", i + 1),
+                Host::F32(vec![c.cout], params.beta[i].clone()),
+            );
+            bufs.insert(
+                format!("bnmu{}", i + 1),
+                Host::F32(vec![c.cout], aux.bn[i].mu_s.clone()),
+            );
+            bufs.insert(
+                format!("bnsq{}", i + 1),
+                Host::F32(vec![c.cout], aux.bn[i].sq_s.clone()),
+            );
+        }
+        bufs.insert("mnk".into(), Host::scalar_f32(aux.mnk));
+        let sched = cfg
+            .batch
+            .iter()
+            .map(|&b| FlushScheduler::new(b, cfg.rho_min))
+            .collect();
+        let drift_rng = Rng::new(cfg.seed ^ 0xD217F7);
+        Ok(ArtifactDevice {
+            rt,
+            cfg,
+            bufs,
+            arrays,
+            sched,
+            kappa_skips: 0,
+            step_count: 0,
+            drift_rng,
+        })
+    }
+
+    fn sync_weights_from_nvm(&mut self) {
+        for i in 0..N_LAYERS {
+            let w = self.arrays[i].read();
+            self.bufs.insert(
+                format!("w{}", i + 1),
+                Host::F32(vec![w.rows, w.cols], w.data),
+            );
+        }
+    }
+
+    fn scalars(&self) -> Vec<(&'static str, f32)> {
+        let cfg = &self.cfg;
+        vec![
+            ("lr_b", cfg.lr_b),
+            (
+                "unbiased",
+                matches!(
+                    cfg.scheme,
+                    Scheme::Lrt { variant: crate::lrt::Variant::Unbiased }
+                ) as u8 as f32,
+            ),
+            ("use_maxnorm", cfg.use_maxnorm as u8 as f32),
+            ("kappa_th", cfg.kappa_th),
+            ("bn_eta", cfg.bn_eta()),
+            ("bn_stream", cfg.bn_stream as u8 as f32),
+            ("lr_w", cfg.lr_w),
+            ("train_weights", cfg.scheme.trains_weights() as u8 as f32),
+            ("train_bias", cfg.scheme.trains_bias() as u8 as f32),
+        ]
+    }
+
+    /// One supervised online step through the AOT artifacts.
+    pub fn step(&mut self, image: &[f32], label: usize) -> Result<(f32, bool)> {
+        self.sync_weights_from_nvm();
+        self.step_count += 1;
+        let mut bufs = self.bufs.clone();
+        bufs.insert(
+            "image".into(),
+            Host::F32(vec![28, 28, 1], image.to_vec()),
+        );
+        bufs.insert("label".into(), Host::scalar_i32(label as i32));
+        bufs.insert(
+            "key".into(),
+            Host::U32(
+                vec![2],
+                vec![self.cfg.seed as u32, self.step_count as u32],
+            ),
+        );
+        for (k, v) in self.scalars() {
+            bufs.insert(k.into(), Host::scalar_f32(v));
+        }
+
+        let (artifact, trains) = match self.cfg.scheme {
+            Scheme::Inference => ("forward", false),
+            Scheme::BiasOnly | Scheme::Sgd => ("step_sgd", true),
+            Scheme::Lrt { .. } => ("step_lrt", true),
+        };
+        let out = self.rt.exec(artifact, &bufs)?;
+
+        if !trains {
+            let logits = out["logits"].as_f32()?;
+            let pred = crate::nn::model::argmax(logits);
+            let (loss, _) =
+                crate::nn::model::softmax_xent(logits, label);
+            return Ok((loss, pred == label));
+        }
+
+        let loss = out["loss"].as_f32()?[0];
+        let pred = out["pred"].as_i32()?[0] as usize;
+
+        // Fold updated state back into the device buffers.
+        for (name, h) in &out {
+            if name.starts_with('w') && self.cfg.scheme == Scheme::Sgd
+                || name.starts_with('w')
+                    && self.cfg.scheme == Scheme::BiasOnly
+            {
+                continue; // handled via NVM commit below
+            }
+            if name == "loss" || name == "pred" || name == "diag" {
+                continue;
+            }
+            self.bufs.insert(name.clone(), h.clone());
+        }
+
+        match self.cfg.scheme {
+            Scheme::Sgd => {
+                for i in 0..N_LAYERS {
+                    let (n_o, n_i) = LAYER_DIMS[i];
+                    let w = out[&format!("w{}", i + 1)].as_f32()?;
+                    let cand = Mat::from_vec(n_o, n_i, w.to_vec());
+                    self.arrays[i].commit(&cand);
+                }
+            }
+            Scheme::BiasOnly => {} // weights unchanged by construction
+            Scheme::Lrt { .. } => {
+                if let Some(diag) = out.get("diag") {
+                    let d = diag.as_f32()?;
+                    // rows of (6,4): [sigma1, sigmaq, kappa, skips]
+                    for i in 0..N_LAYERS {
+                        self.kappa_skips += d[i * 4 + 3] as u64;
+                    }
+                }
+                self.maybe_flush()?;
+            }
+            Scheme::Inference => unreachable!(),
+        }
+        Ok((loss, pred == label))
+    }
+
+    /// Evaluate per-layer flush boundaries; one `flush_lrt` call serves
+    /// all layers due this step.
+    fn maybe_flush(&mut self) -> Result<()> {
+        let mut due: Vec<(usize, f32)> = Vec::new();
+        for i in 0..N_LAYERS {
+            if let FlushDecision::Evaluate { lr_scale } =
+                self.sched[i].on_sample()
+            {
+                due.push((i, lr_scale));
+            }
+        }
+        if due.is_empty() {
+            return Ok(());
+        }
+        let mut bufs = self.bufs.clone();
+        let mut lr_eff = vec![0.0f32; N_LAYERS];
+        for &(i, scale) in &due {
+            lr_eff[i] = self.cfg.lr_w * scale;
+        }
+        bufs.insert("lr_eff".into(), Host::F32(vec![N_LAYERS], lr_eff));
+        let out = self.rt.exec("flush_lrt", &bufs)?;
+        let density = out["density"].as_f32()?;
+        for &(i, _) in &due {
+            if self.sched[i].decide(density[i] as f64) {
+                let (n_o, n_i) = LAYER_DIMS[i];
+                let w = out[&format!("w{}", i + 1)].as_f32()?;
+                self.arrays[i].commit(&Mat::from_vec(n_o, n_i, w.to_vec()));
+                // reset the accumulator buffers
+                let q = self.cfg.rank + 1;
+                self.bufs.insert(
+                    format!("ql{}", i + 1),
+                    Host::F32(vec![n_o, q], vec![0.0; n_o * q]),
+                );
+                self.bufs.insert(
+                    format!("qr{}", i + 1),
+                    Host::F32(vec![n_i, q], vec![0.0; n_i * q]),
+                );
+                self.bufs.insert(
+                    format!("cx{}", i + 1),
+                    Host::F32(vec![q], vec![0.0; q]),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn drift(&mut self) {
+        if !self.cfg.drift.enabled() {
+            return;
+        }
+        let cfg = self.cfg.drift;
+        for arr in &mut self.arrays {
+            drift::apply(arr, &mut self.drift_rng, &cfg);
+        }
+    }
+
+    pub fn max_cell_writes(&self) -> u64 {
+        self.arrays.iter().map(|a| a.max_cell_writes()).max().unwrap_or(0)
+    }
+
+    pub fn total_writes(&self) -> u64 {
+        self.arrays.iter().map(|a| a.total_writes).sum()
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`), emitted by
+//! `python/compile/aot.py`. The manifest fixes the flattened input/output
+//! ordering the PJRT executables expect, plus the model configuration the
+//! coordinator mirrors.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            "uint32" => Ok(Dtype::U32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub layer_dims: Vec<(usize, usize)>,
+    pub alphas: Vec<f32>,
+    pub rank: usize,
+    pub default_batch: Vec<usize>,
+    pub num_classes: usize,
+    pub img_shape: Vec<usize>,
+    pub w_bits: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelCfg,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?,
+        dtype: Dtype::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing dtype"))?,
+        )?,
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!(e))?;
+        let m = root
+            .get("model")
+            .ok_or_else(|| anyhow!("manifest missing 'model'"))?;
+        let layer_dims = m
+            .get("layer_dims")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing layer_dims"))?
+            .iter()
+            .map(|d| {
+                let v = d.as_usize_vec().ok_or_else(|| anyhow!("bad dim"))?;
+                Ok((v[0], v[1]))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let model = ModelCfg {
+            layer_dims,
+            alphas: m
+                .get("alphas")
+                .and_then(Json::as_f64_vec)
+                .ok_or_else(|| anyhow!("missing alphas"))?
+                .iter()
+                .map(|&x| x as f32)
+                .collect(),
+            rank: m
+                .get("rank")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing rank"))?,
+            default_batch: m
+                .get("default_batch")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("missing default_batch"))?,
+            num_classes: m
+                .get("num_classes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing num_classes"))?,
+            img_shape: m
+                .get("img_shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("missing img_shape"))?,
+            w_bits: m
+                .get("w_bits")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing w_bits"))? as u32,
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        if let Json::Obj(map) = arts {
+            for (name, a) in map {
+                let inputs = a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        file: a
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name}: missing file"))?
+                            .to_string(),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+        } else {
+            bail!("'artifacts' is not an object");
+        }
+        Ok(Manifest { model, artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"layer_dims": [[8, 9], [10, 64]], "alphas": [0.5, 0.25],
+                "rank": 4, "default_batch": [10, 100], "num_classes": 10,
+                "img_shape": [28, 28, 1], "w_bits": 8},
+      "artifacts": {
+        "forward": {"file": "forward.hlo.txt",
+          "inputs": [{"name": "w1", "shape": [8, 9], "dtype": "float32"},
+                     {"name": "label", "shape": [], "dtype": "int32"},
+                     {"name": "key", "shape": [2], "dtype": "uint32"}],
+          "outputs": [{"name": "logits", "shape": [10], "dtype": "float32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.layer_dims, vec![(8, 9), (10, 64)]);
+        assert_eq!(m.model.rank, 4);
+        let fwd = &m.artifacts["forward"];
+        assert_eq!(fwd.inputs.len(), 3);
+        assert_eq!(fwd.inputs[1].dtype, Dtype::I32);
+        assert_eq!(fwd.inputs[2].dtype, Dtype::U32);
+        assert_eq!(fwd.outputs[0].shape, vec![10]);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        assert!(Dtype::parse("float64").is_err());
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../artifacts/manifest.json");
+        if !path.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.model.layer_dims.len(), 6);
+        let step = &m.artifacts["step_lrt"];
+        assert!(step.inputs.iter().any(|t| t.name == "key"));
+        assert!(step.outputs.iter().any(|t| t.name == "loss"));
+    }
+}

@@ -1,0 +1,213 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the rust request path.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//!   manifest.json -> HLO text -> HloModuleProto::from_text_file ->
+//!   XlaComputation -> PjRtClient::cpu().compile -> execute.
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Python never runs at request time.
+
+pub mod manifest;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+/// A host-side tensor buffer matching one manifest entry.
+#[derive(Debug, Clone)]
+pub enum Host {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+    U32(Vec<usize>, Vec<u32>),
+}
+
+impl Host {
+    pub fn scalar_f32(v: f32) -> Host {
+        Host::F32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Host {
+        Host::I32(vec![], vec![v])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Host::F32(s, _) | Host::I32(s, _) | Host::U32(s, _) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Host::F32(..) => Dtype::F32,
+            Host::I32(..) => Dtype::I32,
+            Host::U32(..) => Dtype::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Host::F32(_, d) => d.len(),
+            Host::I32(_, d) => d.len(),
+            Host::U32(_, d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Host::F32(_, d) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            Host::F32(_, d) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Host::I32(_, d) => Ok(d),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Host::F32(_, d) => xla::Literal::vec1(d),
+            Host::I32(_, d) => xla::Literal::vec1(d),
+            Host::U32(_, d) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Host> {
+        let shape = spec.shape.clone();
+        Ok(match spec.dtype {
+            Dtype::F32 => Host::F32(shape, lit.to_vec::<f32>()?),
+            Dtype::I32 => Host::I32(shape, lit.to_vec::<i32>()?),
+            Dtype::U32 => Host::U32(shape, lit.to_vec::<u32>()?),
+        })
+    }
+}
+
+/// Name-keyed buffer store threaded through artifact executions.
+pub type Buffers = BTreeMap<String, Host>;
+
+/// One compiled artifact.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: CPU client + all compiled artifacts.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .context("parsing manifest.json (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .with_context(|| format!("loading {}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            artifacts
+                .insert(name.clone(), Artifact { spec: spec.clone(), exe });
+        }
+        Ok(Runtime { client, manifest, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Execute artifact `name`, pulling inputs from `bufs` by manifest
+    /// order and returning outputs keyed by manifest names.
+    pub fn exec(&self, name: &str, bufs: &Buffers) -> Result<Buffers> {
+        let art = self.artifact(name)?;
+        let mut lits = Vec::with_capacity(art.spec.inputs.len());
+        for ispec in &art.spec.inputs {
+            let h = bufs.get(&ispec.name).ok_or_else(|| {
+                anyhow!("missing input '{}' for {name}", ispec.name)
+            })?;
+            if h.shape() != ispec.shape.as_slice()
+                || h.dtype() != ispec.dtype
+            {
+                bail!(
+                    "input '{}' mismatch: have {:?}/{:?}, manifest wants \
+                     {:?}/{:?}",
+                    ispec.name,
+                    h.shape(),
+                    h.dtype(),
+                    ispec.shape,
+                    ispec.dtype
+                );
+            }
+            lits.push(h.to_literal()?);
+        }
+        let result = art.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != art.spec.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest lists {}",
+                outs.len(),
+                art.spec.outputs.len()
+            );
+        }
+        let mut out = Buffers::new();
+        for (lit, ospec) in outs.iter().zip(art.spec.outputs.iter()) {
+            out.insert(ospec.name.clone(), Host::from_literal(lit, ospec)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let h = Host::F32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(h.shape(), &[2, 2]);
+        assert_eq!(h.dtype(), Dtype::F32);
+        assert_eq!(h.len(), 4);
+        assert!(h.as_f32().is_ok());
+        assert!(h.as_i32().is_err());
+        let s = Host::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.as_i32().unwrap(), &[7]);
+    }
+}
+
+pub mod device;
+pub use device::ArtifactDevice;

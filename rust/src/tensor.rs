@@ -1,0 +1,250 @@
+//! Minimal dense f32 matrix/vector math.
+//!
+//! No ndarray in the vendored crate set; this covers exactly what the
+//! native NN engine, the LRT algorithm, and the simulators need: row-major
+//! matrices, matmuls, outer products, and a few slice helpers. The hot
+//! paths (`matmul_*`, `axpy`, `dot`) are written to autovectorize.
+
+/// Row-major 2-D f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(
+        rows: usize,
+        cols: usize,
+        mut f: F,
+    ) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    pub fn t(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// self @ other.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// out = self @ other (preallocated; hot path, ikj loop order).
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, other.cols);
+        out.data.fill(0.0);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow =
+                &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += aik * b;
+                }
+            }
+        }
+    }
+
+    /// self @ other.T — both operands row-major, fully sequential reads.
+    pub fn matmul_transb(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                out.data[i * other.rows + j] = dot(arow, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// y = self @ x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// y = self.T @ x.
+    pub fn t_matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            axpy(x[i], self.row(i), &mut y);
+        }
+        y
+    }
+
+    /// self += scale * (u (x) v).
+    pub fn add_outer(&mut self, scale: f32, u: &[f32], v: &[f32]) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            axpy(scale * u[i], v, self.row_mut(i));
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add(&mut self, other: &Mat) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        dot(&self.data, &self.data).sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+}
+
+/// Dense dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_transb_matches_matmul() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let b = Mat::from_fn(5, 4, |i, j| (i + j) as f32 * 0.5);
+        let c1 = a.matmul_transb(&b);
+        let c2 = a.matmul(&b.t());
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn vec_ops() {
+        let a = Mat::from_vec(2, 3, vec![1., 0., 2., 0., 1., 1.]);
+        assert_eq!(a.matvec(&[1.0, 2.0, 3.0]), vec![7.0, 5.0]);
+        assert_eq!(a.t_matvec(&[1.0, 1.0]), vec![1.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn outer_and_norms() {
+        let mut m = Mat::zeros(2, 2);
+        m.add_outer(2.0, &[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(m.data, vec![6.0, 8.0, 12.0, 16.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert_eq!(max_abs(&[-3.0, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn col_ops() {
+        let mut a = Mat::zeros(3, 2);
+        a.set_col(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(a.col(1), vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.col(0), vec![0.0, 0.0, 0.0]);
+    }
+}

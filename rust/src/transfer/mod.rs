@@ -1,0 +1,365 @@
+//! Transfer-learning substrate for Table 1 (paper Section 7.3).
+//!
+//! The paper trains the final 1000x512 layer of ResNet-34 on quantized
+//! ImageNet feature vectors, starting from pretrained weights perturbed
+//! until top-1 falls to 52.7 +- 0.9%, and reports recovery accuracy for
+//! SGD / UORO / biased / unbiased LRT across ranks and learning rates.
+//!
+//! Neither ImageNet nor a pretrained ResNet-34 is available offline, so
+//! we synthesize the *feature distribution* instead (DESIGN.md section 6,
+//! substitution 2): unit-norm class centroids with per-class spread and
+//! shared noise, tuned so a linear head is strong but not trivial; the
+//! pretrained head comes from float SGD and is noise-degraded to the
+//! paper's starting accuracy. Head-recovery dynamics — the thing Table 1
+//! measures — are preserved.
+
+use crate::baselines::uoro::UoroState;
+use crate::lrt::{LrtState, Variant};
+use crate::nn::maxnorm;
+use crate::nn::model::{argmax, softmax_xent};
+use crate::quant::{QA, QB, QG, QW};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+pub const DIM: usize = 512;
+
+/// Synthetic ImageNet-feature generator.
+pub struct FeatureGen {
+    pub n_classes: usize,
+    centroids: Mat, // (n_classes, DIM)
+    spread: Vec<f32>,
+}
+
+impl FeatureGen {
+    pub fn new(n_classes: usize, rng: &mut Rng) -> FeatureGen {
+        let mut centroids = Mat::from_fn(n_classes, DIM, |_, _| {
+            rng.normal_f32(0.0, 1.0)
+        });
+        for c in 0..n_classes {
+            let n = crate::tensor::norm2(centroids.row(c)).max(1e-6);
+            for v in centroids.row_mut(c) {
+                *v /= n;
+            }
+        }
+        // log-normal-ish per-class spread: some classes harder than others
+        let spread: Vec<f32> = (0..n_classes)
+            .map(|_| 0.35 * (rng.normal_f32(0.0, 0.35)).exp())
+            .collect();
+        FeatureGen { n_classes, centroids, spread }
+    }
+
+    /// Quantized (Qa-domain) feature vector for a sample of `class`.
+    pub fn sample(&self, class: usize, rng: &mut Rng) -> Vec<f32> {
+        let s = self.spread[class];
+        (0..DIM)
+            .map(|j| {
+                let raw = self.centroids.at(class, j)
+                    + rng.normal_f32(0.0, s / (DIM as f32).sqrt() * 8.0);
+                // ReLU-like features shifted into the Qa range [0, 2)
+                QA.q((raw * 4.0).max(0.0))
+            })
+            .collect()
+    }
+}
+
+/// The quantized one-layer head: logits = alpha * Qw(W) x + b.
+pub struct Head {
+    pub w: Mat, // (n_classes, DIM), values on the Qw grid
+    pub b: Vec<f32>,
+    pub alpha: f32,
+}
+
+impl Head {
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        let mut z = self.w.matvec(x);
+        for (k, v) in z.iter_mut().enumerate() {
+            *v = *v * self.alpha + self.b[k];
+        }
+        z
+    }
+
+    pub fn accuracy(
+        &self,
+        gen: &FeatureGen,
+        n: usize,
+        rng: &mut Rng,
+    ) -> f64 {
+        let mut correct = 0;
+        for _ in 0..n {
+            let c = rng.below(gen.n_classes);
+            let x = gen.sample(c, rng);
+            if argmax(&self.logits(&x)) == c {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+}
+
+/// Build the Table 1 problem: float-pretrain a head, quantize it, then
+/// degrade it with weight noise until inference accuracy lands near the
+/// paper's 52.7% starting point. Returns (generator, degraded head,
+/// inference accuracy).
+pub fn make_problem(
+    n_classes: usize,
+    seed: u64,
+) -> (FeatureGen, Head, f64) {
+    let mut rng = Rng::new(seed ^ 0x7A81E1);
+    let gen = FeatureGen::new(n_classes, &mut rng);
+
+    // Float pretraining (the stand-in for the ImageNet-pretrained head).
+    let mut wf = Mat::zeros(n_classes, DIM);
+    let mut bf = vec![0.0f32; n_classes];
+    let lr = 0.3;
+    for _ in 0..4000 {
+        let c = rng.below(n_classes);
+        let x = gen.sample(c, &mut rng);
+        let mut z = wf.matvec(&x);
+        for (k, v) in z.iter_mut().enumerate() {
+            *v += bf[k];
+        }
+        let (_, d) = softmax_xent(&z, c);
+        for (k, &dk) in d.iter().enumerate() {
+            if dk != 0.0 {
+                crate::tensor::axpy(-lr * dk, &x, wf.row_mut(k));
+                bf[k] -= lr * dk;
+            }
+        }
+    }
+    // Quantize onto the Qw grid with a power-of-2 gain.
+    let maxw = wf.max_abs().max(1e-6);
+    let alpha = (2.0f32).powi(maxw.log2().ceil() as i32);
+    let mut w = wf.clone();
+    for v in &mut w.data {
+        *v = QW.q(*v / alpha);
+    }
+    let mut head = Head { w, b: bf.iter().map(|&v| QB.q(v)).collect(), alpha };
+
+    // Degrade with Gaussian weight noise to the paper's starting point
+    // (52.7 +- 0.9%): binary-search the noise scale.
+    let clean = head.clone_head();
+    let target = 0.527;
+    let (mut lo, mut hi) = (0.0f32, 2.0f32);
+    let mut acc = head.accuracy(&gen, 600, &mut Rng::new(seed ^ 0xACC));
+    for _ in 0..12 {
+        let mid = 0.5 * (lo + hi);
+        let mut trial = clean.clone_head();
+        let mut nrng = Rng::new(seed ^ 0x4015E);
+        for v in &mut trial.w.data {
+            *v = QW.q(*v + nrng.normal_f32(0.0, mid * 0.1));
+        }
+        acc = trial.accuracy(&gen, 600, &mut Rng::new(seed ^ 0xACC));
+        if acc > target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        head = trial;
+        if (acc - target).abs() < 0.015 {
+            break;
+        }
+    }
+    (gen, head, acc)
+}
+
+impl Head {
+    fn clone_head(&self) -> Head {
+        Head { w: self.w.clone(), b: self.b.clone(), alpha: self.alpha }
+    }
+}
+
+/// Table 1 rows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Algo {
+    Sgd,
+    Uoro,
+    LrtBiased(usize),
+    LrtUnbiased(usize),
+}
+
+impl Algo {
+    pub fn name(&self) -> String {
+        match self {
+            Algo::Sgd => "SGD".into(),
+            Algo::Uoro => "UORO r=1".into(),
+            Algo::LrtBiased(r) => format!("Biased LRT r={r}"),
+            Algo::LrtUnbiased(r) => format!("Unbiased LRT r={r}"),
+        }
+    }
+}
+
+/// Online head recovery (all schemes with max-norm, effective batch
+/// B = 100 where applicable — the Table 1 protocol). Returns the final
+/// online accuracy over the last `tail` samples.
+pub fn recover(
+    gen: &FeatureGen,
+    start: &Head,
+    algo: Algo,
+    lr: f32,
+    samples: usize,
+    tail: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed ^ 0x8EC0);
+    let mut head = start.clone_head();
+    let n_classes = gen.n_classes;
+    let batch = 100usize;
+    let mut lrt = match algo {
+        Algo::LrtBiased(r) | Algo::LrtUnbiased(r) => {
+            Some(LrtState::new(n_classes, DIM, r))
+        }
+        _ => None,
+    };
+    let mut uoro = if algo == Algo::Uoro {
+        Some(UoroState::new(n_classes, DIM))
+    } else {
+        None
+    };
+    let variant = match algo {
+        Algo::LrtUnbiased(_) => Variant::Unbiased,
+        _ => Variant::Biased,
+    };
+    let mut mn_mv = maxnorm::FLOOR;
+    let mut hits = 0usize;
+    let mut seen_tail = 0usize;
+
+    for t in 0..samples {
+        let c = rng.below(n_classes);
+        let x = gen.sample(c, &mut rng);
+        let logits = head.logits(&x);
+        if samples - t <= tail {
+            seen_tail += 1;
+            if argmax(&logits) == c {
+                hits += 1;
+            }
+        }
+        let (_, mut dz) = softmax_xent(&logits, c);
+        // max-norm + Qg on the error vector (paper: all with max-norm)
+        maxnorm::apply(&mut dz, &mut mn_mv, (t + 1) as f32, true);
+        let dzq: Vec<f32> =
+            dz.iter().map(|&v| QG.q(head.alpha * v)).collect();
+        // bias trained per sample
+        for (k, &g) in dz.iter().enumerate() {
+            head.b[k] = QB.q(head.b[k] - lr * QG.q(g));
+        }
+        match algo {
+            Algo::Sgd => {
+                // per-sample quantized weight update
+                for (k, &g) in dzq.iter().enumerate() {
+                    if g != 0.0 {
+                        let row = head.w.row_mut(k);
+                        for (wv, &xv) in row.iter_mut().zip(x.iter()) {
+                            *wv = QW.q(*wv - lr * g * xv);
+                        }
+                    }
+                }
+            }
+            Algo::Uoro => {
+                let u = uoro.as_mut().unwrap();
+                u.update(&dzq, &x, &mut rng);
+                if (t + 1) % batch == 0 {
+                    // the flushed delta is the accumulated SUM over the
+                    // batch, so `lr` applies directly (one batch step ~
+                    // B per-sample steps); sqrt scaling only enters for
+                    // *effective* batches > B (density-gated flushes).
+                    let delta = u.delta();
+                    for k in 0..n_classes {
+                        let row = head.w.row_mut(k);
+                        for (wv, dv) in
+                            row.iter_mut().zip(delta.row(k).iter())
+                        {
+                            *wv = QW.q(*wv - lr * dv);
+                        }
+                    }
+                    u.reset();
+                }
+            }
+            Algo::LrtBiased(_) | Algo::LrtUnbiased(_) => {
+                let st = lrt.as_mut().unwrap();
+                st.update(&dzq, &x, &mut rng, variant, 100.0);
+                if (t + 1) % batch == 0 {
+                    let delta = st.delta();
+                    for k in 0..n_classes {
+                        let row = head.w.row_mut(k);
+                        for (wv, dv) in
+                            row.iter_mut().zip(delta.row(k).iter())
+                        {
+                            *wv = QW.q(*wv - lr * dv);
+                        }
+                    }
+                    st.reset();
+                }
+            }
+        }
+    }
+    hits as f64 / seen_tail.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_starts_near_target_accuracy() {
+        let (_gen, _head, acc) = make_problem(20, 1);
+        assert!(
+            (0.40..=0.68).contains(&acc),
+            "starting accuracy {acc} far from 52.7%"
+        );
+    }
+
+    #[test]
+    fn features_are_classifiable() {
+        let mut rng = Rng::new(2);
+        let gen = FeatureGen::new(10, &mut rng);
+        // nearest-centroid-in-feature-space sanity
+        let mut ok = 0;
+        for _ in 0..100 {
+            let c = rng.below(10);
+            let x = gen.sample(c, &mut rng);
+            let mut best = (f32::NEG_INFINITY, 0);
+            for k in 0..10 {
+                let dot = crate::tensor::dot(gen.centroids.row(k), &x);
+                if dot > best.0 {
+                    best = (dot, k);
+                }
+            }
+            if best.1 == c {
+                ok += 1;
+            }
+        }
+        assert!(ok > 70, "nearest-centroid only {ok}/100");
+    }
+
+    #[test]
+    fn lrt_recovers_better_than_sgd_at_low_lr() {
+        // The paper's Table 1 mechanism: at small learning rates SGD's
+        // per-sample updates fall below the weight LSB and vanish, while
+        // LRT accumulates them at 16-bit precision and flushes a
+        // super-LSB batch update.
+        let (gen, head, start_acc) = make_problem(10, 3);
+        let sgd = recover(&gen, &head, Algo::Sgd, 0.003, 1500, 500, 3);
+        let blrt = recover(
+            &gen, &head, Algo::LrtBiased(4), 0.003, 1500, 500, 3,
+        );
+        assert!(
+            blrt > sgd,
+            "biased LRT {blrt} should beat SGD {sgd} (start {start_acc})"
+        );
+        assert!(blrt > start_acc - 0.05, "no recovery: {blrt}");
+    }
+
+    #[test]
+    fn all_algos_run() {
+        let (gen, head, _) = make_problem(8, 4);
+        for algo in [
+            Algo::Sgd,
+            Algo::Uoro,
+            Algo::LrtBiased(2),
+            Algo::LrtUnbiased(2),
+        ] {
+            let acc = recover(&gen, &head, algo, 0.01, 300, 100, 5);
+            assert!((0.0..=1.0).contains(&acc), "{algo:?}: {acc}");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Zero-dependency command-line argument parsing.
+//!
+//! Grammar: `lrt-nvm <subcommand> [--key value | --flag]...`
+//! (the vendored crate set has no `clap`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let is_flag = match it.peek() {
+                    None => true,
+                    Some(next) => next.starts_with("--"),
+                };
+                if is_flag {
+                    args.options.insert(key.to_string(), "true".to_string());
+                } else {
+                    args.options.insert(key.to_string(), it.next().unwrap());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64_opt(&self, key: &str, default: f64) -> f64 {
+        self.options
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize_opt(&self, key: &str, default: usize) -> usize {
+        self.options
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_opt(&self, key: &str, default: u64) -> u64 {
+        self.options
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+/// `LRT_FULL=1` switches benches from CI-sized to paper-scale workloads.
+pub fn full_scale() -> bool {
+    std::env::var("LRT_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["adapt", "--env", "drift", "--samples", "2000"]);
+        assert_eq!(a.command, "adapt");
+        assert_eq!(a.str_opt("env", "control"), "drift");
+        assert_eq!(a.usize_opt("samples", 0), 2000);
+        assert_eq!(a.f64_opt("lr", 0.01), 0.01);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse(&["bench", "--verbose", "--n", "3", "--quick"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.usize_opt("n", 0), 3);
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse(&["run", "file.hlo", "--x", "1"]);
+        assert_eq!(a.positional, vec!["file.hlo"]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.command, "");
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Hand-rolled infrastructure: the offline vendored crate set lacks
+//! serde/clap/rand/proptest/criterion, so their minimal equivalents live
+//! here (DESIGN.md section 6, substitution 5).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,77 @@
+//! Tiny property-testing harness (the vendored crate set has no proptest).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently seeded
+//! RNGs. On failure it panics with the failing seed so the case can be
+//! replayed with `LRT_PROP_SEED=<seed>`; set `LRT_PROP_CASES` to raise the
+//! case count locally.
+
+use super::rng::Rng;
+
+/// Number of cases, overridable via `LRT_PROP_CASES`.
+pub fn case_count(default: usize) -> usize {
+    std::env::var("LRT_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `f` for `cases` seeds; `f` returns Err(description) on violation.
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(seed) = std::env::var("LRT_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("bad LRT_PROP_SEED");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for case in 0..case_count(cases) {
+        let seed = 0x5EED_0000_u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with LRT_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing property-style error strings.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 10, |rng| {
+            n += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert!(n >= 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with LRT_PROP_SEED")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,98 @@
+//! Small statistics helpers shared by metrics, benches, and experiments.
+
+/// Arithmetic mean (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased (n-1) standard deviation, matching the paper's tables.
+pub fn std_unbiased(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Exponential moving average tracker (the paper plots EMA(0.999) of
+/// per-sample online accuracy in Figure 6).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    pub decay: f64,
+    value: f64,
+    weight: f64,
+}
+
+impl Ema {
+    pub fn new(decay: f64) -> Self {
+        Ema { decay, value: 0.0, weight: 0.0 }
+    }
+
+    pub fn update(&mut self, x: f64) {
+        self.value = self.decay * self.value + (1.0 - self.decay) * x;
+        self.weight = self.decay * self.weight + (1.0 - self.decay);
+    }
+
+    /// Bias-corrected estimate (exact average until the window fills).
+    pub fn get(&self) -> f64 {
+        if self.weight == 0.0 {
+            0.0
+        } else {
+            self.value / self.weight
+        }
+    }
+}
+
+/// p-th percentile (linear interpolation), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (idx - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_unbiased(&xs) - 2.13809).abs() < 1e-4);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_unbiased(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn ema_converges_and_bias_corrects() {
+        let mut e = Ema::new(0.9);
+        e.update(1.0);
+        assert!((e.get() - 1.0).abs() < 1e-12, "bias correction");
+        for _ in 0..200 {
+            e.update(3.0);
+        }
+        assert!((e.get() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+}

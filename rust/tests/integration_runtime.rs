@@ -1,0 +1,171 @@
+//! Integration: the AOT HLO artifacts (python/JAX/Pallas L1+L2) against
+//! the native rust twin engine (L3) on identical parameters and inputs.
+//! This is the contract that lets the sweeps run natively while the
+//! production path runs through PJRT.
+//!
+//! Tests skip (pass vacuously) when `artifacts/` has not been built —
+//! run `make artifacts` first for the full signal.
+
+use std::path::Path;
+
+use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+use lrt_nvm::coordinator::device::NativeDevice;
+use lrt_nvm::lrt::Variant;
+use lrt_nvm::nn::model::{AuxState, Params};
+use lrt_nvm::runtime::{ArtifactDevice, Runtime};
+use lrt_nvm::util::rng::Rng;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("../artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts not built; skipping integration test");
+        None
+    }
+}
+
+fn test_image(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..784).map(|_| rng.normal_f32(0.8, 0.5).clamp(0.0, 2.0)).collect()
+}
+
+fn devices<'rt>(
+    rt: &'rt Runtime,
+    scheme: Scheme,
+) -> (ArtifactDevice<'rt>, NativeDevice) {
+    let mut cfg = RunConfig::default();
+    cfg.scheme = scheme;
+    cfg.batch = [4, 4, 4, 4, 8, 8];
+    cfg.use_maxnorm = true;
+    let params = Params::init(&mut Rng::new(11), cfg.w_bits);
+    let art = ArtifactDevice::new(rt, cfg.clone(), &params).unwrap();
+    let nat = NativeDevice::new(cfg, params, AuxState::new());
+    (art, nat)
+}
+
+#[test]
+fn forward_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let (mut art, mut nat) = devices(&rt, Scheme::Inference);
+    for t in 0..4u64 {
+        let img = test_image(t);
+        let (loss_a, _) = art.step(&img, 3).unwrap();
+        let (loss_n, _) = nat.step(&img, 3);
+        assert!(
+            (loss_a - loss_n).abs() < 1e-3,
+            "inference loss mismatch at t={t}: artifact {loss_a} vs \
+             native {loss_n}"
+        );
+    }
+}
+
+#[test]
+fn sgd_step_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let (mut art, mut nat) = devices(&rt, Scheme::Sgd);
+    for t in 0..5u64 {
+        let img = test_image(100 + t);
+        let label = (t % 10) as usize;
+        let (loss_a, corr_a) = art.step(&img, label).unwrap();
+        let (loss_n, corr_n) = nat.step(&img, label);
+        assert!(
+            (loss_a - loss_n).abs() < 2e-2 * loss_n.abs().max(1.0),
+            "sgd loss diverged at t={t}: {loss_a} vs {loss_n}"
+        );
+        assert_eq!(corr_a, corr_n, "prediction mismatch at t={t}");
+    }
+    // weight trajectories stay close: compare committed NVM codes
+    for i in 0..6 {
+        let wa = art.arrays[i].read();
+        let wn = nat.arrays[i].read();
+        let mut diff = 0usize;
+        for (a, b) in wa.data.iter().zip(wn.data.iter()) {
+            if (a - b).abs() > 3.0 * lrt_nvm::quant::QW.lsb() {
+                diff += 1;
+            }
+        }
+        let frac = diff as f64 / wa.data.len() as f64;
+        assert!(
+            frac < 0.02,
+            "layer {i}: {:.2}% of weights diverged beyond 3 LSB",
+            frac * 100.0
+        );
+    }
+}
+
+#[test]
+fn lrt_biased_step_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let (mut art, mut nat) =
+        devices(&rt, Scheme::Lrt { variant: Variant::Biased });
+    for t in 0..4u64 {
+        let img = test_image(200 + t);
+        let label = (t % 10) as usize;
+        let (loss_a, _) = art.step(&img, label).unwrap();
+        let (loss_n, _) = nat.step(&img, label);
+        assert!(
+            (loss_a - loss_n).abs() < 2e-2 * loss_n.abs().max(1.0),
+            "lrt loss diverged at t={t}: {loss_a} vs {loss_n}"
+        );
+    }
+    // The biased LRT path is deterministic: accumulated cx weights of the
+    // fc layers should agree closely between HLO and native.
+    for i in [4usize, 5] {
+        let cx_art = art.bufs[&format!("cx{}", i + 1)].as_f32().unwrap();
+        let cx_nat = &nat.lrt[i].cx;
+        for (a, b) in cx_art.iter().zip(cx_nat.iter()) {
+            assert!(
+                (a - b).abs() < 0.05 * b.abs().max(0.5),
+                "layer {} cx mismatch: artifact {cx_art:?} vs native \
+                 {cx_nat:?}",
+                i + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn lrt_unbiased_artifact_runs_and_accumulates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let (mut art, _) =
+        devices(&rt, Scheme::Lrt { variant: Variant::Unbiased });
+    for t in 0..3u64 {
+        let img = test_image(300 + t);
+        let (loss, _) = art.step(&img, (t % 10) as usize).unwrap();
+        assert!(loss.is_finite());
+    }
+    let cx = art.bufs["cx5"].as_f32().unwrap();
+    assert!(
+        cx.iter().any(|&v| v != 0.0),
+        "unbiased LRT did not accumulate: {cx:?}"
+    );
+}
+
+#[test]
+fn flush_commits_quantized_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
+    cfg.batch = [2, 2, 2, 2, 2, 2];
+    cfg.lr_w = 0.3; // large lr so flushes clear the rho_min gate
+    let params = Params::init(&mut Rng::new(13), cfg.w_bits);
+    let mut art = ArtifactDevice::new(&rt, cfg, &params).unwrap();
+    for t in 0..6u64 {
+        art.step(&test_image(400 + t), (t % 10) as usize).unwrap();
+    }
+    assert!(art.total_writes() > 0, "no NVM commits after 3 batches");
+    // committed weights remain on the Qw grid
+    let lsb = lrt_nvm::quant::QW.lsb();
+    for arr in &art.arrays {
+        for &v in &arr.read().data {
+            let k = (v + 1.0) / lsb;
+            assert!((k - k.round()).abs() < 1e-3, "off-grid weight {v}");
+        }
+    }
+}
