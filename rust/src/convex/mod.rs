@@ -12,7 +12,7 @@
 
 use crate::lrt::{LrtState, Variant};
 use crate::lrt::svd::{svd_jacobi, DEFAULT_SWEEPS};
-use crate::tensor::Mat;
+use crate::tensor::{kernels, Mat};
 use crate::util::rng::Rng;
 
 /// The regression problem with its spectral data precomputed.
@@ -35,13 +35,14 @@ impl LinReg {
         let w_true = Mat::from_fn(n_o, n_i, |_, _| {
             rng.normal_f32(0.0, 1.0 / (n_i as f32).sqrt())
         });
-        let mut y = w_true.matmul(&x);
+        let mut y = kernels::matmul(&w_true, &x);
         for v in &mut y.data {
             *v += rng.normal_f32(0.0, 0.01);
         }
 
-        // Spectral data of X X^T (symmetric PSD).
-        let gram = x.matmul_transb(&x); // (n_i, n_i)
+        // Spectral data of X X^T (symmetric PSD); at paper scale this is
+        // a (1024 x 1024) x 256 reduction — the blocked kernels' job.
+        let gram = kernels::matmul_transb(&x, &x); // (n_i, n_i)
         let (u, s, _v) = svd_jacobi(&gram, DEFAULT_SWEEPS);
         let tol = s[0] * 1e-5;
         let nonzero: Vec<f32> =
@@ -51,16 +52,16 @@ impl LinReg {
         let c_max = s[0] / batch as f32;
 
         // Min-norm optimum W* = Y X^T (X X^T)^+.
-        let yxt = y.matmul_transb(&x); // (n_o, n_i)
+        let yxt = kernels::matmul_transb(&y, &x); // (n_o, n_i)
         // pinv via eigendecomposition: (XX^T)^+ = U diag(1/s) U^T
         let mut pinv = Mat::zeros(gram.rows, gram.cols);
         for k in 0..s.len() {
             if s[k] > tol {
                 let uk = u.col(k);
-                pinv.add_outer(1.0 / s[k], &uk, &uk);
+                kernels::add_outer(&mut pinv, 1.0 / s[k], &uk, &uk);
             }
         }
-        let w_star = yxt.matmul(&pinv);
+        let w_star = kernels::matmul(&yxt, &pinv);
 
         LinReg {
             x,
@@ -79,7 +80,7 @@ impl LinReg {
 
     /// Batch loss ||W X - Y||^2 / (2B).
     pub fn loss(&self, w: &Mat) -> f32 {
-        let mut r = w.matmul(&self.x);
+        let mut r = kernels::matmul(w, &self.x);
         r.scale(-1.0);
         r.add(&self.y);
         let n = r.frob_norm();
@@ -88,11 +89,11 @@ impl LinReg {
 
     /// Exact batch gradient (W X - Y) X^T / B.
     pub fn grad(&self, w: &Mat) -> Mat {
-        let mut r = w.matmul(&self.x);
+        let mut r = kernels::matmul(w, &self.x);
         for (rv, yv) in r.data.iter_mut().zip(self.y.data.iter()) {
             *rv -= yv;
         }
-        let mut g = r.matmul_transb(&self.x);
+        let mut g = kernels::matmul_transb(&r, &self.x);
         g.scale(1.0 / self.batch() as f32);
         g
     }
@@ -179,20 +180,21 @@ pub fn run_lrt(
     let mut w = Mat::zeros(n_o, n_i);
     let mut st = LrtState::new(n_o, n_i, rank);
     st.quantize_state = false; // float-precision analysis (Section 5.1)
+    // Mat-of-rows activations for the batched rank update: row i of `xt`
+    // is sample i (X is stored feature-major). Transposed once, reused
+    // every step.
+    let xt = prob.x.t(); // (B, n_i)
     let mut out = Vec::with_capacity(steps);
     for t in 0..steps {
         st.reset();
-        // accumulate the batch sample-by-sample
-        let mut resid = w.matmul(&prob.x);
+        // accumulate the batch through the batched Mat-of-rows update
+        let mut resid = kernels::matmul(&w, &prob.x);
         for (rv, yv) in resid.data.iter_mut().zip(prob.y.data.iter()) {
             *rv -= yv;
         }
-        for i in 0..b {
-            let dz: Vec<f32> =
-                (0..n_o).map(|r| resid.at(r, i) / b as f32).collect();
-            let a: Vec<f32> = (0..n_i).map(|r| prob.x.at(r, i)).collect();
-            st.update(&dz, &a, rng, variant, 1e18);
-        }
+        let mut dzt = resid.t(); // (B, n_o)
+        dzt.scale(1.0 / b as f32);
+        st.update_batch(&dzt, &xt, rng, variant, 1e18);
         let mut est = st.delta();
         let g = prob.grad(&w);
         let mut err = est.clone();

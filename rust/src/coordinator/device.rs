@@ -11,6 +11,7 @@ use crate::nn::model::{
 };
 use crate::nvm::{drift, NvmArray};
 use crate::quant::qw_bits;
+use crate::tensor::kernels;
 use crate::util::rng::Rng;
 
 pub struct NativeDevice {
@@ -147,7 +148,9 @@ impl NativeDevice {
         let qw = qw_bits(self.cfg.w_bits);
         for i in 0..N_LAYERS {
             // conv layers: one Kronecker update per output pixel
-            // (Appendix B.2); fc layers: one per sample.
+            // (Appendix B.2); fc layers: one per sample. The backward
+            // pass hands us Mat-of-rows factor blocks, so the whole
+            // block goes to the batched rank update in one call.
             let dzw = &grads.dzw[i];
             let ain = &grads.ain[i];
             let layer_variant = self
@@ -155,18 +158,13 @@ impl NativeDevice {
                 .lrt_variants
                 .map(|v| v[i])
                 .unwrap_or(variant);
-            for p in 0..dzw.rows {
-                let d = self.lrt[i].update(
-                    dzw.row(p),
-                    ain.row(p),
-                    &mut self.rng,
-                    layer_variant,
-                    self.cfg.kappa_th,
-                );
-                if d.skipped {
-                    self.kappa_skips += 1;
-                }
-            }
+            self.kappa_skips += self.lrt[i].update_batch(
+                dzw,
+                ain,
+                &mut self.rng,
+                layer_variant,
+                self.cfg.kappa_th,
+            );
             if let FlushDecision::Evaluate { lr_scale } =
                 self.sched[i].on_sample()
             {
@@ -187,6 +185,50 @@ impl NativeDevice {
                 }
             }
         }
+    }
+
+    /// Batched online step over a chunk of samples.
+    ///
+    /// Training schemes are inherently sequential per sample (streaming
+    /// BN, per-sample bias updates, MGS rank updates), so the chunk is
+    /// processed in order and results are numerically identical to
+    /// per-sample `step` calls (`tests/kernel_parity.rs` pins this).
+    /// Pure inference has no cross-sample state, so those chunks fan out
+    /// across the shared worker pool.
+    pub fn step_batch(
+        &mut self,
+        images: &[Vec<f32>],
+        labels: &[usize],
+    ) -> Vec<(f32, bool)> {
+        assert_eq!(images.len(), labels.len());
+        if self.cfg.scheme == Scheme::Inference {
+            self.read_weights();
+            let params = &self.params;
+            let aux = &self.aux;
+            let cfg = &self.cfg;
+            return kernels::run_scoped(images.len(), |i| {
+                // eval-mode forward leaves AuxState untouched; the
+                // per-sample clone only satisfies the &mut signature
+                // (~100 floats — noise next to the forward itself)
+                let mut aux_i = aux.clone();
+                let caches = model::forward(
+                    params,
+                    &mut aux_i,
+                    &images[i],
+                    cfg.bn_eta(),
+                    cfg.bn_stream,
+                    cfg.w_bits,
+                    false,
+                );
+                let (loss, _) = softmax_xent(&caches.logits, labels[i]);
+                (loss, argmax(&caches.logits) == labels[i])
+            });
+        }
+        images
+            .iter()
+            .zip(labels.iter())
+            .map(|(img, &label)| self.step(img, label))
+            .collect()
     }
 
     /// Inject one round of the configured NVM drift.

@@ -10,13 +10,16 @@
 //!
 //! std::thread-based: the vendored crate set has no tokio (DESIGN.md
 //! section 6, substitution 5); devices are CPU-bound simulations, so a
-//! thread per device is the right shape anyway.
+//! thread per device is the right shape anyway. Devices run through the
+//! shared `tensor::kernels` worker pool, so fleet-level parallelism and
+//! the blocked kernels inside each device split one thread budget
+//! instead of oversubscribing (`LRT_KERNEL_THREADS` caps both at once).
 
 use super::config::RunConfig;
 use super::metrics::RunReport;
 use super::trainer::{pretrain, Trainer};
 use crate::lrt::LrtState;
-use crate::tensor::Mat;
+use crate::tensor::{kernels, Mat};
 use crate::util::stats;
 
 /// Aggregate statistics of a fleet run.
@@ -37,18 +40,11 @@ pub struct FleetReport {
 /// `cfg.seed`; every device deploys the same pretrained weights.
 pub fn run_fleet(cfg: &RunConfig, n_devices: usize) -> FleetReport {
     let (params, aux) = pretrain(cfg, false);
-    let mut handles = Vec::new();
-    for d in 0..n_devices {
+    let devices: Vec<RunReport> = kernels::run_scoped(n_devices, |d| {
         let mut dcfg = cfg.clone();
         dcfg.seed = cfg.seed.wrapping_add(1000 + d as u64);
-        let p = params.clone();
-        let a = aux.clone();
-        handles.push(std::thread::spawn(move || {
-            Trainer::new(dcfg, p, a).run()
-        }));
-    }
-    let devices: Vec<RunReport> =
-        handles.into_iter().map(|h| h.join().expect("device panicked")).collect();
+        Trainer::new(dcfg, params.clone(), aux.clone()).run()
+    });
 
     let emas: Vec<f64> = devices.iter().map(|r| r.final_ema).collect();
     let rank = cfg.rank;

@@ -83,20 +83,48 @@ impl Trainer {
     }
 
     /// Stream `cfg.samples` online samples; returns the run report.
+    ///
+    /// Samples go to the device in chunks (`NativeDevice::step_batch`)
+    /// whose boundaries land exactly on the per-sample loop's drift /
+    /// logging cadence, so reports are numerically identical to
+    /// per-sample stepping while inference-heavy chunks fan out across
+    /// the shared worker pool. (Training chunks are processed strictly
+    /// in order inside `step_batch`, so flush boundaries *within* a
+    /// chunk behave exactly as per-sample stepping.)
     pub fn run(&mut self) -> RunReport {
+        const MAX_CHUNK: usize = 64;
         let t0 = std::time::Instant::now();
-        for t in 0..self.cfg.samples {
-            let s = self.stream.sample(t as u64);
-            let (loss, correct) = self.device.step(&s.image, s.label);
-            self.metrics.record(correct, loss as f64);
-            if self.cfg.drift.enabled()
-                && (t + 1) as u64 % self.cfg.drift.every == 0
+        // Clamp once and reuse for both the chunk caps and the firing
+        // checks below, so a (mis)configured 0 means "every sample"
+        // instead of a divide-by-zero at the modulo.
+        let drift_every = self.cfg.drift.every.max(1) as usize;
+        let log_every = self.cfg.log_every.max(1);
+        let mut t = 0usize;
+        while t < self.cfg.samples {
+            let mut end = self.cfg.samples.min(t + MAX_CHUNK);
+            if self.cfg.drift.enabled() {
+                end = end.min((t / drift_every + 1) * drift_every);
+            }
+            end = end.min((t / log_every + 1) * log_every);
+            let mut images = Vec::with_capacity(end - t);
+            let mut labels = Vec::with_capacity(end - t);
+            for s in t..end {
+                let smp = self.stream.sample(s as u64);
+                images.push(smp.image);
+                labels.push(smp.label);
+            }
+            for (loss, correct) in
+                self.device.step_batch(&images, &labels)
             {
+                self.metrics.record(correct, loss as f64);
+            }
+            t = end;
+            if self.cfg.drift.enabled() && t % drift_every == 0 {
                 self.device.drift();
             }
-            if (t + 1) % self.cfg.log_every == 0 {
+            if t % log_every == 0 {
                 let w = self.device.max_cell_writes();
-                self.metrics.log_point(t + 1, w);
+                self.metrics.log_point(t, w);
             }
         }
         let (commits, deferrals) = self.device.flush_stats();
@@ -125,6 +153,8 @@ impl Trainer {
 }
 
 /// Validation accuracy of parameters on the held-out partition.
+/// Scoring forwards are independent (eval mode mutates nothing), so they
+/// fan out across the shared worker pool.
 pub fn validate(params: &Params, w_bits: u32, n: usize, seed: u64) -> f64 {
     let stream = OnlineStream::new(
         seed,
@@ -132,21 +162,25 @@ pub fn validate(params: &Params, w_bits: u32, n: usize, seed: u64) -> f64 {
         crate::data::Env::Control,
     );
     let mut aux = model::AuxState::new();
-    // burn in BN stats on a few validation samples
+    // burn in BN stats on a few validation samples (sequential: streaming)
     for t in 0..100.min(n) {
         let s = stream.sample(t as u64);
         model::forward(params, &mut aux, &s.image, 0.99, true, w_bits, true);
     }
-    let mut correct = 0;
-    for t in 0..n {
-        let s = stream.sample((1000 + t) as u64);
-        let caches = model::forward(
-            params, &mut aux, &s.image, 0.99, true, w_bits, false,
-        );
-        if model::argmax(&caches.logits) == s.label {
-            correct += 1;
-        }
-    }
+    let aux = aux; // frozen for scoring
+    let correct: usize =
+        crate::tensor::kernels::run_scoped(n, |t| {
+            let s = stream.sample((1000 + t) as u64);
+            // per-sample clone only satisfies forward's &mut signature;
+            // AuxState is ~100 floats, noise next to the forward itself
+            let mut aux_t = aux.clone();
+            let caches = model::forward(
+                params, &mut aux_t, &s.image, 0.99, true, w_bits, false,
+            );
+            usize::from(model::argmax(&caches.logits) == s.label)
+        })
+        .into_iter()
+        .sum();
     correct as f64 / n as f64
 }
 

@@ -19,31 +19,16 @@ use crate::util::stats;
 use crate::util::table::Table;
 
 /// Run `n` closures on worker threads, preserving order.
+///
+/// Delegates to the shared `tensor::kernels` pool, so sweep points and
+/// the blocked kernels inside each point split one global thread budget
+/// (`LRT_KERNEL_THREADS`) instead of oversubscribing the machine.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let max_par = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4);
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let slots = std::sync::Mutex::new(&mut out);
-    std::thread::scope(|scope| {
-        let worker = || loop {
-            let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            if i >= n {
-                break;
-            }
-            let v = f(i);
-            slots.lock().unwrap()[i] = Some(v);
-        };
-        for _ in 0..max_par.min(n.max(1)) {
-            scope.spawn(worker);
-        }
-    });
-    out.into_iter().map(|v| v.unwrap()).collect()
+    crate::tensor::kernels::run_scoped(n, f)
 }
 
 // ---------------------------------------------------------------------

@@ -13,6 +13,19 @@
 //!   text artifacts executed through `runtime`.
 //! - L1 (python/compile/kernels): Pallas kernels for the LRT rank update
 //!   and quantized matmul hot-spots.
+//!
+//! Native-engine hot paths run on `tensor::kernels`: cache-blocked
+//! (`TILE_J`/`TILE_K`) matmul / matmul_transb / matmul_atb kernels with
+//! multi-accumulator inner loops, plus one shared worker pool
+//! (`LRT_KERNEL_THREADS`, default `available_parallelism`) drawn on by
+//! the kernels, `experiments::parallel_map` sweep points, fleet devices,
+//! and batched inference (`NativeDevice::step_batch`) without
+//! oversubscription. The naive `Mat` methods remain the reference;
+//! `tests/kernel_parity.rs` pins fast-vs-naive agreement to <= 1e-5 and
+//! batched-vs-per-sample stepping to bit-exact, and
+//! `tests/golden_trainer.rs` snapshots the deterministic seed-11 run.
+//! Measure the layer with `cargo bench --bench perf_hotpath` (blocked vs
+//! naive and batched vs per-sample columns).
 
 pub mod baselines;
 pub mod convex;

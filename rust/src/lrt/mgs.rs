@@ -1,6 +1,7 @@
 //! Modified Gram-Schmidt step of Algorithm 1 (the rust twin of the
 //! Pallas `mgs_project` kernel).
 
+use crate::tensor::kernels::{axpy_gather, dot_stride, scatter_scale};
 use crate::tensor::{dot, norm2, Mat};
 
 const EPS: f32 = 1e-12;
@@ -11,6 +12,10 @@ const EPS: f32 = 1e-12;
 /// `v` is consumed as scratch (it holds the running residual); `c` is the
 /// preallocated output (len q). Zero-norm residuals leave a zero column —
 /// the invariant `v_original == Q_new @ c` holds either way.
+///
+/// The column dots/axpys go through the strided `tensor::kernels` lane
+/// helpers (the projection itself stays sequential per column — that is
+/// what makes it *modified* GS).
 pub fn mgs_project(q_mat: &mut Mat, v: &mut [f32], c: &mut [f32]) {
     let q = q_mat.cols;
     let r = q - 1;
@@ -18,29 +23,17 @@ pub fn mgs_project(q_mat: &mut Mat, v: &mut [f32], c: &mut [f32]) {
     assert_eq!(c.len(), q);
     for j in 0..r {
         // c_j = Q_j . v ; v -= c_j Q_j   (sequential: modified GS)
-        let mut cj = 0.0f32;
-        for i in 0..q_mat.rows {
-            cj += q_mat.at(i, j) * v[i];
-        }
+        let cj = dot_stride(&q_mat.data, q, j, v);
         c[j] = cj;
-        if cj != 0.0 {
-            for i in 0..q_mat.rows {
-                v[i] -= cj * q_mat.at(i, j);
-            }
-        }
+        axpy_gather(-cj, &q_mat.data, q, j, v);
     }
     let norm = norm2(v);
     c[r] = norm;
     if norm > EPS {
-        let inv = 1.0 / norm;
-        for i in 0..q_mat.rows {
-            *q_mat.at_mut(i, r) = v[i] * inv;
-        }
+        scatter_scale(v, 1.0 / norm, &mut q_mat.data, q, r);
     } else {
         c[r] = 0.0;
-        for i in 0..q_mat.rows {
-            *q_mat.at_mut(i, r) = 0.0;
-        }
+        scatter_scale(v, 0.0, &mut q_mat.data, q, r);
     }
 }
 

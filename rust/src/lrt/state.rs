@@ -5,7 +5,7 @@
 use super::mgs::mgs_project;
 use super::svd::{svd_jacobi, DEFAULT_SWEEPS};
 use crate::quant::q16_dyn;
-use crate::tensor::Mat;
+use crate::tensor::{kernels, Mat};
 use crate::util::rng::Rng;
 
 const EPS: f32 = 1e-12;
@@ -118,8 +118,8 @@ impl LrtState {
         self.scratch_dz.copy_from_slice(dz);
         self.scratch_a.copy_from_slice(a);
         // Save the residual columns so a kappa-gated skip can revert MGS.
-        self.saved_col_l.copy_from_slice(&self.ql.col(r));
-        self.saved_col_r.copy_from_slice(&self.qr.col(r));
+        self.ql.col_into(r, &mut self.saved_col_l);
+        self.qr.col_into(r, &mut self.saved_col_r);
 
         mgs_project(&mut self.ql, &mut self.scratch_dz, &mut self.cl);
         mgs_project(&mut self.qr, &mut self.scratch_a, &mut self.cr);
@@ -151,10 +151,10 @@ impl LrtState {
         let (q_x, cx_new) = mix_matrices(&sigma, rng, variant);
 
         // Basis rotation: Q <- Q @ (U_C Q_x) (the Pallas basis_update twin).
-        let m_l = u_c.matmul(&q_x);
-        let m_r = v_c.matmul(&q_x);
-        self.ql.matmul_into(&m_l, &mut self.tmp_l);
-        self.qr.matmul_into(&m_r, &mut self.tmp_r);
+        let m_l = kernels::matmul(&u_c, &q_x);
+        let m_r = kernels::matmul(&v_c, &q_x);
+        kernels::matmul_into(&self.ql, &m_l, &mut self.tmp_l);
+        kernels::matmul_into(&self.qr, &m_r, &mut self.tmp_r);
         std::mem::swap(&mut self.ql, &mut self.tmp_l);
         std::mem::swap(&mut self.qr, &mut self.tmp_r);
         self.cx = cx_new;
@@ -190,10 +190,40 @@ impl LrtState {
         (lfac, rfac)
     }
 
-    /// Dense gradient estimate (n_o x n_i).
+    /// Dense gradient estimate (n_o x n_i), via the blocked kernels (the
+    /// flush-evaluation hot path).
     pub fn delta(&self) -> Mat {
         let (lfac, rfac) = self.factors();
-        lfac.matmul_transb(&rfac)
+        kernels::matmul_transb(&lfac, &rfac)
+    }
+
+    /// Batched rank update: one `update` per row of `dzw`/`ain` (the
+    /// Mat-of-rows form the backward pass produces — per output pixel
+    /// for convs, one row for fcs). MGS makes each update depend on the
+    /// previous basis, so this is sequential by construction and
+    /// numerically identical to the per-sample loop; it exists so the
+    /// engine hands whole factor blocks to the LRT layer. Returns the
+    /// number of kappa-gated skips.
+    pub fn update_batch(
+        &mut self,
+        dzw: &Mat,
+        ain: &Mat,
+        rng: &mut Rng,
+        variant: Variant,
+        kappa_th: f32,
+    ) -> u64 {
+        assert_eq!(dzw.rows, ain.rows);
+        assert_eq!(dzw.cols, self.n_o());
+        assert_eq!(ain.cols, self.n_i());
+        let mut skips = 0;
+        for p in 0..dzw.rows {
+            let diag =
+                self.update(dzw.row(p), ain.row(p), rng, variant, kappa_th);
+            if diag.skipped {
+                skips += 1;
+            }
+        }
+        skips
     }
 }
 
@@ -420,6 +450,68 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn mgs_basis_stays_orthonormal_under_repeated_update() {
+        // Q^T Q ~= I (zero columns excluded) after many rank updates, for
+        // both variants — the paper's Algorithm 1 invariant.
+        prop::check("lrt-qtq-identity", 10, |rng| {
+            let (dzs, as_) = rand_samples(rng, 30, 8, 12);
+            for variant in [Variant::Biased, Variant::Unbiased] {
+                let st = run(&dzs, &as_, 4, variant, 9);
+                for m in [&st.ql, &st.qr] {
+                    for j1 in 0..st.q() {
+                        let c1 = m.col(j1);
+                        if crate::tensor::norm2(&c1) < 0.5 {
+                            continue; // zero column: allowed
+                        }
+                        for j2 in 0..st.q() {
+                            let c2 = m.col(j2);
+                            if crate::tensor::norm2(&c2) < 0.5 {
+                                continue;
+                            }
+                            let d = crate::tensor::dot(&c1, &c2);
+                            let want =
+                                if j1 == j2 { 1.0f32 } else { 0.0 };
+                            crate::prop_assert!(
+                                (d - want).abs() < 5e-3,
+                                "{variant:?}: Q^T Q [{j1},{j2}] = {d}"
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn update_batch_equals_per_sample_loop() {
+        let mut rng = Rng::new(9);
+        let (dzs, as_) = rand_samples(&mut rng, 12, 8, 12);
+        let dzw = Mat::from_fn(12, 8, |i, j| dzs[i][j]);
+        let ain = Mat::from_fn(12, 12, |i, j| as_[i][j]);
+        let mut per_sample = LrtState::new(8, 12, 3);
+        let mut batched = LrtState::new(8, 12, 3);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        let mut skips_loop = 0u64;
+        for p in 0..dzw.rows {
+            if per_sample
+                .update(dzw.row(p), ain.row(p), &mut r1, Variant::Unbiased, 100.0)
+                .skipped
+            {
+                skips_loop += 1;
+            }
+        }
+        let skips_batch = batched
+            .update_batch(&dzw, &ain, &mut r2, Variant::Unbiased, 100.0);
+        assert_eq!(skips_loop, skips_batch);
+        assert_eq!(per_sample.ql.data, batched.ql.data);
+        assert_eq!(per_sample.qr.data, batched.qr.data);
+        assert_eq!(per_sample.cx, batched.cx);
+        assert_eq!(per_sample.updates, batched.updates);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! K = ci*9 + kh*3 + kw, output pixels row-major.
 
 use super::arch::ConvSpec;
-use crate::tensor::Mat;
+use crate::tensor::{kernels, Mat};
 
 /// Extract im2col patches: input (h_in, w_in, cin) row-major HWC ->
 /// (pixels, K) with K ordered (cin, kh, kw) and explicit (1,1) padding.
@@ -49,7 +49,7 @@ pub fn conv_input_grad(spec: &ConvSpec, dz: &Mat, w: &Mat) -> Vec<f32> {
     let (h_out, w_out) = (spec.h_out(), spec.w_out());
     let mut da = vec![0.0f32; spec.h_in * spec.w_in * spec.cin];
     // dpatch = dz @ w : (pixels, K), then scatter rows back.
-    let dpatch = dz.matmul(w);
+    let dpatch = kernels::matmul(dz, w);
     for oy in 0..h_out {
         for ox in 0..w_out {
             let p = oy * w_out + ox;

@@ -9,7 +9,7 @@ use super::bn::{self, BnState};
 use super::conv::{conv_input_grad, im2col};
 use super::maxnorm;
 use crate::quant::{qw_bits, Quantizer, QA, QB, QG};
-use crate::tensor::Mat;
+use crate::tensor::{kernels, Mat};
 use crate::util::rng::Rng;
 
 /// Trainable parameters. Weights are the *logical* values; at the device
@@ -109,7 +109,8 @@ pub fn forward(
         // NVM reads are already on the Qw grid (quantization is
         // idempotent), so no per-step re-quantization copy is needed.
         let w = &params.w[i];
-        let mut z = pat.matmul_transb(w);
+        // pixels x K @ (cout x K)^T through the blocked/threaded kernels
+        let mut z = kernels::matmul_transb(&pat, w);
         z.scale(al[i]);
         for p in 0..z.rows {
             for j in 0..z.cols {
@@ -150,7 +151,7 @@ pub fn forward(
     for (j, &(_, _n_out)) in FCS.iter().enumerate() {
         let i = CONVS.len() + j;
         let w = &params.w[i];
-        let mut z = w.matvec(&a);
+        let mut z = kernels::matvec(w, &a);
         for (k, v) in z.iter_mut().enumerate() {
             *v = *v * al[i] + params.b[i][k];
         }
@@ -205,9 +206,11 @@ pub struct Grads {
 }
 
 impl Grads {
-    /// Dense weight gradient of layer `i` (the SGD baseline path).
+    /// Dense weight gradient of layer `i` (the SGD baseline path):
+    /// dzw^T @ ain without materializing the transpose, bit-identical to
+    /// the naive `t().matmul` reference.
     pub fn full(&self, i: usize) -> Mat {
-        self.dzw[i].t().matmul(&self.ain[i])
+        kernels::matmul_atb(&self.dzw[i], &self.ain[i])
     }
 }
 

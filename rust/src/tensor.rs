@@ -2,8 +2,13 @@
 //!
 //! No ndarray in the vendored crate set; this covers exactly what the
 //! native NN engine, the LRT algorithm, and the simulators need: row-major
-//! matrices, matmuls, outer products, and a few slice helpers. The hot
-//! paths (`matmul_*`, `axpy`, `dot`) are written to autovectorize.
+//! matrices, matmuls, outer products, and a few slice helpers. The `Mat`
+//! methods here are the naive, always-correct reference; the hot paths of
+//! the engine go through [`kernels`] — cache-blocked, multi-threaded
+//! variants sharing one worker pool — which the parity tests pin against
+//! these reference implementations.
+
+pub mod kernels;
 
 /// Row-major 2-D f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -63,6 +68,16 @@ impl Mat {
 
     pub fn col(&self, j: usize) -> Vec<f32> {
         (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    /// Copy column `j` into a preallocated buffer (no allocation).
+    pub fn col_into(&self, j: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows);
+        let mut idx = j;
+        for o in out.iter_mut() {
+            *o = self.data[idx];
+            idx += self.cols;
+        }
     }
 
     pub fn set_col(&mut self, j: usize, v: &[f32]) {

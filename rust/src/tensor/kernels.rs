@@ -1,0 +1,547 @@
+//! Cache-blocked, multi-threaded matmul kernels + the shared worker pool.
+//!
+//! The naive `Mat` methods in `tensor` stay as the always-correct
+//! reference; everything hot in the native engine (NN forward/backward,
+//! LRT rank updates and flush evaluation, the convex linreg substrate,
+//! fleet devices, sweep points) routes through this layer instead:
+//!
+//! - `matmul` / `matmul_transb` / `matmul_atb` — tiled over the B operand
+//!   (TILE_J / TILE_K) so the streamed block stays in L1/L2, with
+//!   multi-accumulator inner loops (`dot_fast`) that vectorize where the
+//!   scalar reference reduction cannot, and row-partitioned threading.
+//! - a global *thread budget* shared by every consumer: `run_scoped`
+//!   (the `experiments::parallel_map` engine, also used by the fleet and
+//!   batched inference) and the kernels draw workers from one pool sized
+//!   `LRT_KERNEL_THREADS` (default: `available_parallelism`), so fleet
+//!   devices x sweep points x kernel threads never oversubscribe — when
+//!   outer parallelism saturates the budget, inner kernels degrade to
+//!   sequential automatically.
+//!
+//! Numerics: `matmul` and `matmul_atb` accumulate in exactly the naive
+//! reference order (tiling only repartitions the loop; accumulation into
+//! the output row is still in ascending k) and are bit-identical to the
+//! `Mat` methods. `matmul_transb` and the strided helpers split the
+//! reduction across independent accumulator lanes, which reorders f32
+//! additions; `tests/kernel_parity.rs` pins the agreement to <= 1e-5.
+//!
+//! Tuning knobs: `LRT_KERNEL_THREADS` (pool size, set 1 to force the
+//! sequential path), `TILE_J`/`TILE_K` (block sizes), `PAR_MIN_WORK`
+//! (minimum per-thread flops before the pool is consulted).
+
+use super::Mat;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Rows of the transposed-B operand processed per block (TILE_J rows of
+/// `b` stay hot across consecutive rows of `a`).
+pub const TILE_J: usize = 16;
+/// Reduction-dimension block (TILE_K rows of `b` stay hot across the
+/// whole row block in `matmul` / `matmul_atb`).
+pub const TILE_K: usize = 128;
+/// Minimum useful flops per worker thread; below this the pool is not
+/// even consulted.
+pub const PAR_MIN_WORK: usize = 1 << 15;
+
+// ---------------------------------------------------------------------
+// Shared thread budget
+// ---------------------------------------------------------------------
+
+/// Pool size (caller thread included), cached after first read.
+pub fn max_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("LRT_KERNEL_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(2)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Tokens currently in use (the caller thread always owns one).
+static IN_USE: AtomicUsize = AtomicUsize::new(1);
+
+/// Try to take up to `want` extra worker tokens; returns how many were
+/// granted (possibly 0 when outer parallelism holds the budget).
+fn acquire(want: usize) -> usize {
+    if want == 0 {
+        return 0;
+    }
+    let cap = max_threads();
+    loop {
+        let used = IN_USE.load(Ordering::Relaxed);
+        let take = want.min(cap.saturating_sub(used));
+        if take == 0 {
+            return 0;
+        }
+        if IN_USE
+            .compare_exchange(
+                used,
+                used + take,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            )
+            .is_ok()
+        {
+            return take;
+        }
+    }
+}
+
+fn release(n: usize) {
+    if n > 0 {
+        IN_USE.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// Releases acquired tokens on drop, so a panicking worker closure
+/// (propagated out of `thread::scope`) can't leak budget and silently
+/// degrade every later caller to sequential execution.
+struct BudgetGuard(usize);
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        release(self.0);
+    }
+}
+
+/// Run `n` closures on pool workers, preserving order (the engine behind
+/// `experiments::parallel_map`, the fleet, and batched inference).
+/// Dynamic scheduling; the caller thread works too, so this never blocks
+/// on an empty budget — it just runs sequentially.
+pub fn run_scoped<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let extra = acquire((n - 1).min(max_threads().saturating_sub(1)));
+    if extra == 0 {
+        return (0..n).map(f).collect();
+    }
+    let _guard = BudgetGuard(extra);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let next = AtomicUsize::new(0);
+        let slots = std::sync::Mutex::new(&mut out);
+        std::thread::scope(|scope| {
+            let work = || loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                slots.lock().unwrap()[i] = Some(v);
+            };
+            let work = &work;
+            for _ in 0..extra {
+                scope.spawn(move || work());
+            }
+            work();
+        });
+    }
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Split `out`'s rows into contiguous blocks and run `f(first_row,
+/// block_data)` on pool workers (static partition: uniform work). Falls
+/// back to one sequential call over the whole matrix when the matrix is
+/// small or the budget is exhausted.
+fn par_row_blocks<F>(out: &mut Mat, min_rows: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let (rows, cols) = (out.rows, out.cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let min_rows = min_rows.max(1);
+    let max_extra =
+        (rows / min_rows).saturating_sub(1).min(max_threads().saturating_sub(1));
+    let extra = acquire(max_extra);
+    if extra == 0 {
+        f(0, &mut out.data);
+        return;
+    }
+    let _guard = BudgetGuard(extra);
+    let workers = extra + 1;
+    let rows_per = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest: &mut [f32] = &mut out.data;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = rows_per.min(rows - row0);
+            let (block, tail) =
+                std::mem::take(&mut rest).split_at_mut(take * cols);
+            rest = tail;
+            let first = row0;
+            scope.spawn(move || f(first, block));
+            row0 += take;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Vectorizable inner loops
+// ---------------------------------------------------------------------
+
+/// Dense dot product over 8 accumulator lanes. Reassociates the f32
+/// reduction (unlike `tensor::dot`), which is what lets it vectorize.
+#[inline]
+pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = (a.len() / 8) * 8;
+    let mut acc = [0.0f32; 8];
+    for (ca, cb) in a[..n8].chunks_exact(8).zip(b[..n8].chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6]))
+        + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+    for (x, y) in a[n8..].iter().zip(b[n8..].iter()) {
+        s += x * y;
+    }
+    s
+}
+
+/// sum_i src[offset + i*stride] * v[i] over 4 lanes — the column dot of
+/// a row-major matrix (used by the MGS projection, stride = q).
+#[inline]
+pub fn dot_stride(src: &[f32], stride: usize, offset: usize, v: &[f32]) -> f32 {
+    let n = v.len();
+    let n4 = (n / 4) * 4;
+    let mut acc = [0.0f32; 4];
+    let mut idx = offset;
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += src[idx] * v[i];
+        acc[1] += src[idx + stride] * v[i + 1];
+        acc[2] += src[idx + 2 * stride] * v[i + 2];
+        acc[3] += src[idx + 3 * stride] * v[i + 3];
+        idx += 4 * stride;
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    while i < n {
+        s += src[idx] * v[i];
+        idx += stride;
+        i += 1;
+    }
+    s
+}
+
+/// v[i] += alpha * src[offset + i*stride] — the column axpy of a
+/// row-major matrix into a dense vector.
+#[inline]
+pub fn axpy_gather(
+    alpha: f32,
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &mut [f32],
+) {
+    if alpha == 0.0 {
+        return;
+    }
+    let mut idx = offset;
+    for vi in v.iter_mut() {
+        *vi += alpha * src[idx];
+        idx += stride;
+    }
+}
+
+/// dst[offset + i*stride] = scale * v[i] — install a dense vector as a
+/// column of a row-major matrix.
+#[inline]
+pub fn scatter_scale(
+    v: &[f32],
+    scale: f32,
+    dst: &mut [f32],
+    stride: usize,
+    offset: usize,
+) {
+    let mut idx = offset;
+    for &vi in v {
+        dst[idx] = scale * vi;
+        idx += stride;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocked / threaded matmuls
+// ---------------------------------------------------------------------
+
+/// a @ b, blocked + threaded. Bit-identical to `Mat::matmul`.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// out = a @ b. Accumulation order per output row is ascending k exactly
+/// like the naive ikj reference, so results are bit-identical; TILE_K
+/// only keeps a block of `b` rows hot across the row block.
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.cols);
+    let k_dim = a.cols;
+    let min_rows = (PAR_MIN_WORK / (k_dim * b.cols).max(1)).max(1);
+    par_row_blocks(out, min_rows, |row0, block| {
+        let cols = b.cols;
+        let nrows = block.len() / cols;
+        block.fill(0.0);
+        for kb in (0..k_dim).step_by(TILE_K) {
+            let kend = (kb + TILE_K).min(k_dim);
+            for ri in 0..nrows {
+                let arow = a.row(row0 + ri);
+                let orow = &mut block[ri * cols..(ri + 1) * cols];
+                for k in kb..kend {
+                    let aik = arow[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(k);
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// a @ b.T, blocked + threaded, `dot_fast` inner loop. Matches
+/// `Mat::matmul_transb` to f32-reassociation tolerance (<= 1e-5).
+pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.rows);
+    matmul_transb_into(a, b, &mut out);
+    out
+}
+
+/// out = a @ b.T.
+pub fn matmul_transb_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.rows);
+    let k_dim = a.cols;
+    let min_rows = (PAR_MIN_WORK / (k_dim * b.rows).max(1)).max(1);
+    par_row_blocks(out, min_rows, |row0, block| {
+        let cols = b.rows;
+        let nrows = block.len() / cols;
+        for jb in (0..cols).step_by(TILE_J) {
+            let jend = (jb + TILE_J).min(cols);
+            for ri in 0..nrows {
+                let arow = a.row(row0 + ri);
+                let orow = &mut block[ri * cols..(ri + 1) * cols];
+                for j in jb..jend {
+                    orow[j] = dot_fast(arow, b.row(j));
+                }
+            }
+        }
+    });
+}
+
+/// a.T @ b without materializing the transpose (the dense weight
+/// gradient dzw^T @ ain). Accumulation order per output row is ascending
+/// p exactly like `a.t().matmul(&b)`, so results are bit-identical to
+/// the naive reference path.
+pub fn matmul_atb(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.cols, b.cols);
+    matmul_atb_into(a, b, &mut out);
+    out
+}
+
+/// out = a.T @ b.
+pub fn matmul_atb_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(out.rows, a.cols);
+    assert_eq!(out.cols, b.cols);
+    let p_dim = a.rows;
+    let min_rows = (PAR_MIN_WORK / (p_dim * b.cols).max(1)).max(1);
+    par_row_blocks(out, min_rows, |row0, block| {
+        let cols = b.cols;
+        let nrows = block.len() / cols;
+        block.fill(0.0);
+        for pb in (0..p_dim).step_by(TILE_K) {
+            let pend = (pb + TILE_K).min(p_dim);
+            for p in pb..pend {
+                let arow = a.row(p);
+                let brow = b.row(p);
+                for ri in 0..nrows {
+                    let c = arow[row0 + ri];
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut block[ri * cols..(ri + 1) * cols];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += c * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// y = a @ x with `dot_fast` rows (the fc-layer forward).
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows).map(|i| dot_fast(a.row(i), x)).collect()
+}
+
+/// m += scale * (u (x) v), threaded over row blocks; per-row arithmetic
+/// identical to `Mat::add_outer`.
+pub fn add_outer(m: &mut Mat, scale: f32, u: &[f32], v: &[f32]) {
+    assert_eq!(u.len(), m.rows);
+    assert_eq!(v.len(), m.cols);
+    let min_rows = (PAR_MIN_WORK / m.cols.max(1)).max(1);
+    par_row_blocks(m, min_rows, |row0, block| {
+        let cols = v.len();
+        for (ri, orow) in block.chunks_mut(cols).enumerate() {
+            let alpha = scale * u[row0 + ri];
+            if alpha == 0.0 {
+                continue;
+            }
+            for (o, &vv) in orow.iter_mut().zip(v.iter()) {
+                *o += alpha * vv;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32(0.0, 1.0))
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32, what: &str) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+        let scale = b.max_abs().max(1.0);
+        for (i, (x, y)) in a.data.iter().zip(b.data.iter()).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * scale,
+                "{what}: elem {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 129, 2), (37, 5, 3), (33, 260, 18), (64, 512, 10)]
+        {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let got = matmul(&a, &b);
+            assert_eq!(got.data, a.matmul(&b).data, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_atb_bit_identical_to_naive() {
+        let mut rng = Rng::new(2);
+        for &(p, m, n) in &[(1, 1, 1), (196, 8, 9), (100, 64, 512), (7, 17, 33)]
+        {
+            let a = rand_mat(&mut rng, p, m);
+            let b = rand_mat(&mut rng, p, n);
+            let got = matmul_atb(&a, &b);
+            assert_eq!(got.data, a.t().matmul(&b).data, "{p}x{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_transb_close_to_naive() {
+        let mut rng = Rng::new(3);
+        for &(m, n, k) in
+            &[(1, 1, 1), (5, 17, 129), (196, 8, 9), (33, 64, 512)]
+        {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, n, k);
+            let got = matmul_transb(&a, &b);
+            assert_close(&got, &a.matmul_transb(&b), 1e-5, "transb");
+        }
+    }
+
+    #[test]
+    fn strided_helpers_match_dense() {
+        let mut rng = Rng::new(4);
+        let q = 5;
+        let m = rand_mat(&mut rng, 37, q);
+        let v: Vec<f32> = (0..37).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for j in 0..q {
+            let col = m.col(j);
+            let want = crate::tensor::dot(&col, &v);
+            let got = dot_stride(&m.data, q, j, &v);
+            assert!((want - got).abs() < 1e-4, "col {j}: {want} vs {got}");
+        }
+        let mut v2 = v.clone();
+        axpy_gather(0.5, &m.data, q, 2, &mut v2);
+        for i in 0..37 {
+            let want = v[i] + 0.5 * m.at(i, 2);
+            assert!((v2[i] - want).abs() < 1e-6);
+        }
+        let mut m2 = m.clone();
+        scatter_scale(&v, 2.0, &mut m2.data, q, 1);
+        for i in 0..37 {
+            assert_eq!(m2.at(i, 1), 2.0 * v[i]);
+        }
+    }
+
+    #[test]
+    fn matvec_and_add_outer() {
+        let mut rng = Rng::new(5);
+        let a = rand_mat(&mut rng, 64, 512);
+        let x: Vec<f32> =
+            (0..512).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let want = a.matvec(&x);
+        let got = matvec(&a, &x);
+        for (w, g) in want.iter().zip(got.iter()) {
+            assert!((w - g).abs() < 1e-4 * w.abs().max(1.0));
+        }
+        let u: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut m1 = a.clone();
+        let mut m2 = a.clone();
+        m1.add_outer(0.7, &u, &x);
+        add_outer(&mut m2, 0.7, &u, &x);
+        assert_eq!(m1.data, m2.data);
+    }
+
+    #[test]
+    fn run_scoped_preserves_order_and_budget_recovers() {
+        let v = run_scoped(23, |i| i * 3);
+        assert_eq!(v, (0..23).map(|i| i * 3).collect::<Vec<_>>());
+        // nested: inner calls see a reduced budget but still complete
+        let nested = run_scoped(4, |i| run_scoped(5, move |j| i * 10 + j));
+        for (i, inner) in nested.iter().enumerate() {
+            assert_eq!(*inner, (0..5).map(|j| i * 10 + j).collect::<Vec<_>>());
+        }
+        assert!(IN_USE.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        assert!(run_scoped(0, |i| i).is_empty());
+        let a = Mat::zeros(0, 4);
+        let b = Mat::zeros(4, 0);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows, c.cols), (0, 0));
+        let t = matmul_transb(&Mat::zeros(2, 3), &Mat::zeros(0, 3));
+        assert_eq!((t.rows, t.cols), (2, 0));
+    }
+}

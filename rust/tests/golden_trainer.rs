@@ -1,0 +1,85 @@
+//! Golden regression for the deterministic seed-11 trainer run: snapshot
+//! the final EMA loss/accuracy and the NVM write counters so kernel-layer
+//! changes can't silently shift the Fig. 3/6 numbers.
+//!
+//! Snapshot protocol: the first run on a fresh checkout writes
+//! `tests/golden/seed11.txt` and passes (bootstrap); later runs compare
+//! against it exactly. Re-bless intentionally with `LRT_BLESS=1`.
+//! Determinism within one process is always asserted (two identical runs
+//! must agree bitwise), so even the bootstrap run has teeth.
+
+use std::path::PathBuf;
+
+use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+use lrt_nvm::coordinator::metrics::RunReport;
+use lrt_nvm::coordinator::trainer::Trainer;
+use lrt_nvm::lrt::Variant;
+use lrt_nvm::nn::model::{AuxState, Params};
+use lrt_nvm::util::rng::Rng;
+
+fn seed11_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
+    cfg.seed = 11;
+    cfg.samples = 120;
+    cfg.offline_samples = 0;
+    cfg.log_every = 40;
+    cfg.batch = [5, 5, 5, 5, 10, 10];
+    cfg.lr_w = 0.3; // large enough that flushes clear the rho_min gate
+    cfg.lr_b = 0.3;
+    cfg
+}
+
+fn run_seed11() -> RunReport {
+    let cfg = seed11_cfg();
+    let params = Params::init(&mut Rng::new(11), cfg.w_bits);
+    Trainer::new(cfg, params, AuxState::new()).run()
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/seed11.txt")
+}
+
+fn render(rep: &RunReport) -> String {
+    format!(
+        "final_ema={:.15e}\ntail_acc={:.15e}\ntotal_writes={}\n\
+         max_cell_writes={}\nflush_commits={}\n",
+        rep.final_ema,
+        rep.tail_acc,
+        rep.total_writes,
+        rep.max_cell_writes,
+        rep.flush_commits,
+    )
+}
+
+#[test]
+fn seed11_trainer_matches_golden_snapshot() {
+    let rep1 = run_seed11();
+    let rep2 = run_seed11();
+    // determinism: identical config + seed => bitwise identical report
+    assert_eq!(rep1.final_ema, rep2.final_ema, "run not deterministic");
+    assert_eq!(rep1.total_writes, rep2.total_writes);
+    assert_eq!(rep1.series, rep2.series);
+    // sanity ranges independent of the snapshot
+    assert!((0.0..=1.0).contains(&rep1.final_ema), "{rep1:?}");
+    assert!(rep1.total_writes > 0, "LRT run committed nothing");
+
+    let got = render(&rep1);
+    let path = golden_path();
+    let bless = std::env::var("LRT_BLESS").is_ok_and(|v| v == "1");
+    match std::fs::read_to_string(&path) {
+        Ok(want) if !bless => {
+            assert_eq!(
+                got, want,
+                "seed-11 golden numbers shifted — if intentional \
+                 (e.g. a kernel numerics change), re-bless with \
+                 LRT_BLESS=1 and call it out in the PR"
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &got).unwrap();
+            eprintln!("golden snapshot written to {}", path.display());
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Parity: the blocked/threaded `tensor::kernels` layer against the
+//! naive `Mat` reference ops, and the batched engine (`step_batch`,
+//! chunked `Trainer::run`) against per-sample stepping on identical
+//! seeds. This is the contract that lets every sweep/bench/fleet run use
+//! the fast path while the naive ops remain the ground truth.
+
+use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+use lrt_nvm::coordinator::device::NativeDevice;
+use lrt_nvm::coordinator::metrics::Metrics;
+use lrt_nvm::coordinator::trainer::Trainer;
+use lrt_nvm::data::online::{OnlineStream, Partition};
+use lrt_nvm::lrt::Variant;
+use lrt_nvm::nn::model::{AuxState, Params};
+use lrt_nvm::nvm::drift::DriftCfg;
+use lrt_nvm::tensor::{kernels, Mat};
+use lrt_nvm::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal_f32(0.0, 1.0))
+}
+
+/// Odd shapes: 1x1, tall, wide, non-multiples of TILE_J/TILE_K, and the
+/// two acceptance shapes (fc5 64x512, linreg 256x1024).
+const SHAPES: [(usize, usize, usize); 8] = [
+    (1, 1, 1),
+    (1, 7, 1),
+    (37, 2, 5),
+    (3, 130, 2),
+    (17, 33, 19),
+    (100, 512, 64),
+    (64, 512, 10),
+    (96, 1024, 48), // linreg-shaped reduction (CI-sized rows)
+];
+
+#[test]
+fn blocked_matmul_matches_naive_exactly() {
+    let mut rng = Rng::new(101);
+    for &(m, k, n) in &SHAPES {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let fast = kernels::matmul(&a, &b);
+        let naive = a.matmul(&b);
+        assert_eq!(fast.data, naive.data, "matmul {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn blocked_matmul_atb_matches_naive_exactly() {
+    let mut rng = Rng::new(102);
+    for &(p, m, n) in &SHAPES {
+        let a = rand_mat(&mut rng, p, m);
+        let b = rand_mat(&mut rng, p, n);
+        let fast = kernels::matmul_atb(&a, &b);
+        let naive = a.t().matmul(&b);
+        assert_eq!(fast.data, naive.data, "atb {p}x{m}x{n}");
+    }
+}
+
+#[test]
+fn blocked_matmul_transb_within_1e5() {
+    let mut rng = Rng::new(103);
+    for &(m, k, n) in &SHAPES {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, n, k);
+        let fast = kernels::matmul_transb(&a, &b);
+        let naive = a.matmul_transb(&b);
+        let scale = naive.max_abs().max(1.0);
+        for (i, (x, y)) in
+            fast.data.iter().zip(naive.data.iter()).enumerate()
+        {
+            assert!(
+                (x - y).abs() <= 1e-5 * scale,
+                "transb {m}x{k}x{n} elem {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn matvec_within_1e5() {
+    let mut rng = Rng::new(104);
+    for &(m, k, _) in &SHAPES {
+        let a = rand_mat(&mut rng, m, k);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let fast = kernels::matvec(&a, &x);
+        let naive = a.matvec(&x);
+        for (f, n) in fast.iter().zip(naive.iter()) {
+            assert!((f - n).abs() <= 1e-5 * n.abs().max(1.0));
+        }
+    }
+}
+
+fn test_image(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..784).map(|_| rng.normal_f32(0.5, 0.5).clamp(0.0, 2.0)).collect()
+}
+
+/// Batched inference (the parallel fan-out path) must return exactly the
+/// per-sample results.
+#[test]
+fn inference_step_batch_matches_per_sample() {
+    let mut cfg = RunConfig::default();
+    cfg.scheme = Scheme::Inference;
+    let params = Params::init(&mut Rng::new(21), cfg.w_bits);
+    let mut seq = NativeDevice::new(cfg.clone(), params.clone(), AuxState::new());
+    let mut bat = NativeDevice::new(cfg, params, AuxState::new());
+    let images: Vec<Vec<f32>> = (0..12).map(test_image).collect();
+    let labels: Vec<usize> = (0..12).map(|t| t % 10).collect();
+    let want: Vec<(f32, bool)> = images
+        .iter()
+        .zip(labels.iter())
+        .map(|(img, &l)| seq.step(img, l))
+        .collect();
+    let got = bat.step_batch(&images, &labels);
+    assert_eq!(want, got);
+    assert_eq!(bat.total_writes(), 0);
+}
+
+/// Batched LRT training steps are sequential inside `step_batch`, so
+/// they must be bit-identical to per-sample stepping: same losses, same
+/// accumulator state, same NVM commits.
+#[test]
+fn lrt_step_batch_matches_per_sample() {
+    let mut cfg = RunConfig::default();
+    cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
+    cfg.batch = [2, 2, 2, 2, 4, 4];
+    cfg.lr_w = 0.1;
+    let params = Params::init(&mut Rng::new(22), cfg.w_bits);
+    let mut seq = NativeDevice::new(cfg.clone(), params.clone(), AuxState::new());
+    let mut bat = NativeDevice::new(cfg, params, AuxState::new());
+    let images: Vec<Vec<f32>> = (0..10).map(|t| test_image(50 + t)).collect();
+    let labels: Vec<usize> = (0..10).map(|t| (t * 3) % 10).collect();
+    let want: Vec<(f32, bool)> = images
+        .iter()
+        .zip(labels.iter())
+        .map(|(img, &l)| seq.step(img, l))
+        .collect();
+    let got = bat.step_batch(&images, &labels);
+    assert_eq!(want, got, "losses/predictions diverged");
+    for i in 0..6 {
+        assert_eq!(
+            seq.lrt[i].cx, bat.lrt[i].cx,
+            "layer {i} accumulator diverged"
+        );
+        assert_eq!(
+            seq.arrays[i].read().data,
+            bat.arrays[i].read().data,
+            "layer {i} NVM state diverged"
+        );
+    }
+    assert_eq!(seq.total_writes(), bat.total_writes());
+    assert_eq!(seq.kappa_skips, bat.kappa_skips);
+}
+
+/// The chunked `Trainer::run` must reproduce the per-sample loop it
+/// replaced — metrics, write counters, log series, drift cadence — on
+/// identical seeds, including across drift and flush boundaries.
+#[test]
+fn chunked_trainer_matches_manual_per_sample_loop() {
+    let mut cfg = RunConfig::default();
+    cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
+    cfg.samples = 57;
+    cfg.offline_samples = 0;
+    cfg.log_every = 10;
+    cfg.batch = [3, 3, 3, 3, 5, 5];
+    cfg.seed = 5;
+    cfg.drift = DriftCfg::analog(10.0);
+    let params = Params::init(&mut Rng::new(5), cfg.w_bits);
+    let aux = AuxState::new();
+
+    // manual per-sample loop (the pre-batching Trainer semantics)
+    let mut dev =
+        NativeDevice::new(cfg.clone(), params.clone(), aux.clone());
+    let stream = OnlineStream::new(cfg.seed, Partition::Online, cfg.env);
+    let mut metrics = Metrics::new(500);
+    for t in 0..cfg.samples {
+        let s = stream.sample(t as u64);
+        let (loss, correct) = dev.step(&s.image, s.label);
+        metrics.record(correct, loss as f64);
+        if cfg.drift.enabled() && (t + 1) as u64 % cfg.drift.every == 0 {
+            dev.drift();
+        }
+        if (t + 1) % cfg.log_every == 0 {
+            metrics.log_point(t + 1, dev.max_cell_writes());
+        }
+    }
+
+    let rep = Trainer::new(cfg, params, aux).run();
+    assert_eq!(rep.final_ema, metrics.acc_ema.get(), "EMA diverged");
+    assert_eq!(rep.series, metrics.series, "log series diverged");
+    assert_eq!(rep.total_writes, dev.total_writes());
+    assert_eq!(rep.max_cell_writes, dev.max_cell_writes());
+}

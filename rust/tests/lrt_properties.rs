@@ -1,0 +1,129 @@
+//! Property tests for the LRT invariants of paper Section 4, driven
+//! through the public API (the in-module unit tests cover the same
+//! ground at smaller scale; these run the engine-sized shapes):
+//!
+//! - MGS bases stay orthonormal (Q^T Q ~= I) under repeated `update`;
+//! - `LrtState::delta()` equals the dense sum of outer products while
+//!   the accumulator holds <= rank samples (Section 4 exactness);
+//! - the batched Mat-of-rows update is the per-sample update.
+
+use lrt_nvm::lrt::{LrtState, Variant};
+use lrt_nvm::prop_assert;
+use lrt_nvm::tensor::{dot, norm2, Mat};
+use lrt_nvm::util::prop;
+use lrt_nvm::util::rng::Rng;
+
+fn feed(
+    st: &mut LrtState,
+    n: usize,
+    rng: &mut Rng,
+    variant: Variant,
+) -> Mat {
+    // returns the dense sum of the outer products fed in
+    let mut dense = Mat::zeros(st.n_o(), st.n_i());
+    let mut urng = Rng::new(rng.next_u64());
+    for _ in 0..n {
+        let dz = rng.normal_vec(st.n_o(), 1.0);
+        let a = rng.normal_vec(st.n_i(), 1.0);
+        dense.add_outer(1.0, &dz, &a);
+        st.update(&dz, &a, &mut urng, variant, 1e18);
+    }
+    dense
+}
+
+#[test]
+fn mgs_columns_stay_orthonormal_at_engine_shapes() {
+    // fc5-shaped (64 x 512) and a conv-shaped accumulator
+    prop::check("lrt-qtq-engine", 6, |rng| {
+        for &(n_o, n_i) in &[(64usize, 512usize), (16, 72)] {
+            for variant in [Variant::Biased, Variant::Unbiased] {
+                let mut st = LrtState::new(n_o, n_i, 4);
+                st.quantize_state = false;
+                feed(&mut st, 25, rng, variant);
+                for m in [&st.ql, &st.qr] {
+                    for j1 in 0..st.q() {
+                        let c1 = m.col(j1);
+                        if norm2(&c1) < 0.5 {
+                            continue; // zero column is allowed
+                        }
+                        for j2 in j1..st.q() {
+                            let c2 = m.col(j2);
+                            if norm2(&c2) < 0.5 {
+                                continue;
+                            }
+                            let d = dot(&c1, &c2);
+                            let want = if j1 == j2 { 1.0f32 } else { 0.0 };
+                            prop_assert!(
+                                (d - want).abs() < 5e-3,
+                                "{n_o}x{n_i} {variant:?}: Q^T Q \
+                                 [{j1},{j2}] = {d}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn delta_is_exact_below_rank() {
+    prop::check("lrt-delta-exact", 10, |rng| {
+        let rank = 4;
+        let n_samples = 1 + rng.below(rank); // <= rank
+        let mut st = LrtState::new(24, 40, rank);
+        st.quantize_state = false;
+        let dense = feed(&mut st, n_samples, rng, Variant::Biased);
+        let est = st.delta();
+        let scale = dense.max_abs().max(1.0);
+        for (i, (x, y)) in
+            est.data.iter().zip(dense.data.iter()).enumerate()
+        {
+            prop_assert!(
+                (x - y).abs() < 2e-3 * scale,
+                "n={n_samples}: delta[{i}] = {x} vs dense {y}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn delta_quantized_state_still_near_exact_below_rank() {
+    // with the 16-bit accumulator quantization on (the deployed
+    // configuration), exactness degrades only to the quantization floor
+    prop::check("lrt-delta-exact-q16", 6, |rng| {
+        let mut st = LrtState::new(16, 24, 4);
+        let dense = feed(&mut st, 3, rng, Variant::Biased);
+        let est = st.delta();
+        let scale = dense.max_abs().max(1.0);
+        for (x, y) in est.data.iter().zip(dense.data.iter()) {
+            prop_assert!(
+                (x - y).abs() < 2e-2 * scale,
+                "quantized delta {x} vs dense {y}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn update_batch_identical_to_per_sample_at_linreg_shape() {
+    let mut rng = Rng::new(31);
+    let (n_o, n_i, b) = (32, 128, 12);
+    let dzw = Mat::from_fn(b, n_o, |_, _| rng.normal_f32(0.0, 1.0));
+    let ain = Mat::from_fn(b, n_i, |_, _| rng.normal_f32(0.0, 1.0));
+    let mut st_loop = LrtState::new(n_o, n_i, 4);
+    let mut st_batch = LrtState::new(n_o, n_i, 4);
+    let mut r1 = Rng::new(7);
+    let mut r2 = Rng::new(7);
+    for p in 0..b {
+        st_loop.update(dzw.row(p), ain.row(p), &mut r1, Variant::Unbiased, 100.0);
+    }
+    st_batch.update_batch(&dzw, &ain, &mut r2, Variant::Unbiased, 100.0);
+    assert_eq!(st_loop.ql.data, st_batch.ql.data);
+    assert_eq!(st_loop.qr.data, st_batch.qr.data);
+    assert_eq!(st_loop.cx, st_batch.cx);
+    assert_eq!(st_loop.delta().data, st_batch.delta().data);
+}
