@@ -1,6 +1,8 @@
-//! Bench: regenerate Figure 3 (auxiliary area vs inverse write density).
+//! Bench: regenerate Figure 3 (auxiliary area vs inverse write density)
+//! through the scenario registry.
 fn main() {
     let t0 = std::time::Instant::now();
-    println!("{}", lrt_nvm::experiments::fig3());
+    let out = lrt_nvm::experiments::run_ephemeral("fig3", &[]).unwrap();
+    println!("{}", out.rendered);
     println!("[fig3_writes] {:.2}s", t0.elapsed().as_secs_f64());
 }

@@ -1,7 +1,8 @@
 //! Bench: regenerate Figure 5 (convex convergence; LRT_FULL=1 for the
-//! paper's 1024x100 / 256x100 dimensions).
+//! paper's 1024x100 / 256x100 dimensions) through the scenario registry.
 fn main() {
     let t0 = std::time::Instant::now();
-    println!("{}", lrt_nvm::experiments::fig5());
+    let out = lrt_nvm::experiments::run_ephemeral("fig5", &[]).unwrap();
+    println!("{}", out.rendered);
     println!("[fig5_convex] {:.2}s", t0.elapsed().as_secs_f64());
 }

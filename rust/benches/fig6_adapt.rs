@@ -1,21 +1,39 @@
-//! Bench: regenerate Figure 6 (adaptation, 4 environments x 5 schemes).
-//! Default is CI-sized (2k online / 2k offline samples); LRT_FULL=1 runs
-//! 20k online / 10k offline per cell.
+//! Bench: regenerate Figure 6 (adaptation, 4 environments x 5 schemes)
+//! through the scenario registry. Default is CI-sized (2k online / 2k
+//! offline samples); LRT_FULL=1 runs 20k online / 10k offline per cell.
 fn main() {
     let t0 = std::time::Instant::now();
     let full = lrt_nvm::util::cli::full_scale();
-    let (samples, offline) = if full { (20_000, 10_000) } else { (2_000, 2_000) };
-    let (text, cells) = lrt_nvm::experiments::fig6(samples, offline, 0);
-    println!("{text}");
-    println!("accuracy-EMA series (step: value):");
-    for c in &cells {
-        let pts: Vec<String> = c
-            .series
-            .iter()
-            .step_by((c.series.len() / 8).max(1))
-            .map(|(s, a, _)| format!("{s}:{a:.3}"))
-            .collect();
-        println!("  {:>13} {:<13} {}", c.env, c.scheme, pts.join(" "));
+    let (samples, offline) =
+        if full { ("20000", "10000") } else { ("2000", "2000") };
+    let out = lrt_nvm::experiments::run_ephemeral(
+        "fig6",
+        &[("samples", samples), ("offline", offline)],
+    )
+    .unwrap();
+    println!("{}", out.rendered);
+    // the accuracy-EMA series live in each row's "series" detail field;
+    // print a compressed per-cell view like the legacy bench did
+    println!("accuracy-EMA series [step,acc,writes] (first/mid/last):");
+    for row in &out.rows {
+        if let Some(lrt_nvm::util::json::Json::Arr(series)) =
+            row.value("series")
+        {
+            if series.is_empty() {
+                continue;
+            }
+            let pick: Vec<String> = [0, series.len() / 2, series.len() - 1]
+                .iter()
+                .filter_map(|&i| series.get(i))
+                .map(|p| p.to_string_compact())
+                .collect();
+            println!(
+                "  {:>13} {:<13} {}",
+                row.text("env").unwrap_or(""),
+                row.text("scheme").unwrap_or(""),
+                pick.join(" ")
+            );
+        }
     }
     println!("[fig6_adapt] {:.2}s", t0.elapsed().as_secs_f64());
 }

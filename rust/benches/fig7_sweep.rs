@@ -1,13 +1,17 @@
-//! Bench: regenerate Figure 7 (rank x weight-bitwidth heat map) and
-//! Figure 11 (learning-rate heat maps). LRT_FULL=1 uses the paper's 2k /
-//! 10k sample counts with more seeds folded into the CLI variants.
+//! Bench: regenerate Figure 7 (rank x weight-bitwidth sweep) and
+//! Figure 11 (learning-rate sweep) through the scenario registry.
+//! LRT_FULL=1 uses the paper's 10k sample count for fig11.
 fn main() {
     let t0 = std::time::Instant::now();
     let full = lrt_nvm::util::cli::full_scale();
-    let s7 = 2_000; // the paper's 2k-sample protocol
-    let s11 = if full { 10_000 } else { 1_500 };
-    println!("{}", lrt_nvm::experiments::fig7(s7, 0));
-    println!();
-    println!("{}", lrt_nvm::experiments::fig11(s11, 0));
+    let s7 = "2000"; // the paper's 2k-sample protocol
+    let s11 = if full { "10000" } else { "1500" };
+    let f7 = lrt_nvm::experiments::run_ephemeral("fig7", &[("samples", s7)])
+        .unwrap();
+    println!("{}", f7.rendered);
+    let f11 =
+        lrt_nvm::experiments::run_ephemeral("fig11", &[("samples", s11)])
+            .unwrap();
+    println!("{}", f11.rendered);
     println!("[fig7_sweep] {:.2}s", t0.elapsed().as_secs_f64());
 }

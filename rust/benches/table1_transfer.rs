@@ -1,11 +1,17 @@
-//! Bench: regenerate Table 1 (transfer-learning recovery). Default is
-//! 20 classes / 2k samples / 3 seeds; LRT_FULL=1 runs 100 classes / 10k
-//! samples / 5 seeds (the paper uses 1000 ImageNet classes).
+//! Bench: regenerate Table 1 (transfer-learning recovery) through the
+//! scenario registry. Default is 20 classes / 2k samples / 3 seeds;
+//! LRT_FULL=1 runs 100 classes / 10k samples / 5 seeds (the paper uses
+//! 1000 ImageNet classes).
 fn main() {
     let t0 = std::time::Instant::now();
     let full = lrt_nvm::util::cli::full_scale();
     let (seeds, samples, classes) =
-        if full { (5, 10_000, 100) } else { (3, 2_000, 20) };
-    println!("{}", lrt_nvm::experiments::table1(seeds, samples, classes));
+        if full { ("5", "10000", "100") } else { ("3", "2000", "20") };
+    let out = lrt_nvm::experiments::run_ephemeral(
+        "table1",
+        &[("seeds", seeds), ("samples", samples), ("classes", classes)],
+    )
+    .unwrap();
+    println!("{}", out.rendered);
     println!("[table1_transfer] {:.2}s", t0.elapsed().as_secs_f64());
 }

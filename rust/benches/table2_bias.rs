@@ -1,8 +1,14 @@
-//! Bench: regenerate Table 2 (biased/unbiased SVD per layer group).
+//! Bench: regenerate Table 2 (biased/unbiased SVD per layer group)
+//! through the scenario registry.
 fn main() {
     let t0 = std::time::Instant::now();
     let full = lrt_nvm::util::cli::full_scale();
-    let (samples, seeds) = if full { (10_000, 5) } else { (1_500, 3) };
-    println!("{}", lrt_nvm::experiments::table2(samples, seeds));
+    let (samples, seeds) = if full { ("10000", "5") } else { ("1500", "3") };
+    let out = lrt_nvm::experiments::run_ephemeral(
+        "table2",
+        &[("samples", samples), ("seeds", seeds)],
+    )
+    .unwrap();
+    println!("{}", out.rendered);
     println!("[table2_bias] {:.2}s", t0.elapsed().as_secs_f64());
 }

@@ -1,10 +1,18 @@
-//! Bench: regenerate Table 3 (ablations) + Figure 9 (gradient trace).
+//! Bench: regenerate Table 3 (ablations) + Figure 9 (gradient trace)
+//! through the scenario registry.
 fn main() {
     let t0 = std::time::Instant::now();
     let full = lrt_nvm::util::cli::full_scale();
-    let (samples, seeds) = if full { (10_000, 5) } else { (1_500, 3) };
-    println!("{}", lrt_nvm::experiments::table3(samples, seeds));
-    println!();
-    println!("{}", lrt_nvm::experiments::fig9(if full { 2_000 } else { 300 }, 0));
+    let (samples, seeds) = if full { ("10000", "5") } else { ("1500", "3") };
+    let t3 = lrt_nvm::experiments::run_ephemeral(
+        "table3",
+        &[("samples", samples), ("seeds", seeds)],
+    )
+    .unwrap();
+    println!("{}", t3.rendered);
+    let steps = if full { "2000" } else { "300" };
+    let f9 = lrt_nvm::experiments::run_ephemeral("fig9", &[("steps", steps)])
+        .unwrap();
+    println!("{}", f9.rendered);
     println!("[table3_ablations] {:.2}s", t0.elapsed().as_secs_f64());
 }

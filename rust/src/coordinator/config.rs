@@ -52,6 +52,17 @@ impl Scheme {
     }
 }
 
+/// Result of one declarative `key=value` application ([`RunConfig::set`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetOutcome {
+    /// Key recognized, value parsed, field updated.
+    Applied,
+    /// Key recognized but the value failed to parse (nothing changed).
+    BadValue,
+    /// Not a `RunConfig` field (a scenario-specific axis).
+    UnknownKey,
+}
+
 /// Full configuration of one online-adaptation run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -152,6 +163,106 @@ impl RunConfig {
         cfg
     }
 
+    /// Apply one declarative `key=value` assignment — the bridge between
+    /// a sweep-grid axis (or config file entry) and this struct. Keys are
+    /// canonical snake_case RunConfig field names (hyphens accepted);
+    /// `env` also installs that environment's default drift process
+    /// (paper magnitudes), and `drift_sigma` / `drift_p` override it.
+    /// The tri-state return lets the sweep grid distinguish a
+    /// scenario-specific axis (`UnknownKey`, skipped) from a config axis
+    /// with a malformed value (`BadValue`, an error to surface — never
+    /// something to silently ignore).
+    pub fn set(&mut self, key: &str, value: &str) -> SetOutcome {
+        use SetOutcome::{Applied, BadValue, UnknownKey};
+        fn p<T: std::str::FromStr>(v: &str) -> Option<T> {
+            v.parse().ok()
+        }
+        fn pb(v: &str) -> Option<bool> {
+            match v {
+                "true" | "1" | "yes" | "on" => Some(true),
+                "false" | "0" | "no" | "off" => Some(false),
+                _ => None,
+            }
+        }
+        let ok = |applied: bool| if applied { Applied } else { BadValue };
+        let key = key.replace('-', "_");
+        match key.as_str() {
+            "scheme" => ok(match Scheme::parse(value) {
+                Some(s) => {
+                    self.scheme = s;
+                    true
+                }
+                None => false,
+            }),
+            "env" => ok(match Env::parse(value) {
+                Some(e) => {
+                    self.env = e;
+                    self.drift = match e {
+                        Env::AnalogDrift => DriftCfg::analog(10.0),
+                        Env::DigitalDrift => DriftCfg::digital(10.0),
+                        _ => DriftCfg::NONE,
+                    };
+                    true
+                }
+                None => false,
+            }),
+            "seed" => ok(p(value).map(|v| self.seed = v).is_some()),
+            "samples" => ok(p(value).map(|v| self.samples = v).is_some()),
+            "offline" | "offline_samples" => {
+                ok(p(value).map(|v| self.offline_samples = v).is_some())
+            }
+            "lr" => ok(match p::<f32>(value) {
+                Some(v) => {
+                    self.lr_w = v;
+                    self.lr_b = v;
+                    true
+                }
+                None => false,
+            }),
+            "lr_w" => ok(p(value).map(|v| self.lr_w = v).is_some()),
+            "lr_b" => ok(p(value).map(|v| self.lr_b = v).is_some()),
+            "rank" => ok(p(value).map(|v| self.rank = v).is_some()),
+            "maxnorm" | "use_maxnorm" => {
+                ok(pb(value).map(|v| self.use_maxnorm = v).is_some())
+            }
+            "bn_stream" => {
+                ok(pb(value).map(|v| self.bn_stream = v).is_some())
+            }
+            "bn_batch" => ok(p(value).map(|v| self.bn_batch = v).is_some()),
+            "kappa" | "kappa_th" => {
+                ok(p(value).map(|v| self.kappa_th = v).is_some())
+            }
+            "rho_min" => ok(p(value).map(|v| self.rho_min = v).is_some()),
+            "bits" | "w_bits" => {
+                ok(p(value).map(|v| self.w_bits = v).is_some())
+            }
+            "log_every" => {
+                ok(p(value).map(|v| self.log_every = v).is_some())
+            }
+            "shift_period" => {
+                ok(p(value).map(|v| self.shift_period = v).is_some())
+            }
+            "train_bias" => {
+                ok(pb(value).map(|v| self.train_bias = v).is_some())
+            }
+            "drift_sigma" => ok(match p(value) {
+                Some(v) => {
+                    self.drift = DriftCfg::analog(v);
+                    true
+                }
+                None => false,
+            }),
+            "drift_p" => ok(match p(value) {
+                Some(v) => {
+                    self.drift = DriftCfg::digital(v);
+                    true
+                }
+                None => false,
+            }),
+            _ => UnknownKey,
+        }
+    }
+
     /// Variant when running LRT (Biased otherwise, unused).
     pub fn variant(&self) -> Variant {
         match self.scheme {
@@ -220,5 +331,34 @@ mod tests {
     fn bn_eta_formula() {
         let cfg = RunConfig::default();
         assert!((cfg.bn_eta() - 0.99).abs() < 1e-6);
+    }
+
+    #[test]
+    fn set_maps_grid_axes_onto_fields() {
+        use SetOutcome::{Applied, BadValue, UnknownKey};
+        let mut cfg = RunConfig::default();
+        for (k, v) in [
+            ("rank", "8"),
+            ("bits", "4"),
+            ("lr", "0.03"),
+            ("kappa-th", "1e8"),
+            ("maxnorm", "false"),
+            ("env", "analog"),
+        ] {
+            assert_eq!(cfg.set(k, v), Applied, "{k}={v}");
+        }
+        assert_eq!(cfg.rank, 8);
+        assert_eq!(cfg.w_bits, 4);
+        assert!((cfg.lr_w - 0.03).abs() < 1e-9 && (cfg.lr_b - 0.03).abs() < 1e-9);
+        assert!((cfg.kappa_th - 1e8).abs() < 1.0);
+        assert!(!cfg.use_maxnorm);
+        assert_eq!(cfg.env, Env::AnalogDrift);
+        assert!(cfg.drift.enabled());
+        assert_eq!(cfg.set("drift_sigma", "30"), Applied);
+        assert!((cfg.drift.sigma0 - 30.0).abs() < 1e-12);
+        // unknown keys vs bad values are distinguished, never conflated
+        assert_eq!(cfg.set("no_such_field", "1"), UnknownKey);
+        assert_eq!(cfg.set("rank", "banana"), BadValue);
+        assert_eq!(cfg.rank, 8, "failed set must not change the field");
     }
 }

@@ -21,6 +21,7 @@ use super::trainer::{pretrain, Trainer};
 use crate::lrt::LrtState;
 use crate::tensor::{kernels, Mat};
 use crate::util::stats;
+use crate::util::table::Row;
 
 /// Aggregate statistics of a fleet run.
 #[derive(Debug, Clone)]
@@ -34,6 +35,45 @@ pub struct FleetReport {
     /// rank-r factors (vs the dense-gradient alternative).
     pub federated_payload_bytes: usize,
     pub dense_payload_bytes: usize,
+}
+
+impl FleetReport {
+    /// Structured emission: one row per device plus a `fleet` summary
+    /// row carrying the aggregate and federated-payload numbers.
+    pub fn to_rows(&self) -> Vec<Row> {
+        let mut rows: Vec<Row> = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(d, rep)| {
+                Row::new()
+                    .str("kind", "device")
+                    .int("device", d as u64)
+                    .extend(rep.to_row())
+            })
+            .collect();
+        rows.push(
+            Row::new()
+                .str("kind", "fleet")
+                .int("devices", self.devices.len() as u64)
+                .num("mean_acc_ema", self.mean_final_ema, 3)
+                .num("std_acc_ema", self.std_final_ema, 3)
+                .int("worst_cell_writes", self.worst_cell_writes)
+                .num("total_energy_uj", self.total_energy_pj / 1e6, 1)
+                .int(
+                    "federated_payload_bytes",
+                    self.federated_payload_bytes as u64,
+                )
+                .int("dense_payload_bytes", self.dense_payload_bytes as u64)
+                .int(
+                    "payload_compression",
+                    (self.dense_payload_bytes
+                        / self.federated_payload_bytes.max(1))
+                        as u64,
+                ),
+        );
+        rows
+    }
 }
 
 /// Run `n_devices` trainers in parallel on shard seeds derived from
@@ -190,5 +230,11 @@ mod tests {
         assert!(s0 != s1 || rep.devices[0].final_ema != rep.devices[1].final_ema);
         // LRT federated payload is much smaller than a dense gradient
         assert!(rep.federated_payload_bytes * 5 < rep.dense_payload_bytes);
+        // structured emission: one row per device + one summary row
+        let rows = rep.to_rows();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].text("kind"), Some("device"));
+        assert_eq!(rows[3].text("kind"), Some("fleet"));
+        assert_eq!(rows[3].text("devices"), Some("3"));
     }
 }

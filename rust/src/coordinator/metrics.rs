@@ -2,7 +2,9 @@
 //! and energy accounting, and the run report benches print.
 
 use crate::nvm::energy;
+use crate::util::json::Json;
 use crate::util::stats::Ema;
+use crate::util::table::Row;
 
 #[derive(Debug, Clone)]
 pub struct Metrics {
@@ -87,6 +89,41 @@ impl RunReport {
         energy::write_energy_pj(total_writes, bits)
     }
 
+    /// Structured emission for the sweep engine. Deliberately excludes
+    /// `wall_secs`: rows must be a pure function of (config, seed) so a
+    /// resumed sweep reproduces an uninterrupted one byte-for-byte.
+    pub fn to_row(&self) -> Row {
+        Row::new()
+            .str("scheme", &self.scheme)
+            .str("env", &self.env)
+            .num("acc_ema", self.final_ema, 3)
+            .num("tail_acc", self.tail_acc, 3)
+            .num("overall_acc", self.overall_acc, 3)
+            .int("max_cell_writes", self.max_cell_writes)
+            .int("total_writes", self.total_writes)
+            .num("energy_uj", self.write_energy_pj / 1e6, 1)
+            .int("flush_commits", self.flush_commits)
+            .int("flush_deferrals", self.flush_deferrals)
+            .int("kappa_skips", self.kappa_skips)
+    }
+
+    /// The (step, accEMA, maxWrites) series as a JSON array, for
+    /// `Row::detail` payloads.
+    pub fn series_json(&self) -> Json {
+        Json::Arr(
+            self.series
+                .iter()
+                .map(|&(s, a, w)| {
+                    Json::Arr(vec![
+                        Json::Num(s as f64),
+                        Json::Num(a),
+                        Json::Num(w as f64),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     pub fn summary_line(&self) -> String {
         format!(
             "{:<13} {:<13} ema={:.3} tail={:.3} maxW={:<8} totW={:<10} \
@@ -119,6 +156,37 @@ mod tests {
         assert!((m.overall_acc() - 5.0 / 6.0).abs() < 1e-12);
         assert_eq!(m.tail_acc(), 1.0); // last 4 all correct
         assert!(m.acc_ema.get() > 0.5);
+    }
+
+    #[test]
+    fn report_row_is_structured_and_deterministic() {
+        let rep = RunReport {
+            scheme: "lrt-biased".into(),
+            env: "control".into(),
+            final_ema: 0.5,
+            tail_acc: 0.25,
+            overall_acc: 0.75,
+            max_cell_writes: 3,
+            total_writes: 30,
+            write_energy_pj: 2e6,
+            endurance_used: 0.0,
+            series: vec![(10, 0.5, 3)],
+            flush_commits: 2,
+            flush_deferrals: 1,
+            kappa_skips: 0,
+            wall_secs: 1.23,
+        };
+        let row = rep.to_row();
+        assert_eq!(row.text("scheme"), Some("lrt-biased"));
+        assert_eq!(row.text("acc_ema"), Some("0.500"));
+        assert_eq!(row.text("max_cell_writes"), Some("3"));
+        // wall time must never leak into structured rows
+        assert!(row.value("wall_secs").is_none());
+        assert!(!row.jsonl().contains("1.23"));
+        assert_eq!(
+            rep.series_json().to_string_compact(),
+            "[[10,0.5,3]]"
+        );
     }
 
     #[test]

@@ -2,6 +2,9 @@
 //! offline pretraining -> deployment -> supervised online stream with
 //! drift injection and metrics.
 
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
 use super::config::{RunConfig, Scheme};
 use super::device::NativeDevice;
 use super::metrics::{Metrics, RunReport};
@@ -52,6 +55,40 @@ pub fn pretrain(cfg: &RunConfig, verbose: bool) -> (Params, model::AuxState) {
         }
     }
     (params, aux)
+}
+
+/// Everything `pretrain` actually reads from the config: sweeps whose
+/// cells agree on this key deploy one shared offline phase.
+type PretrainKey = (u64, usize, u32, u32);
+
+fn pretrain_key(cfg: &RunConfig) -> PretrainKey {
+    (cfg.seed, cfg.offline_samples, cfg.w_bits, cfg.bn_batch.to_bits())
+}
+
+static PRETRAIN_CACHE: OnceLock<
+    Mutex<HashMap<PretrainKey, (Params, model::AuxState)>>,
+> = OnceLock::new();
+
+/// Memoized `pretrain`: grid cells that share (seed, offline budget,
+/// bitwidth, BN horizon) reuse one offline phase instead of re-running
+/// it per cell — the registry's replacement for the hand-rolled shared
+/// pretraining the old fig6 driver did. `pretrain` is a pure function
+/// of the key, so the cache can only change wall-clock, never numbers.
+/// The lock IS held while computing a cold key: sweep cells racing on
+/// the same pretraining block until the first one fills it (the
+/// computing thread never needs the blocked ones — the kernels degrade
+/// to sequential when the pool budget is taken — so this cannot
+/// deadlock, and it beats every racer redundantly pretraining).
+pub fn pretrain_cached(cfg: &RunConfig) -> (Params, model::AuxState) {
+    let cache = PRETRAIN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = pretrain_key(cfg);
+    let mut guard = cache.lock().unwrap();
+    if let Some(hit) = guard.get(&key) {
+        return hit.clone();
+    }
+    let out = pretrain(cfg, false);
+    guard.insert(key, out.clone());
+    out
 }
 
 pub struct Trainer {
@@ -222,6 +259,21 @@ mod tests {
                 assert_eq!(rep.total_writes, 0);
             }
         }
+    }
+
+    #[test]
+    fn pretrain_cache_is_transparent() {
+        let mut cfg = RunConfig::default();
+        cfg.offline_samples = 30;
+        cfg.seed = 77;
+        let (p1, a1) = pretrain_cached(&cfg);
+        let (p2, _) = pretrain(&cfg, false);
+        for i in 0..crate::nn::arch::N_LAYERS {
+            assert_eq!(p1.w[i].data, p2.w[i].data);
+        }
+        let (p3, a3) = pretrain_cached(&cfg);
+        assert_eq!(p1.w[0].data, p3.w[0].data);
+        assert_eq!(a1.mn, a3.mn);
     }
 
     #[test]

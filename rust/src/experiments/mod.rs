@@ -1,27 +1,28 @@
-//! Experiment drivers regenerating every table and figure in the paper's
-//! evaluation (DESIGN.md section 5 maps each to its bench target). The
-//! bench binaries and the CLI are thin wrappers over these functions.
+//! Experiment layer: a declarative scenario registry + resumable sweep
+//! engine (see `registry` module docs for the contract).
 //!
-//! Default workloads are CI-sized; `LRT_FULL=1` switches to paper-scale
-//! sample counts / dimensions.
+//! Every figure/table of the paper's evaluation, the fleet runner, and
+//! the new deployment studies are [`Scenario`]s in
+//! [`scenarios`], discovered via `lrt-nvm list` and executed via
+//! `lrt-nvm run <name>` / `resume <name>`. The bench binaries are thin
+//! wrappers over [`run_ephemeral`].
+//!
+//! Default workloads are CI-sized; `LRT_FULL=1` (recorded in the
+//! results-file header) switches to paper-scale sample counts.
 
-use crate::convex;
-use crate::coordinator::config::{RunConfig, Scheme};
-use crate::coordinator::trainer::{pretrain, Trainer};
-use crate::data::Env;
-use crate::lrt::Variant;
-use crate::nn::arch::LAYER_DIMS;
-use crate::nvm::energy::LayerGeom;
-use crate::transfer::{self, Algo};
-use crate::util::cli::full_scale;
-use crate::util::rng::Rng;
-use crate::util::stats;
-use crate::util::table::Table;
+pub mod registry;
+pub mod scenarios;
 
-/// Run `n` closures on worker threads, preserving order.
+pub use registry::{
+    all, find, run_ephemeral, run_sweep, Axis, Cell, Grid, Scenario,
+    SweepOptions, SweepOutcome,
+};
+
+/// Run `n` closures on worker threads, preserving order — the fan-out
+/// primitive behind the sweep engine's cells.
 ///
-/// Delegates to the shared `tensor::kernels` pool, so sweep points and
-/// the blocked kernels inside each point split one global thread budget
+/// Delegates to the shared `tensor::kernels` pool, so sweep cells and
+/// the blocked kernels inside each cell split one global thread budget
 /// (`LRT_KERNEL_THREADS`) instead of oversubscribing the machine.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
@@ -29,600 +30,6 @@ where
     F: Fn(usize) -> T + Sync,
 {
     crate::tensor::kernels::run_scoped(n, f)
-}
-
-// ---------------------------------------------------------------------
-// Figure 3: auxiliary area vs inverse write density
-// ---------------------------------------------------------------------
-
-pub fn fig3() -> String {
-    let mut out = String::new();
-    out.push_str(
-        "Figure 3: auxiliary SRAM area (um^2) vs inverse write density \
-         rho^-1,\nsummed over the paper CNN's weight layers \
-         (ab = accumulator bits).\n\n",
-    );
-    let geoms: Vec<LayerGeom> = LAYER_DIMS
-        .iter()
-        .map(|&(n_o, n_i)| LayerGeom { n_o, n_i, wb: 8 })
-        .collect();
-    let mut t = Table::new(vec![
-        "batch B", "naive(um2)", "bSRAM(um2)", "bRRAM(um2)", "online",
-        "LRT r=4(um2)", "naive 1/rho", "LRT 1/rho",
-    ]);
-    for &batch in &[1usize, 3, 10, 30, 100, 300, 1000] {
-        let sum =
-            |f: &dyn Fn(&LayerGeom) -> (f64, f64)| -> (f64, f64) {
-                let mut area = 0.0;
-                let mut inv = 0.0f64;
-                for g in &geoms {
-                    let (a, d) = f(g);
-                    area += a;
-                    inv = d; // same per layer
-                }
-                (area, inv)
-            };
-        let (a_naive, d_naive) = sum(&|g| g.naive_batch(batch, 16));
-        let (a_bs, _) = sum(&|g| g.batch_sram(batch, 8));
-        let (a_br, _) = sum(&|g| g.batch_rram(batch, 8));
-        let (a_on, d_on) = sum(&|g| g.online());
-        let (a_lrt, d_lrt) = sum(&|g| g.lrt(4, batch, 16));
-        t.row(vec![
-            format!("{batch}"),
-            format!("{a_naive:.0}"),
-            format!("{a_bs:.0}"),
-            format!("{a_br:.0}"),
-            format!("{a_on:.0}"),
-            format!("{a_lrt:.0}"),
-            format!("{d_naive:.0}"),
-            format!("{d_lrt:.0}"),
-        ]);
-        let _ = d_on;
-    }
-    out.push_str(&t.render());
-    out.push_str(
-        "\nShape check (paper): naive batch area exceeds chip budget and \
-         is batch-independent; batch-SRAM area grows ~B; LRT area is \
-         batch-independent AND small, while its 1/rho grows with B — the \
-         decoupling claim.\n",
-    );
-    out
-}
-
-// ---------------------------------------------------------------------
-// Figure 5: convex convergence
-// ---------------------------------------------------------------------
-
-pub fn fig5() -> String {
-    let full = full_scale();
-    let (n_i, n_o, b) = if full { (1024, 256, 100) } else { (96, 32, 48) };
-    let steps = 50;
-    let mut rng = Rng::new(5);
-    let prob = convex::LinReg::new(n_i, n_o, b, &mut rng);
-    let mut out = format!(
-        "Figure 5: linear regression X({n_i}x{b}), Y({n_o}x{b}), 50 SGD \
-         steps, lr ~ 1/sqrt(t)\n  c~ = {:.4}  C = {:.4}\n\n(a) true \
-         gradients + Gaussian noise:\n",
-        prob.c_min_nonzero, prob.c_max
-    );
-    let mut ta = Table::new(vec![
-        "noise", "final loss", "mean ||eps||", "mean c-wall", "mean C-wall",
-        "converged",
-    ]);
-    for &sigma in &[0.0f32, 0.01, 0.03, 0.1, 0.3, 1.0] {
-        let stats_v =
-            convex::run_noisy_sgd(&prob, sigma, 0.5, steps, &mut rng);
-        let eps: Vec<f64> =
-            stats_v.iter().map(|s| s.eps_norm as f64).collect();
-        let cw: Vec<f64> = stats_v.iter().map(|s| s.rhs_c as f64).collect();
-        let cmw: Vec<f64> =
-            stats_v.iter().map(|s| s.rhs_cmax as f64).collect();
-        let final_loss = stats_v.last().unwrap().loss;
-        ta.row(vec![
-            format!("{sigma}"),
-            format!("{final_loss:.4}"),
-            format!("{:.4}", stats::mean(&eps)),
-            format!("{:.4}", stats::mean(&cw)),
-            format!("{:.4}", stats::mean(&cmw)),
-            format!("{}", final_loss < 0.5 * stats_v[0].loss),
-        ]);
-    }
-    out.push_str(&ta.render());
-    out.push_str("\n(b) biased/unbiased LRT gradients (rank 10):\n");
-    let mut tb = Table::new(vec![
-        "variant", "lr", "final loss", "||eps|| t=5", "||eps|| t=45",
-        "c-wall t=45", "C-wall t=45",
-    ]);
-    for &(variant, name) in &[
-        (Variant::Biased, "bLRT"),
-        (Variant::Unbiased, "uLRT"),
-    ] {
-        for &lr in &[0.1f32, 0.3, 1.0] {
-            let sv = convex::run_lrt(&prob, variant, 10, lr, steps, &mut rng);
-            let last = sv.last().unwrap();
-            tb.row(vec![
-                name.to_string(),
-                format!("{lr}"),
-                format!("{:.4}", last.loss),
-                format!("{:.4}", sv[5].eps_norm),
-                format!("{:.4}", sv[45].eps_norm),
-                format!("{:.4}", sv[45].rhs_c),
-                format!("{:.4}", sv[45].rhs_cmax),
-            ]);
-        }
-    }
-    out.push_str(&tb.render());
-    out.push_str(
-        "\nShape check (paper Fig 5): convergence stalls once ||eps|| \
-         crosses the c-wall; both LRT variants reduce ||eps|| as training \
-         progresses; uLRT carries more variance than bLRT.\n",
-    );
-    out
-}
-
-// ---------------------------------------------------------------------
-// Figure 6: adaptation across environments
-// ---------------------------------------------------------------------
-
-pub struct Fig6Cell {
-    pub env: &'static str,
-    pub scheme: String,
-    pub final_ema: f64,
-    pub tail: f64,
-    pub max_writes: u64,
-    pub series: Vec<(usize, f64, u64)>,
-}
-
-pub fn fig6_schemes() -> Vec<(String, RunConfig)> {
-    let base = RunConfig::default();
-    let mk = |name: &str, scheme: Scheme, mn: bool| {
-        let mut c = base.clone();
-        c.scheme = scheme;
-        c.use_maxnorm = mn;
-        (name.to_string(), c)
-    };
-    vec![
-        mk("inference", Scheme::Inference, true),
-        mk("bias-only", Scheme::BiasOnly, true),
-        mk("sgd", Scheme::Sgd, true),
-        mk("lrt/no-norm", Scheme::Lrt { variant: Variant::Biased }, false),
-        mk("lrt/max-norm", Scheme::Lrt { variant: Variant::Biased }, true),
-    ]
-}
-
-pub fn fig6(samples: usize, offline: usize, seed: u64) -> (String, Vec<Fig6Cell>) {
-    let envs = [
-        Env::Control,
-        Env::DistShift,
-        Env::AnalogDrift,
-        Env::DigitalDrift,
-    ];
-    let schemes = fig6_schemes();
-    // one shared pretraining per seed
-    let mut pcfg = RunConfig::default();
-    pcfg.seed = seed;
-    pcfg.offline_samples = offline;
-    let (params, aux) = pretrain(&pcfg, false);
-
-    let jobs: Vec<(Env, String, RunConfig)> = envs
-        .iter()
-        .flat_map(|&env| {
-            schemes.iter().map(move |(name, cfg)| {
-                let mut c = cfg.clone();
-                c.env = env;
-                c.samples = samples;
-                c.seed = seed;
-                c.offline_samples = offline;
-                // shifts must occur within the run at CI scale
-                c.shift_period = (samples as u64 / 4).max(1);
-                c.drift = match env {
-                    Env::AnalogDrift => {
-                        crate::nvm::drift::DriftCfg::analog(10.0)
-                    }
-                    Env::DigitalDrift => {
-                        crate::nvm::drift::DriftCfg::digital(10.0)
-                    }
-                    _ => crate::nvm::drift::DriftCfg::NONE,
-                };
-                (env, name.clone(), c)
-            })
-        })
-        .collect();
-
-    let cells: Vec<Fig6Cell> = parallel_map(jobs.len(), |i| {
-        let (env, name, cfg) = &jobs[i];
-        let rep = Trainer::new(cfg.clone(), params.clone(), aux.clone()).run();
-        Fig6Cell {
-            env: env.name(),
-            scheme: name.clone(),
-            final_ema: rep.final_ema,
-            tail: rep.tail_acc,
-            max_writes: rep.max_cell_writes,
-            series: rep.series,
-        }
-    });
-
-    let mut out = format!(
-        "Figure 6: online adaptation, {samples} samples, offline \
-         pretrain {offline}, seed {seed}\n\n"
-    );
-    let mut t = Table::new(vec![
-        "env", "scheme", "acc EMA(0.999)", "tail-500 acc", "max cell writes",
-    ]);
-    for c in &cells {
-        t.row(vec![
-            c.env.to_string(),
-            c.scheme.clone(),
-            format!("{:.3}", c.final_ema),
-            format!("{:.3}", c.tail),
-            format!("{}", c.max_writes),
-        ]);
-    }
-    out.push_str(&t.render());
-    out.push_str(
-        "\nShape check (paper Fig 6): inference wins only in control; \
-         SGD ~ bias-only (sub-LSB updates vanish); LRT improves in the \
-         drift cases; LRT max-writes ~2-3 orders below SGD; lrt/max-norm \
-         best overall.\n",
-    );
-    (out, cells)
-}
-
-// ---------------------------------------------------------------------
-// Figure 7 + Figure 11: rank/bitwidth and learning-rate sweeps
-// ---------------------------------------------------------------------
-
-pub fn fig7(samples: usize, seed: u64) -> String {
-    let ranks = [1usize, 2, 4, 8];
-    let bits = [1u32, 2, 4, 8];
-    let jobs: Vec<(usize, u32)> = ranks
-        .iter()
-        .flat_map(|&r| bits.iter().map(move |&b| (r, b)))
-        .collect();
-    let accs: Vec<f64> = parallel_map(jobs.len(), |i| {
-        let (rank, w_bits) = jobs[i];
-        let mut cfg = RunConfig::default();
-        cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
-        cfg.rank = rank;
-        cfg.w_bits = w_bits;
-        cfg.samples = samples;
-        cfg.offline_samples = 0; // from scratch, per the figure
-        cfg.lr_w = 0.03; // Fig 11 optimum for from-scratch runs
-        cfg.lr_b = 0.03;
-        cfg.seed = seed;
-        let params = crate::nn::model::Params::init(
-            &mut Rng::new(seed ^ 0xF16_7),
-            w_bits,
-        );
-        let rep = Trainer::new(cfg, params, crate::nn::model::AuxState::new()).run();
-        rep.tail_acc
-    });
-    let mut out = format!(
-        "Figure 7: accuracy (last 500 of {samples} from scratch) across \
-         LRT rank x weight bitwidth (mid-rise for 1-2b)\n\n"
-    );
-    let mut t = Table::new(vec![
-        "rank \\ bits", "1", "2", "4", "8",
-    ]);
-    for (ri, &r) in ranks.iter().enumerate() {
-        let mut row = vec![format!("r={r}")];
-        for bi in 0..bits.len() {
-            row.push(format!("{:.3}", accs[ri * bits.len() + bi]));
-        }
-        t.row(row);
-    }
-    out.push_str(&t.render());
-    out.push_str(
-        "\nShape check (paper Fig 7): accuracy increases with both rank \
-         and bitwidth.\n",
-    );
-    out
-}
-
-pub fn fig11(samples: usize, seed: u64) -> String {
-    let lrs = [0.003f32, 0.01, 0.03, 0.1];
-    let mut jobs: Vec<(String, Scheme, bool, f32)> = Vec::new();
-    for &(name, scheme) in
-        &[("sgd", Scheme::Sgd), ("lrt", Scheme::Lrt { variant: Variant::Biased })]
-    {
-        for &mn in &[false, true] {
-            for &lr in &lrs {
-                jobs.push((name.to_string(), scheme, mn, lr));
-            }
-        }
-    }
-    let accs: Vec<f64> = parallel_map(jobs.len(), |i| {
-        let (_, scheme, mn, lr) = jobs[i].clone();
-        let mut cfg = RunConfig::default();
-        cfg.scheme = scheme;
-        cfg.use_maxnorm = mn;
-        cfg.lr_w = lr;
-        cfg.lr_b = lr;
-        cfg.samples = samples;
-        cfg.offline_samples = 0;
-        cfg.seed = seed;
-        let params = crate::nn::model::Params::init(
-            &mut Rng::new(seed ^ 0xF11),
-            8,
-        );
-        Trainer::new(cfg, params, crate::nn::model::AuxState::new()).run().tail_acc
-    });
-    let mut out = format!(
-        "Figure 11: learning-rate sweeps (tail acc, {samples} samples \
-         from scratch; LRT lr is the per-flush rate with sqrt-B deferral \
-         scaling)\n\n"
-    );
-    let mut t = Table::new(vec![
-        "scheme/norm", "lr=0.003", "0.01", "0.03", "0.1",
-    ]);
-    for (gi, group) in
-        ["sgd/no-norm", "sgd/max-norm", "lrt/no-norm", "lrt/max-norm"]
-            .iter()
-            .enumerate()
-    {
-        let mut row = vec![group.to_string()];
-        for li in 0..lrs.len() {
-            row.push(format!("{:.3}", accs[gi * lrs.len() + li]));
-        }
-        t.row(row);
-    }
-    out.push_str(&t.render());
-    out
-}
-
-// ---------------------------------------------------------------------
-// Table 1: transfer-learning recovery
-// ---------------------------------------------------------------------
-
-pub fn table1(seeds: usize, samples: usize, n_classes: usize) -> String {
-    let lrs = [0.003f32, 0.01, 0.03, 0.1, 0.3];
-    let algos: Vec<Algo> = vec![
-        Algo::Sgd,
-        Algo::Uoro,
-        Algo::LrtBiased(1),
-        Algo::LrtBiased(2),
-        Algo::LrtBiased(4),
-        Algo::LrtBiased(8),
-        Algo::LrtUnbiased(1),
-        Algo::LrtUnbiased(2),
-        Algo::LrtUnbiased(4),
-        Algo::LrtUnbiased(8),
-    ];
-    // problems per seed (shared across algos)
-    let problems: Vec<_> = parallel_map(seeds, |s| {
-        transfer::make_problem(n_classes, s as u64 + 1)
-    });
-    let mut out = format!(
-        "Table 1: accuracy recovery beyond inference (%), {n_classes} \
-         classes x 512 features, {samples} online samples, B=100, \
-         max-norm, {seeds} seeds\nStart accuracies: {:?}\n\n",
-        problems
-            .iter()
-            .map(|(_, _, a)| format!("{:.1}%", a * 100.0))
-            .collect::<Vec<_>>()
-    );
-    let tail = (samples / 3).max(100);
-    let jobs: Vec<(usize, usize)> = (0..algos.len())
-        .flat_map(|a| (0..lrs.len()).map(move |l| (a, l)))
-        .collect();
-    let cells: Vec<(f64, f64)> = parallel_map(jobs.len(), |j| {
-        let (ai, li) = jobs[j];
-        let recs: Vec<f64> = (0..seeds)
-            .map(|s| {
-                let (gen, head, start) = &problems[s];
-                let acc = transfer::recover(
-                    gen,
-                    head,
-                    algos[ai],
-                    lrs[li],
-                    samples,
-                    tail,
-                    s as u64 * 77 + ai as u64,
-                );
-                (acc - start) * 100.0
-            })
-            .collect();
-        (stats::mean(&recs), stats::std_unbiased(&recs))
-    });
-    let mut t = Table::new(vec![
-        "algorithm", "lr=0.003", "0.01", "0.03", "0.1", "0.3",
-    ]);
-    for (ai, algo) in algos.iter().enumerate() {
-        let mut row = vec![algo.name()];
-        for li in 0..lrs.len() {
-            let (m, s) = cells[ai * lrs.len() + li];
-            row.push(format!("{m:+.1}±{s:.1}"));
-        }
-        t.row(row);
-    }
-    out.push_str(&t.render());
-    out.push_str(
-        "\nShape check (paper Table 1): LRT variants recover strongly at \
-         moderate lr; SGD recovery is weak at low lr (sub-LSB updates); \
-         UORO is unstable at higher lr; everything diverges at lr=0.3.\n",
-    );
-    out
-}
-
-// ---------------------------------------------------------------------
-// Table 2: biased/unbiased per layer group
-// ---------------------------------------------------------------------
-
-pub fn table2(samples: usize, seeds: usize) -> String {
-    let combos = [
-        ("Biased", "Biased", Variant::Biased, Variant::Biased),
-        ("Biased", "Unbiased", Variant::Biased, Variant::Unbiased),
-        ("Unbiased", "Biased", Variant::Unbiased, Variant::Biased),
-        ("Unbiased", "Unbiased", Variant::Unbiased, Variant::Unbiased),
-    ];
-    let mut jobs = Vec::new();
-    for ci in 0..combos.len() {
-        for &mn in &[false, true] {
-            for s in 0..seeds {
-                jobs.push((ci, mn, s as u64));
-            }
-        }
-    }
-    let accs: Vec<f64> = parallel_map(jobs.len(), |j| {
-        let (ci, mn, seed) = jobs[j];
-        let (_, _, conv_v, fc_v) = combos[ci];
-        let mut cfg = RunConfig::default();
-        cfg.scheme = Scheme::Lrt { variant: conv_v };
-        cfg.lrt_variants =
-            Some([conv_v, conv_v, conv_v, conv_v, fc_v, fc_v]);
-        cfg.use_maxnorm = mn;
-        cfg.samples = samples;
-        cfg.offline_samples = 0; // from scratch per the table
-        cfg.lr_w = 0.03; // Fig 11 optimum
-        cfg.lr_b = 0.03;
-        cfg.seed = seed;
-        let params =
-            crate::nn::model::Params::init(&mut Rng::new(seed ^ 0x7B2), 8);
-        Trainer::new(cfg, params, crate::nn::model::AuxState::new()).run().tail_acc * 100.0
-    });
-    let mut out = format!(
-        "Table 2: biased vs unbiased SVD per layer group (tail-500 acc %, \
-         {samples} from scratch, {seeds} seeds)\n\n"
-    );
-    let mut t = Table::new(vec![
-        "Conv LRT", "FC LRT", "Acc (no-norm)", "Acc (max-norm)",
-    ]);
-    for (ci, &(cn, fnm, _, _)) in combos.iter().enumerate() {
-        let grab = |mn_idx: usize| -> String {
-            let base = ci * 2 * seeds + mn_idx * seeds;
-            let vals: Vec<f64> = (0..seeds).map(|s| accs[base + s]).collect();
-            format!(
-                "{:.1}%±{:.1}%",
-                stats::mean(&vals),
-                stats::std_unbiased(&vals)
-            )
-        };
-        t.row(vec![
-            cn.to_string(),
-            fnm.to_string(),
-            grab(0),
-            grab(1),
-        ]);
-    }
-    out.push_str(&t.render());
-    out
-}
-
-// ---------------------------------------------------------------------
-// Table 3: miscellaneous ablations
-// ---------------------------------------------------------------------
-
-pub fn table3(samples: usize, seeds: usize) -> String {
-    type Mod = (&'static str, fn(&mut RunConfig));
-    let mods: Vec<Mod> = vec![
-        ("baseline (no modifications)", |_| {}),
-        ("bias-only training", |c| c.scheme = Scheme::BiasOnly),
-        ("no streaming batch norm", |c| c.bn_stream = false),
-        ("no bias training", |c| c.train_bias = false),
-        ("kappa_th = 1e8 instead of 100", |c| c.kappa_th = 1e8),
-        // scheduler design-choice ablations (DESIGN.md section 5)
-        ("rho_min = 0 (always commit)", |c| c.rho_min = 0.0),
-        ("rho_min = 0.05 (strict gate)", |c| c.rho_min = 0.05),
-        ("batch B x5 (50/500)", |c| {
-            c.batch = [50, 50, 50, 50, 500, 500]
-        }),
-    ];
-    let mut jobs = Vec::new();
-    for mi in 0..mods.len() {
-        for &mn in &[false, true] {
-            for s in 0..seeds {
-                jobs.push((mi, mn, s as u64));
-            }
-        }
-    }
-    let accs: Vec<f64> = parallel_map(jobs.len(), |j| {
-        let (mi, mn, seed) = jobs[j];
-        let mut cfg = RunConfig::default();
-        cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
-        cfg.use_maxnorm = mn;
-        cfg.samples = samples;
-        cfg.offline_samples = 0;
-        cfg.lr_w = 0.03; // Fig 11 optimum
-        cfg.lr_b = 0.03;
-        cfg.seed = seed;
-        (mods[mi].1)(&mut cfg);
-        let params =
-            crate::nn::model::Params::init(&mut Rng::new(seed ^ 0x7B3), 8);
-        Trainer::new(cfg, params, crate::nn::model::AuxState::new()).run().tail_acc * 100.0
-    });
-    let mut out = format!(
-        "Table 3: ablations (tail-500 acc %, {samples} from scratch, \
-         {seeds} seeds)\n\n"
-    );
-    let mut t =
-        Table::new(vec!["modified condition", "no-norm", "max-norm"]);
-    for (mi, &(name, _)) in mods.iter().enumerate() {
-        let grab = |mn_idx: usize| -> String {
-            let base = mi * 2 * seeds + mn_idx * seeds;
-            let vals: Vec<f64> = (0..seeds).map(|s| accs[base + s]).collect();
-            format!(
-                "{:.1}%±{:.1}%",
-                stats::mean(&vals),
-                stats::std_unbiased(&vals)
-            )
-        };
-        t.row(vec![name.to_string(), grab(0), grab(1)]);
-    }
-    out.push_str(&t.render());
-    out.push_str(
-        "\nShape check (paper Table 3): bias-only shows the largest drop; \
-         removing streaming BN hurts mainly the no-norm case; kappa_th \
-         ablation is roughly neutral.\n",
-    );
-    out
-}
-
-// ---------------------------------------------------------------------
-// Figure 9: gradient magnitudes (max-norm motivation)
-// ---------------------------------------------------------------------
-
-pub fn fig9(steps: usize, seed: u64) -> String {
-    use crate::data::online::{OnlineStream, Partition};
-    use crate::nn::model;
-    let mut rng = Rng::new(seed);
-    let mut params = model::Params::init(&mut rng, 8);
-    let mut aux = model::AuxState::new();
-    let stream =
-        OnlineStream::new(seed, Partition::Online, Env::Control);
-    let mut out = format!(
-        "Figure 9: max |weight gradient| (layer fc5) vs step, SGD, \
-         no max-norm\n\nstep  max|dW5|\n"
-    );
-    let qw = crate::quant::QW;
-    let mut maxima = Vec::new();
-    for t in 0..steps {
-        let s = stream.sample(t as u64);
-        let caches =
-            model::forward(&params, &mut aux, &s.image, 0.99, true, 8, true);
-        let (_, dlogits) = model::softmax_xent(&caches.logits, s.label);
-        let grads =
-            model::backward(&params, &mut aux, caches, &dlogits, false, 8);
-        let dw = grads.full(4);
-        maxima.push(dw.max_abs());
-        for i in 0..6 {
-            let dwi = grads.full(i);
-            for (wv, &g) in params.w[i].data.iter_mut().zip(dwi.data.iter())
-            {
-                *wv = qw.q(*wv - 0.03 * g);
-            }
-        }
-        model::apply_bias_updates(&mut params, &grads, 0.03, true);
-        if t % (steps / 20).max(1) == 0 {
-            out.push_str(&format!("{t:>5}  {:.5}\n", maxima[t]));
-        }
-    }
-    let mx: Vec<f64> = maxima.iter().map(|&v| v as f64).collect();
-    out.push_str(&format!(
-        "\ndynamic range: max/median = {:.1}x (the large spread is the \
-         paper's motivation for max-norm over fixed-range Qg)\n",
-        stats::percentile(&mx, 100.0) / stats::percentile(&mx, 50.0).max(1e-9)
-    ));
-    out
 }
 
 #[cfg(test)]
@@ -636,15 +43,20 @@ mod tests {
     }
 
     #[test]
-    fn fig3_renders() {
-        let s = fig3();
-        assert!(s.contains("LRT r=4"));
-        assert!(s.lines().count() > 8);
+    fn fig3_renders_through_registry() {
+        let outcome = run_ephemeral("fig3", &[]).unwrap();
+        assert!(outcome.complete);
+        assert_eq!(outcome.cells_total, 7);
+        assert!(outcome.rendered.contains("lrt_r4_um2"));
+        assert!(outcome.rendered.lines().count() > 8);
     }
 
     #[test]
-    fn fig9_runs_short() {
-        let s = fig9(20, 3);
-        assert!(s.contains("dynamic range"));
+    fn fig9_runs_short_through_registry() {
+        let outcome = run_ephemeral("fig9", &[("steps", "20")]).unwrap();
+        assert!(outcome.complete);
+        assert!(outcome.rendered.contains("max_over_median"));
+        // 20 steps log every step plus the summary row
+        assert_eq!(outcome.rows.len(), 21);
     }
 }

@@ -1,0 +1,743 @@
+//! Declarative scenario registry + resumable sweep engine.
+//!
+//! Every experiment — the paper's figures and tables, the fleet runner,
+//! and any new deployment study — is a [`Scenario`]: a name, a
+//! description, a declarative parameter [`Grid`] over [`RunConfig`], and
+//! a `run_cell` body that turns one grid cell into structured [`Row`]s.
+//! The [`run_sweep`] engine owns everything the old hand-rolled drivers
+//! copy-pasted:
+//!
+//! - **grid expansion** — row-major cartesian product of the axes, each
+//!   cell's `RunConfig` derived by applying `key=value` axis assignments
+//!   through [`RunConfig::set`];
+//! - **deterministic seeding** — `cell.seed` is a pure function of the
+//!   base seed and the cell id (FNV-1a), stable across runs and axis
+//!   reorderings of unrelated cells;
+//! - **pooled fan-out** — cells run on the shared `tensor::kernels`
+//!   worker pool, so sweep-level parallelism and the blocked kernels
+//!   inside each cell split the one `LRT_KERNEL_THREADS` budget;
+//! - **checkpointed results** — each completed cell is appended to the
+//!   results file as one JSON Lines record the moment it finishes, so a
+//!   killed sweep resumes (`lrt-nvm resume <scenario>`) instead of
+//!   restarting; on completion the file is rewritten in cell order, so
+//!   an interrupted-and-resumed sweep produces the same bytes as an
+//!   uninterrupted one;
+//! - **rendering** — rows render as one aligned table for humans
+//!   (`util::table::render_rows`) and as JSON Lines for machines.
+//!
+//! Rows must be a pure function of (cell config, seed): no clocks, no
+//! global state. `RunReport::to_row` already drops wall time for this
+//! reason.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, ensure, Context as _, Result};
+
+use crate::coordinator::config::{RunConfig, SetOutcome};
+use crate::util::cli::{full_scale, Args};
+use crate::util::json::Json;
+use crate::util::table::{render_rows, Row};
+
+// ---------------------------------------------------------------------
+// Grid
+// ---------------------------------------------------------------------
+
+/// One sweep dimension: an axis name (a `RunConfig::set` key or a
+/// scenario-specific parameter) and its values as strings.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: &'static str,
+    pub values: Vec<String>,
+}
+
+impl Axis {
+    pub fn new<S: Into<String>>(name: &'static str, values: Vec<S>) -> Axis {
+        let values: Vec<String> =
+            values.into_iter().map(Into::into).collect();
+        assert!(!values.is_empty(), "axis '{name}' has no values");
+        Axis { name, values }
+    }
+
+    pub fn from_display<T: std::fmt::Display>(
+        name: &'static str,
+        values: &[T],
+    ) -> Axis {
+        Axis::new(name, values.iter().map(|v| v.to_string()).collect())
+    }
+
+    /// Parse a comma-separated CLI override ("1,2,4") into an axis.
+    pub fn csv(name: &'static str, spec: &str) -> Axis {
+        Axis::new(
+            name,
+            spec.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// A declarative parameter grid: a fully resolved base `RunConfig` plus
+/// the sweep axes, with `extra` carrying scenario-specific scalars that
+/// are not `RunConfig` fields (e.g. table1's class count).
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub base: RunConfig,
+    pub axes: Vec<Axis>,
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Grid {
+    pub fn new(base: RunConfig) -> Grid {
+        Grid { base, axes: Vec::new(), extra: BTreeMap::new() }
+    }
+
+    pub fn axis(mut self, axis: Axis) -> Grid {
+        self.axes.push(axis);
+        self
+    }
+
+    pub fn extra<S: Into<String>>(mut self, key: &str, value: S) -> Grid {
+        self.extra.insert(key.to_string(), value.into());
+        self
+    }
+
+    /// Number of cells: the product of axis lengths (1 for a grid with
+    /// no axes — a single-cell scenario).
+    pub fn n_cells(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    /// Expand cell `index` (row-major: the first axis varies slowest).
+    pub fn cell(&self, index: usize) -> Cell {
+        assert!(index < self.n_cells(), "cell index out of range");
+        let mut values = Vec::with_capacity(self.axes.len());
+        let mut stride = self.n_cells();
+        for axis in &self.axes {
+            stride /= axis.values.len();
+            let vi = (index / stride) % axis.values.len();
+            values.push((axis.name.to_string(), axis.values[vi].clone()));
+        }
+        let id = if values.is_empty() {
+            "all".to_string()
+        } else {
+            values
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let mut cfg = self.base.clone();
+        for (k, v) in &values {
+            // non-RunConfig axes are the scenario's job (cell.get), but
+            // a malformed value on a config axis must not silently run
+            // the base config under a mislabeled row (the engine's
+            // `validate` surfaces this as a CLI error before any cell
+            // runs; the panic is the backstop for direct cell() users)
+            if cfg.set(k, v) == SetOutcome::BadValue {
+                panic!(
+                    "axis '{k}': value '{v}' does not parse for this \
+                     config field"
+                );
+            }
+        }
+        let seed = self.base.seed ^ fnv1a64(id.as_bytes());
+        Cell {
+            index,
+            id,
+            values,
+            cfg,
+            seed,
+            extra: self.extra.clone(),
+        }
+    }
+
+    /// Check every axis value that addresses a `RunConfig` field;
+    /// returns the first malformed one, so the engine can reject a
+    /// typo'd CLI override (`--ranks 1,x`) as a normal error before
+    /// any cell runs or the results file is touched.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut scratch = self.base.clone();
+        for axis in &self.axes {
+            for v in &axis.values {
+                if scratch.set(axis.name, v) == SetOutcome::BadValue {
+                    return Err(format!(
+                        "axis '{}': value '{v}' does not parse for \
+                         this config field",
+                        axis.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One point of a sweep grid, handed to `Scenario::run_cell`.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub index: usize,
+    /// Stable identity, e.g. `"rank=4,bits=8"` — the resume key.
+    pub id: String,
+    /// Axis assignments in axis order.
+    pub values: Vec<(String, String)>,
+    /// Base config with all `RunConfig`-addressable axes applied.
+    pub cfg: RunConfig,
+    /// Engine-derived deterministic seed (scenarios porting legacy
+    /// experiments may ignore it in favor of their historical
+    /// derivations — numbers stay identical either way).
+    pub seed: u64,
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Cell {
+    /// Value of axis `name`; panics on a typo (a scenario bug, not a
+    /// user error — grids are authored next to their `run_cell`).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .unwrap_or_else(|| panic!("cell has no axis '{name}'"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("axis '{name}' is not a usize"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("axis '{name}' is not a u64"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("axis '{name}' is not a number"))
+    }
+
+    pub fn extra_usize(&self, key: &str, default: usize) -> usize {
+        self.extra
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// Scenario trait + registry
+// ---------------------------------------------------------------------
+
+/// A declaratively specified experiment. Implementations live in
+/// `experiments::scenarios`; adding one is ~30 lines: a grid and a cell
+/// body. Register it in [`all`] and it appears in `lrt-nvm list`,
+/// `run`, `resume`, and the benches.
+pub trait Scenario: Sync {
+    /// Registry key (`lrt-nvm run <name>`).
+    fn name(&self) -> &'static str;
+    /// One-line summary shown by `lrt-nvm list`.
+    fn description(&self) -> &'static str;
+    /// The declarative parameter grid, resolved from CLI options. Must
+    /// be a pure function of `args` (plus `LRT_FULL`, which the engine
+    /// records in the results-file header) so `resume` re-derives the
+    /// identical grid from the recorded options.
+    fn grid(&self, args: &Args) -> Grid;
+    /// Compute one cell. Must be deterministic given the cell (config +
+    /// seed): rows are checkpointed and replayed byte-for-byte.
+    fn run_cell(&self, cell: &Cell) -> Vec<Row>;
+    /// Paper shape-check notes appended to the rendered output.
+    fn notes(&self) -> &'static str {
+        ""
+    }
+}
+
+/// Every registered scenario, in listing order.
+pub fn all() -> Vec<&'static dyn Scenario> {
+    use super::scenarios as sc;
+    static FIG3: sc::writes::Fig3 = sc::writes::Fig3;
+    static FIG5: sc::convex::Fig5 = sc::convex::Fig5;
+    static FIG6: sc::adapt::Fig6 = sc::adapt::Fig6;
+    static FIG7: sc::rank_bits::Fig7 = sc::rank_bits::Fig7;
+    static FIG9: sc::grads::Fig9 = sc::grads::Fig9;
+    static FIG11: sc::lr_sweep::Fig11 = sc::lr_sweep::Fig11;
+    static TABLE1: sc::transfer::Table1 = sc::transfer::Table1;
+    static TABLE2: sc::variants::Table2 = sc::variants::Table2;
+    static TABLE3: sc::ablations::Table3 = sc::ablations::Table3;
+    static FLEET: sc::fleet::Fleet = sc::fleet::Fleet;
+    static DRIFT_STRESS: sc::drift_stress::DriftStress =
+        sc::drift_stress::DriftStress;
+    static CLASS_INC: sc::class_incremental::ClassIncremental =
+        sc::class_incremental::ClassIncremental;
+    vec![
+        &FIG3,
+        &FIG5,
+        &FIG6,
+        &FIG7,
+        &FIG9,
+        &FIG11,
+        &TABLE1,
+        &TABLE2,
+        &TABLE3,
+        &FLEET,
+        &DRIFT_STRESS,
+        &CLASS_INC,
+    ]
+}
+
+pub fn find(name: &str) -> Option<&'static dyn Scenario> {
+    all().into_iter().find(|s| s.name() == name)
+}
+
+// ---------------------------------------------------------------------
+// Sweep engine
+// ---------------------------------------------------------------------
+
+/// Engine knobs (all orthogonal to the scenario's own options).
+#[derive(Debug, Clone, Default)]
+pub struct SweepOptions {
+    /// Results/checkpoint file; `None` runs ephemerally (benches).
+    pub out: Option<PathBuf>,
+    /// Load completed cells from `out` and run only the remainder.
+    pub resume: bool,
+    /// Run at most this many pending cells this invocation (budgeted
+    /// runs and the kill/resume tests); the sweep reports incomplete.
+    pub limit: Option<usize>,
+}
+
+impl SweepOptions {
+    pub fn ephemeral() -> SweepOptions {
+        SweepOptions::default()
+    }
+
+    pub fn to_file(path: PathBuf) -> SweepOptions {
+        SweepOptions { out: Some(path), ..SweepOptions::default() }
+    }
+}
+
+/// What a sweep produced.
+pub struct SweepOutcome {
+    pub scenario: &'static str,
+    pub cells_total: usize,
+    pub cells_restored: usize,
+    pub cells_run: usize,
+    pub complete: bool,
+    /// All available rows in cell order (restored + freshly run).
+    pub rows: Vec<Row>,
+    /// Human rendering: header, aligned table, shape-check notes.
+    pub rendered: String,
+}
+
+/// Option keys that steer the engine rather than the grid; excluded
+/// from the results-file header so `run` and `resume` agree on it.
+const ENGINE_KEYS: &[&str] =
+    &["out", "resume", "fresh", "limit", "json", "dry-run", "quiet", "help"];
+
+/// Expand the grid, fan cells out on the shared worker pool, checkpoint
+/// each completed cell, and render the result. See the module docs for
+/// the resume/replay contract.
+pub fn run_sweep(
+    scenario: &dyn Scenario,
+    args: &Args,
+    opts: &SweepOptions,
+) -> Result<SweepOutcome> {
+    // Effective args: a resumed sweep replays the options recorded in
+    // the results-file header, so its grid is identical by construction.
+    let mut eff = args.clone();
+    // idx -> (cell id, checkpoint line, rows) restored from a prior run
+    let mut restored: BTreeMap<usize, (String, String, Vec<Row>)> =
+        BTreeMap::new();
+    let mut header_line = String::new();
+    if opts.resume {
+        let path = opts
+            .out
+            .as_ref()
+            .context("resume requires a results file path")?;
+        let body = std::fs::read_to_string(path).with_context(|| {
+            format!("reading checkpoint {}", path.display())
+        })?;
+        let mut lines = body.lines().filter(|l| !l.trim().is_empty());
+        header_line = lines
+            .next()
+            .context("checkpoint file is empty")?
+            .to_string();
+        let header = Json::parse(&header_line)
+            .map_err(|e| anyhow!("bad checkpoint header: {e}"))?;
+        let swept = header.get("sweep").and_then(Json::as_str).unwrap_or("");
+        ensure!(
+            swept == scenario.name(),
+            "checkpoint belongs to scenario '{swept}', not '{}'",
+            scenario.name()
+        );
+        eff = Args {
+            command: "run".to_string(),
+            options: BTreeMap::new(),
+            positional: vec![scenario.name().to_string()],
+        };
+        if let Some(Json::Obj(m)) = header.get("options") {
+            for (k, v) in m {
+                if let Some(s) = v.as_str() {
+                    eff.options.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        for line in lines {
+            // a kill mid-append can tear the last line; treat anything
+            // unparseable as "cell not completed" and re-run it
+            let Ok(rec) = Json::parse(line) else { continue };
+            let (Some(idx), Some(id)) = (
+                rec.get("idx").and_then(Json::as_usize),
+                rec.get("cell").and_then(Json::as_str),
+            ) else {
+                continue;
+            };
+            let rows: Vec<Row> = rec
+                .get("rows")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().map(Row::from_json).collect())
+                .unwrap_or_default();
+            restored.insert(idx, (id.to_string(), line.to_string(), rows));
+        }
+    }
+
+    let grid = scenario.grid(&eff);
+    grid.validate().map_err(|e| {
+        anyhow!("invalid grid for scenario '{}': {e}", scenario.name())
+    })?;
+    let n = grid.n_cells();
+    // Drop restored cells the current grid no longer contains (the
+    // scenario or its options changed under the checkpoint).
+    restored.retain(|&idx, (id, _, _)| idx < n && grid.cell(idx).id == *id);
+
+    if !opts.resume {
+        header_line = {
+            let mut options = BTreeMap::new();
+            for (k, v) in &eff.options {
+                if !ENGINE_KEYS.contains(&k.as_str()) {
+                    options.insert(k.clone(), Json::Str(v.clone()));
+                }
+            }
+            if full_scale() {
+                options.insert(
+                    "full".to_string(),
+                    Json::Str("true".to_string()),
+                );
+            }
+            let mut m = BTreeMap::new();
+            m.insert(
+                "sweep".to_string(),
+                Json::Str(scenario.name().to_string()),
+            );
+            m.insert("options".to_string(), Json::Obj(options));
+            Json::Obj(m).to_string_compact()
+        };
+    }
+
+    // Open the checkpoint: fresh runs truncate, resumes append.
+    let file = match &opts.out {
+        Some(path) if !opts.resume => {
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            let mut f = std::fs::File::create(path)?;
+            writeln!(f, "{header_line}")?;
+            f.flush()?;
+            Some(Mutex::new(f))
+        }
+        Some(path) => {
+            Some(Mutex::new(
+                std::fs::OpenOptions::new().append(true).open(path)?,
+            ))
+        }
+        None => None,
+    };
+
+    let mut pending: Vec<usize> =
+        (0..n).filter(|i| !restored.contains_key(i)).collect();
+    if let Some(limit) = opts.limit {
+        pending.truncate(limit);
+    }
+
+    // Fan out; each cell checkpoints the instant it completes, so a
+    // kill between cells loses only in-flight work.
+    let grid_ref = &grid;
+    let file_ref = &file;
+    let results: Vec<(usize, String, Vec<Row>)> =
+        super::parallel_map(pending.len(), |i| {
+            let cell = grid_ref.cell(pending[i]);
+            let rows = scenario.run_cell(&cell);
+            let line = cell_record(&cell, &rows);
+            if let Some(f) = file_ref {
+                let mut f = f.lock().unwrap();
+                let _ = writeln!(f, "{line}");
+                let _ = f.flush();
+            }
+            (cell.index, line, rows)
+        });
+    drop(file);
+
+    let cells_restored = restored.len();
+    let cells_run = results.len();
+    let complete = cells_restored + cells_run == n;
+
+    // Deterministic final file: header + cell records in cell order.
+    // Appended checkpoint lines land in completion order (racy under
+    // the pool), so the rewrite is what makes an interrupted-and-
+    // resumed sweep byte-identical to an uninterrupted one.
+    if complete {
+        if let Some(path) = &opts.out {
+            let mut lines: BTreeMap<usize, &str> = restored
+                .iter()
+                .map(|(&i, (_, line, _))| (i, line.as_str()))
+                .collect();
+            for (i, line, _) in &results {
+                lines.insert(*i, line.as_str());
+            }
+            let mut body =
+                String::with_capacity(header_line.len() + 64 * n);
+            body.push_str(&header_line);
+            body.push('\n');
+            for line in lines.values() {
+                body.push_str(line);
+                body.push('\n');
+            }
+            std::fs::write(path, body)?;
+        }
+    }
+
+    let mut rows_by_idx: BTreeMap<usize, Vec<Row>> = BTreeMap::new();
+    for (i, (_, _, rows)) in restored {
+        rows_by_idx.insert(i, rows);
+    }
+    for (i, _, rows) in results {
+        rows_by_idx.insert(i, rows);
+    }
+    let rows: Vec<Row> = rows_by_idx.into_values().flatten().collect();
+
+    let mut rendered = format!(
+        "{}: {}\n{} cells ({} restored, {} run){}\n\n",
+        scenario.name(),
+        scenario.description(),
+        n,
+        cells_restored,
+        cells_run,
+        if complete { "" } else { " — INCOMPLETE, resume to finish" },
+    );
+    rendered.push_str(&render_rows(&rows));
+    if !scenario.notes().is_empty() {
+        rendered.push('\n');
+        rendered.push_str(scenario.notes());
+        rendered.push('\n');
+    }
+
+    Ok(SweepOutcome {
+        scenario: scenario.name(),
+        cells_total: n,
+        cells_restored,
+        cells_run,
+        complete,
+        rows,
+        rendered,
+    })
+}
+
+/// One results-file record: `{"idx":N,"cell":"...","rows":[...]}`.
+fn cell_record(cell: &Cell, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\"idx\":");
+    s.push_str(&cell.index.to_string());
+    s.push_str(",\"cell\":");
+    s.push_str(&Json::Str(cell.id.clone()).to_string_compact());
+    s.push_str(",\"rows\":[");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&r.jsonl());
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Run a registered scenario ephemerally (no results file) with the
+/// given option overrides — the bench entry point.
+pub fn run_ephemeral(
+    name: &str,
+    kv: &[(&str, &str)],
+) -> Result<SweepOutcome> {
+    let sc = find(name).ok_or_else(|| {
+        anyhow!("unknown scenario '{name}' (see `lrt-nvm list`)")
+    })?;
+    let mut args = Args::default();
+    args.command = "run".to_string();
+    args.positional.push(name.to_string());
+    for (k, v) in kv {
+        args.options.insert((*k).to_string(), (*v).to_string());
+    }
+    run_sweep(sc, &args, &SweepOptions::ephemeral())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Toy;
+    impl Scenario for Toy {
+        fn name(&self) -> &'static str {
+            "toy"
+        }
+        fn description(&self) -> &'static str {
+            "grid-expansion test scenario"
+        }
+        fn grid(&self, args: &Args) -> Grid {
+            Grid::new(RunConfig::default())
+                .axis(Axis::csv("rank", &args.str_opt("ranks", "1,2")))
+                .axis(Axis::new("env", vec!["control", "analog"]))
+                .extra("classes", "20")
+        }
+        fn run_cell(&self, cell: &Cell) -> Vec<Row> {
+            vec![Row::new()
+                .str("cell", cell.id.clone())
+                .int("rank", cell.usize("rank") as u64)
+                .str("env", cell.cfg.env.name())
+                .int("classes", cell.extra_usize("classes", 0) as u64)]
+        }
+    }
+
+    #[test]
+    fn grid_expands_row_major_with_stable_ids() {
+        let g = Toy.grid(&Args::default());
+        assert_eq!(g.n_cells(), 4);
+        let ids: Vec<String> =
+            (0..4).map(|i| g.cell(i).id.clone()).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "rank=1,env=control",
+                "rank=1,env=analog",
+                "rank=2,env=control",
+                "rank=2,env=analog",
+            ]
+        );
+        // axis assignments reach the cell config through RunConfig::set
+        let c = g.cell(3);
+        assert_eq!(c.cfg.rank, 2);
+        assert!(c.cfg.drift.enabled());
+        // engine seeds: deterministic, id-keyed, distinct across cells
+        assert_eq!(c.seed, g.cell(3).seed);
+        assert_ne!(g.cell(0).seed, g.cell(1).seed);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not parse")]
+    fn malformed_config_axis_value_fails_loudly() {
+        let g = Grid::new(RunConfig::default())
+            .axis(Axis::csv("rank", "1,banana"));
+        let _ = g.cell(1);
+    }
+
+    #[test]
+    fn engine_rejects_malformed_grid_as_error_not_panic() {
+        let mut args = Args::default();
+        args.options.insert("ranks".into(), "1,banana".into());
+        let err = run_sweep(&Toy, &args, &SweepOptions::ephemeral());
+        assert!(err.is_err());
+        // scenario-specific (non-RunConfig) axes still validate fine
+        let g = Grid::new(RunConfig::default())
+            .axis(Axis::csv("custom_axis", "x,y"));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn single_cell_grid_has_id_all() {
+        let g = Grid::new(RunConfig::default());
+        assert_eq!(g.n_cells(), 1);
+        assert_eq!(g.cell(0).id, "all");
+    }
+
+    #[test]
+    fn ephemeral_sweep_is_deterministic() {
+        let run = || {
+            let outcome =
+                run_sweep(&Toy, &Args::default(), &SweepOptions::ephemeral())
+                    .unwrap();
+            assert!(outcome.complete);
+            assert_eq!(outcome.cells_run, 4);
+            outcome
+                .rows
+                .iter()
+                .map(|r| r.jsonl())
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_uninterrupted() {
+        let dir = std::env::temp_dir();
+        let a = dir.join(format!(
+            "lrt-registry-a-{}.jsonl",
+            std::process::id()
+        ));
+        let b = dir.join(format!(
+            "lrt-registry-b-{}.jsonl",
+            std::process::id()
+        ));
+        let args = Args::default();
+        // uninterrupted
+        let full = run_sweep(&Toy, &args, &SweepOptions::to_file(a.clone()))
+            .unwrap();
+        assert!(full.complete);
+        // killed after one cell, then resumed
+        let mut opts = SweepOptions::to_file(b.clone());
+        opts.limit = Some(1);
+        let part = run_sweep(&Toy, &args, &opts).unwrap();
+        assert!(!part.complete);
+        assert_eq!(part.cells_run, 1);
+        let mut resume = SweepOptions::to_file(b.clone());
+        resume.resume = true;
+        let done = run_sweep(&Toy, &args, &resume).unwrap();
+        assert!(done.complete);
+        assert_eq!(done.cells_restored, 1);
+        assert_eq!(done.cells_run, 3);
+        let fa = std::fs::read_to_string(&a).unwrap();
+        let fb = std::fs::read_to_string(&b).unwrap();
+        assert_eq!(fa, fb, "resumed file differs from uninterrupted run");
+        // every line is valid JSON
+        for line in fa.lines() {
+            Json::parse(line).unwrap();
+        }
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+    }
+
+    #[test]
+    fn registry_names_unique_and_findable() {
+        let names: Vec<&str> = all().iter().map(|s| s.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate scenario names");
+        assert!(names.len() >= 12, "registry lost scenarios: {names:?}");
+        assert!(find("fig6").is_some());
+        assert!(find("drift-stress").is_some());
+        assert!(find("nope").is_none());
+    }
+}

@@ -1,0 +1,92 @@
+//! Figure 9: max |weight gradient| trace for the last conv/fc layer
+//! under plain SGD — the paper's motivation for max-norm over a
+//! fixed-range gradient quantizer.
+//!
+//! Single-cell scenario: one sequential trace (each step's gradient
+//! depends on every previous update).
+
+use crate::coordinator::config::RunConfig;
+use crate::data::online::{OnlineStream, Partition};
+use crate::data::Env;
+use crate::experiments::registry::{Cell, Grid, Scenario};
+use crate::nn::model;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::Row;
+
+pub struct Fig9;
+
+impl Scenario for Fig9 {
+    fn name(&self) -> &'static str {
+        "fig9"
+    }
+
+    fn description(&self) -> &'static str {
+        "max |weight gradient| (layer fc5) vs step under SGD without \
+         max-norm (paper Fig. 9)"
+    }
+
+    fn grid(&self, args: &Args) -> Grid {
+        let mut base = RunConfig::default();
+        base.seed = args.u64_opt("seed", 0);
+        Grid::new(base)
+            .extra("steps", args.usize_opt("steps", 400).to_string())
+    }
+
+    fn run_cell(&self, cell: &Cell) -> Vec<Row> {
+        let steps = cell.extra_usize("steps", 400);
+        let seed = cell.cfg.seed;
+        let mut rng = Rng::new(seed);
+        let mut params = model::Params::init(&mut rng, 8);
+        let mut aux = model::AuxState::new();
+        let stream =
+            OnlineStream::new(seed, Partition::Online, Env::Control);
+        let qw = crate::quant::QW;
+        let mut maxima = Vec::new();
+        let mut rows = Vec::new();
+        for t in 0..steps {
+            let s = stream.sample(t as u64);
+            let caches = model::forward(
+                &params, &mut aux, &s.image, 0.99, true, 8, true,
+            );
+            let (_, dlogits) = model::softmax_xent(&caches.logits, s.label);
+            let grads =
+                model::backward(&params, &mut aux, caches, &dlogits, false, 8);
+            let dw = grads.full(4);
+            maxima.push(dw.max_abs());
+            for i in 0..6 {
+                let dwi = grads.full(i);
+                for (wv, &g) in
+                    params.w[i].data.iter_mut().zip(dwi.data.iter())
+                {
+                    *wv = qw.q(*wv - 0.03 * g);
+                }
+            }
+            model::apply_bias_updates(&mut params, &grads, 0.03, true);
+            if t % (steps / 20).max(1) == 0 {
+                rows.push(
+                    Row::new()
+                        .str("point", "trace")
+                        .int("step", t as u64)
+                        .num("max_dw5", maxima[t] as f64, 5),
+                );
+            }
+        }
+        let mx: Vec<f64> = maxima.iter().map(|&v| v as f64).collect();
+        rows.push(
+            Row::new().str("point", "summary").num(
+                "max_over_median",
+                stats::percentile(&mx, 100.0)
+                    / stats::percentile(&mx, 50.0).max(1e-9),
+                1,
+            ),
+        );
+        rows
+    }
+
+    fn notes(&self) -> &'static str {
+        "The large max/median dynamic range is the paper's motivation \
+         for max-norm over a fixed-range gradient quantizer Qg."
+    }
+}

@@ -1,0 +1,24 @@
+//! Scenario implementations: every figure/table of the paper's
+//! evaluation plus deployment studies the old hardcoded drivers could
+//! not express. Each file is one [`crate::experiments::Scenario`]: a
+//! declarative grid over `RunConfig` and a `run_cell` body emitting
+//! structured rows.
+//!
+//! Porting contract: the legacy `fig*/table*` functions were replaced
+//! cell-for-cell — identical configs, identical seed derivations (the
+//! historical `seed ^ 0x...` constants are kept on purpose) — so the
+//! numbers match the pre-registry output exactly; only the table layout
+//! is re-rendered (long format, one row per cell).
+
+pub mod ablations;
+pub mod adapt;
+pub mod class_incremental;
+pub mod convex;
+pub mod drift_stress;
+pub mod fleet;
+pub mod grads;
+pub mod lr_sweep;
+pub mod rank_bits;
+pub mod transfer;
+pub mod variants;
+pub mod writes;

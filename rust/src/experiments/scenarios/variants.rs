@@ -1,0 +1,75 @@
+//! Table 2: biased vs unbiased SVD estimator per layer group (convs vs
+//! fully-connected), with and without max-norm.
+
+use crate::coordinator::config::{RunConfig, Scheme};
+use crate::coordinator::trainer::Trainer;
+use crate::experiments::registry::{Axis, Cell, Grid, Scenario};
+use crate::lrt::Variant;
+use crate::nn::model::{AuxState, Params};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::Row;
+
+pub struct Table2;
+
+fn variant_of(v: &str) -> Variant {
+    if v == "unbiased" {
+        Variant::Unbiased
+    } else {
+        Variant::Biased
+    }
+}
+
+impl Scenario for Table2 {
+    fn name(&self) -> &'static str {
+        "table2"
+    }
+
+    fn description(&self) -> &'static str {
+        "biased vs unbiased SVD per layer group, tail acc % from \
+         scratch, mean±std over seeds (paper Table 2)"
+    }
+
+    fn grid(&self, args: &Args) -> Grid {
+        let mut base = RunConfig::default();
+        base.samples = args.usize_opt("samples", 1_500);
+        base.offline_samples = 0; // from scratch per the table
+        Grid::new(base)
+            .axis(Axis::new("conv", vec!["biased", "unbiased"]))
+            .axis(Axis::new("fc", vec!["biased", "unbiased"]))
+            .axis(Axis::new("norm", vec!["no-norm", "max-norm"]))
+            .extra("seeds", args.usize_opt("seeds", 3).to_string())
+    }
+
+    fn run_cell(&self, cell: &Cell) -> Vec<Row> {
+        let seeds = cell.extra_usize("seeds", 3);
+        let conv_v = variant_of(cell.get("conv"));
+        let fc_v = variant_of(cell.get("fc"));
+        let mn = cell.get("norm") == "max-norm";
+        let accs: Vec<f64> = (0..seeds as u64)
+            .map(|seed| {
+                let mut cfg = cell.cfg.clone();
+                cfg.scheme = Scheme::Lrt { variant: conv_v };
+                cfg.lrt_variants =
+                    Some([conv_v, conv_v, conv_v, conv_v, fc_v, fc_v]);
+                cfg.use_maxnorm = mn;
+                cfg.lr_w = 0.03; // Fig 11 optimum
+                cfg.lr_b = 0.03;
+                cfg.seed = seed;
+                let params = Params::init(
+                    &mut Rng::new(seed ^ 0x7B2), // historical derivation
+                    8,
+                );
+                Trainer::new(cfg, params, AuxState::new()).run().tail_acc
+                    * 100.0
+            })
+            .collect();
+        vec![Row::new()
+            .str("conv", cell.get("conv"))
+            .str("fc", cell.get("fc"))
+            .str("norm", cell.get("norm"))
+            .num("acc_mean", stats::mean(&accs), 1)
+            .num("acc_std", stats::std_unbiased(&accs), 1)]
+    }
+}

@@ -1,0 +1,68 @@
+//! Figure 3: auxiliary SRAM area vs inverse write density, summed over
+//! the paper CNN's weight layers. Pure accounting — no training.
+
+use crate::coordinator::config::RunConfig;
+use crate::experiments::registry::{Axis, Cell, Grid, Scenario};
+use crate::nn::arch::LAYER_DIMS;
+use crate::nvm::energy::LayerGeom;
+use crate::util::cli::Args;
+use crate::util::table::Row;
+
+pub struct Fig3;
+
+impl Scenario for Fig3 {
+    fn name(&self) -> &'static str {
+        "fig3"
+    }
+
+    fn description(&self) -> &'static str {
+        "auxiliary SRAM area (um^2) vs inverse write density rho^-1 \
+         across batch sizes (paper Fig. 3, ab = accumulator bits)"
+    }
+
+    fn grid(&self, args: &Args) -> Grid {
+        Grid::new(RunConfig::default()).axis(Axis::csv(
+            "batch",
+            &args.str_opt("batches", "1,3,10,30,100,300,1000"),
+        ))
+    }
+
+    fn run_cell(&self, cell: &Cell) -> Vec<Row> {
+        let batch = cell.usize("batch");
+        let geoms: Vec<LayerGeom> = LAYER_DIMS
+            .iter()
+            .map(|&(n_o, n_i)| LayerGeom { n_o, n_i, wb: 8 })
+            .collect();
+        let sum = |f: &dyn Fn(&LayerGeom) -> (f64, f64)| -> (f64, f64) {
+            let mut area = 0.0;
+            let mut inv = 0.0f64;
+            for g in &geoms {
+                let (a, d) = f(g);
+                area += a;
+                inv = d; // same per layer
+            }
+            (area, inv)
+        };
+        let (a_naive, d_naive) = sum(&|g| g.naive_batch(batch, 16));
+        let (a_bs, _) = sum(&|g| g.batch_sram(batch, 8));
+        let (a_br, _) = sum(&|g| g.batch_rram(batch, 8));
+        let (a_on, _) = sum(&|g| g.online());
+        let (a_lrt, d_lrt) = sum(&|g| g.lrt(4, batch, 16));
+        vec![Row::new()
+            .int("batch", batch as u64)
+            .num("naive_um2", a_naive, 0)
+            .num("batch_sram_um2", a_bs, 0)
+            .num("batch_rram_um2", a_br, 0)
+            .num("online_um2", a_on, 0)
+            .num("lrt_r4_um2", a_lrt, 0)
+            .num("naive_inv_rho", d_naive, 0)
+            .num("lrt_inv_rho", d_lrt, 0)]
+    }
+
+    fn notes(&self) -> &'static str {
+        "Shape check (paper): naive batch area exceeds chip budget and \
+         is batch-independent; batch-SRAM area grows ~B; LRT area is \
+         batch-independent AND small, while its 1/rho grows with B — the \
+         decoupling claim."
+    }
+}

@@ -1,76 +1,83 @@
 //! lrt-nvm CLI — the L3 coordinator entrypoint.
 //!
-//! Subcommands map onto the paper's experiments (DESIGN.md section 5):
+//! Experiments are discovered from the scenario registry
+//! (`experiments::registry`) instead of being hardcoded subcommands:
 //!
+//!   list                       every registered scenario + grid size
+//!   run <scenario> [--opt]...  expand the grid, fan out on the worker
+//!                              pool, checkpoint to results/<name>.jsonl
+//!   resume <scenario>          continue a killed sweep from its file
+//!   run <scenario> --help      axes, options, and notes for one scenario
+//!   run <scenario> --dry-run   list the cells without running them
 //!   info                       PJRT platform + artifact inventory
-//!   adapt    [--scheme --env]  one online-adaptation run (Fig. 6 cell)
-//!   fleet    [--devices N]     multi-device federated-style adaptation
-//!   convex                     Fig. 5 convergence experiments
-//!   writes                     Fig. 3 area / write-density analysis
-//!   sweep    [--what fig7|fig11]  rank/bitwidth + LR sweeps
-//!   table1|table2|table3       the paper's tables
-//!   grads                      Fig. 9 gradient-magnitude trace
+//!   adapt    [--scheme --env]  one online-adaptation run (Fig. 6 cell);
+//!                              `--backend artifact` drives the AOT HLO
+//!                              executables through the PJRT runtime
 //!
-//! `adapt --backend artifact` drives the AOT HLO executables through the
-//! PJRT runtime (the production path); the default native backend runs
-//! the rust twin engine (used by the large sweeps).
+//! Legacy subcommands (`writes`, `convex`, `sweep`, `table1-3`, `grads`,
+//! `fleet`) forward to the registry and stay scriptable.
+//!
+//! Engine options for `run`/`resume`: `--out <file>` (results path),
+//! `--fresh` (overwrite an existing results file), `--no-out`
+//! (ephemeral), `--limit N` (run at most N cells, checkpoint, exit),
+//! `--json` (print rows as JSON Lines instead of the table).
+//! `LRT_FULL=1` switches to paper-scale workloads.
+
+use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 use lrt_nvm::coordinator::config::RunConfig;
-use lrt_nvm::coordinator::fleet::run_fleet;
 use lrt_nvm::coordinator::trainer::{pretrain, Trainer};
 use lrt_nvm::experiments as exp;
 use lrt_nvm::runtime::{ArtifactDevice, Runtime};
 use lrt_nvm::util::cli::Args;
+use lrt_nvm::util::table::Table;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.command.as_str() {
         "info" => info(&args),
         "adapt" => adapt(&args),
-        "fleet" => fleet(&args),
-        "convex" => {
-            println!("{}", exp::fig5());
+        "list" => {
+            list(&args);
             Ok(())
         }
-        "writes" => {
-            println!("{}", exp::fig3());
-            Ok(())
+        "run" | "resume" => {
+            let Some(name) = args.positional.first().cloned() else {
+                bail!(
+                    "usage: lrt-nvm {} <scenario> [--opt value]... \
+                     (see `lrt-nvm list`)",
+                    args.command
+                );
+            };
+            run_scenario(
+                &name,
+                &args,
+                Some(default_out(&name)),
+                args.command == "resume",
+            )
         }
-        "sweep" => sweep(&args),
-        "table1" => {
-            let seeds = args.usize_opt("seeds", 3);
-            let samples = args.usize_opt("samples", 2000);
-            let classes = args.usize_opt("classes", 20);
-            println!("{}", exp::table1(seeds, samples, classes));
-            Ok(())
-        }
-        "table2" => {
-            println!(
-                "{}",
-                exp::table2(
-                    args.usize_opt("samples", 2000),
-                    args.usize_opt("seeds", 3),
-                )
-            );
-            Ok(())
-        }
-        "table3" => {
-            println!(
-                "{}",
-                exp::table3(
-                    args.usize_opt("samples", 2000),
-                    args.usize_opt("seeds", 3),
-                )
-            );
-            Ok(())
-        }
-        "grads" => {
-            println!(
-                "{}",
-                exp::fig9(args.usize_opt("steps", 400), args.u64_opt("seed", 0))
-            );
-            Ok(())
+        // legacy subcommand names, forwarded to the registry with the
+        // pre-registry CLI defaults injected so re-running an old
+        // command reproduces the old workload (and numbers) exactly
+        "writes" => legacy("fig3", &args, &[]),
+        "convex" => legacy("fig5", &args, &[]),
+        "grads" => legacy("fig9", &args, &[]),
+        "table1" => legacy("table1", &args, &[]),
+        "table2" => legacy("table2", &args, &[("samples", "2000")]),
+        "table3" => legacy("table3", &args, &[("samples", "2000")]),
+        "fleet" => legacy(
+            "fleet",
+            &args,
+            &[("samples", "10000"), ("offline", "4000")],
+        ),
+        "sweep" => {
+            let what = args.str_opt("what", "fig7");
+            match what.as_str() {
+                "fig7" => legacy("fig7", &args, &[]),
+                "fig11" => legacy("fig11", &args, &[("samples", "2000")]),
+                other => bail!("unknown sweep '{other}' (fig7|fig11)"),
+            }
         }
         "" | "help" => {
             print_help();
@@ -80,23 +87,181 @@ fn main() -> Result<()> {
     }
 }
 
+fn default_out(name: &str) -> PathBuf {
+    PathBuf::from("results").join(format!("{name}.jsonl"))
+}
+
+fn legacy(
+    name: &str,
+    args: &Args,
+    old_defaults: &[(&str, &str)],
+) -> Result<()> {
+    eprintln!(
+        "note: `lrt-nvm {}` now forwards to `lrt-nvm run {name}` \
+         (ephemeral; pass --out <file> for a results file)",
+        args.command
+    );
+    let mut args = args.clone();
+    for (k, v) in old_defaults {
+        args.options
+            .entry((*k).to_string())
+            .or_insert_with(|| (*v).to_string());
+    }
+    run_scenario(name, &args, None, false)
+}
+
+fn run_scenario(
+    name: &str,
+    args: &Args,
+    default_out: Option<PathBuf>,
+    resume: bool,
+) -> Result<()> {
+    let Some(sc) = exp::find(name) else {
+        bail!("unknown scenario '{name}' (see `lrt-nvm list`)");
+    };
+    if args.flag("help") {
+        describe(sc, args);
+        return Ok(());
+    }
+    if args.flag("dry-run") {
+        let grid = sc.grid(args);
+        if let Err(e) = grid.validate() {
+            bail!("invalid grid for scenario '{name}': {e}");
+        }
+        println!("{name}: {} cells", grid.n_cells());
+        for i in 0..grid.n_cells() {
+            println!("  [{i:>3}] {}", grid.cell(i).id);
+        }
+        return Ok(());
+    }
+    let out: Option<PathBuf> = match args.options.get("out") {
+        Some(p) => Some(PathBuf::from(p)),
+        None if args.flag("no-out") => None,
+        None => default_out,
+    };
+    if !resume {
+        if let Some(p) = &out {
+            if p.exists() && !args.flag("fresh") {
+                bail!(
+                    "results file {} already exists — `lrt-nvm resume \
+                     {name}` continues it, --fresh overwrites it",
+                    p.display()
+                );
+            }
+        }
+    }
+    let limit = match args.options.get("limit") {
+        None => None,
+        Some(s) => match s.parse() {
+            Ok(n) => Some(n),
+            Err(_) => bail!("--limit must be a number, got '{s}'"),
+        },
+    };
+    let opts = exp::SweepOptions { out, resume, limit };
+    let outcome = exp::run_sweep(sc, args, &opts)?;
+    if args.flag("json") {
+        for r in &outcome.rows {
+            println!("{}", r.jsonl());
+        }
+    } else {
+        println!("{}", outcome.rendered);
+    }
+    if let Some(p) = &opts.out {
+        eprintln!(
+            "results: {} ({} cells: {} restored, {} run)",
+            p.display(),
+            outcome.cells_total,
+            outcome.cells_restored,
+            outcome.cells_run,
+        );
+    }
+    if !outcome.complete {
+        eprintln!(
+            "sweep INCOMPLETE ({}/{} cells done) — `lrt-nvm resume \
+             {name}` to continue",
+            outcome.cells_restored + outcome.cells_run,
+            outcome.cells_total,
+        );
+    }
+    Ok(())
+}
+
+fn list(args: &Args) {
+    let mut t = Table::new(vec!["scenario", "cells", "description"]);
+    for sc in exp::all() {
+        t.row(vec![
+            sc.name().to_string(),
+            sc.grid(args).n_cells().to_string(),
+            sc.description().to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nrun one with `lrt-nvm run <scenario>`; `lrt-nvm run \
+         <scenario> --help` shows its axes and options."
+    );
+}
+
+fn describe(sc: &dyn exp::Scenario, args: &Args) {
+    let grid = sc.grid(args);
+    println!("{}: {}\n", sc.name(), sc.description());
+    println!("grid ({} cells):", grid.n_cells());
+    for axis in &grid.axes {
+        println!("  {:<14} {}", axis.name, axis.values.join(", "));
+    }
+    if grid.axes.is_empty() {
+        println!("  (single cell)");
+    }
+    if !grid.extra.is_empty() {
+        println!("parameters:");
+        for (k, v) in &grid.extra {
+            println!("  {k:<14} {v}");
+        }
+    }
+    println!(
+        "base config: scheme={} env={} samples={} offline={} seed={}",
+        grid.base.scheme.name(),
+        grid.base.env.name(),
+        grid.base.samples,
+        grid.base.offline_samples,
+        grid.base.seed,
+    );
+    if !sc.notes().is_empty() {
+        println!("\n{}", sc.notes());
+    }
+    println!(
+        "\nengine options: --out <file> --fresh --no-out --limit N \
+         --json --dry-run; axes with comma lists (shown above) accept \
+         CLI overrides, e.g. --ranks 1,4."
+    );
+}
+
 fn print_help() {
     println!(
         "lrt-nvm — Low-Rank Training for NVM edge devices\n\n\
-         USAGE: lrt-nvm <subcommand> [--opt value]...\n\n\
+         USAGE: lrt-nvm <subcommand> [--opt value | --opt=value]...\n\n\
          SUBCOMMANDS:\n\
-           info     PJRT platform + compiled artifact inventory\n\
-           adapt    online adaptation run (--scheme inference|bias|sgd|\n\
-                    lrt|lrt-unbiased, --env control|shift|analog|digital,\n\
-                    --samples N, --backend native|artifact, --no-norm)\n\
-           fleet    multi-device adaptation (--devices N)\n\
-           convex   Fig. 5 convex-convergence experiments\n\
-           writes   Fig. 3 auxiliary-area vs write-density analysis\n\
-           sweep    --what fig7 (rank x bitwidth) | fig11 (LR heatmaps)\n\
-           table1   transfer-learning recovery (--seeds --samples --classes)\n\
-           table2   biased/unbiased per layer group\n\
-           table3   miscellaneous ablations\n\
-           grads    Fig. 9 gradient-magnitude trace\n\n\
+           list               registered experiment scenarios + grid sizes\n\
+           run <scenario>     expand the scenario's parameter grid, fan the\n\
+                              cells out on the worker pool, checkpoint each\n\
+                              completed cell to results/<scenario>.jsonl\n\
+                              (JSON Lines; --out FILE, --no-out, --json,\n\
+                              --limit N, --fresh, --dry-run, --help)\n\
+           resume <scenario>  continue a killed sweep from its results file\n\
+                              — finished cells are restored, the rest run,\n\
+                              and the final file matches an uninterrupted\n\
+                              run byte-for-byte\n\
+           info               PJRT platform + compiled artifact inventory\n\
+           adapt              one online-adaptation run (--scheme inference|\n\
+                              bias|sgd|lrt|lrt-unbiased, --env control|shift|\n\
+                              analog|digital, --samples N, --backend native|\n\
+                              artifact, --no-norm)\n\n\
+         LEGACY ALIASES (forward to the registry):\n\
+           writes->fig3  convex->fig5  grads->fig9  sweep->fig7|fig11\n\
+           table1 table2 table3 fleet\n\n\
+         Scenarios include the paper's figures/tables (fig3 fig5 fig6 fig7\n\
+         fig9 fig11 table1 table2 table3), the federated fleet runner, and\n\
+         deployment studies (drift-stress, class-incremental).\n\
          Set LRT_FULL=1 for paper-scale workloads."
     );
 }
@@ -199,49 +364,6 @@ fn adapt(args: &Args) -> Result<()> {
             );
         }
         other => bail!("unknown backend '{other}'"),
-    }
-    Ok(())
-}
-
-fn fleet(args: &Args) -> Result<()> {
-    let cfg = RunConfig::from_args(args);
-    let n = args.usize_opt("devices", 4);
-    println!(
-        "fleet: {n} devices, scheme={} env={} samples={}/device",
-        cfg.scheme.name(),
-        cfg.env.name(),
-        cfg.samples
-    );
-    let rep = run_fleet(&cfg, n);
-    for d in &rep.devices {
-        println!("  {}", d.summary_line());
-    }
-    println!(
-        "mean accEMA = {:.3} ± {:.3} | worst cell writes = {} | total \
-         write energy = {:.1} uJ",
-        rep.mean_final_ema,
-        rep.std_final_ema,
-        rep.worst_cell_writes,
-        rep.total_energy_pj / 1e6
-    );
-    println!(
-        "federated payload/flush: LRT factors {} B vs dense gradient {} B \
-         ({}x compression)",
-        rep.federated_payload_bytes,
-        rep.dense_payload_bytes,
-        rep.dense_payload_bytes / rep.federated_payload_bytes.max(1)
-    );
-    Ok(())
-}
-
-fn sweep(args: &Args) -> Result<()> {
-    let what = args.str_opt("what", "fig7");
-    let samples = args.usize_opt("samples", 2000);
-    let seed = args.u64_opt("seed", 0);
-    match what.as_str() {
-        "fig7" => println!("{}", exp::fig7(samples, seed)),
-        "fig11" => println!("{}", exp::fig11(samples, seed)),
-        other => bail!("unknown sweep '{other}' (fig7|fig11)"),
     }
     Ok(())
 }

@@ -1,7 +1,11 @@
 //! Zero-dependency command-line argument parsing.
 //!
-//! Grammar: `lrt-nvm <subcommand> [--key value | --flag]...`
-//! (the vendored crate set has no `clap`).
+//! Grammar: `lrt-nvm <subcommand> [--key value | --key=value | --flag]...`
+//! (the vendored crate set has no `clap`). A token after `--key` is
+//! consumed as the value unless it is itself option-like (`--` followed
+//! by an alphabetic key), so `--delta --0.5` reads the negative-flag-
+//! looking `--0.5` as a value; `--key=value` sidesteps the question for
+//! arbitrary values.
 
 use std::collections::BTreeMap;
 
@@ -24,9 +28,13 @@ impl Args {
         }
         while let Some(tok) = it.next() {
             if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
                 let is_flag = match it.peek() {
                     None => true,
-                    Some(next) => next.starts_with("--"),
+                    Some(next) => is_option_like(next),
                 };
                 if is_flag {
                     args.options.insert(key.to_string(), "true".to_string());
@@ -77,6 +85,19 @@ impl Args {
     }
 }
 
+/// True when `tok` is an option token (`--key` / `--key=...` with an
+/// alphabetic key start) rather than a value that merely begins with
+/// `--` (e.g. `--0.5`).
+fn is_option_like(tok: &str) -> bool {
+    match tok.strip_prefix("--") {
+        Some(rest) => rest
+            .chars()
+            .next()
+            .map_or(true, |c| c.is_ascii_alphabetic()),
+        None => false,
+    }
+}
+
 /// `LRT_FULL=1` switches benches from CI-sized to paper-scale workloads.
 pub fn full_scale() -> bool {
     std::env::var("LRT_FULL").map(|v| v == "1").unwrap_or(false)
@@ -119,5 +140,27 @@ mod tests {
         let a = parse(&["--help"]);
         assert_eq!(a.command, "");
         assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn key_equals_value_syntax() {
+        let a = parse(&["run", "fig7", "--samples=500", "--label=--weird", "--quick"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.positional, vec!["fig7"]);
+        assert_eq!(a.usize_opt("samples", 0), 500);
+        // `=` keeps arbitrary values intact, even option-looking ones
+        assert_eq!(a.str_opt("label", ""), "--weird");
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn negative_flag_looking_value_is_a_value() {
+        let a = parse(&["run", "--delta", "--0.5", "--seeds", "3"]);
+        assert_eq!(a.str_opt("delta", ""), "--0.5");
+        assert_eq!(a.usize_opt("seeds", 0), 3);
+        // a real option after a key still makes the key a flag
+        let b = parse(&["run", "--verbose", "--seeds", "3"]);
+        assert!(b.flag("verbose"));
+        assert_eq!(b.usize_opt("seeds", 0), 3);
     }
 }

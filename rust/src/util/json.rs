@@ -98,17 +98,50 @@ impl Json {
         s
     }
 
+    /// Single-line rendering with no whitespace — the JSON Lines form
+    /// used by the sweep-engine results files.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => write_num(out, *x),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
-                    let _ = write!(out, "{}", *x as i64);
-                } else {
-                    let _ = write!(out, "{x}");
-                }
-            }
+            Json::Num(x) => write_num(out, *x),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 out.push('[');
@@ -140,7 +173,21 @@ impl Json {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// JSON has no NaN/Infinity literals; emit `null` for non-finite values
+/// (a diverged metric must not corrupt a JSON Lines checkpoint).
+fn write_num(out: &mut String, x: f64) {
+    if !x.is_finite() {
+        out.push_str("null");
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
+/// Append `s` to `out` as a quoted JSON string (shared with the
+/// order-preserving `Row` serializer in `util::table`).
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for ch in s.chars() {
         match ch {
@@ -362,6 +409,29 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let s = v.to_string_pretty();
         assert_eq!(Json::parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_roundtrip_and_is_one_line() {
+        let src = r#"{"a": [1, 2.5, {"b": "x"}], "c": false, "d": null}"#;
+        let v = Json::parse(src).unwrap();
+        let s = v.to_string_compact();
+        assert!(!s.contains('\n') && !s.contains(' '), "{s}");
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        assert_eq!(s, r#"{"a":[1,2.5,{"b":"x"}],"c":false,"d":null}"#);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(bad).to_string_compact();
+            assert_eq!(s, "null", "non-finite must stay valid JSON");
+            assert!(Json::parse(&s).is_ok());
+        }
+        assert_eq!(
+            Json::Num(f64::INFINITY).to_string_pretty(),
+            "null"
+        );
     }
 
     #[test]

@@ -1,5 +1,9 @@
-//! Aligned ASCII tables for the bench harnesses (no criterion offline);
-//! each bench prints the same rows/series as the paper's table or figure.
+//! Aligned ASCII tables for the bench harnesses (no criterion offline),
+//! plus the structured `Row` record the sweep engine streams: every
+//! experiment cell emits `Row`s, rendered here for humans (`render_rows`)
+//! and serialized as JSON Lines for machines (`Row::jsonl`).
+
+use crate::util::json::{self, Json};
 
 /// Simple column-aligned table builder.
 #[derive(Debug, Default)]
@@ -72,6 +76,166 @@ pub fn pm(mean: f64, std: f64) -> String {
     format!("{mean:+.1} ± {std:.1}")
 }
 
+// ---------------------------------------------------------------------
+// Structured result rows
+// ---------------------------------------------------------------------
+
+/// One structured result record: an ordered list of (column, value)
+/// fields. Fields carry both a typed JSON value (for the results file)
+/// and a display string (for the aligned table), so a float keeps its
+/// experiment-defined precision in print while staying a number on the
+/// wire. Fields added with `detail` are JSON-only — bulky payloads like
+/// accuracy series that would wreck a table.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Row {
+    fields: Vec<Field>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Field {
+    key: String,
+    value: Json,
+    text: String,
+    detail: bool,
+}
+
+impl Row {
+    pub fn new() -> Row {
+        Row { fields: Vec::new() }
+    }
+
+    fn push(mut self, key: &str, value: Json, text: String) -> Row {
+        self.fields.push(Field {
+            key: key.to_string(),
+            value,
+            text,
+            detail: false,
+        });
+        self
+    }
+
+    pub fn str<S: Into<String>>(self, key: &str, v: S) -> Row {
+        let s = v.into();
+        self.push(key, Json::Str(s.clone()), s)
+    }
+
+    pub fn int(self, key: &str, v: u64) -> Row {
+        self.push(key, Json::Num(v as f64), v.to_string())
+    }
+
+    /// Float with fixed display precision (e.g. `prec = 3` -> "0.123").
+    pub fn num(self, key: &str, v: f64, prec: usize) -> Row {
+        self.push(key, Json::Num(v), format!("{v:.prec$}"))
+    }
+
+    /// Like `num`, but the display carries an explicit sign ("+6.5").
+    pub fn signed(self, key: &str, v: f64, prec: usize) -> Row {
+        self.push(key, Json::Num(v), format!("{v:+.prec$}"))
+    }
+
+    pub fn boolean(self, key: &str, v: bool) -> Row {
+        self.push(key, Json::Bool(v), v.to_string())
+    }
+
+    /// JSON-only field (skipped by the table renderer).
+    pub fn detail(mut self, key: &str, value: Json) -> Row {
+        self.fields.push(Field {
+            key: key.to_string(),
+            value,
+            text: String::new(),
+            detail: true,
+        });
+        self
+    }
+
+    /// Append all of `other`'s fields after this row's.
+    pub fn extend(mut self, other: Row) -> Row {
+        self.fields.extend(other.fields);
+        self
+    }
+
+    /// Visible (non-detail) column names in insertion order.
+    pub fn columns(&self) -> Vec<&str> {
+        self.fields
+            .iter()
+            .filter(|f| !f.detail)
+            .map(|f| f.key.as_str())
+            .collect()
+    }
+
+    pub fn text(&self, key: &str) -> Option<&str> {
+        self.fields
+            .iter()
+            .find(|f| f.key == key && !f.detail)
+            .map(|f| f.text.as_str())
+    }
+
+    pub fn value(&self, key: &str) -> Option<&Json> {
+        self.fields.iter().find(|f| f.key == key).map(|f| &f.value)
+    }
+
+    /// One JSON object on a single line, fields in insertion order.
+    pub fn jsonl(&self) -> String {
+        let mut out = String::from("{");
+        for (i, f) in self.fields.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::write_escaped(&mut out, &f.key);
+            out.push(':');
+            out.push_str(&f.value.to_string_compact());
+        }
+        out.push('}');
+        out
+    }
+
+    /// Rebuild a row from a parsed JSON object (checkpoint restore).
+    /// Field order follows the object's key order (sorted) and display
+    /// strings fall back to the compact JSON rendering, so a restored
+    /// row renders with generic formatting — the serialized bytes of
+    /// the results file, not the table, are the replay contract.
+    pub fn from_json(obj: &Json) -> Row {
+        let mut row = Row::new();
+        if let Json::Obj(m) = obj {
+            for (k, v) in m {
+                let text = match v {
+                    Json::Str(s) => s.clone(),
+                    other => other.to_string_compact(),
+                };
+                row.fields.push(Field {
+                    key: k.clone(),
+                    value: v.clone(),
+                    text,
+                    detail: matches!(v, Json::Arr(_) | Json::Obj(_)),
+                });
+            }
+        }
+        row
+    }
+}
+
+/// Render rows as one aligned table: columns are the union of visible
+/// field names in first-seen order; missing cells render empty.
+pub fn render_rows(rows: &[Row]) -> String {
+    let mut cols: Vec<String> = Vec::new();
+    for r in rows {
+        for c in r.columns() {
+            if !cols.iter().any(|x| x == c) {
+                cols.push(c.to_string());
+            }
+        }
+    }
+    let mut t = Table::new(cols.clone());
+    for r in rows {
+        t.row(
+            cols.iter()
+                .map(|c| r.text(c).unwrap_or("").to_string())
+                .collect(),
+        );
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +256,47 @@ mod tests {
     fn pm_format() {
         assert_eq!(pm(6.5, 0.7), "+6.5 ± 0.7");
         assert_eq!(pm(-3.9, 0.8), "-3.9 ± 0.8");
+    }
+
+    #[test]
+    fn row_jsonl_preserves_order_and_types() {
+        let r = Row::new()
+            .str("env", "control")
+            .int("writes", 42)
+            .num("acc", 0.12345, 3)
+            .signed("rec", 6.5, 1)
+            .boolean("ok", true)
+            .detail("series", Json::Arr(vec![Json::Num(1.0)]));
+        assert_eq!(
+            r.jsonl(),
+            r#"{"env":"control","writes":42,"acc":0.12345,"rec":6.5,"ok":true,"series":[1]}"#
+        );
+        assert_eq!(r.text("acc"), Some("0.123"));
+        assert_eq!(r.text("rec"), Some("+6.5"));
+        assert_eq!(r.columns(), vec!["env", "writes", "acc", "rec", "ok"]);
+        // detail fields are JSON-only
+        assert_eq!(r.text("series"), None);
+        assert!(r.value("series").is_some());
+    }
+
+    #[test]
+    fn render_rows_unions_columns() {
+        let rows = vec![
+            Row::new().str("a", "1").str("b", "2"),
+            Row::new().str("a", "3").str("c", "4"),
+        ];
+        let s = render_rows(&rows);
+        let header = s.lines().next().unwrap();
+        assert!(header.contains('a') && header.contains('b') && header.contains('c'));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn row_from_json_roundtrips_values() {
+        let r = Row::new().str("k", "v").int("n", 7);
+        let parsed = Json::parse(&r.jsonl()).unwrap();
+        let back = Row::from_json(&parsed);
+        assert_eq!(back.value("k"), Some(&Json::Str("v".into())));
+        assert_eq!(back.value("n"), Some(&Json::Num(7.0)));
     }
 }

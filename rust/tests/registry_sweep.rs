@@ -1,0 +1,162 @@
+//! Integration tests for the scenario registry + sweep engine:
+//!
+//! 1. determinism — the same scenario + seed produces byte-identical
+//!    Row output (JSONL) across independent runs;
+//! 2. resumability — a sweep killed partway (simulated with the
+//!    engine's cell limit) and then resumed produces a results file
+//!    byte-identical to an uninterrupted run;
+//! 3. results files are valid JSON Lines end to end.
+//!
+//! Workloads are deliberately tiny (tens of samples per cell).
+
+use std::path::PathBuf;
+
+use lrt_nvm::experiments::{find, run_ephemeral, run_sweep, SweepOptions};
+use lrt_nvm::util::cli::Args;
+use lrt_nvm::util::json::Json;
+
+fn tiny_args() -> Args {
+    let mut a = Args::default();
+    a.command = "run".to_string();
+    a.positional.push("drift-stress".to_string());
+    for (k, v) in [
+        ("samples", "40"),
+        ("offline", "40"),
+        ("sigmas", "3,30"),
+        ("kappas", "100"),
+    ] {
+        a.options.insert(k.to_string(), v.to_string());
+    }
+    a
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("lrt-sweeptest-{}-{name}.jsonl", std::process::id()))
+}
+
+fn rows_jsonl(outcome: &lrt_nvm::experiments::SweepOutcome) -> String {
+    outcome
+        .rows
+        .iter()
+        .map(|r| r.jsonl())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn same_scenario_and_seed_is_byte_identical_across_runs() {
+    let sc = find("drift-stress").unwrap();
+    let args = tiny_args();
+    let a = run_sweep(sc, &args, &SweepOptions::ephemeral()).unwrap();
+    let b = run_sweep(sc, &args, &SweepOptions::ephemeral()).unwrap();
+    assert!(a.complete && b.complete);
+    assert_eq!(a.cells_total, 2);
+    let (ja, jb) = (rows_jsonl(&a), rows_jsonl(&b));
+    assert_eq!(ja, jb, "row output not deterministic");
+    assert_eq!(a.rendered, b.rendered, "rendering not deterministic");
+    // rows carry real numbers, not empty shells
+    assert!(ja.contains("\"acc_ema\":"));
+}
+
+#[test]
+fn killed_sweep_resumes_to_identical_results_file() {
+    let sc = find("drift-stress").unwrap();
+    let args = tiny_args();
+    let full_path = tmp("full");
+    let part_path = tmp("part");
+
+    let full =
+        run_sweep(sc, &args, &SweepOptions::to_file(full_path.clone()))
+            .unwrap();
+    assert!(full.complete);
+
+    // "kill" after one checkpointed cell...
+    let mut partial = SweepOptions::to_file(part_path.clone());
+    partial.limit = Some(1);
+    let killed = run_sweep(sc, &args, &partial).unwrap();
+    assert!(!killed.complete);
+    assert_eq!(killed.cells_run, 1);
+    // ...the checkpoint already holds header + 1 cell record...
+    let mid = std::fs::read_to_string(&part_path).unwrap();
+    assert_eq!(mid.lines().count(), 2);
+
+    // ...and resuming runs only the remainder.
+    let mut resume = SweepOptions::to_file(part_path.clone());
+    resume.resume = true;
+    let resumed = run_sweep(sc, &args, &resume).unwrap();
+    assert!(resumed.complete);
+    assert_eq!(resumed.cells_restored, 1);
+    assert_eq!(resumed.cells_run, 1);
+
+    let fa = std::fs::read_to_string(&full_path).unwrap();
+    let fb = std::fs::read_to_string(&part_path).unwrap();
+    assert_eq!(
+        fa, fb,
+        "resumed results file differs from uninterrupted run"
+    );
+
+    // resuming an already-complete sweep is an idempotent no-op
+    let again = run_sweep(sc, &args, &resume).unwrap();
+    assert!(again.complete);
+    assert_eq!(again.cells_run, 0);
+    assert_eq!(std::fs::read_to_string(&part_path).unwrap(), fa);
+
+    let _ = std::fs::remove_file(&full_path);
+    let _ = std::fs::remove_file(&part_path);
+}
+
+#[test]
+fn results_file_is_valid_json_lines() {
+    let sc = find("drift-stress").unwrap();
+    let args = tiny_args();
+    let path = tmp("jsonl");
+    run_sweep(sc, &args, &SweepOptions::to_file(path.clone())).unwrap();
+    let body = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = body.lines().collect();
+    assert_eq!(lines.len(), 3, "header + 2 cells");
+    let header = Json::parse(lines[0]).unwrap();
+    assert_eq!(
+        header.get("sweep").and_then(Json::as_str),
+        Some("drift-stress")
+    );
+    for (i, line) in lines[1..].iter().enumerate() {
+        let rec = Json::parse(line).unwrap();
+        assert_eq!(rec.get("idx").and_then(Json::as_usize), Some(i));
+        let rows = rec.get("rows").and_then(Json::as_arr).unwrap();
+        assert!(!rows.is_empty());
+        assert!(rows[0].get("tail_acc").is_some());
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn class_incremental_smoke() {
+    let out = run_ephemeral(
+        "class-incremental",
+        &[("samples", "40"), ("stages", "2"), ("schemes", "lrt")],
+    )
+    .unwrap();
+    assert!(out.complete);
+    // 1 scheme cell x 1 stages value, emitting 2 stage rows + 1 final row
+    assert_eq!(out.cells_total, 1);
+    assert_eq!(out.rows.len(), 3);
+    assert!(out.rendered.contains("active_classes"));
+}
+
+#[test]
+fn every_registered_scenario_has_a_wellformed_grid() {
+    let args = Args::default();
+    for sc in lrt_nvm::experiments::all() {
+        let grid = sc.grid(&args);
+        let n = grid.n_cells();
+        assert!(n >= 1, "{} has an empty grid", sc.name());
+        // cell ids are unique (they are the resume keys)
+        let mut ids: Vec<String> =
+            (0..n).map(|i| grid.cell(i).id.clone()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "{} has duplicate cell ids", sc.name());
+        assert!(!sc.description().is_empty());
+    }
+}
