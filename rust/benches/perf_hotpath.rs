@@ -1,6 +1,8 @@
 //! Bench: hot-path microbenchmarks + the Section 4.2.4 efficiency
 //! comparison (LRT O((n_i+n_o+q)q^2) per sample vs dense accumulation
-//! O(n_i n_o)), plus end-to-end step costs for both backends.
+//! O(n_i n_o)), plus end-to-end step costs for both backends, plus the
+//! per-ISA-tier kernel speedup table (the repo's measured baseline:
+//! each `BENCH_JSON` line is one machine-readable record of it).
 //!
 //! Hand-rolled harness (no criterion in the offline vendored set):
 //! median-of-runs wall clock with warmup, printed as a table.
@@ -21,6 +23,14 @@ fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     times[times.len() / 2]
+}
+
+/// JSON number-or-null for an optional microseconds reading.
+fn fmt_json(v: Option<f64>) -> String {
+    match v {
+        Some(v) => format!("{v:.2}"),
+        None => "null".to_string(),
+    }
 }
 
 fn main() {
@@ -158,6 +168,119 @@ fn main() {
             }),
         );
         tk.print();
+        println!();
+    }
+
+    println!("== ISA tier speedups per kernel (single-thread) ==");
+    println!(
+        "active tier: {} (LRT_KERNEL_ISA=scalar|unrolled|native to \
+         override); native available: {}\n\
+         (pool pinned to 1 thread so the tier effect isn't washed out \
+         by threading; BENCH_JSON lines are the machine baseline)\n",
+        kernels::isa().name(),
+        kernels::native_available()
+    );
+    {
+        use lrt_nvm::tensor::kernels::Isa;
+        let mut r = Rng::new(13);
+        let mut rand = |rows: usize, cols: usize| {
+            Mat::from_fn(rows, cols, |_, _| r.normal_f32(0.0, 1.0))
+        };
+        // fc5-shaped operands for the dense kernels; an MGS-shaped
+        // (1024 x 17) column for the strided helper
+        let a = rand(128, 512);
+        let w = rand(64, 512);
+        let dzw = rand(100, 64);
+        let ain = rand(100, 512);
+        let x: Vec<f32> = a.row(0).to_vec();
+        let mv = rand(64, 512);
+        let u: Vec<f32> = mv.col(0);
+        let sm = rand(1024, 17);
+        let sv: Vec<f32> = (0..1024)
+            .map(|i| sm.at(i, 0) * 0.5 + 0.1)
+            .collect();
+        let at = a.t();
+
+        let time_tier = |tier: Isa, reps: usize, f: &dyn Fn()| -> f64 {
+            kernels::with_overrides(Some(tier), Some(1), || {
+                time_median(reps, || f())
+            })
+        };
+        let mut tt = Table::new(vec![
+            "kernel (shape)",
+            "scalar us",
+            "unrolled us",
+            "native us",
+            "best vs scalar",
+        ]);
+        let mut json_lines: Vec<String> = Vec::new();
+        let mut bench_kernel = |label: &str, reps: usize, f: &dyn Fn()| {
+            let tiers = kernels::available_isas();
+            let mut us: Vec<(Isa, f64)> = Vec::new();
+            for &tier in &tiers {
+                us.push((tier, time_tier(tier, reps, f)));
+            }
+            let get = |t: Isa| {
+                us.iter().find(|(tier, _)| *tier == t).map(|(_, v)| *v)
+            };
+            let scalar = get(Isa::Scalar).unwrap();
+            let best = us
+                .iter()
+                .map(|(_, v)| *v)
+                .fold(f64::INFINITY, f64::min);
+            let fmt = |v: Option<f64>| match v {
+                Some(v) => format!("{v:.1}"),
+                None => "-".to_string(),
+            };
+            tt.row(vec![
+                label.to_string(),
+                fmt(Some(scalar)),
+                fmt(get(Isa::Unrolled)),
+                fmt(get(Isa::Native)),
+                format!("{:.2}x", scalar / best.max(1e-9)),
+            ]);
+            json_lines.push(format!(
+                "BENCH_JSON {{\"bench\":\"isa_tier\",\"kernel\":\"{label}\",\
+                 \"scalar_us\":{scalar:.2},\"unrolled_us\":{},\
+                 \"native_us\":{},\"best_speedup_vs_scalar\":{:.3}}}",
+                fmt_json(get(Isa::Unrolled)),
+                fmt_json(get(Isa::Native)),
+                scalar / best.max(1e-9),
+            ));
+        };
+
+        bench_kernel("dot 512", 400, &|| {
+            std::hint::black_box(kernels::dot_fast(a.row(0), a.row(1)));
+        });
+        bench_kernel("matmul_transb fc5 (128x512 @ 64x512^T)", 60, &|| {
+            std::hint::black_box(kernels::matmul_transb(&a, &w));
+        });
+        bench_kernel("matmul_atb fc5 (100x64 ^T@ 100x512)", 60, &|| {
+            std::hint::black_box(kernels::matmul_atb(&dzw, &ain));
+        });
+        bench_kernel("matmul fc5-delta (64x512 @ 512x128)", 30, &|| {
+            std::hint::black_box(kernels::matmul(&w, &at));
+        });
+        bench_kernel("matvec 64x512", 400, &|| {
+            std::hint::black_box(kernels::matvec(&mv, &x));
+        });
+        // reused accumulator: a per-rep clone would add tier-independent
+        // memcpy traffic on the same order as the kernel itself and
+        // compress the recorded speedups (repeated accumulation into the
+        // buffer doesn't change the timing)
+        let scratch = std::cell::RefCell::new(mv.clone());
+        bench_kernel("add_outer 64x512", 400, &|| {
+            kernels::add_outer(&mut scratch.borrow_mut(), 0.7, &u, &x);
+            std::hint::black_box(&scratch);
+        });
+        bench_kernel("dot_stride 1024x17 (MGS lane)", 400, &|| {
+            std::hint::black_box(kernels::dot_stride(&sm.data, 17, 3, &sv));
+        });
+        tt.print();
+        println!();
+        for line in &json_lines {
+            println!("{line}");
+        }
         println!();
     }
 

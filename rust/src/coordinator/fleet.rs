@@ -14,6 +14,11 @@
 //! shared `tensor::kernels` worker pool, so fleet-level parallelism and
 //! the blocked kernels inside each device split one thread budget
 //! instead of oversubscribing (`LRT_KERNEL_THREADS` caps both at once).
+//! The pool's fan-out installs a fair-share affinity hint on every
+//! device worker, so N devices each get ~budget/N inner kernel threads
+//! instead of whichever device flushes first hoarding the pool; inside
+//! a device, each layer's flush evaluation further caps itself to what
+//! its size warrants (`FlushScheduler::par_cap`).
 
 use super::config::RunConfig;
 use super::metrics::RunReport;

@@ -14,6 +14,14 @@ pub struct FlushScheduler {
     pub batch: usize,
     /// Minimum commit density.
     pub rho_min: f64,
+    /// Per-layer affinity hint: extra kernel-pool workers this layer's
+    /// flush evaluation (delta reconstruction + density + commit)
+    /// warrants, sized from the layer's flop count via
+    /// `kernels::suggested_workers`. The device installs it around the
+    /// evaluation with `kernels::affinity`, so tiny conv layers never
+    /// pay thread-spawn overhead and big fc layers don't hoard the pool
+    /// from concurrent fleet devices or sweep cells.
+    pub par_cap: usize,
     /// Samples accumulated since the last *committed* flush.
     samples_pending: usize,
     /// Samples since the last flush attempt.
@@ -40,11 +48,18 @@ impl FlushScheduler {
         FlushScheduler {
             batch,
             rho_min,
+            par_cap: usize::MAX, // unhinted: kernels use their default
             samples_pending: 0,
             since_attempt: 0,
             commits: 0,
             deferrals: 0,
         }
+    }
+
+    /// Attach the per-layer affinity hint (see `par_cap`).
+    pub fn with_par_cap(mut self, par_cap: usize) -> FlushScheduler {
+        self.par_cap = par_cap;
+        self
     }
 
     /// Record one accumulated sample; says whether to evaluate a flush.
@@ -118,6 +133,20 @@ mod tests {
         assert!(s.decide(0.5));
         assert_eq!(s.commits, 1);
         assert_eq!(s.effective_batch(), 0);
+    }
+
+    #[test]
+    fn par_cap_hint_defaults_unhinted() {
+        let s = FlushScheduler::new(10, 0.01);
+        assert_eq!(s.par_cap, usize::MAX);
+        let s = s.with_par_cap(3);
+        assert_eq!(s.par_cap, 3);
+        // the hint is pure metadata: scheduling behavior is unchanged
+        let mut s2 = FlushScheduler::new(10, 0.01).with_par_cap(0);
+        for _ in 0..9 {
+            assert_eq!(s2.on_sample(), FlushDecision::NotYet);
+        }
+        assert!(matches!(s2.on_sample(), FlushDecision::Evaluate { .. }));
     }
 
     #[test]

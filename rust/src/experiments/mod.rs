@@ -14,8 +14,8 @@ pub mod registry;
 pub mod scenarios;
 
 pub use registry::{
-    all, find, run_ephemeral, run_sweep, Axis, Cell, Grid, Scenario,
-    SweepOptions, SweepOutcome,
+    all, find, id_matches, run_ephemeral, run_sweep, Axis, Cell, Grid,
+    Scenario, SweepOptions, SweepOutcome,
 };
 
 /// Run `n` closures on worker threads, preserving order — the fan-out
@@ -23,7 +23,10 @@ pub use registry::{
 ///
 /// Delegates to the shared `tensor::kernels` pool, so sweep cells and
 /// the blocked kernels inside each cell split one global thread budget
-/// (`LRT_KERNEL_THREADS`) instead of oversubscribing the machine.
+/// (`LRT_KERNEL_THREADS`) instead of oversubscribing the machine. The
+/// pool gives every cell worker a fair-share affinity hint, so the
+/// first cell to hit a big kernel no longer starves its siblings of
+/// worker tokens.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,

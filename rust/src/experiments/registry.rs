@@ -23,7 +23,10 @@
 //!   an interrupted-and-resumed sweep produces the same bytes as an
 //!   uninterrupted one;
 //! - **rendering** — rows render as one aligned table for humans
-//!   (`util::table::render_rows`) and as JSON Lines for machines.
+//!   (`util::table::render_rows`) and as JSON Lines for machines;
+//! - **cell filtering** — `--filter <id-pattern>` (glob-lite `*`,
+//!   unanchored) runs only matching pending cells; a filtered run plus
+//!   a resume of the complement is byte-identical to one full run.
 //!
 //! Rows must be a pure function of (cell config, seed): no clocks, no
 //! global state. `RunReport::to_row` already drops wall time for this
@@ -317,6 +320,12 @@ pub struct SweepOptions {
     /// Run at most this many pending cells this invocation (budgeted
     /// runs and the kill/resume tests); the sweep reports incomplete.
     pub limit: Option<usize>,
+    /// Run only pending cells whose id matches this glob-lite pattern
+    /// (`*` wildcards, unanchored — see [`id_matches`]). Restored cells
+    /// are kept regardless; a later `resume` without the filter runs
+    /// the complement, and the finished file is byte-identical to an
+    /// unfiltered run.
+    pub filter: Option<String>,
 }
 
 impl SweepOptions {
@@ -344,8 +353,28 @@ pub struct SweepOutcome {
 
 /// Option keys that steer the engine rather than the grid; excluded
 /// from the results-file header so `run` and `resume` agree on it.
-const ENGINE_KEYS: &[&str] =
-    &["out", "resume", "fresh", "limit", "json", "dry-run", "quiet", "help"];
+const ENGINE_KEYS: &[&str] = &[
+    "out", "resume", "fresh", "limit", "filter", "json", "dry-run", "quiet",
+    "help",
+];
+
+/// Glob-lite cell-id match: `*` matches any run of characters and the
+/// pattern is unanchored (plain substrings work), so `rank=4` hits every
+/// cell whose id contains it and `rank=4,*env=analog` additionally
+/// constrains the order in which the fragments appear.
+pub fn id_matches(pattern: &str, id: &str) -> bool {
+    let mut pos = 0;
+    for piece in pattern.split('*') {
+        if piece.is_empty() {
+            continue;
+        }
+        match id[pos..].find(piece) {
+            Some(off) => pos += off + piece.len(),
+            None => return false,
+        }
+    }
+    true
+}
 
 /// Expand the grid, fan cells out on the shared worker pool, checkpoint
 /// each completed cell, and render the result. See the module docs for
@@ -470,6 +499,9 @@ pub fn run_sweep(
 
     let mut pending: Vec<usize> =
         (0..n).filter(|i| !restored.contains_key(i)).collect();
+    if let Some(pat) = &opts.filter {
+        pending.retain(|&i| id_matches(pat, &grid.cell(i).id));
+    }
     if let Some(limit) = opts.limit {
         pending.truncate(limit);
     }
@@ -726,6 +758,37 @@ mod tests {
         }
         let _ = std::fs::remove_file(&a);
         let _ = std::fs::remove_file(&b);
+    }
+
+    #[test]
+    fn filter_matcher_glob_lite() {
+        assert!(id_matches("rank=4", "rank=4,env=analog"));
+        assert!(id_matches("rank=*analog", "rank=4,env=analog"));
+        assert!(id_matches("", "anything"));
+        assert!(id_matches("*", "anything"));
+        assert!(!id_matches("rank=2", "rank=4,env=analog"));
+        // pieces must appear in order
+        assert!(id_matches("rank=*env=", "rank=4,env=analog"));
+        assert!(!id_matches("env=*rank=", "rank=4,env=analog"));
+        // substring is unanchored but contiguous
+        assert!(!id_matches("rank=4,analog", "rank=4,env=analog"));
+    }
+
+    #[test]
+    fn filtered_sweep_runs_only_matching_cells() {
+        let mut opts = SweepOptions::ephemeral();
+        opts.filter = Some("env=analog".to_string());
+        let out = run_sweep(&Toy, &Args::default(), &opts).unwrap();
+        assert!(!out.complete, "filtered sweep must report incomplete");
+        assert_eq!(out.cells_run, 2, "rank=1|2 x env=analog");
+        for row in &out.rows {
+            // the axis value "analog" parses to Env::AnalogDrift
+            assert_eq!(row.text("env"), Some("analog-drift"));
+        }
+        // a filter matching nothing runs nothing
+        opts.filter = Some("env=nope".to_string());
+        let none = run_sweep(&Toy, &Args::default(), &opts).unwrap();
+        assert_eq!(none.cells_run, 0);
     }
 
     #[test]

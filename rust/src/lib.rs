@@ -16,16 +16,21 @@
 //!
 //! Native-engine hot paths run on `tensor::kernels`: cache-blocked
 //! (`TILE_J`/`TILE_K`) matmul / matmul_transb / matmul_atb kernels with
-//! multi-accumulator inner loops, plus one shared worker pool
-//! (`LRT_KERNEL_THREADS`, default `available_parallelism`) drawn on by
-//! the kernels, `experiments::parallel_map` sweep points, fleet devices,
-//! and batched inference (`NativeDevice::step_batch`) without
-//! oversubscription. The naive `Mat` methods remain the reference;
-//! `tests/kernel_parity.rs` pins fast-vs-naive agreement to <= 1e-5 and
-//! batched-vs-per-sample stepping to bit-exact, and
+//! ISA-dispatched inner loops (`LRT_KERNEL_ISA=scalar|unrolled|native`;
+//! native = runtime-detected AVX2/NEON, bit-identical to the portable
+//! unrolled tier), plus one shared worker pool (`LRT_KERNEL_THREADS`,
+//! default `available_parallelism`) drawn on by the kernels,
+//! `experiments::parallel_map` sweep points, fleet devices, and batched
+//! inference (`NativeDevice::step_batch`) without oversubscription —
+//! fan-outs install fair-share affinity hints so consumers split the
+//! budget evenly. The naive `Mat` methods remain the reference;
+//! `tests/kernel_conformance.rs` pins every (kernel x tier x
+//! thread-count x shape-class) cell to <= 1e-5 of it (bit-exact where
+//! the contract says so), `tests/kernel_parity.rs` pins the default
+//! path and batched-vs-per-sample stepping, and
 //! `tests/golden_trainer.rs` snapshots the deterministic seed-11 run.
-//! Measure the layer with `cargo bench --bench perf_hotpath` (blocked vs
-//! naive and batched vs per-sample columns).
+//! Measure the layer with `cargo bench --bench perf_hotpath` (blocked
+//! vs naive, per-ISA-tier, and batched vs per-sample tables).
 
 pub mod baselines;
 pub mod convex;

@@ -14,8 +14,10 @@ const EPS: f32 = 1e-12;
 /// the invariant `v_original == Q_new @ c` holds either way.
 ///
 /// The column dots/axpys go through the strided `tensor::kernels` lane
-/// helpers (the projection itself stays sequential per column — that is
-/// what makes it *modified* GS).
+/// helpers, which dispatch on the active ISA tier (AVX2 gathers on
+/// x86_64 native; portable lanes elsewhere — bit-identical across the
+/// unrolled/native tiers). The projection itself stays sequential per
+/// column — that is what makes it *modified* GS.
 pub fn mgs_project(q_mat: &mut Mat, v: &mut [f32], c: &mut [f32]) {
     let q = q_mat.cols;
     let r = q - 1;

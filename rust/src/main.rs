@@ -20,8 +20,11 @@
 //! Engine options for `run`/`resume`: `--out <file>` (results path),
 //! `--fresh` (overwrite an existing results file), `--no-out`
 //! (ephemeral), `--limit N` (run at most N cells, checkpoint, exit),
-//! `--json` (print rows as JSON Lines instead of the table).
-//! `LRT_FULL=1` switches to paper-scale workloads.
+//! `--filter <id-pattern>` (run only cells whose id matches a glob-lite
+//! pattern, `*` wildcards, unanchored; resume without the filter runs
+//! the complement), `--json` (print rows as JSON Lines instead of the
+//! table). `LRT_FULL=1` switches to paper-scale workloads;
+//! `LRT_KERNEL_THREADS` / `LRT_KERNEL_ISA` tune the kernel pool.
 
 use std::path::PathBuf;
 
@@ -128,9 +131,24 @@ fn run_scenario(
         if let Err(e) = grid.validate() {
             bail!("invalid grid for scenario '{name}': {e}");
         }
-        println!("{name}: {} cells", grid.n_cells());
-        for i in 0..grid.n_cells() {
-            println!("  [{i:>3}] {}", grid.cell(i).id);
+        // the preview honors --filter exactly like a real run would
+        let filter = args.options.get("filter");
+        let cells: Vec<(usize, String)> = (0..grid.n_cells())
+            .map(|i| (i, grid.cell(i).id.clone()))
+            .filter(|(_, id)| {
+                filter.map_or(true, |p| exp::id_matches(p, id))
+            })
+            .collect();
+        match filter {
+            Some(p) => println!(
+                "{name}: {} of {} cells match --filter '{p}'",
+                cells.len(),
+                grid.n_cells()
+            ),
+            None => println!("{name}: {} cells", grid.n_cells()),
+        }
+        for (i, id) in cells {
+            println!("  [{i:>3}] {id}");
         }
         return Ok(());
     }
@@ -157,7 +175,12 @@ fn run_scenario(
             Err(_) => bail!("--limit must be a number, got '{s}'"),
         },
     };
-    let opts = exp::SweepOptions { out, resume, limit };
+    let opts = exp::SweepOptions {
+        out,
+        resume,
+        limit,
+        filter: args.options.get("filter").cloned(),
+    };
     let outcome = exp::run_sweep(sc, args, &opts)?;
     if args.flag("json") {
         for r in &outcome.rows {
@@ -231,8 +254,8 @@ fn describe(sc: &dyn exp::Scenario, args: &Args) {
     }
     println!(
         "\nengine options: --out <file> --fresh --no-out --limit N \
-         --json --dry-run; axes with comma lists (shown above) accept \
-         CLI overrides, e.g. --ranks 1,4."
+         --filter <id-pattern> --json --dry-run; axes with comma lists \
+         (shown above) accept CLI overrides, e.g. --ranks 1,4."
     );
 }
 
@@ -246,7 +269,8 @@ fn print_help() {
                               cells out on the worker pool, checkpoint each\n\
                               completed cell to results/<scenario>.jsonl\n\
                               (JSON Lines; --out FILE, --no-out, --json,\n\
-                              --limit N, --fresh, --dry-run, --help)\n\
+                              --limit N, --filter ID-PATTERN, --fresh,\n\
+                              --dry-run, --help)\n\
            resume <scenario>  continue a killed sweep from its results file\n\
                               — finished cells are restored, the rest run,\n\
                               and the final file matches an uninterrupted\n\

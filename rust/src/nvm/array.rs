@@ -197,6 +197,53 @@ mod tests {
         });
     }
 
+    /// The paper's core write-economy claim at the array level: one
+    /// batched flush of the net state never reports more writes than
+    /// the per-sample commit sequence it replaces — per cell and in
+    /// total (a cell that toggles and returns costs the per-sample
+    /// path two writes and the batched path zero).
+    #[test]
+    fn batched_commit_never_exceeds_per_sample_writes() {
+        prop::check("nvm-batch-write-bound", 20, |rng| {
+            let m = Mat::from_fn(4, 6, |_, _| rng.normal_f32(0.0, 0.3));
+            let mut per = NvmArray::program(&m, QW);
+            let mut bat = NvmArray::program(&m, QW);
+            let n = 1 + rng.below(10);
+            let mut cur = m.clone();
+            for _ in 0..n {
+                cur = Mat::from_fn(4, 6, |i, j| {
+                    cur.at(i, j) + rng.normal_f32(0.0, 0.05)
+                });
+                per.commit(&cur);
+            }
+            bat.commit(&cur); // one flush of the accumulated state
+            crate::prop_assert!(
+                bat.total_writes <= per.total_writes,
+                "batched flush wrote MORE: {} > {} over {n} steps",
+                bat.total_writes,
+                per.total_writes
+            );
+            for (i, (b, p)) in
+                bat.writes.iter().zip(per.writes.iter()).enumerate()
+            {
+                crate::prop_assert!(
+                    b <= p,
+                    "cell {i}: batched {b} > per-sample {p}"
+                );
+            }
+            crate::prop_assert!(
+                bat.commits == 1 && per.commits == n as u64,
+                "commit counters off"
+            );
+            // both paths agree on the final weights exactly
+            crate::prop_assert!(
+                bat.read().data == per.read().data,
+                "final weights diverged"
+            );
+            Ok(())
+        });
+    }
+
     #[test]
     fn endurance_fraction() {
         let m = Mat::from_vec(1, 1, vec![0.0]);

@@ -160,6 +160,62 @@ mod tests {
     }
 
     #[test]
+    fn quantize_dequantize_idempotent_bitwise() {
+        // Every fixed-range quantizer (power-of-2 grid, k < 2^24) is
+        // EXACTLY idempotent: grid values survive a re-quantize with
+        // identical bits, at every bitwidth of the Fig. 7 sweep.
+        prop::check("quant-idempotent-exact", 80, |rng| {
+            let q = match rng.below(3) {
+                0 => qw_bits(1 + rng.below(8) as u32),
+                1 => [QW, QB, QA, QG][rng.below(4)],
+                _ => Quantizer::new(4, -2.0, 2.0, rng.bernoulli(0.5)),
+            };
+            let x = rng.normal_f32(0.0, 4.0);
+            let y = q.q(x);
+            crate::prop_assert!(
+                q.q(y).to_bits() == y.to_bits(),
+                "q(q(x)) != q(x) bitwise for {q:?} at x={x}"
+            );
+            // code/decode: decode lands on the grid, so the roundtrip
+            // decode∘code is the identity on codes
+            let c = q.code(x);
+            crate::prop_assert!(
+                q.code(q.decode(c)) == c,
+                "code(decode(c)) != c for {q:?} at x={x}"
+            );
+            crate::prop_assert!(
+                q.decode(c).to_bits() == q.q(x).to_bits(),
+                "decode(code(x)) != q(x) for {q:?} at x={x}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn q16_dyn_nearly_idempotent() {
+        // The dynamic-range quantizer re-derives its scale from the
+        // data, so a second pass may shift values by at most ~1 LSB of
+        // the dynamic grid (maxabs/32767) — never more.
+        prop::check("q16-idempotent", 30, |rng| {
+            let n = 1 + rng.below(24);
+            let mut xs: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            q16_dyn(&mut xs);
+            let once = xs.clone();
+            q16_dyn(&mut xs);
+            let maxabs =
+                once.iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1e-12);
+            for (a, b) in once.iter().zip(xs.iter()) {
+                crate::prop_assert!(
+                    (a - b).abs() <= 1e-4 * maxabs,
+                    "second q16_dyn pass moved {a} -> {b}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn mid_rise_one_bit() {
         let q = qw_bits(1);
         assert_eq!(q.q(0.3), 0.5);

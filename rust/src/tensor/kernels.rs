@@ -1,4 +1,5 @@
-//! Cache-blocked, multi-threaded matmul kernels + the shared worker pool.
+//! Cache-blocked, multi-threaded, SIMD-dispatched matmul kernels + the
+//! shared worker pool.
 //!
 //! The naive `Mat` methods in `tensor` stay as the always-correct
 //! reference; everything hot in the native engine (NN forward/backward,
@@ -7,29 +8,53 @@
 //!
 //! - `matmul` / `matmul_transb` / `matmul_atb` — tiled over the B operand
 //!   (TILE_J / TILE_K) so the streamed block stays in L1/L2, with
-//!   multi-accumulator inner loops (`dot_fast`) that vectorize where the
-//!   scalar reference reduction cannot, and row-partitioned threading.
+//!   row-partitioned threading and ISA-dispatched inner loops;
+//! - an **ISA tier** for the dot/axpy cores, selected once at first use
+//!   and overridable via `LRT_KERNEL_ISA=scalar|unrolled|native`:
+//!   - `scalar` — sequential reference loops, bit-identical to the naive
+//!     `Mat` ops (the debugging tier);
+//!   - `unrolled` — portable 8-lane (4-lane strided) multi-accumulator
+//!     loops that autovectorize on any arch (the PR-1 `dot_fast` tier);
+//!   - `native` — `target_feature`-gated AVX2 (x86_64) / NEON (aarch64)
+//!     intrinsic kernels behind runtime detection. They mirror the
+//!     unrolled tier's lane assignment and reduction tree exactly and
+//!     use mul-then-add (no FMA), so the native tier is **bit-identical
+//!     to the unrolled tier** — switching machines never moves numbers;
 //! - a global *thread budget* shared by every consumer: `run_scoped`
 //!   (the `experiments::parallel_map` engine, also used by the fleet and
 //!   batched inference) and the kernels draw workers from one pool sized
 //!   `LRT_KERNEL_THREADS` (default: `available_parallelism`), so fleet
 //!   devices x sweep points x kernel threads never oversubscribe — when
 //!   outer parallelism saturates the budget, inner kernels degrade to
-//!   sequential automatically.
+//!   sequential automatically;
+//! - **affinity hints**: an outer fan-out (`run_scoped` with n > 1)
+//!   installs a per-worker fair share of the budget, so N fleet devices
+//!   or sweep cells each get ~cap/N inner kernel threads instead of the
+//!   first consumer hoarding every token. Per-layer consumers (the flush
+//!   evaluation in `NativeDevice`) cap themselves with [`affinity`] using
+//!   [`suggested_workers`], so tiny conv layers never pay spawn overhead.
 //!
 //! Numerics: `matmul` and `matmul_atb` accumulate in exactly the naive
-//! reference order (tiling only repartitions the loop; accumulation into
-//! the output row is still in ascending k) and are bit-identical to the
-//! `Mat` methods. `matmul_transb` and the strided helpers split the
-//! reduction across independent accumulator lanes, which reorders f32
-//! additions; `tests/kernel_parity.rs` pins the agreement to <= 1e-5.
+//! reference order under **every** ISA tier and thread count (tiling only
+//! repartitions the loop; the inner axpy is element-wise, which no tier
+//! reassociates) and are bit-identical to the `Mat` methods.
+//! `matmul_transb` / `matvec` and the strided helpers reduce across
+//! accumulator lanes in the unrolled/native tiers, which reorders f32
+//! additions; `tests/kernel_conformance.rs` pins every (kernel x tier x
+//! thread-count x shape-class) cell to <= 1e-5 of the naive reference,
+//! the scalar tier to bit-equality with it, and native to bit-equality
+//! with unrolled. Results never depend on the thread count.
 //!
 //! Tuning knobs: `LRT_KERNEL_THREADS` (pool size, set 1 to force the
-//! sequential path), `TILE_J`/`TILE_K` (block sizes), `PAR_MIN_WORK`
-//! (minimum per-thread flops before the pool is consulted).
+//! sequential path), `LRT_KERNEL_ISA` (dispatch tier), `TILE_J`/`TILE_K`
+//! (block sizes), `PAR_MIN_WORK` (minimum per-thread flops before the
+//! pool is consulted). Tests and benches switch both knobs in-process
+//! with [`with_overrides`].
 
 use super::Mat;
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Rows of the transposed-B operand processed per block (TILE_J rows of
 /// `b` stay hot across consecutive rows of `a`).
@@ -42,13 +67,174 @@ pub const TILE_K: usize = 128;
 pub const PAR_MIN_WORK: usize = 1 << 15;
 
 // ---------------------------------------------------------------------
-// Shared thread budget
+// ISA dispatch tier
 // ---------------------------------------------------------------------
+
+/// Which inner-loop implementation the kernels dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Sequential reference loops — bit-identical to the naive `Mat`
+    /// ops. Slowest; exists for debugging and the conformance matrix.
+    Scalar,
+    /// Portable hand-unrolled multi-accumulator loops (8 dense lanes,
+    /// 4 strided lanes) that autovectorize on any architecture.
+    Unrolled,
+    /// Runtime-detected AVX2 (x86_64) / NEON (aarch64) intrinsics.
+    /// Same lane structure as `Unrolled`, mul-then-add (no FMA), so
+    /// bit-identical to it; falls back to `Unrolled` where unsupported.
+    Native,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Unrolled => "unrolled",
+            Isa::Native => "native",
+        }
+    }
+}
+
+fn isa_code(i: Isa) -> usize {
+    match i {
+        Isa::Scalar => 1,
+        Isa::Unrolled => 2,
+        Isa::Native => 3,
+    }
+}
+
+fn isa_from_code(c: usize) -> Isa {
+    match c {
+        1 => Isa::Scalar,
+        2 => Isa::Unrolled,
+        _ => Isa::Native,
+    }
+}
+
+/// True when this build+machine has a real `Native` tier (AVX2 on
+/// x86_64, NEON on aarch64).
+pub fn native_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    fn detect() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    fn detect() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn detect() -> bool {
+        false
+    }
+    detect()
+}
+
+/// Every tier that can actually run on this machine, in ascending
+/// sophistication (the conformance/bench enumeration order).
+pub fn available_isas() -> Vec<Isa> {
+    let mut v = vec![Isa::Scalar, Isa::Unrolled];
+    if native_available() {
+        v.push(Isa::Native);
+    }
+    v
+}
+
+/// Selected tier code; 0 = not yet resolved.
+static ISA: AtomicUsize = AtomicUsize::new(0);
+
+/// The active dispatch tier, resolved once at first kernel use (pool
+/// init): `LRT_KERNEL_ISA=scalar|unrolled|native` wins, else the best
+/// detected tier. A `native` request on a machine without AVX2/NEON
+/// degrades to `unrolled`.
+pub fn isa() -> Isa {
+    let c = ISA.load(Ordering::Relaxed);
+    if c != 0 {
+        return isa_from_code(c);
+    }
+    let resolved = resolve_isa();
+    ISA.store(isa_code(resolved), Ordering::Relaxed);
+    resolved
+}
+
+fn resolve_isa() -> Isa {
+    let detect = || {
+        if native_available() {
+            Isa::Native
+        } else {
+            Isa::Unrolled
+        }
+    };
+    let pick = match std::env::var("LRT_KERNEL_ISA").ok().as_deref() {
+        Some("scalar") => Isa::Scalar,
+        Some("unrolled") => Isa::Unrolled,
+        Some("native") => Isa::Native,
+        Some(other) => {
+            eprintln!(
+                "LRT_KERNEL_ISA='{other}' is not scalar|unrolled|native; \
+                 autodetecting"
+            );
+            detect()
+        }
+        None => detect(),
+    };
+    if pick == Isa::Native && !native_available() {
+        Isa::Unrolled
+    } else {
+        pick
+    }
+}
+
+/// Serializes [`with_overrides`] scopes: the overrides are process-
+/// global, so concurrent test threads using them must take turns.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the dispatch tier and/or pool size overridden — the
+/// test/bench hook behind the conformance matrix and the per-tier bench
+/// tables. Overrides are process-global (worker threads must see them),
+/// so scopes are serialized on an internal lock; do not nest. A `Native`
+/// override on a machine without AVX2/NEON degrades to `Unrolled`.
+pub fn with_overrides<T>(
+    isa_override: Option<Isa>,
+    threads: Option<usize>,
+    f: impl FnOnce() -> T,
+) -> T {
+    let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore {
+        isa: usize,
+        threads: usize,
+    }
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            ISA.store(self.isa, Ordering::Relaxed);
+            THREADS.store(self.threads, Ordering::Relaxed);
+        }
+    }
+    // Resolve both knobs first so the restore state is concrete.
+    let _restore = Restore { isa: isa_code(isa()), threads: max_threads() };
+    if let Some(i) = isa_override {
+        let i = if i == Isa::Native && !native_available() {
+            Isa::Unrolled
+        } else {
+            i
+        };
+        ISA.store(isa_code(i), Ordering::Relaxed);
+    }
+    if let Some(n) = threads {
+        THREADS.store(n.max(1), Ordering::Relaxed);
+    }
+    f()
+}
+
+// ---------------------------------------------------------------------
+// Shared thread budget + affinity hints
+// ---------------------------------------------------------------------
+
+/// Pool size (caller thread included); 0 = not yet resolved.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
 
 /// Pool size (caller thread included), cached after first read.
 pub fn max_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let c = CACHED.load(Ordering::Relaxed);
+    let c = THREADS.load(Ordering::Relaxed);
     if c != 0 {
         return c;
     }
@@ -61,16 +247,64 @@ pub fn max_threads() -> usize {
                 .map(|p| p.get())
                 .unwrap_or(2)
         });
-    CACHED.store(n, Ordering::Relaxed);
+    THREADS.store(n, Ordering::Relaxed);
     n
 }
 
 /// Tokens currently in use (the caller thread always owns one).
 static IN_USE: AtomicUsize = AtomicUsize::new(1);
 
+thread_local! {
+    /// This thread's affinity hint: the most extra worker tokens a
+    /// single acquisition may take. `usize::MAX` = unhinted.
+    static AFFINITY_CAP: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+fn affinity_cap() -> usize {
+    AFFINITY_CAP.with(|c| c.get())
+}
+
+/// Restores the previous affinity hint on drop.
+pub struct AffinityGuard {
+    prev: usize,
+}
+
+impl Drop for AffinityGuard {
+    fn drop(&mut self) {
+        AFFINITY_CAP.with(|c| c.set(self.prev));
+    }
+}
+
+/// Install an affinity hint on the current thread until the guard
+/// drops: kernel calls made from this thread will take at most
+/// `extra_workers` extra pool tokens per acquisition (0 = stay
+/// sequential). Hints only narrow (they min with any enclosing hint)
+/// and never change results — parallelism degree is numerics-invariant.
+///
+/// `run_scoped` installs one automatically on every worker of an outer
+/// fan-out (the fair share of the budget), so fleet devices and sweep
+/// cells stop contending for the same tokens; per-layer consumers pass
+/// [`suggested_workers`] of their own flop count.
+pub fn affinity(extra_workers: usize) -> AffinityGuard {
+    let prev = AFFINITY_CAP.with(|c| {
+        let p = c.get();
+        c.set(p.min(extra_workers));
+        p
+    });
+    AffinityGuard { prev }
+}
+
+/// Per-layer affinity hint: how many extra pool workers a kernel pass
+/// of `flops` multiply-adds warrants (0 = not worth a spawn).
+pub fn suggested_workers(flops: usize) -> usize {
+    (flops / PAR_MIN_WORK).min(max_threads().saturating_sub(1))
+}
+
 /// Try to take up to `want` extra worker tokens; returns how many were
-/// granted (possibly 0 when outer parallelism holds the budget).
+/// granted (possibly 0 when outer parallelism holds the budget or the
+/// thread's affinity hint says to stay sequential).
 fn acquire(want: usize) -> usize {
+    let want = want.min(affinity_cap());
     if want == 0 {
         return 0;
     }
@@ -115,7 +349,10 @@ impl Drop for BudgetGuard {
 /// Run `n` closures on pool workers, preserving order (the engine behind
 /// `experiments::parallel_map`, the fleet, and batched inference).
 /// Dynamic scheduling; the caller thread works too, so this never blocks
-/// on an empty budget — it just runs sequentially.
+/// on an empty budget — it just runs sequentially. When it does fan out,
+/// every worker (caller included) gets an affinity hint of its fair
+/// share of the budget, so the closures' own inner kernels split the
+/// pool evenly instead of first-come-takes-all.
 pub fn run_scoped<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -129,18 +366,29 @@ where
         return (0..n).map(f).collect();
     }
     let _guard = BudgetGuard(extra);
+    // Fair share per worker: with w workers splitting the pool, each
+    // one's inner kernels should take at most cap/w - 1 extra tokens.
+    // Min with the caller's own hint so a nested fan-out cannot widen
+    // what an enclosing scope already narrowed (worker threads start
+    // with a fresh thread-local cap, so inheritance is explicit here).
+    let share = (max_threads() / (extra + 1))
+        .saturating_sub(1)
+        .min(affinity_cap());
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     {
         let next = AtomicUsize::new(0);
         let slots = std::sync::Mutex::new(&mut out);
         std::thread::scope(|scope| {
-            let work = || loop {
-                let i = next.fetch_add(1, Ordering::SeqCst);
-                if i >= n {
-                    break;
+            let work = || {
+                let _aff = affinity(share);
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    slots.lock().unwrap()[i] = Some(v);
                 }
-                let v = f(i);
-                slots.lock().unwrap()[i] = Some(v);
             };
             let work = &work;
             for _ in 0..extra {
@@ -192,14 +440,13 @@ where
 }
 
 // ---------------------------------------------------------------------
-// Vectorizable inner loops
+// ISA-tiered micro-kernels: dense dot / axpy
 // ---------------------------------------------------------------------
 
-/// Dense dot product over 8 accumulator lanes. Reassociates the f32
-/// reduction (unlike `tensor::dot`), which is what lets it vectorize.
+/// Portable 8-accumulator dot. Reassociates the f32 reduction (unlike
+/// `tensor::dot`), which is what lets it vectorize.
 #[inline]
-pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
+fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
     let n8 = (a.len() / 8) * 8;
     let mut acc = [0.0f32; 8];
     for (ca, cb) in a[..n8].chunks_exact(8).zip(b[..n8].chunks_exact(8)) {
@@ -215,10 +462,97 @@ pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// sum_i src[offset + i*stride] * v[i] over 4 lanes — the column dot of
-/// a row-major matrix (used by the MGS projection, stride = q).
 #[inline]
-pub fn dot_stride(src: &[f32], stride: usize, offset: usize, v: &[f32]) -> f32 {
+fn dot_dispatch(tier: Isa, a: &[f32], b: &[f32]) -> f32 {
+    // hard assert: the native tier runs raw-pointer loops to a.len(),
+    // so a length mismatch must panic here (as the safe tiers would),
+    // not read/write out of bounds in release builds
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    match tier {
+        // the scalar tier IS the naive reference reduction
+        Isa::Scalar => super::dot(a, b),
+        Isa::Unrolled => dot_unrolled(a, b),
+        Isa::Native => dot_native(a, b),
+    }
+}
+
+/// Dense dot product on the active ISA tier (kept under the historical
+/// name — consumers don't care which tier runs).
+#[inline]
+pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
+    dot_dispatch(isa(), a, b)
+}
+
+/// Portable 8-lane axpy (arithmetic identical to `tensor::axpy`,
+/// chunked for vectorization — element-wise, so every tier is
+/// bit-identical).
+#[inline]
+fn axpy_unrolled(alpha: f32, x: &[f32], out: &mut [f32]) {
+    let n8 = (x.len() / 8) * 8;
+    for (co, cx) in
+        out[..n8].chunks_exact_mut(8).zip(x[..n8].chunks_exact(8))
+    {
+        for l in 0..8 {
+            co[l] += alpha * cx[l];
+        }
+    }
+    for (o, &xv) in out[n8..].iter_mut().zip(x[n8..].iter()) {
+        *o += alpha * xv;
+    }
+}
+
+#[inline]
+fn axpy_dispatch(tier: Isa, alpha: f32, x: &[f32], out: &mut [f32]) {
+    // hard assert: axpy_avx2/axpy_neon write through raw pointers to
+    // x.len(), so a short `out` must panic here instead of corrupting
+    // memory in release builds (the safe tiers would merely truncate)
+    assert_eq!(x.len(), out.len(), "axpy: length mismatch");
+    if alpha == 0.0 {
+        return;
+    }
+    match tier {
+        // the scalar tier IS the naive reference loop
+        Isa::Scalar => super::axpy(alpha, x, out),
+        Isa::Unrolled => axpy_unrolled(alpha, x, out),
+        Isa::Native => axpy_native(alpha, x, out),
+    }
+}
+
+/// `out += alpha * x` on the active ISA tier.
+#[inline]
+pub fn axpy_fast(alpha: f32, x: &[f32], out: &mut [f32]) {
+    axpy_dispatch(isa(), alpha, x, out)
+}
+
+// ---------------------------------------------------------------------
+// ISA-tiered micro-kernels: strided MGS lane helpers
+// ---------------------------------------------------------------------
+
+/// Sequential reference strided dot.
+#[inline]
+fn dot_stride_scalar(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
+    let mut s = 0.0f32;
+    let mut idx = offset;
+    for &vi in v {
+        s += src[idx] * vi;
+        idx += stride;
+    }
+    s
+}
+
+/// Portable 4-lane strided dot.
+#[inline]
+fn dot_stride_unrolled(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
     let n = v.len();
     let n4 = (n / 4) * 4;
     let mut acc = [0.0f32; 4];
@@ -241,8 +575,34 @@ pub fn dot_stride(src: &[f32], stride: usize, offset: usize, v: &[f32]) -> f32 {
     s
 }
 
+/// sum_i src[offset + i*stride] * v[i] — the column dot of a row-major
+/// matrix (used by the MGS projection, stride = q), on the active tier.
+#[inline]
+pub fn dot_stride(src: &[f32], stride: usize, offset: usize, v: &[f32]) -> f32 {
+    // hard bounds check: the AVX2 gather path reads raw pointers, so
+    // an out-of-range access must panic here (as the safe tiers'
+    // slice indexing would) rather than read OOB in release builds
+    if let Some(last) = v.len().checked_sub(1) {
+        assert!(
+            offset + last * stride < src.len(),
+            "dot_stride out of bounds: offset={offset} stride={stride} \
+             n={} src_len={}",
+            v.len(),
+            src.len()
+        );
+    }
+    match isa() {
+        Isa::Scalar => dot_stride_scalar(src, stride, offset, v),
+        Isa::Unrolled => dot_stride_unrolled(src, stride, offset, v),
+        Isa::Native => dot_stride_native(src, stride, offset, v),
+    }
+}
+
 /// v[i] += alpha * src[offset + i*stride] — the column axpy of a
-/// row-major matrix into a dense vector.
+/// row-major matrix into a dense vector. Element-wise (no reduction), so
+/// it is ISA-tier-invariant by construction; gathers don't pay here and
+/// scatters don't exist below AVX-512, so one portable body serves every
+/// tier bit-identically.
 #[inline]
 pub fn axpy_gather(
     alpha: f32,
@@ -262,7 +622,8 @@ pub fn axpy_gather(
 }
 
 /// dst[offset + i*stride] = scale * v[i] — install a dense vector as a
-/// column of a row-major matrix.
+/// column of a row-major matrix. Element-wise store; tier-invariant for
+/// the same reason as [`axpy_gather`].
 #[inline]
 pub fn scatter_scale(
     v: &[f32],
@@ -279,6 +640,252 @@ pub fn scatter_scale(
 }
 
 // ---------------------------------------------------------------------
+// Native (AVX2 / NEON) tier
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_native(a: &[f32], b: &[f32]) -> f32 {
+    // Safety: the Native tier is only dispatchable after AVX2 detection
+    // (`resolve_isa` / `with_overrides` both degrade it otherwise).
+    unsafe { x86::dot_avx2(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn axpy_native(alpha: f32, x: &[f32], out: &mut [f32]) {
+    unsafe { x86::axpy_avx2(alpha, x, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_stride_native(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
+    // Gather offsets are i32 element indices; enormous strides (never
+    // produced by the MGS call sites, where stride = q <= rank+1) fall
+    // back to the bit-identical portable lanes.
+    if stride > (i32::MAX as usize) / 4 {
+        return dot_stride_unrolled(src, stride, offset, v);
+    }
+    unsafe { x86::dot_stride_avx2(src, stride, offset, v) }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// 8-lane AVX2 dot with the same lane assignment and reduction tree
+    /// as the portable unrolled tier, mul-then-add (no FMA): results are
+    /// bit-identical to `dot_unrolled`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = (n / 8) * 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += 8;
+        }
+        let mut l = [0.0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = ((l[0] + l[4]) + (l[2] + l[6]))
+            + ((l[1] + l[5]) + (l[3] + l[7]));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// 8-lane AVX2 axpy; element-wise mul-then-add, bit-identical to
+    /// the scalar loop.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(alpha: f32, x: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let n8 = (n / 8) * 8;
+        let va = _mm256_set1_ps(alpha);
+        let px = x.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut i = 0;
+        while i < n8 {
+            let vx = _mm256_loadu_ps(px.add(i));
+            let vo = _mm256_loadu_ps(po.add(i));
+            _mm256_storeu_ps(
+                po.add(i),
+                _mm256_add_ps(vo, _mm256_mul_ps(va, vx)),
+            );
+            i += 8;
+        }
+        while i < n {
+            *po.add(i) += alpha * *px.add(i);
+            i += 1;
+        }
+    }
+
+    /// 4-lane gathered strided dot mirroring the portable strided tier
+    /// (same lanes, same reduction tree): bit-identical to
+    /// `dot_stride_unrolled`. Caller guarantees 4*stride fits in i32.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_stride_avx2(
+        src: &[f32],
+        stride: usize,
+        offset: usize,
+        v: &[f32],
+    ) -> f32 {
+        let n = v.len();
+        let n4 = (n / 4) * 4;
+        let vindex = _mm_setr_epi32(
+            0,
+            stride as i32,
+            (2 * stride) as i32,
+            (3 * stride) as i32,
+        );
+        let mut acc = _mm_setzero_ps();
+        let ps = src.as_ptr();
+        let pv = v.as_ptr();
+        let mut idx = offset;
+        let mut i = 0;
+        while i < n4 {
+            let g = _mm_i32gather_ps::<4>(ps.add(idx), vindex);
+            let vv = _mm_loadu_ps(pv.add(i));
+            acc = _mm_add_ps(acc, _mm_mul_ps(g, vv));
+            idx += 4 * stride;
+            i += 4;
+        }
+        let mut l = [0.0f32; 4];
+        _mm_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = (l[0] + l[2]) + (l[1] + l[3]);
+        while i < n {
+            s += *ps.add(idx) * *pv.add(i);
+            idx += stride;
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn dot_native(a: &[f32], b: &[f32]) -> f32 {
+    // Safety: the Native tier is only dispatchable after NEON detection.
+    unsafe { arm::dot_neon(a, b) }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn axpy_native(alpha: f32, x: &[f32], out: &mut [f32]) {
+    unsafe { arm::axpy_neon(alpha, x, out) }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn dot_stride_native(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
+    // NEON has no gather; the portable lanes are the native strided path.
+    dot_stride_unrolled(src, stride, offset, v)
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// Two 4-lane NEON accumulators mirroring the 8-lane portable tier
+    /// (lo = lanes 0-3, hi = lanes 4-7; same reduction tree; vmul+vadd,
+    /// no fused multiply-add): bit-identical to `dot_unrolled`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = (n / 8) * 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < n8 {
+            lo = vaddq_f32(
+                lo,
+                vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))),
+            );
+            hi = vaddq_f32(
+                hi,
+                vmulq_f32(
+                    vld1q_f32(pa.add(i + 4)),
+                    vld1q_f32(pb.add(i + 4)),
+                ),
+            );
+            i += 8;
+        }
+        let mut l = [0.0f32; 8];
+        vst1q_f32(l.as_mut_ptr(), lo);
+        vst1q_f32(l.as_mut_ptr().add(4), hi);
+        let mut s = ((l[0] + l[4]) + (l[2] + l[6]))
+            + ((l[1] + l[5]) + (l[3] + l[7]));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// 4-lane NEON axpy; element-wise, bit-identical to the scalar loop.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_neon(alpha: f32, x: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let n4 = (n / 4) * 4;
+        let va = vdupq_n_f32(alpha);
+        let px = x.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut i = 0;
+        while i < n4 {
+            let vo = vld1q_f32(po.add(i));
+            vst1q_f32(
+                po.add(i),
+                vaddq_f32(vo, vmulq_f32(va, vld1q_f32(px.add(i)))),
+            );
+            i += 4;
+        }
+        while i < n {
+            *po.add(i) += alpha * *px.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn dot_native(a: &[f32], b: &[f32]) -> f32 {
+    dot_unrolled(a, b)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn axpy_native(alpha: f32, x: &[f32], out: &mut [f32]) {
+    axpy_unrolled(alpha, x, out)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn dot_stride_native(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
+    dot_stride_unrolled(src, stride, offset, v)
+}
+
+// ---------------------------------------------------------------------
 // Blocked / threaded matmuls
 // ---------------------------------------------------------------------
 
@@ -290,13 +897,16 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// out = a @ b. Accumulation order per output row is ascending k exactly
-/// like the naive ikj reference, so results are bit-identical; TILE_K
-/// only keeps a block of `b` rows hot across the row block.
+/// like the naive ikj reference, and the inner axpy is element-wise (no
+/// tier reassociates it), so results are bit-identical to `Mat::matmul`
+/// under every ISA tier and thread count; TILE_K only keeps a block of
+/// `b` rows hot across the row block.
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(out.rows, a.rows);
     assert_eq!(out.cols, b.cols);
     let k_dim = a.cols;
+    let tier = isa();
     let min_rows = (PAR_MIN_WORK / (k_dim * b.cols).max(1)).max(1);
     par_row_blocks(out, min_rows, |row0, block| {
         let cols = b.cols;
@@ -312,18 +922,16 @@ pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
                     if aik == 0.0 {
                         continue;
                     }
-                    let brow = b.row(k);
-                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                        *o += aik * bv;
-                    }
+                    axpy_dispatch(tier, aik, b.row(k), orow);
                 }
             }
         }
     });
 }
 
-/// a @ b.T, blocked + threaded, `dot_fast` inner loop. Matches
-/// `Mat::matmul_transb` to f32-reassociation tolerance (<= 1e-5).
+/// a @ b.T, blocked + threaded, tiered dot inner loop. Matches
+/// `Mat::matmul_transb` to f32-reassociation tolerance (<= 1e-5);
+/// bit-identical to it on the scalar tier.
 pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
     let mut out = Mat::zeros(a.rows, b.rows);
     matmul_transb_into(a, b, &mut out);
@@ -336,6 +944,7 @@ pub fn matmul_transb_into(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(out.rows, a.rows);
     assert_eq!(out.cols, b.rows);
     let k_dim = a.cols;
+    let tier = isa();
     let min_rows = (PAR_MIN_WORK / (k_dim * b.rows).max(1)).max(1);
     par_row_blocks(out, min_rows, |row0, block| {
         let cols = b.rows;
@@ -346,7 +955,7 @@ pub fn matmul_transb_into(a: &Mat, b: &Mat, out: &mut Mat) {
                 let arow = a.row(row0 + ri);
                 let orow = &mut block[ri * cols..(ri + 1) * cols];
                 for j in jb..jend {
-                    orow[j] = dot_fast(arow, b.row(j));
+                    orow[j] = dot_dispatch(tier, arow, b.row(j));
                 }
             }
         }
@@ -356,7 +965,7 @@ pub fn matmul_transb_into(a: &Mat, b: &Mat, out: &mut Mat) {
 /// a.T @ b without materializing the transpose (the dense weight
 /// gradient dzw^T @ ain). Accumulation order per output row is ascending
 /// p exactly like `a.t().matmul(&b)`, so results are bit-identical to
-/// the naive reference path.
+/// the naive reference path under every tier and thread count.
 pub fn matmul_atb(a: &Mat, b: &Mat) -> Mat {
     let mut out = Mat::zeros(a.cols, b.cols);
     matmul_atb_into(a, b, &mut out);
@@ -369,6 +978,7 @@ pub fn matmul_atb_into(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(out.rows, a.cols);
     assert_eq!(out.cols, b.cols);
     let p_dim = a.rows;
+    let tier = isa();
     let min_rows = (PAR_MIN_WORK / (p_dim * b.cols).max(1)).max(1);
     par_row_blocks(out, min_rows, |row0, block| {
         let cols = b.cols;
@@ -385,37 +995,31 @@ pub fn matmul_atb_into(a: &Mat, b: &Mat, out: &mut Mat) {
                         continue;
                     }
                     let orow = &mut block[ri * cols..(ri + 1) * cols];
-                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                        *o += c * bv;
-                    }
+                    axpy_dispatch(tier, c, brow, orow);
                 }
             }
         }
     });
 }
 
-/// y = a @ x with `dot_fast` rows (the fc-layer forward).
+/// y = a @ x with tiered dot rows (the fc-layer forward).
 pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
     assert_eq!(a.cols, x.len());
-    (0..a.rows).map(|i| dot_fast(a.row(i), x)).collect()
+    let tier = isa();
+    (0..a.rows).map(|i| dot_dispatch(tier, a.row(i), x)).collect()
 }
 
 /// m += scale * (u (x) v), threaded over row blocks; per-row arithmetic
-/// identical to `Mat::add_outer`.
+/// identical to `Mat::add_outer` under every tier.
 pub fn add_outer(m: &mut Mat, scale: f32, u: &[f32], v: &[f32]) {
     assert_eq!(u.len(), m.rows);
     assert_eq!(v.len(), m.cols);
+    let tier = isa();
     let min_rows = (PAR_MIN_WORK / m.cols.max(1)).max(1);
     par_row_blocks(m, min_rows, |row0, block| {
         let cols = v.len();
         for (ri, orow) in block.chunks_mut(cols).enumerate() {
-            let alpha = scale * u[row0 + ri];
-            if alpha == 0.0 {
-                continue;
-            }
-            for (o, &vv) in orow.iter_mut().zip(v.iter()) {
-                *o += alpha * vv;
-            }
+            axpy_dispatch(tier, scale * u[row0 + ri], v, orow);
         }
     });
 }
@@ -543,5 +1147,91 @@ mod tests {
         assert_eq!((c.rows, c.cols), (0, 0));
         let t = matmul_transb(&Mat::zeros(2, 3), &Mat::zeros(0, 3));
         assert_eq!((t.rows, t.cols), (2, 0));
+    }
+
+    #[test]
+    fn isa_resolves_and_tiers_agree() {
+        // the active tier must always be one this machine can run —
+        // Native may only resolve where detection passed
+        let active = isa();
+        assert!(available_isas().contains(&active), "{active:?}");
+        let mut rng = Rng::new(6);
+        let a: Vec<f32> = (0..219).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..219).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let reference = crate::tensor::dot(&a, &b);
+        // reassociation tolerance scales with sum |a_i b_i|, not the
+        // (possibly cancelled) result
+        let scale = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x * y).abs())
+            .sum::<f32>()
+            .max(1.0);
+        // scalar tier IS the reference reduction order
+        assert_eq!(dot_dispatch(Isa::Scalar, &a, &b), reference);
+        for tier in available_isas() {
+            let got = dot_dispatch(tier, &a, &b);
+            assert!(
+                (got - reference).abs() <= 1e-5 * scale,
+                "{}: {got} vs {reference}",
+                tier.name()
+            );
+        }
+        if native_available() {
+            // native mirrors unrolled's lanes exactly
+            assert_eq!(
+                dot_dispatch(Isa::Native, &a, &b),
+                dot_dispatch(Isa::Unrolled, &a, &b)
+            );
+        }
+    }
+
+    // NOTE: only the *thread* override is exercised here. Forcing an
+    // ISA tier is process-global and would change dot reductions under
+    // concurrently running training tests in this binary; the tier
+    // override matrix lives in `tests/kernel_conformance.rs`, where
+    // every tier-sensitive test runs inside the override lock.
+    #[test]
+    fn with_overrides_forces_and_restores() {
+        let before_threads = max_threads();
+        with_overrides(None, Some(1), || {
+            assert_eq!(max_threads(), 1);
+            // with a 1-thread pool, run_scoped stays on the caller
+            let me = std::thread::current().id();
+            let ids = run_scoped(5, |_| std::thread::current().id());
+            assert!(ids.iter().all(|&id| id == me));
+        });
+        assert_eq!(max_threads(), before_threads);
+    }
+
+    #[test]
+    fn affinity_zero_forces_sequential_and_restores() {
+        let me = std::thread::current().id();
+        {
+            let _aff = affinity(0);
+            let ids = run_scoped(6, |_| std::thread::current().id());
+            assert!(ids.iter().all(|&id| id == me), "hint not honored");
+        }
+        // guard dropped: the hint no longer pins acquisitions to zero
+        assert_eq!(affinity_cap(), usize::MAX);
+        // narrowing only: an inner wider hint cannot widen the cap
+        let _outer = affinity(1);
+        {
+            let _inner = affinity(5);
+            assert_eq!(affinity_cap(), 1);
+        }
+        assert_eq!(affinity_cap(), 1);
+    }
+
+    #[test]
+    fn suggested_workers_scales_with_flops() {
+        // pin the pool size so the expectations are exact (and the
+        // override lock serializes us against the other override test)
+        with_overrides(None, Some(4), || {
+            assert_eq!(suggested_workers(0), 0);
+            assert_eq!(suggested_workers(PAR_MIN_WORK - 1), 0);
+            assert_eq!(suggested_workers(PAR_MIN_WORK), 1);
+            assert_eq!(suggested_workers(usize::MAX / 2), 3);
+        });
     }
 }

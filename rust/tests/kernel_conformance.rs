@@ -1,0 +1,469 @@
+//! Kernel-path conformance suite: enumerate every
+//! (kernel x ISA tier x thread-count x shape-class) cell the dispatch
+//! layer can take and pin each one against the naive `Mat` reference.
+//!
+//! The contract (see `tensor::kernels` module docs):
+//!
+//! - `matmul` / `matmul_atb` / `add_outer` / `axpy_fast` and the
+//!   element-wise strided helpers are **bit-identical** to the naive
+//!   reference under every tier and every thread count (no tier
+//!   reassociates an element-wise op);
+//! - `matmul_transb` / `matvec` / `dot_fast` / `dot_stride` agree with
+//!   the naive reference to <= 1e-5 on every tier, are bit-identical to
+//!   it on the `scalar` tier, and the `native` tier is bit-identical to
+//!   `unrolled` (same lanes, same reduction tree, no FMA);
+//! - results never depend on the thread count;
+//! - the batched engine (`step_batch`) is bit-exact against per-sample
+//!   stepping under every tier.
+//!
+//! Tiers and pool sizes are switched in-process via
+//! `kernels::with_overrides` (internally serialized, so the suite is
+//! safe under the default parallel test harness).
+
+use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+use lrt_nvm::coordinator::device::NativeDevice;
+use lrt_nvm::lrt::Variant;
+use lrt_nvm::nn::model::{AuxState, Params};
+use lrt_nvm::tensor::{kernels, Mat};
+use lrt_nvm::util::rng::Rng;
+
+/// Pool sizes exercised per cell: forced-sequential and a small pool.
+const THREAD_COUNTS: [usize; 2] = [1, 4];
+
+/// Shape classes (m, k, n). Ragged shapes divide neither TILE_J=16 nor
+/// TILE_K=128 nor the 8/4 SIMD lane widths; aligned shapes divide all
+/// of them; fc5 is the acceptance shape from the paper's network.
+const SHAPES: [(&str, usize, usize, usize); 7] = [
+    ("degenerate", 1, 1, 1),
+    ("ragged-tiny", 3, 5, 7),
+    ("ragged-k", 17, 130, 19),
+    ("ragged-all", 33, 129, 31),
+    ("aligned-tile", 16, 128, 16),
+    ("aligned-lane", 32, 256, 8),
+    ("fc5", 64, 512, 10),
+];
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal_f32(0.0, 1.0))
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn assert_within(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let scale = want.iter().fold(1.0f32, |m, x| m.max(x.abs()));
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "{what}: elem {i}: {g} vs {w}"
+        );
+    }
+}
+
+/// Run `f` under every (tier, thread-count) cell; hand the result to
+/// `check(tier, threads, result)`. Also asserts thread-count invariance
+/// (bitwise) per tier.
+fn for_every_cell<T: PartialEq + std::fmt::Debug>(
+    f: impl Fn() -> T,
+    mut check: impl FnMut(kernels::Isa, usize, &T),
+) {
+    for tier in kernels::available_isas() {
+        let mut per_thread: Vec<T> = Vec::new();
+        for &threads in &THREAD_COUNTS {
+            let got =
+                kernels::with_overrides(Some(tier), Some(threads), &f);
+            check(tier, threads, &got);
+            per_thread.push(got);
+        }
+        assert_eq!(
+            per_thread[0], per_thread[1],
+            "{}: result depends on thread count",
+            tier.name()
+        );
+    }
+}
+
+#[test]
+fn matmul_bit_identical_in_every_cell() {
+    let mut rng = Rng::new(1);
+    for (label, m, k, n) in SHAPES {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let naive = a.matmul(&b);
+        for_every_cell(
+            || kernels::matmul(&a, &b),
+            |tier, threads, got| {
+                assert_eq!(
+                    got.data,
+                    naive.data,
+                    "matmul {label} tier={} threads={threads}",
+                    tier.name()
+                );
+            },
+        );
+    }
+}
+
+#[test]
+fn matmul_atb_bit_identical_in_every_cell() {
+    let mut rng = Rng::new(2);
+    for (label, p, m, n) in SHAPES {
+        let a = rand_mat(&mut rng, p, m);
+        let b = rand_mat(&mut rng, p, n);
+        let naive = a.t().matmul(&b);
+        for_every_cell(
+            || kernels::matmul_atb(&a, &b),
+            |tier, threads, got| {
+                assert_eq!(
+                    got.data,
+                    naive.data,
+                    "matmul_atb {label} tier={} threads={threads}",
+                    tier.name()
+                );
+            },
+        );
+    }
+}
+
+#[test]
+fn matmul_transb_conforms_in_every_cell() {
+    let mut rng = Rng::new(3);
+    for (label, m, k, n) in SHAPES {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, n, k);
+        let naive = a.matmul_transb(&b);
+        let mut by_tier: Vec<(kernels::Isa, Mat)> = Vec::new();
+        for_every_cell(
+            || kernels::matmul_transb(&a, &b),
+            |tier, threads, got| {
+                assert_within(
+                    &got.data,
+                    &naive.data,
+                    1e-5,
+                    &format!(
+                        "transb {label} tier={} threads={threads}",
+                        tier.name()
+                    ),
+                );
+                if tier == kernels::Isa::Scalar {
+                    assert_eq!(
+                        got.data, naive.data,
+                        "transb {label}: scalar tier must be bit-exact"
+                    );
+                }
+                by_tier.push((tier, got.clone()));
+            },
+        );
+        assert_native_matches_unrolled(&by_tier, label);
+    }
+}
+
+#[test]
+fn matvec_conforms_in_every_cell() {
+    let mut rng = Rng::new(4);
+    for (label, m, k, _) in SHAPES {
+        let a = rand_mat(&mut rng, m, k);
+        let x = rand_vec(&mut rng, k);
+        let naive = a.matvec(&x);
+        let mut by_tier: Vec<(kernels::Isa, Vec<f32>)> = Vec::new();
+        for_every_cell(
+            || kernels::matvec(&a, &x),
+            |tier, threads, got| {
+                assert_within(
+                    got,
+                    &naive,
+                    1e-5,
+                    &format!(
+                        "matvec {label} tier={} threads={threads}",
+                        tier.name()
+                    ),
+                );
+                if tier == kernels::Isa::Scalar {
+                    assert_eq!(got, &naive, "matvec {label} scalar tier");
+                }
+                by_tier.push((tier, got.clone()));
+            },
+        );
+        assert_native_matches_unrolled(&by_tier, label);
+    }
+}
+
+#[test]
+fn add_outer_bit_identical_in_every_cell() {
+    let mut rng = Rng::new(5);
+    for (label, m, _, n) in SHAPES {
+        let base = rand_mat(&mut rng, m, n);
+        let u = rand_vec(&mut rng, m);
+        let v = rand_vec(&mut rng, n);
+        let mut naive = base.clone();
+        naive.add_outer(0.7, &u, &v);
+        for_every_cell(
+            || {
+                let mut got = base.clone();
+                kernels::add_outer(&mut got, 0.7, &u, &v);
+                got
+            },
+            |tier, threads, got| {
+                assert_eq!(
+                    got.data,
+                    naive.data,
+                    "add_outer {label} tier={} threads={threads}",
+                    tier.name()
+                );
+            },
+        );
+    }
+}
+
+#[test]
+fn dot_and_axpy_cores_conform_in_every_cell() {
+    let mut rng = Rng::new(6);
+    for len in [1usize, 7, 8, 65, 129, 512] {
+        let a = rand_vec(&mut rng, len);
+        let b = rand_vec(&mut rng, len);
+        let reference = lrt_nvm::tensor::dot(&a, &b);
+        // reassociation error scales with sum |a_i b_i| (the reduction's
+        // condition number), not with the possibly-cancelled result
+        let scale = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x * y).abs())
+            .sum::<f32>()
+            .max(1.0);
+        let mut dots: Vec<(kernels::Isa, f32)> = Vec::new();
+        for tier in kernels::available_isas() {
+            let got = kernels::with_overrides(Some(tier), None, || {
+                kernels::dot_fast(&a, &b)
+            });
+            assert!(
+                (got - reference).abs() <= 1e-5 * scale,
+                "dot len={len} tier={}: {got} vs {reference}",
+                tier.name()
+            );
+            if tier == kernels::Isa::Scalar {
+                assert_eq!(got, reference, "scalar dot len={len}");
+            }
+            dots.push((tier, got));
+        }
+        assert_native_f32_matches_unrolled(&dots, &format!("dot:{len}"));
+
+        // axpy: element-wise, bit-identical everywhere
+        let mut naive = b.clone();
+        lrt_nvm::tensor::axpy(0.3, &a, &mut naive);
+        for tier in kernels::available_isas() {
+            let got = kernels::with_overrides(Some(tier), None, || {
+                let mut y = b.clone();
+                kernels::axpy_fast(0.3, &a, &mut y);
+                y
+            });
+            assert_eq!(got, naive, "axpy len={len} tier={}", tier.name());
+        }
+    }
+}
+
+#[test]
+fn strided_mgs_helpers_conform_in_every_cell() {
+    let mut rng = Rng::new(7);
+    // (rows, stride) — ragged row counts against the 4-lane width, and
+    // the stride=q values the MGS projection actually uses
+    for (rows, stride) in [(1usize, 1usize), (7, 3), (37, 5), (130, 17)] {
+        let m = rand_mat(&mut rng, rows, stride);
+        let v = rand_vec(&mut rng, rows);
+        for offset in [0, stride - 1] {
+            let col = m.col(offset);
+            let reference = lrt_nvm::tensor::dot(&col, &v);
+            let scale = col
+                .iter()
+                .zip(v.iter())
+                .map(|(x, y)| (x * y).abs())
+                .sum::<f32>()
+                .max(1.0);
+            let mut dots: Vec<(kernels::Isa, f32)> = Vec::new();
+            for tier in kernels::available_isas() {
+                let got = kernels::with_overrides(Some(tier), None, || {
+                    kernels::dot_stride(&m.data, stride, offset, &v)
+                });
+                assert!(
+                    (got - reference).abs() <= 1e-5 * scale,
+                    "dot_stride {rows}x{stride}+{offset} tier={}: \
+                     {got} vs {reference}",
+                    tier.name()
+                );
+                if tier == kernels::Isa::Scalar {
+                    assert_eq!(got, reference, "scalar dot_stride");
+                }
+                dots.push((tier, got));
+            }
+            assert_native_f32_matches_unrolled(
+                &dots,
+                &format!("dot_stride:{rows}x{stride}"),
+            );
+
+            // element-wise strided helpers: tier-invariant bitwise
+            let mut want_axpy = v.clone();
+            lrt_nvm::tensor::axpy(0.5, &col, &mut want_axpy);
+            let mut want_scatter = m.clone();
+            want_scatter.set_col(offset, &v);
+            for tier in kernels::available_isas() {
+                let (got_axpy, got_scatter) =
+                    kernels::with_overrides(Some(tier), None, || {
+                        let mut y = v.clone();
+                        kernels::axpy_gather(
+                            0.5, &m.data, stride, offset, &mut y,
+                        );
+                        let mut d = m.clone();
+                        kernels::scatter_scale(
+                            &v,
+                            1.0,
+                            &mut d.data,
+                            stride,
+                            offset,
+                        );
+                        (y, d)
+                    });
+                assert_eq!(got_axpy, want_axpy, "axpy_gather {}", tier.name());
+                for (g, w) in
+                    got_scatter.data.iter().zip(want_scatter.data.iter())
+                {
+                    assert_eq!(g, w, "scatter_scale {}", tier.name());
+                }
+            }
+        }
+    }
+}
+
+/// Batched engine bit-exactness per tier: under every ISA tier, LRT
+/// training via `step_batch` must be bit-identical to per-sample
+/// stepping (losses, accumulators, NVM state, write counters), and
+/// batched inference must fan out to the per-sample results.
+#[test]
+fn batched_engine_bit_exact_per_tier() {
+    let image = |seed: u64| -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..784).map(|_| rng.normal_f32(0.5, 0.5).clamp(0.0, 2.0)).collect()
+    };
+    let images: Vec<Vec<f32>> = (0..8).map(|t| image(60 + t)).collect();
+    let labels: Vec<usize> = (0..8).map(|t| (t * 3) % 10).collect();
+    for tier in kernels::available_isas() {
+        kernels::with_overrides(Some(tier), Some(4), || {
+            let mut cfg = RunConfig::default();
+            cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
+            cfg.batch = [2, 2, 2, 2, 4, 4];
+            cfg.lr_w = 0.1;
+            let params = Params::init(&mut Rng::new(22), cfg.w_bits);
+            let mut seq = NativeDevice::new(
+                cfg.clone(),
+                params.clone(),
+                AuxState::new(),
+            );
+            let mut bat = NativeDevice::new(cfg, params, AuxState::new());
+            let want: Vec<(f32, bool)> = images
+                .iter()
+                .zip(labels.iter())
+                .map(|(img, &l)| seq.step(img, l))
+                .collect();
+            let got = bat.step_batch(&images, &labels);
+            assert_eq!(want, got, "{}: losses diverged", tier.name());
+            for i in 0..6 {
+                assert_eq!(
+                    seq.lrt[i].cx,
+                    bat.lrt[i].cx,
+                    "{}: layer {i} accumulator diverged",
+                    tier.name()
+                );
+                assert_eq!(
+                    seq.arrays[i].read().data,
+                    bat.arrays[i].read().data,
+                    "{}: layer {i} NVM state diverged",
+                    tier.name()
+                );
+            }
+            assert_eq!(seq.total_writes(), bat.total_writes());
+            assert_eq!(seq.kappa_skips, bat.kappa_skips);
+
+            // inference: the pooled fan-out path
+            let mut icfg = RunConfig::default();
+            icfg.scheme = Scheme::Inference;
+            let iparams = Params::init(&mut Rng::new(21), icfg.w_bits);
+            let mut iseq = NativeDevice::new(
+                icfg.clone(),
+                iparams.clone(),
+                AuxState::new(),
+            );
+            let mut ibat =
+                NativeDevice::new(icfg, iparams, AuxState::new());
+            let want: Vec<(f32, bool)> = images
+                .iter()
+                .zip(labels.iter())
+                .map(|(img, &l)| iseq.step(img, l))
+                .collect();
+            assert_eq!(
+                want,
+                ibat.step_batch(&images, &labels),
+                "{}: inference fan-out diverged",
+                tier.name()
+            );
+            assert_eq!(ibat.total_writes(), 0);
+        });
+    }
+}
+
+/// The dispatch layer resolves to a real tier and honors overrides.
+#[test]
+fn dispatch_resolves_and_overrides_stick() {
+    let tiers = kernels::available_isas();
+    assert!(tiers.contains(&kernels::Isa::Scalar));
+    assert!(tiers.contains(&kernels::Isa::Unrolled));
+    assert!(tiers.contains(&kernels::isa()), "active tier not available");
+    for tier in tiers {
+        kernels::with_overrides(Some(tier), None, || {
+            assert_eq!(kernels::isa(), tier);
+        });
+    }
+    // a Native request degrades gracefully where unsupported
+    kernels::with_overrides(Some(kernels::Isa::Native), None, || {
+        let eff = kernels::isa();
+        if kernels::native_available() {
+            assert_eq!(eff, kernels::Isa::Native);
+        } else {
+            assert_eq!(eff, kernels::Isa::Unrolled);
+        }
+    });
+}
+
+fn assert_native_matches_unrolled<T: PartialEq + std::fmt::Debug>(
+    by_tier: &[(kernels::Isa, T)],
+    what: &str,
+) {
+    let find = |t: kernels::Isa| {
+        by_tier.iter().find(|(tier, _)| *tier == t).map(|(_, v)| v)
+    };
+    if let (Some(n), Some(u)) =
+        (find(kernels::Isa::Native), find(kernels::Isa::Unrolled))
+    {
+        assert_eq!(
+            n, u,
+            "{what}: native tier must be bit-identical to unrolled"
+        );
+    }
+}
+
+fn assert_native_f32_matches_unrolled(
+    by_tier: &[(kernels::Isa, f32)],
+    what: &str,
+) {
+    let find = |t: kernels::Isa| {
+        by_tier.iter().find(|(tier, _)| *tier == t).map(|(_, v)| *v)
+    };
+    if let (Some(n), Some(u)) =
+        (find(kernels::Isa::Native), find(kernels::Isa::Unrolled))
+    {
+        assert_eq!(
+            n.to_bits(),
+            u.to_bits(),
+            "{what}: native tier must be bit-identical to unrolled"
+        );
+    }
+}

@@ -106,6 +106,47 @@ fn killed_sweep_resumes_to_identical_results_file() {
     let _ = std::fs::remove_file(&part_path);
 }
 
+/// `--filter` engine option: a run restricted to a cell-id pattern,
+/// followed by a resume of the complement, must produce a results file
+/// byte-identical to one unfiltered run.
+#[test]
+fn filtered_run_plus_complement_resume_matches_full_run() {
+    let sc = find("drift-stress").unwrap();
+    let args = tiny_args();
+    let full_path = tmp("filter-full");
+    let part_path = tmp("filter-part");
+
+    let full =
+        run_sweep(sc, &args, &SweepOptions::to_file(full_path.clone()))
+            .unwrap();
+    assert!(full.complete);
+
+    // run only the sigma=3 cell (the trailing comma keeps sigma=30 out)
+    let mut filtered = SweepOptions::to_file(part_path.clone());
+    filtered.filter = Some("drift_sigma=3,".to_string());
+    let first = run_sweep(sc, &args, &filtered).unwrap();
+    assert!(!first.complete, "filtered sweep must report incomplete");
+    assert_eq!(first.cells_run, 1);
+
+    // resume WITHOUT the filter runs exactly the complement
+    let mut resume = SweepOptions::to_file(part_path.clone());
+    resume.resume = true;
+    let done = run_sweep(sc, &args, &resume).unwrap();
+    assert!(done.complete);
+    assert_eq!(done.cells_restored, 1);
+    assert_eq!(done.cells_run, 1);
+
+    let fa = std::fs::read_to_string(&full_path).unwrap();
+    let fb = std::fs::read_to_string(&part_path).unwrap();
+    assert_eq!(
+        fa, fb,
+        "filter + complement resume differs from one unfiltered run"
+    );
+
+    let _ = std::fs::remove_file(&full_path);
+    let _ = std::fs::remove_file(&part_path);
+}
+
 #[test]
 fn results_file_is_valid_json_lines() {
     let sc = find("drift-stress").unwrap();
