@@ -284,6 +284,169 @@ fn main() {
         println!();
     }
 
+    println!("== fresh-alloc vs workspace (_into) paths per tier ==");
+    println!(
+        "(PR 4: the hot path reuses per-device scratch instead of \
+         re-heap-allocating every intermediate; results are \
+         bit-identical — kernel_conformance pins the workspace axis — \
+         so any delta here is pure allocator traffic. Pool pinned to 1 \
+         thread; BENCH_JSON lines are the machine baseline.)\n"
+    );
+    {
+        use lrt_nvm::nn::model::{self, AuxState, Params};
+        use lrt_nvm::nn::workspace::Workspace;
+        use lrt_nvm::tensor::kernels::Isa;
+        let mut r = Rng::new(17);
+        let mut rand = |rows: usize, cols: usize| {
+            Mat::from_fn(rows, cols, |_, _| r.normal_f32(0.0, 1.0))
+        };
+        let a = rand(128, 512);
+        let w = rand(64, 512);
+        let dzw = rand(100, 64);
+        let ain = rand(100, 512);
+        let x: Vec<f32> = a.row(0).to_vec();
+        let image: Vec<f32> = {
+            let mut ir = Rng::new(3);
+            (0..784)
+                .map(|_| ir.normal_f32(0.5, 0.5).clamp(0.0, 2.0))
+                .collect()
+        };
+
+        let mut tw = Table::new(vec![
+            "op (shape)",
+            "tier",
+            "fresh us",
+            "workspace us",
+            "speedup",
+        ]);
+        let mut json_lines: Vec<String> = Vec::new();
+        let mut bench_pair =
+            |label: &str,
+             tier: Isa,
+             reps: usize,
+             fresh: &dyn Fn(),
+             ws: &mut dyn FnMut()| {
+                let (f_us, w_us) =
+                    kernels::with_overrides(Some(tier), Some(1), || {
+                        (
+                            time_median(reps, || fresh()),
+                            time_median(reps, || ws()),
+                        )
+                    });
+                tw.row(vec![
+                    label.to_string(),
+                    tier.name().to_string(),
+                    format!("{f_us:.1}"),
+                    format!("{w_us:.1}"),
+                    format!("{:.2}x", f_us / w_us.max(1e-9)),
+                ]);
+                json_lines.push(format!(
+                    "BENCH_JSON {{\"bench\":\"hotpath_ws\",\
+                     \"op\":\"{label}\",\"tier\":\"{}\",\
+                     \"fresh_us\":{f_us:.2},\"workspace_us\":{w_us:.2},\
+                     \"speedup\":{:.3}}}",
+                    tier.name(),
+                    f_us / w_us.max(1e-9),
+                ));
+            };
+
+        for tier in kernels::available_isas() {
+            let mut out_tb = Mat::zeros(128, 64);
+            bench_pair(
+                "matmul_transb fc5 (128x512 @ 64x512^T)",
+                tier,
+                60,
+                &|| {
+                    std::hint::black_box(kernels::matmul_transb(&a, &w));
+                },
+                &mut || {
+                    kernels::matmul_transb_into(&a, &w, &mut out_tb);
+                    std::hint::black_box(&out_tb);
+                },
+            );
+            let mut out_atb = Mat::zeros(64, 512);
+            bench_pair(
+                "matmul_atb fc5 (100x64 ^T@ 100x512)",
+                tier,
+                60,
+                &|| {
+                    std::hint::black_box(kernels::matmul_atb(&dzw, &ain));
+                },
+                &mut || {
+                    kernels::matmul_atb_into(&dzw, &ain, &mut out_atb);
+                    std::hint::black_box(&out_atb);
+                },
+            );
+            let mut out_mv = vec![0.0f32; 64];
+            bench_pair(
+                "matvec 64x512",
+                tier,
+                400,
+                &|| {
+                    std::hint::black_box(kernels::matvec(&w, &x));
+                },
+                &mut || {
+                    kernels::matvec_into(&w, &x, &mut out_mv);
+                    std::hint::black_box(&out_mv);
+                },
+            );
+            // whole fwd+bwd step: fresh Workspace per call (the
+            // pre-PR-4 allocation pattern) vs one retained workspace
+            let params = Params::init(&mut Rng::new(1), 8);
+            let aux_fresh =
+                std::cell::RefCell::new(AuxState::new());
+            let aux_ws = std::cell::RefCell::new(AuxState::new());
+            let retained =
+                std::cell::RefCell::new(Workspace::step_scratch());
+            bench_pair(
+                "fwd+bwd step (full CNN)",
+                tier,
+                20,
+                &|| {
+                    // step_scratch = exactly the per-step working set
+                    // the pre-PR-4 code allocated each sample (no
+                    // flush-path delta/cand slots, which would inflate
+                    // the fresh time with work the step never did)
+                    let mut ws = Workspace::step_scratch();
+                    // coerce RefMut to the plain &mut once so field
+                    // borrows split (mixed-mutability field access
+                    // through a RefMut does not)
+                    let aux: &mut AuxState = &mut aux_fresh.borrow_mut();
+                    model::forward_into(
+                        &params, aux, &image, 0.99, true, 8, true, &mut ws,
+                    );
+                    model::softmax_xent_into(
+                        &ws.caches.logits,
+                        3,
+                        &mut ws.dlogits,
+                    );
+                    model::backward_into(&params, aux, &mut ws, true, 8);
+                    std::hint::black_box(&ws.grads.dzw[5]);
+                },
+                &mut || {
+                    let ws: &mut Workspace = &mut retained.borrow_mut();
+                    let aux: &mut AuxState = &mut aux_ws.borrow_mut();
+                    model::forward_into(
+                        &params, aux, &image, 0.99, true, 8, true, ws,
+                    );
+                    model::softmax_xent_into(
+                        &ws.caches.logits,
+                        3,
+                        &mut ws.dlogits,
+                    );
+                    model::backward_into(&params, aux, ws, true, 8);
+                    std::hint::black_box(&ws.grads.dzw[5]);
+                },
+            );
+        }
+        tw.print();
+        println!();
+        for line in &json_lines {
+            println!("{line}");
+        }
+        println!();
+    }
+
     println!("== batched vs per-sample engine steps ==");
     {
         use lrt_nvm::coordinator::config::{RunConfig, Scheme};

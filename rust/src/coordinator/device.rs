@@ -7,8 +7,9 @@ use super::scheduler::{FlushDecision, FlushScheduler};
 use crate::lrt::LrtState;
 use crate::nn::arch::{LAYER_DIMS, N_LAYERS};
 use crate::nn::model::{
-    self, apply_bias_updates, argmax, softmax_xent, AuxState, Params,
+    self, apply_bias_updates, argmax, AuxState, Params,
 };
+use crate::nn::workspace::{self, Workspace};
 use crate::nvm::{drift, NvmArray};
 use crate::quant::qw_bits;
 use crate::tensor::kernels;
@@ -27,6 +28,10 @@ pub struct NativeDevice {
     weights_dirty: bool,
     rng: Rng,
     drift_rng: Rng,
+    /// Retained scratch for the whole training step — after the first
+    /// step a steady-state `step` performs zero heap allocations
+    /// (`tests/alloc_steady_state.rs`).
+    pub ws: Workspace,
 }
 
 impl NativeDevice {
@@ -73,6 +78,7 @@ impl NativeDevice {
             weights_dirty: true,
             rng,
             drift_rng,
+            ws: Workspace::new(),
         }
     }
 
@@ -83,17 +89,21 @@ impl NativeDevice {
             return;
         }
         for (i, arr) in self.arrays.iter().enumerate() {
-            self.params.w[i] = arr.read();
+            arr.read_into(&mut self.params.w[i]);
         }
         self.weights_dirty = false;
     }
 
     /// Supervised online step: predict, learn from the revealed label.
+    ///
+    /// Runs entirely on the device's retained [`Workspace`]: after the
+    /// first (warm-up) step, a steady-state step performs zero heap
+    /// allocations on this thread.
     pub fn step(&mut self, image: &[f32], label: usize) -> (f32, bool) {
         self.read_weights();
         let cfg = &self.cfg;
         let train = cfg.scheme != Scheme::Inference;
-        let caches = model::forward(
+        model::forward_into(
             &self.params,
             &mut self.aux,
             image,
@@ -101,75 +111,74 @@ impl NativeDevice {
             cfg.bn_stream,
             cfg.w_bits,
             train,
+            &mut self.ws,
         );
-        let pred = argmax(&caches.logits);
-        let (loss, dlogits) = softmax_xent(&caches.logits, label);
+        let pred = argmax(&self.ws.caches.logits);
+        let loss = model::softmax_xent_into(
+            &self.ws.caches.logits,
+            label,
+            &mut self.ws.dlogits,
+        );
         let correct = pred == label;
         if !train {
             return (loss, correct);
         }
 
         let use_mn = cfg.use_maxnorm;
-        let grads = model::backward(
+        model::backward_into(
             &self.params,
             &mut self.aux,
-            caches,
-            &dlogits,
+            &mut self.ws,
             use_mn,
             cfg.w_bits,
         );
         apply_bias_updates(
             &mut self.params,
-            &grads,
+            &self.ws.grads,
             cfg.lr_b,
             cfg.scheme.trains_bias() && cfg.train_bias,
         );
 
         match cfg.scheme {
-            Scheme::Sgd => self.sgd_weight_step(&grads),
-            Scheme::Lrt { variant } => {
-                self.lrt_weight_step(&grads, variant)
-            }
+            Scheme::Sgd => self.sgd_weight_step(),
+            Scheme::Lrt { variant } => self.lrt_weight_step(variant),
             _ => {}
         }
         (loss, correct)
     }
 
-    fn sgd_weight_step(&mut self, grads: &model::Grads) {
+    fn sgd_weight_step(&mut self) {
         let qw = qw_bits(self.cfg.w_bits);
+        let lr_w = self.cfg.lr_w;
+        let Workspace { grads, delta, cand, .. } = &mut self.ws;
         for i in 0..N_LAYERS {
-            let dw = grads.full(i);
-            let mut cand = self.params.w[i].clone();
-            for (wv, &g) in cand.data.iter_mut().zip(dw.data.iter()) {
-                *wv = qw.q(*wv - self.cfg.lr_w * g);
+            grads.full_into(i, &mut delta[i]);
+            cand[i].copy_from(&self.params.w[i]);
+            for (wv, &g) in cand[i].data.iter_mut().zip(delta[i].data.iter())
+            {
+                *wv = qw.q(*wv - lr_w * g);
             }
-            if self.arrays[i].commit(&cand) > 0 {
+            if self.arrays[i].commit(&cand[i]) > 0 {
                 self.weights_dirty = true;
             }
         }
     }
 
-    fn lrt_weight_step(
-        &mut self,
-        grads: &model::Grads,
-        variant: crate::lrt::Variant,
-    ) {
+    fn lrt_weight_step(&mut self, variant: crate::lrt::Variant) {
         let qw = qw_bits(self.cfg.w_bits);
         for i in 0..N_LAYERS {
             // conv layers: one Kronecker update per output pixel
             // (Appendix B.2); fc layers: one per sample. The backward
             // pass hands us Mat-of-rows factor blocks, so the whole
             // block goes to the batched rank update in one call.
-            let dzw = &grads.dzw[i];
-            let ain = &grads.ain[i];
             let layer_variant = self
                 .cfg
                 .lrt_variants
                 .map(|v| v[i])
                 .unwrap_or(variant);
             self.kappa_skips += self.lrt[i].update_batch(
-                dzw,
-                ain,
+                &self.ws.grads.dzw[i],
+                &self.ws.grads.ain[i],
                 &mut self.rng,
                 layer_variant,
                 self.cfg.kappa_th,
@@ -180,17 +189,18 @@ impl NativeDevice {
                 // Per-layer affinity: cap this evaluation's kernel
                 // parallelism to what the layer's size warrants.
                 let _aff = kernels::affinity(self.sched[i].par_cap);
-                let delta = self.lrt[i].delta();
+                self.lrt[i].delta_into(&mut self.ws.delta[i]);
                 let lr_eff = self.cfg.lr_w * lr_scale;
-                let mut cand = self.params.w[i].clone();
+                let Workspace { delta, cand, .. } = &mut self.ws;
+                cand[i].copy_from(&self.params.w[i]);
                 for (wv, &g) in
-                    cand.data.iter_mut().zip(delta.data.iter())
+                    cand[i].data.iter_mut().zip(delta[i].data.iter())
                 {
                     *wv = qw.q(*wv - lr_eff * g);
                 }
-                let density = self.arrays[i].density_of(&cand);
+                let density = self.arrays[i].density_of(&cand[i]);
                 if self.sched[i].decide(density) {
-                    if self.arrays[i].commit(&cand) > 0 {
+                    if self.arrays[i].commit(&cand[i]) > 0 {
                         self.weights_dirty = true;
                     }
                     self.lrt[i].reset();
@@ -218,23 +228,34 @@ impl NativeDevice {
             let params = &self.params;
             let aux = &self.aux;
             let cfg = &self.cfg;
-            return kernels::run_scoped(images.len(), |i| {
-                // eval-mode forward leaves AuxState untouched; the
-                // per-sample clone only satisfies the &mut signature
-                // (~100 floats — noise next to the forward itself)
-                let mut aux_i = aux.clone();
-                let caches = model::forward(
-                    params,
-                    &mut aux_i,
-                    &images[i],
-                    cfg.bn_eta(),
-                    cfg.bn_stream,
-                    cfg.w_bits,
-                    false,
-                );
-                let (loss, _) = softmax_xent(&caches.logits, labels[i]);
-                (loss, argmax(&caches.logits) == labels[i])
-            });
+            // Each pool worker scores a contiguous slice with one
+            // retained forward-only workspace and one AuxState clone
+            // (eval-mode forward leaves AuxState untouched; the clone
+            // only satisfies the &mut signature). Forwards are
+            // independent, so the chunking changes nothing numerically
+            // — it just keeps per-sample traffic allocation-free.
+            return workspace::map_samples(
+                images.len(),
+                || aux.clone(),
+                |s, ws, aux_w| {
+                    model::forward_into(
+                        params,
+                        aux_w,
+                        &images[s],
+                        cfg.bn_eta(),
+                        cfg.bn_stream,
+                        cfg.w_bits,
+                        false,
+                        ws,
+                    );
+                    let loss = model::softmax_xent_into(
+                        &ws.caches.logits,
+                        labels[s],
+                        &mut ws.dlogits,
+                    );
+                    (loss, argmax(&ws.caches.logits) == labels[s])
+                },
+            );
         }
         images
             .iter()
@@ -273,7 +294,7 @@ impl NativeDevice {
     /// Forward-only prediction (validation / accuracy probes).
     pub fn infer(&mut self, image: &[f32]) -> usize {
         self.read_weights();
-        let caches = model::forward(
+        model::forward_into(
             &self.params,
             &mut self.aux,
             image,
@@ -281,8 +302,9 @@ impl NativeDevice {
             self.cfg.bn_stream,
             self.cfg.w_bits,
             false,
+            &mut self.ws,
         );
-        argmax(&caches.logits)
+        argmax(&self.ws.caches.logits)
     }
 
     /// Auxiliary SRAM the LRT accumulators occupy at 16-bit (LAM check).

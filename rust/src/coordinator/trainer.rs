@@ -10,10 +10,14 @@ use super::device::NativeDevice;
 use super::metrics::{Metrics, RunReport};
 use crate::data::online::{OnlineStream, Partition};
 use crate::nn::model::{self, Params};
+use crate::nn::workspace::{self, Workspace};
 use crate::util::rng::Rng;
 
 /// Offline pretraining: quantized SGD with max-norm on the offline
 /// partition (the paper's cloud-side phase before deployment).
+///
+/// Runs on one retained [`Workspace`], so the per-sample loop is
+/// allocation-free apart from the stream's sample synthesis.
 pub fn pretrain(cfg: &RunConfig, verbose: bool) -> (Params, model::AuxState) {
     let mut rng = Rng::new(cfg.seed ^ 0x0FF11E);
     let mut params = Params::init(&mut rng, cfg.w_bits);
@@ -24,28 +28,31 @@ pub fn pretrain(cfg: &RunConfig, verbose: bool) -> (Params, model::AuxState) {
     let lr_w = 0.02f32;
     let lr_b = 0.02f32;
     let mut correct_recent = 0usize;
+    let mut ws = Workspace::new();
     for t in 0..cfg.offline_samples {
         let s = stream.sample(t as u64);
-        let caches = model::forward(
+        model::forward_into(
             &params, &mut aux, &s.image, cfg.bn_eta(), true, cfg.w_bits,
-            true,
+            true, &mut ws,
         );
-        let pred = model::argmax(&caches.logits);
+        let pred = model::argmax(&ws.caches.logits);
         if pred == s.label {
             correct_recent += 1;
         }
-        let (_, dlogits) = model::softmax_xent(&caches.logits, s.label);
-        let grads = model::backward(
-            &params, &mut aux, caches, &dlogits, true, cfg.w_bits,
-        );
-        for i in 0..crate::nn::arch::N_LAYERS {
-            let dw = grads.full(i);
-            for (wv, &g) in params.w[i].data.iter_mut().zip(dw.data.iter())
-            {
-                *wv = qw.q(*wv - lr_w * g);
+        model::softmax_xent_into(&ws.caches.logits, s.label, &mut ws.dlogits);
+        model::backward_into(&params, &mut aux, &mut ws, true, cfg.w_bits);
+        {
+            let Workspace { grads, delta, .. } = &mut ws;
+            for i in 0..crate::nn::arch::N_LAYERS {
+                grads.full_into(i, &mut delta[i]);
+                for (wv, &g) in
+                    params.w[i].data.iter_mut().zip(delta[i].data.iter())
+                {
+                    *wv = qw.q(*wv - lr_w * g);
+                }
             }
         }
-        model::apply_bias_updates(&mut params, &grads, lr_b, true);
+        model::apply_bias_updates(&mut params, &ws.grads, lr_b, true);
         if verbose && (t + 1) % 1000 == 0 {
             eprintln!(
                 "  pretrain {t}: acc(last 1k) = {:.3}",
@@ -137,14 +144,19 @@ impl Trainer {
         let drift_every = self.cfg.drift.every.max(1) as usize;
         let log_every = self.cfg.log_every.max(1);
         let mut t = 0usize;
+        // Chunk buffers reused across the whole run (`clear` keeps
+        // capacity); the per-sample image Vecs come from the stream's
+        // sample synthesis, which is outside the zero-alloc step scope.
+        let mut images: Vec<Vec<f32>> = Vec::with_capacity(MAX_CHUNK);
+        let mut labels: Vec<usize> = Vec::with_capacity(MAX_CHUNK);
         while t < self.cfg.samples {
             let mut end = self.cfg.samples.min(t + MAX_CHUNK);
             if self.cfg.drift.enabled() {
                 end = end.min((t / drift_every + 1) * drift_every);
             }
             end = end.min((t / log_every + 1) * log_every);
-            let mut images = Vec::with_capacity(end - t);
-            let mut labels = Vec::with_capacity(end - t);
+            images.clear();
+            labels.clear();
             for s in t..end {
                 let smp = self.stream.sample(s as u64);
                 images.push(smp.image);
@@ -205,19 +217,24 @@ pub fn validate(params: &Params, w_bits: u32, n: usize, seed: u64) -> f64 {
         model::forward(params, &mut aux, &s.image, 0.99, true, w_bits, true);
     }
     let aux = aux; // frozen for scoring
-    let correct: usize =
-        crate::tensor::kernels::run_scoped(n, |t| {
+    // Each pool worker scores a contiguous slice with one retained
+    // forward-only workspace and one AuxState clone (the clone only
+    // satisfies forward's &mut signature — eval mode mutates nothing),
+    // so per-sample scoring stays allocation-free. Forwards are
+    // independent: the chunking changes nothing numerically.
+    let correct: usize = workspace::map_samples(
+        n,
+        || aux.clone(),
+        |t, ws, aux_w| {
             let s = stream.sample((1000 + t) as u64);
-            // per-sample clone only satisfies forward's &mut signature;
-            // AuxState is ~100 floats, noise next to the forward itself
-            let mut aux_t = aux.clone();
-            let caches = model::forward(
-                params, &mut aux_t, &s.image, 0.99, true, w_bits, false,
+            model::forward_into(
+                params, aux_w, &s.image, 0.99, true, w_bits, false, ws,
             );
-            usize::from(model::argmax(&caches.logits) == s.label)
-        })
-        .into_iter()
-        .sum();
+            usize::from(model::argmax(&ws.caches.logits) == s.label)
+        },
+    )
+    .into_iter()
+    .sum();
     correct as f64 / n as f64
 }
 

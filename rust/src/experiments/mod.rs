@@ -18,6 +18,114 @@ pub use registry::{
     Scenario, SweepOptions, SweepOutcome,
 };
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One results file summarized for `lrt-nvm results`.
+#[derive(Debug, Clone)]
+pub struct ResultsEntry {
+    /// File name (e.g. `drift-stress.jsonl`).
+    pub file: String,
+    /// Scenario recorded in the checkpoint header ("?" if unreadable).
+    pub scenario: String,
+    /// Completed cell records in the file.
+    pub cells_done: usize,
+    /// Grid size re-derived from the header's recorded options (None
+    /// when the scenario is unknown or the header is unreadable).
+    pub cells_total: Option<usize>,
+    /// Seconds since the file was last modified (None if unavailable).
+    pub modified_secs_ago: Option<u64>,
+    pub bytes: u64,
+}
+
+impl ResultsEntry {
+    pub fn complete(&self) -> Option<bool> {
+        self.cells_total.map(|t| self.cells_done >= t)
+    }
+}
+
+/// Aggregate index of a `results/` directory: one entry per `*.jsonl`
+/// checkpoint, with done/total cell counts re-derived exactly the way
+/// `resume` would (header options replayed into the scenario's grid).
+/// Entries are sorted by file name; unreadable files still appear (with
+/// "?" fields) so a corrupt checkpoint is visible rather than silent.
+pub fn results_index(dir: &Path) -> std::io::Result<Vec<ResultsEntry>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
+            continue;
+        }
+        let file = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("?")
+            .to_string();
+        let meta = entry.metadata().ok();
+        let bytes = meta.as_ref().map(|m| m.len()).unwrap_or(0);
+        let modified_secs_ago = meta
+            .as_ref()
+            .and_then(|m| m.modified().ok())
+            .and_then(|t| t.elapsed().ok())
+            .map(|d| d.as_secs());
+        let body = std::fs::read_to_string(&path).unwrap_or_default();
+        let mut lines = body.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().and_then(|l| Json::parse(l).ok());
+        let scenario = header
+            .as_ref()
+            .and_then(|h| h.get("sweep").and_then(Json::as_str))
+            .unwrap_or("?")
+            .to_string();
+        // completed cells: parseable records carrying an idx + cell id,
+        // deduplicated by idx exactly like resume's restore map (a torn
+        // tail line from a kill doesn't count; a duplicated idx from an
+        // interrupted resume counts once, last record winning)
+        let mut records: BTreeMap<usize, String> = BTreeMap::new();
+        for l in lines {
+            let Ok(rec) = Json::parse(l) else { continue };
+            if let (Some(idx), Some(id)) = (
+                rec.get("idx").and_then(Json::as_usize),
+                rec.get("cell").and_then(Json::as_str),
+            ) {
+                records.insert(idx, id.to_string());
+            }
+        }
+        let mut cells_done = records.len();
+        let cells_total = match (find(&scenario), header.as_ref()) {
+            (Some(sc), Some(h)) => {
+                // replay the recorded options so the grid matches what
+                // run and resume compute for this checkpoint — and only
+                // count records that grid still contains, mirroring
+                // resume's `restored.retain`
+                let args =
+                    registry::args_from_header(&scenario, h);
+                let grid = sc.grid(&args);
+                let n = grid.n_cells();
+                cells_done = records
+                    .iter()
+                    .filter(|&(&idx, id)| {
+                        idx < n && grid.cell(idx).id == *id
+                    })
+                    .count();
+                Some(n)
+            }
+            _ => None,
+        };
+        out.push(ResultsEntry {
+            file,
+            scenario,
+            cells_done,
+            cells_total,
+            modified_secs_ago,
+            bytes,
+        });
+    }
+    out.sort_by(|a, b| a.file.cmp(&b.file));
+    Ok(out)
+}
+
 /// Run `n` closures on worker threads, preserving order — the fan-out
 /// primitive behind the sweep engine's cells.
 ///
@@ -38,6 +146,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::cli::Args;
 
     #[test]
     fn parallel_map_preserves_order() {
@@ -52,6 +161,58 @@ mod tests {
         assert_eq!(outcome.cells_total, 7);
         assert!(outcome.rendered.contains("lrt_r4_um2"));
         assert!(outcome.rendered.lines().count() > 8);
+    }
+
+    #[test]
+    fn results_index_reads_checkpoints() {
+        let dir = std::env::temp_dir()
+            .join(format!("lrt-results-idx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sc = find("drift-stress").unwrap();
+        let args = Args::parse(
+            [
+                "run",
+                "drift-stress",
+                "--samples=40",
+                "--offline=40",
+                "--sigmas=3,30",
+                "--kappas=100",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let out = dir.join("drift-stress.jsonl");
+        let opts = SweepOptions {
+            out: Some(out.clone()),
+            resume: false,
+            limit: Some(1),
+            filter: None,
+        };
+        run_sweep(sc, &args, &opts).unwrap();
+        // a stray non-results file must be ignored
+        std::fs::write(dir.join("notes.txt"), "not a checkpoint").unwrap();
+        let idx = results_index(&dir).unwrap();
+        assert_eq!(idx.len(), 1, "{idx:?}");
+        let e = &idx[0];
+        assert_eq!(e.file, "drift-stress.jsonl");
+        assert_eq!(e.scenario, "drift-stress");
+        assert_eq!(e.cells_done, 1, "{e:?}");
+        // total re-derived from the recorded options: 2 sigmas x 1 kappa
+        assert_eq!(e.cells_total, Some(2));
+        assert_eq!(e.complete(), Some(false));
+        assert!(e.bytes > 0);
+        // finish the sweep: the index must flip to complete
+        let opts = SweepOptions {
+            out: Some(out),
+            resume: true,
+            limit: None,
+            filter: None,
+        };
+        run_sweep(sc, &args, &opts).unwrap();
+        let idx = results_index(&dir).unwrap();
+        assert_eq!(idx[0].cells_done, 2);
+        assert_eq!(idx[0].complete(), Some(true));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

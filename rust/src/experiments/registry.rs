@@ -358,6 +358,25 @@ const ENGINE_KEYS: &[&str] = &[
     "help",
 ];
 
+/// Rebuild the effective `Args` a checkpoint header records — shared by
+/// `run_sweep`'s resume path and `experiments::results_index`, so both
+/// derive the same grid from the same header bytes.
+pub(crate) fn args_from_header(scenario: &str, header: &Json) -> Args {
+    let mut args = Args {
+        command: "run".to_string(),
+        options: BTreeMap::new(),
+        positional: vec![scenario.to_string()],
+    };
+    if let Some(Json::Obj(m)) = header.get("options") {
+        for (k, v) in m {
+            if let Some(s) = v.as_str() {
+                args.options.insert(k.clone(), s.to_string());
+            }
+        }
+    }
+    args
+}
+
 /// Glob-lite cell-id match: `*` matches any run of characters and the
 /// pattern is unanchored (plain substrings work), so `rank=4` hits every
 /// cell whose id contains it and `rank=4,*env=analog` additionally
@@ -412,18 +431,7 @@ pub fn run_sweep(
             "checkpoint belongs to scenario '{swept}', not '{}'",
             scenario.name()
         );
-        eff = Args {
-            command: "run".to_string(),
-            options: BTreeMap::new(),
-            positional: vec![scenario.name().to_string()],
-        };
-        if let Some(Json::Obj(m)) = header.get("options") {
-            for (k, v) in m {
-                if let Some(s) = v.as_str() {
-                    eff.options.insert(k.clone(), s.to_string());
-                }
-            }
-        }
+        eff = args_from_header(scenario.name(), &header);
         for line in lines {
             // a kill mid-append can tear the last line; treat anything
             // unparseable as "cell not completed" and re-run it

@@ -30,7 +30,17 @@
 //! path and batched-vs-per-sample stepping, and
 //! `tests/golden_trainer.rs` snapshots the deterministic seed-11 run.
 //! Measure the layer with `cargo bench --bench perf_hotpath` (blocked
-//! vs naive, per-ISA-tier, and batched vs per-sample tables).
+//! vs naive, per-ISA-tier, fresh-alloc vs workspace, and batched vs
+//! per-sample tables).
+//!
+//! The training hot path is **allocation-free in steady state**: the
+//! kernels' `_into` entry points write into a per-device
+//! `nn::workspace::Workspace` (plus per-state scratch inside
+//! `lrt::LrtState`), so after one warm-up step a training step performs
+//! zero heap allocations on the stepping thread —
+//! `tests/alloc_steady_state.rs` proves it with the
+//! `util::allocwatch::CountingAlloc` instrumentation, and
+//! `tests/workspace_reuse.rs` proves buffer reuse is numerics-neutral.
 
 pub mod baselines;
 pub mod convex;

@@ -3,7 +3,7 @@
 //! the kappa_th condition gate (Section 7.2).
 
 use super::mgs::mgs_project;
-use super::svd::{svd_jacobi, DEFAULT_SWEEPS};
+use super::svd::{svd_jacobi_into, SvdWs, DEFAULT_SWEEPS};
 use crate::quant::q16_dyn;
 use crate::tensor::{kernels, Mat};
 use crate::util::rng::Rng;
@@ -55,6 +55,13 @@ pub struct LrtState {
     saved_col_r: Vec<f32>,
     tmp_l: Mat,
     tmp_r: Mat,
+    svd: SvdWs,
+    mix: MixWs,
+    qx: Mat,
+    m_l: Mat,
+    m_r: Mat,
+    lfac: Mat,
+    rfac: Mat,
 }
 
 impl LrtState {
@@ -76,6 +83,13 @@ impl LrtState {
             saved_col_r: vec![0.0; n_i],
             tmp_l: Mat::zeros(n_o, q),
             tmp_r: Mat::zeros(n_i, q),
+            svd: SvdWs::default(),
+            mix: MixWs::with_q(q),
+            qx: Mat::zeros(q, q),
+            m_l: Mat::zeros(q, q),
+            m_r: Mat::zeros(q, q),
+            lfac: Mat::zeros(n_o, rank),
+            rfac: Mat::zeros(n_i, rank),
         }
     }
 
@@ -147,17 +161,27 @@ impl LrtState {
             };
         }
 
-        let (u_c, sigma, v_c) = svd_jacobi(&self.cmat, DEFAULT_SWEEPS);
-        let (q_x, cx_new) = mix_matrices(&sigma, rng, variant);
+        svd_jacobi_into(&self.cmat, DEFAULT_SWEEPS, &mut self.svd);
+        let (sigma_top, sigma_last) = (self.svd.s[0], self.svd.s[q - 1]);
+        // mix writes straight into self.cx: every branch fully
+        // overwrites it before any read, and nothing reads cx between
+        // the kappa gate and here
+        mix_matrices_into(
+            &self.svd.s,
+            rng,
+            variant,
+            &mut self.qx,
+            &mut self.cx,
+            &mut self.mix,
+        );
 
         // Basis rotation: Q <- Q @ (U_C Q_x) (the Pallas basis_update twin).
-        let m_l = kernels::matmul(&u_c, &q_x);
-        let m_r = kernels::matmul(&v_c, &q_x);
-        kernels::matmul_into(&self.ql, &m_l, &mut self.tmp_l);
-        kernels::matmul_into(&self.qr, &m_r, &mut self.tmp_r);
+        kernels::matmul_into(&self.svd.u, &self.qx, &mut self.m_l);
+        kernels::matmul_into(&self.svd.v, &self.qx, &mut self.m_r);
+        kernels::matmul_into(&self.ql, &self.m_l, &mut self.tmp_l);
+        kernels::matmul_into(&self.qr, &self.m_r, &mut self.tmp_r);
         std::mem::swap(&mut self.ql, &mut self.tmp_l);
         std::mem::swap(&mut self.qr, &mut self.tmp_r);
-        self.cx = cx_new;
 
         if self.quantize_state {
             q16_dyn(&mut self.ql.data);
@@ -165,19 +189,23 @@ impl LrtState {
             q16_dyn(&mut self.cx);
         }
         self.updates += 1;
-        LrtDiag {
-            sigma_top: sigma[0],
-            sigma_last: sigma[q - 1],
-            kappa_hat,
-            skipped: false,
-        }
+        LrtDiag { sigma_top, sigma_last, kappa_hat, skipped: false }
     }
 
     /// L~, R~ factors: gradient estimate is `lfac @ rfac^T`.
     pub fn factors(&self) -> (Mat, Mat) {
+        let mut lfac = Mat::zeros(self.n_o(), self.rank);
+        let mut rfac = Mat::zeros(self.n_i(), self.rank);
+        self.factors_into(&mut lfac, &mut rfac);
+        (lfac, rfac)
+    }
+
+    /// `factors` into preallocated (n_o, r) / (n_i, r) buffers (every
+    /// element written — bit-identical into dirty buffers).
+    pub fn factors_into(&self, lfac: &mut Mat, rfac: &mut Mat) {
         let r = self.rank;
-        let mut lfac = Mat::zeros(self.n_o(), r);
-        let mut rfac = Mat::zeros(self.n_i(), r);
+        assert_eq!((lfac.rows, lfac.cols), (self.n_o(), r));
+        assert_eq!((rfac.rows, rfac.cols), (self.n_i(), r));
         for j in 0..r {
             let root = self.cx[j].max(0.0).sqrt();
             for i in 0..self.n_o() {
@@ -187,7 +215,6 @@ impl LrtState {
                 *rfac.at_mut(i, j) = self.qr.at(i, j) * root;
             }
         }
-        (lfac, rfac)
     }
 
     /// Dense gradient estimate (n_o x n_i), via the blocked kernels (the
@@ -195,6 +222,24 @@ impl LrtState {
     pub fn delta(&self) -> Mat {
         let (lfac, rfac) = self.factors();
         kernels::matmul_transb(&lfac, &rfac)
+    }
+
+    /// `delta` into a preallocated (n_o, n_i) buffer using the state's
+    /// retained factor scratch — the allocation-free flush-evaluation
+    /// path (bit-identical to `delta`).
+    pub fn delta_into(&mut self, out: &mut Mat) {
+        let Self { ql, qr, cx, rank, lfac, rfac, .. } = self;
+        let r = *rank;
+        for j in 0..r {
+            let root = cx[j].max(0.0).sqrt();
+            for i in 0..ql.rows {
+                *lfac.at_mut(i, j) = ql.at(i, j) * root;
+            }
+            for i in 0..qr.rows {
+                *rfac.at_mut(i, j) = qr.at(i, j) * root;
+            }
+        }
+        kernels::matmul_transb_into(lfac, rfac, out);
     }
 
     /// Batched rank update: one `update` per row of `dzw`/`ain` (the
@@ -227,62 +272,97 @@ impl LrtState {
     }
 }
 
+/// Retained temporaries for [`mix_matrices_into`] (all O(q)/O(q^2)).
+#[derive(Debug, Clone, Default)]
+struct MixWs {
+    suffix: Vec<f32>,
+    x0: Vec<f32>,
+    v: Vec<f32>,
+    h: Mat,
+}
+
+impl MixWs {
+    fn with_q(q: usize) -> MixWs {
+        MixWs {
+            suffix: vec![0.0; q + 1],
+            x0: vec![0.0; q],
+            v: vec![0.0; q],
+            h: Mat::zeros(q, q),
+        }
+    }
+}
+
 /// Rank-reduction of the singular-value matrix (Section 4.1.2).
 ///
-/// Returns (q_x, cx_new) with zero last column/entry so that
+/// Writes (q_x, cx_new) with zero last column/entry so that
 /// Sigma~ = q_x diag(cx_new) q_x^T is the rank-r estimate of diag(sigma).
-fn mix_matrices(sigma: &[f32], rng: &mut Rng, variant: Variant) -> (Mat, Vec<f32>) {
+/// Allocation-free: every output/scratch cell is overwritten, and the
+/// arithmetic matches the historical allocating form bit for bit.
+fn mix_matrices_into(
+    sigma: &[f32],
+    rng: &mut Rng,
+    variant: Variant,
+    qx: &mut Mat,
+    cx: &mut [f32],
+    ws: &mut MixWs,
+) {
     let q = sigma.len();
     let r = q - 1;
+    assert_eq!((qx.rows, qx.cols), (q, q));
+    assert_eq!(cx.len(), q);
 
-    let biased = || {
-        let mut qx = Mat::eye(q);
-        for i in 0..q {
-            *qx.at_mut(i, r) = 0.0;
+    let biased = |qx: &mut Mat, cx: &mut [f32]| {
+        // I with the last column zeroed
+        qx.data.fill(0.0);
+        for i in 0..r {
+            *qx.at_mut(i, i) = 1.0;
         }
-        let mut cx = sigma.to_vec();
+        cx.copy_from_slice(sigma);
         cx[r] = 0.0;
-        (qx, cx)
     };
 
     if variant == Variant::Biased {
-        return biased();
+        return biased(qx, cx);
     }
 
     // m = min i s.t. (q - i) sigma_i <= sum_{j >= i} sigma_j (1-based i).
-    let mut suffix = vec![0.0f32; q + 1];
+    ws.suffix.clear();
+    ws.suffix.resize(q + 1, 0.0);
     for i in (0..q).rev() {
-        suffix[i] = suffix[i + 1] + sigma[i];
+        ws.suffix[i] = ws.suffix[i + 1] + sigma[i];
     }
     let mut m0 = q - 1;
     for i in 0..q {
-        if (q - 1 - i) as f32 * sigma[i] <= suffix[i] + EPS {
+        if (q - 1 - i) as f32 * sigma[i] <= ws.suffix[i] + EPS {
             m0 = i;
             break;
         }
     }
     let k = q - 1 - m0;
-    let s1 = suffix[m0];
+    let s1 = ws.suffix[m0];
     if k == 0 || s1 <= EPS {
         // Nothing to mix (or an all-zero tail): truncation is exact.
-        return biased();
+        return biased(qx, cx);
     }
 
     // x0_j = sqrt(1 - sigma_j k / s1) over the block [m0, q).
-    let mut x0 = vec![0.0f32; q];
+    ws.x0.clear();
+    ws.x0.resize(q, 0.0);
     for j in m0..q {
-        x0[j] = (1.0 - sigma[j] * k as f32 / s1).clamp(0.0, 1.0).sqrt();
+        ws.x0[j] = (1.0 - sigma[j] * k as f32 / s1).clamp(0.0, 1.0).sqrt();
     }
     // Householder H = I + v v^T / v1, v = x0 - e_{m0}; block columns past
     // the first are the orthonormal basis X with left-nullspace x0.
-    let mut v = x0.clone();
-    v[m0] -= 1.0;
-    let v1 = v[m0];
-    let mut h = Mat::eye(q);
+    ws.v.clear();
+    ws.v.extend_from_slice(&ws.x0);
+    ws.v[m0] -= 1.0;
+    let v1 = ws.v[m0];
+    let h = &mut ws.h;
+    h.set_eye();
     if v1.abs() > EPS {
         for i in 0..q {
             for j in 0..q {
-                *h.at_mut(i, j) += v[i] * v[j] / v1;
+                *h.at_mut(i, j) += ws.v[i] * ws.v[j] / v1;
             }
         }
     }
@@ -296,23 +376,23 @@ fn mix_matrices(sigma: &[f32], rng: &mut Rng, variant: Variant) -> (Mat, Vec<f32
         }
     }
     // q_x columns: e_j for j < m0; H block columns 1.. for m0 <= j < r; 0.
-    let mut qx = Mat::zeros(q, q);
+    qx.data.fill(0.0);
     for j in 0..r {
         let src = if j >= m0 { j + 1 } else { j };
         for i in 0..q {
             *qx.at_mut(i, j) = h.at(i, src);
         }
     }
-    let mut cx = vec![0.0f32; q];
+    cx.fill(0.0);
     for j in 0..r {
         cx[j] = if j < m0 { sigma[j] } else { s1 / k as f32 };
     }
-    (qx, cx)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lrt::svd::svd_jacobi;
     use crate::util::prop;
 
     fn outer_sum(dzs: &[Vec<f32>], as_: &[Vec<f32>]) -> Mat {

@@ -11,48 +11,107 @@ const EPS: f32 = 1e-12;
 /// Singular values are sorted descending; u-columns for (near-)zero
 /// singular values are zero vectors (preserving the product exactly,
 /// which is the only property the LRT update needs).
+///
+/// Allocating convenience form over [`svd_jacobi_into`].
 pub fn svd_jacobi(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>, Mat) {
+    let mut ws = SvdWs::default();
+    svd_jacobi_into(a, sweeps, &mut ws);
+    (ws.u, ws.s, ws.v)
+}
+
+/// Retained buffers for [`svd_jacobi_into`] — sized on first use (the
+/// LRT update holds one per accumulator, so the steady-state rank
+/// update never allocates here).
+#[derive(Debug, Clone, Default)]
+pub struct SvdWs {
+    /// Left singular vectors (sorted), valid after `svd_jacobi_into`.
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f32>,
+    /// Right singular vectors (sorted).
+    pub v: Mat,
+    aw: Mat,
+    vwork: Mat,
+    uwork: Mat,
+    swork: Vec<f32>,
+    order: Vec<usize>,
+}
+
+impl SvdWs {
+    fn ensure(&mut self, n: usize) {
+        if self.aw.rows != n || self.aw.cols != n {
+            self.u = Mat::zeros(n, n);
+            self.s = vec![0.0; n];
+            self.v = Mat::zeros(n, n);
+            self.aw = Mat::zeros(n, n);
+            self.vwork = Mat::zeros(n, n);
+            self.uwork = Mat::zeros(n, n);
+            self.swork = vec![0.0; n];
+            self.order = Vec::with_capacity(n);
+        }
+    }
+}
+
+/// `svd_jacobi` into retained buffers: results land in `ws.u` / `ws.s` /
+/// `ws.v`. Bit-identical to the allocating form (same rotations, same
+/// column-norm reduction order, and the descending sort is a *stable*
+/// insertion sort, so equal singular values — common when the
+/// accumulator is fresh and several sigmas are exactly zero — keep the
+/// same column order the `sort_by` of the allocating history produced).
+pub fn svd_jacobi_into(a: &Mat, sweeps: usize, ws: &mut SvdWs) {
     assert_eq!(a.rows, a.cols);
     let n = a.rows;
-    let mut aw = a.clone();
-    let mut v = Mat::eye(n);
+    ws.ensure(n);
+    ws.aw.copy_from(a);
+    ws.vwork.set_eye();
 
     for _ in 0..sweeps {
         for i in 0..n - 1 {
             for j in i + 1..n {
-                rotate(&mut aw, &mut v, i, j);
+                rotate(&mut ws.aw, &mut ws.vwork, i, j);
             }
         }
     }
 
-    let mut s: Vec<f32> = (0..n)
-        .map(|j| {
-            let c = aw.col(j);
-            crate::tensor::norm2(&c)
-        })
-        .collect();
-    let mut u = Mat::zeros(n, n);
+    // column norms in the reference reduction order (ascending row dot)
     for j in 0..n {
-        if s[j] > EPS {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let x = ws.aw.at(i, j);
+            acc += x * x;
+        }
+        ws.swork[j] = acc.sqrt();
+    }
+    ws.uwork.data.fill(0.0);
+    for j in 0..n {
+        if ws.swork[j] > EPS {
             for i in 0..n {
-                *u.at_mut(i, j) = aw.at(i, j) / s[j];
+                *ws.uwork.at_mut(i, j) = ws.aw.at(i, j) / ws.swork[j];
             }
         } else {
-            s[j] = 0.0;
+            ws.swork[j] = 0.0;
         }
     }
 
-    // Sort descending, permuting u and v columns.
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&x, &y| s[y].partial_cmp(&s[x]).unwrap());
-    let su: Vec<f32> = order.iter().map(|&k| s[k]).collect();
-    let mut uo = Mat::zeros(n, n);
-    let mut vo = Mat::zeros(n, n);
-    for (j, &k) in order.iter().enumerate() {
-        uo.set_col(j, &u.col(k));
-        vo.set_col(j, &v.col(k));
+    // Sort descending, permuting u and v columns. Stable insertion sort
+    // (n <= q ~ a handful): allocation-free, and ties keep their
+    // original relative order exactly like the stable `sort_by` did.
+    ws.order.clear();
+    ws.order.extend(0..n);
+    for i in 1..n {
+        let mut j = i;
+        while j > 0 && ws.swork[ws.order[j - 1]] < ws.swork[ws.order[j]] {
+            ws.order.swap(j - 1, j);
+            j -= 1;
+        }
     }
-    (uo, su, vo)
+    for (j, &k) in ws.order.iter().enumerate() {
+        ws.s[j] = ws.swork[k];
+        for i in 0..n {
+            *ws.u.at_mut(i, j) = ws.uwork.at(i, k);
+            *ws.v.at_mut(i, j) = ws.vwork.at(i, k);
+        }
+    }
 }
 
 /// One Jacobi rotation zeroing the (i, j) Gram entry (Rutishauser form).

@@ -7,6 +7,8 @@
 //!   run <scenario> [--opt]...  expand the grid, fan out on the worker
 //!                              pool, checkpoint to results/<name>.jsonl
 //!   resume <scenario>          continue a killed sweep from its file
+//!   results                    aggregate index of results/*.jsonl
+//!                              (scenario, cells done/total, mtime)
 //!   run <scenario> --help      axes, options, and notes for one scenario
 //!   run <scenario> --dry-run   list the cells without running them
 //!   info                       PJRT platform + artifact inventory
@@ -45,6 +47,7 @@ fn main() -> Result<()> {
             list(&args);
             Ok(())
         }
+        "results" => results(&args),
         "run" | "resume" => {
             let Some(name) = args.positional.first().cloned() else {
                 bail!(
@@ -209,6 +212,60 @@ fn run_scenario(
     Ok(())
 }
 
+/// `lrt-nvm results [--dir results]` — aggregate index of the results
+/// directory: per checkpoint file, scenario, cells done/total (total
+/// re-derived from the header's recorded options, exactly as `resume`
+/// would), and last-modified age.
+fn results(args: &Args) -> Result<()> {
+    let dir = args.str_opt("dir", "results");
+    let path = std::path::Path::new(&dir);
+    if !path.is_dir() {
+        println!(
+            "no results directory at {dir}/ — run a sweep first \
+             (`lrt-nvm run <scenario>`)"
+        );
+        return Ok(());
+    }
+    let entries = exp::results_index(path)?;
+    if entries.is_empty() {
+        println!("{dir}/ holds no .jsonl results files");
+        return Ok(());
+    }
+    let mut t = Table::new(vec![
+        "file", "scenario", "cells", "status", "size", "modified",
+    ]);
+    for e in &entries {
+        let cells = match e.cells_total {
+            Some(total) => format!("{}/{}", e.cells_done, total),
+            None => format!("{}/?", e.cells_done),
+        };
+        let status = match e.complete() {
+            Some(true) => "complete".to_string(),
+            Some(false) => {
+                format!("resume {} to finish", e.scenario)
+            }
+            None => "unknown scenario".to_string(),
+        };
+        let modified = match e.modified_secs_ago {
+            Some(s) if s < 120 => format!("{s}s ago"),
+            Some(s) if s < 7200 => format!("{}m ago", s / 60),
+            Some(s) if s < 48 * 3600 => format!("{}h ago", s / 3600),
+            Some(s) => format!("{}d ago", s / 86400),
+            None => "-".to_string(),
+        };
+        t.row(vec![
+            e.file.clone(),
+            e.scenario.clone(),
+            cells,
+            status,
+            format!("{} B", e.bytes),
+            modified,
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
 fn list(args: &Args) {
     let mut t = Table::new(vec!["scenario", "cells", "description"]);
     for sc in exp::all() {
@@ -275,6 +332,8 @@ fn print_help() {
                               — finished cells are restored, the rest run,\n\
                               and the final file matches an uninterrupted\n\
                               run byte-for-byte\n\
+           results            aggregate index of results/*.jsonl: scenario,\n\
+                              cells done/total, last modified (--dir DIR)\n\
            info               PJRT platform + compiled artifact inventory\n\
            adapt              one online-adaptation run (--scheme inference|\n\
                               bias|sgd|lrt|lrt-unbiased, --env control|shift|\n\

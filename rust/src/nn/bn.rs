@@ -25,6 +25,40 @@ pub struct BnFwd {
     pub inv: Vec<f32>,
 }
 
+/// Capacity-retaining per-channel temporaries for the `_into` paths
+/// (sized to the widest layer once; `resize` within capacity never
+/// allocates).
+#[derive(Debug, Clone, Default)]
+pub struct BnScratch {
+    mu_i: Vec<f32>,
+    sq_i: Vec<f32>,
+    mu: Vec<f32>,
+    var: Vec<f32>,
+}
+
+impl BnScratch {
+    pub fn with_channels(c: usize) -> BnScratch {
+        BnScratch {
+            mu_i: Vec::with_capacity(c),
+            sq_i: Vec::with_capacity(c),
+            mu: Vec::with_capacity(c),
+            var: Vec::with_capacity(c),
+        }
+    }
+
+    /// Fill every retained buffer (to capacity) with `v` — the
+    /// stale-data test hook, wired through `Workspace::poison` so the
+    /// BN temporaries are as poisonable as every other scratch slot.
+    pub fn poison(&mut self, v: f32) {
+        for buf in [&mut self.mu_i, &mut self.sq_i, &mut self.mu, &mut self.var]
+        {
+            let cap = buf.capacity();
+            buf.clear();
+            buf.resize(cap, v);
+        }
+    }
+}
+
 /// Training path: update EMA stats, normalize with streaming (or, for the
 /// "no streaming batch norm" ablation, per-sample) statistics.
 pub fn forward_train(
@@ -35,48 +69,88 @@ pub fn forward_train(
     eta: f32,
     streaming: bool,
 ) -> BnFwd {
+    let mut out = BnFwd {
+        y: Mat::zeros(z.rows, z.cols),
+        z_hat: Mat::zeros(z.rows, z.cols),
+        inv: vec![0.0; z.cols],
+    };
+    let mut ws = BnScratch::default();
+    forward_train_into(
+        state,
+        z,
+        gamma,
+        beta,
+        eta,
+        streaming,
+        &mut out.z_hat,
+        &mut out.y,
+        &mut out.inv,
+        &mut ws,
+    );
+    out
+}
+
+/// `forward_train` into preallocated outputs (`z_hat` / `y` of z's
+/// shape, `inv` of z.cols — the fields a `ConvCache` retains) and
+/// scratch — zero allocations once the scratch capacity is warm;
+/// arithmetic identical to the allocating form, so results are
+/// bit-identical even into dirty buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_train_into(
+    state: &mut BnState,
+    z: &Mat,
+    gamma: &[f32],
+    beta: &[f32],
+    eta: f32,
+    streaming: bool,
+    z_hat: &mut Mat,
+    y: &mut Mat,
+    inv: &mut [f32],
+    ws: &mut BnScratch,
+) {
     let c = z.cols;
     let p = z.rows as f32;
-    let mut mu_i = vec![0.0f32; c];
-    let mut sq_i = vec![0.0f32; c];
+    assert_eq!((z_hat.rows, z_hat.cols), (z.rows, c));
+    assert_eq!((y.rows, y.cols), (z.rows, c));
+    assert_eq!(inv.len(), c);
+    ws.mu_i.clear();
+    ws.mu_i.resize(c, 0.0);
+    ws.sq_i.clear();
+    ws.sq_i.resize(c, 0.0);
     for i in 0..z.rows {
         for j in 0..c {
             let v = z.at(i, j);
-            mu_i[j] += v / p;
-            sq_i[j] += v * v / p;
+            ws.mu_i[j] += v / p;
+            ws.sq_i[j] += v * v / p;
         }
     }
     for j in 0..c {
-        state.mu_s[j] = eta * state.mu_s[j] + (1.0 - eta) * mu_i[j];
-        state.sq_s[j] = eta * state.sq_s[j] + (1.0 - eta) * sq_i[j];
+        state.mu_s[j] = eta * state.mu_s[j] + (1.0 - eta) * ws.mu_i[j];
+        state.sq_s[j] = eta * state.sq_s[j] + (1.0 - eta) * ws.sq_i[j];
     }
-    let (mu, var): (Vec<f32>, Vec<f32>) = if streaming {
-        (
-            state.mu_s.clone(),
-            (0..c)
-                .map(|j| {
-                    (state.sq_s[j] - state.mu_s[j] * state.mu_s[j]).max(0.0)
-                })
-                .collect(),
-        )
+    ws.mu.clear();
+    ws.var.clear();
+    if streaming {
+        ws.mu.extend_from_slice(&state.mu_s);
+        ws.var.extend((0..c).map(|j| {
+            (state.sq_s[j] - state.mu_s[j] * state.mu_s[j]).max(0.0)
+        }));
     } else {
-        (
-            mu_i.clone(),
-            (0..c).map(|j| (sq_i[j] - mu_i[j] * mu_i[j]).max(0.0)).collect(),
-        )
-    };
-    let inv: Vec<f32> =
-        var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
-    let mut z_hat = Mat::zeros(z.rows, c);
-    let mut y = Mat::zeros(z.rows, c);
+        ws.mu.extend_from_slice(&ws.mu_i);
+        ws.var.extend(
+            (0..c).map(|j| (ws.sq_i[j] - ws.mu_i[j] * ws.mu_i[j]).max(0.0)),
+        );
+    }
+    for (o, &v) in inv.iter_mut().zip(ws.var.iter()) {
+        *o = 1.0 / (v + BN_EPS).sqrt();
+    }
     for i in 0..z.rows {
         for j in 0..c {
-            let zh = (z.at(i, j) - mu[j]) * inv[j];
+            let zh = (z.at(i, j) - ws.mu[j]) * inv[j];
             *z_hat.at_mut(i, j) = zh;
             *y.at_mut(i, j) = gamma[j] * zh + beta[j];
         }
     }
-    BnFwd { y, z_hat, inv }
 }
 
 /// Inference path with frozen streaming statistics.
@@ -86,16 +160,34 @@ pub fn forward_infer(
     gamma: &[f32],
     beta: &[f32],
 ) -> Mat {
+    let mut y = Mat::zeros(z.rows, z.cols);
+    let mut ws = BnScratch::default();
+    forward_infer_into(state, z, gamma, beta, &mut y, &mut ws);
+    y
+}
+
+/// `forward_infer` into a preallocated output (every cell written).
+pub fn forward_infer_into(
+    state: &BnState,
+    z: &Mat,
+    gamma: &[f32],
+    beta: &[f32],
+    y: &mut Mat,
+    ws: &mut BnScratch,
+) {
     let c = z.cols;
-    let inv: Vec<f32> = (0..c)
-        .map(|j| {
-            let var = (state.sq_s[j] - state.mu_s[j] * state.mu_s[j]).max(0.0);
-            1.0 / (var + BN_EPS).sqrt()
-        })
-        .collect();
-    Mat::from_fn(z.rows, c, |i, j| {
-        gamma[j] * (z.at(i, j) - state.mu_s[j]) * inv[j] + beta[j]
-    })
+    assert_eq!((y.rows, y.cols), (z.rows, c));
+    ws.var.clear();
+    ws.var.extend((0..c).map(|j| {
+        let var = (state.sq_s[j] - state.mu_s[j] * state.mu_s[j]).max(0.0);
+        1.0 / (var + BN_EPS).sqrt()
+    }));
+    for i in 0..z.rows {
+        for j in 0..c {
+            *y.at_mut(i, j) =
+                gamma[j] * (z.at(i, j) - state.mu_s[j]) * ws.var[j] + beta[j];
+        }
+    }
 }
 
 #[cfg(test)]

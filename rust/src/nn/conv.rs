@@ -8,9 +8,19 @@ use crate::tensor::{kernels, Mat};
 /// Extract im2col patches: input (h_in, w_in, cin) row-major HWC ->
 /// (pixels, K) with K ordered (cin, kh, kw) and explicit (1,1) padding.
 pub fn im2col(spec: &ConvSpec, input: &[f32]) -> Mat {
+    let mut out = Mat::zeros(spec.pixels(), spec.k());
+    im2col_into(spec, input, &mut out);
+    out
+}
+
+/// `im2col` into a preallocated (pixels, K) matrix — the hot-path form.
+/// The buffer is zeroed first (padding cells stay zero), so a dirty
+/// reused workspace buffer yields bit-identical patches.
+pub fn im2col_into(spec: &ConvSpec, input: &[f32], out: &mut Mat) {
     assert_eq!(input.len(), spec.h_in * spec.w_in * spec.cin);
+    assert_eq!((out.rows, out.cols), (spec.pixels(), spec.k()));
     let (h_out, w_out) = (spec.h_out(), spec.w_out());
-    let mut out = Mat::zeros(h_out * w_out, spec.k());
+    out.data.fill(0.0);
     for oy in 0..h_out {
         for ox in 0..w_out {
             let p = oy * w_out + ox;
@@ -35,21 +45,37 @@ pub fn im2col(spec: &ConvSpec, input: &[f32]) -> Mat {
             }
         }
     }
-    out
 }
 
 /// Backward of the convolution w.r.t. its input: scatter-add of
 /// dz (pixels, cout) through the weights (cout, K) into (h_in*w_in*cin).
 /// This is the exact vjp of `im2col(..) @ w.T`.
 pub fn conv_input_grad(spec: &ConvSpec, dz: &Mat, w: &Mat) -> Vec<f32> {
+    let mut da = vec![0.0f32; spec.h_in * spec.w_in * spec.cin];
+    let mut dpatch = Mat::zeros(spec.pixels(), spec.k());
+    conv_input_grad_into(spec, dz, w, &mut dpatch, &mut da);
+    da
+}
+
+/// `conv_input_grad` into preallocated buffers: `dpatch` is (pixels, K)
+/// scratch, `da` receives the input gradient (zeroed first, so dirty
+/// workspace buffers yield bit-identical results).
+pub fn conv_input_grad_into(
+    spec: &ConvSpec,
+    dz: &Mat,
+    w: &Mat,
+    dpatch: &mut Mat,
+    da: &mut [f32],
+) {
     assert_eq!(dz.rows, spec.pixels());
     assert_eq!(dz.cols, spec.cout);
     assert_eq!(w.rows, spec.cout);
     assert_eq!(w.cols, spec.k());
+    assert_eq!(da.len(), spec.h_in * spec.w_in * spec.cin);
     let (h_out, w_out) = (spec.h_out(), spec.w_out());
-    let mut da = vec![0.0f32; spec.h_in * spec.w_in * spec.cin];
+    da.fill(0.0);
     // dpatch = dz @ w : (pixels, K), then scatter rows back.
-    let dpatch = kernels::matmul(dz, w);
+    kernels::matmul_into(dz, w, dpatch);
     for oy in 0..h_out {
         for ox in 0..w_out {
             let p = oy * w_out + ox;
@@ -74,7 +100,6 @@ pub fn conv_input_grad(spec: &ConvSpec, dz: &Mat, w: &Mat) -> Vec<f32> {
             }
         }
     }
-    da
 }
 
 #[cfg(test)]

@@ -11,6 +11,8 @@ pub mod bn;
 pub mod conv;
 pub mod maxnorm;
 pub mod model;
+pub mod workspace;
 
 pub use arch::{ConvSpec, CONVS, FCS, LAYER_DIMS, N_LAYERS, NUM_CLASSES};
 pub use model::{AuxState, Caches, Grads, Params};
+pub use workspace::Workspace;

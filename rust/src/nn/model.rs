@@ -3,11 +3,10 @@
 //! `forward` / `backward` / step functions.
 
 use super::arch::{alphas, ConvSpec, CONVS, FCS, LAYER_DIMS, N_LAYERS, NUM_CLASSES};
-#[allow(unused_imports)]
-use NUM_CLASSES as _NC;
 use super::bn::{self, BnState};
-use super::conv::{conv_input_grad, im2col};
+use super::conv::{conv_input_grad_into, im2col_into};
 use super::maxnorm;
+use super::workspace::Workspace;
 use crate::quant::{qw_bits, Quantizer, QA, QB, QG};
 use crate::tensor::{kernels, Mat};
 use crate::util::rng::Rng;
@@ -68,6 +67,7 @@ impl Default for AuxState {
 }
 
 /// Per-layer forward caches for the manual backward pass.
+#[derive(Debug)]
 pub struct Caches {
     /// conv layers: (patches, z_hat, inv, y_bn, y)
     pub conv: Vec<ConvCache>,
@@ -76,6 +76,7 @@ pub struct Caches {
     pub logits: Vec<f32>,
 }
 
+#[derive(Debug)]
 pub struct ConvCache {
     pub pat: Mat,
     pub z_hat: Mat,
@@ -84,13 +85,47 @@ pub struct ConvCache {
     pub y: Mat,
 }
 
+#[derive(Debug)]
 pub struct FcCache {
     pub a_in: Vec<f32>,
     pub z: Vec<f32>,
     pub y: Vec<f32>,
 }
 
+impl Caches {
+    /// Exact-shape preallocation — the architecture is a compile-time
+    /// constant, so the forward pass never needs to allocate a cache.
+    pub fn preallocate() -> Caches {
+        Caches {
+            conv: CONVS
+                .iter()
+                .map(|spec| ConvCache {
+                    pat: Mat::zeros(spec.pixels(), spec.k()),
+                    z_hat: Mat::zeros(spec.pixels(), spec.cout),
+                    inv: vec![0.0; spec.cout],
+                    y_bn: Mat::zeros(spec.pixels(), spec.cout),
+                    y: Mat::zeros(spec.pixels(), spec.cout),
+                })
+                .collect(),
+            fc: FCS
+                .iter()
+                .map(|&(n_i, n_o)| FcCache {
+                    a_in: vec![0.0; n_i],
+                    z: vec![0.0; n_o],
+                    y: vec![0.0; n_o],
+                })
+                .collect(),
+            logits: vec![0.0; NUM_CLASSES],
+        }
+    }
+}
+
 /// Quantized forward pass; `train` updates BN state (streaming path).
+///
+/// Allocating convenience form — builds a throwaway [`Workspace`] and
+/// returns its caches. The hot paths call [`forward_into`] with a
+/// retained workspace instead (bit-identical results, zero steady-state
+/// allocations).
 pub fn forward(
     params: &Params,
     aux: &mut AuxState,
@@ -100,88 +135,123 @@ pub fn forward(
     w_bits: u32,
     train: bool,
 ) -> Caches {
+    let mut ws = Workspace::forward_only();
+    forward_into(params, aux, image, bn_eta, bn_stream, w_bits, train, &mut ws);
+    ws.caches
+}
+
+/// Forward pass into a retained workspace: fills `ws.caches` (and the
+/// forward scratch) without allocating. Every cache buffer is fully
+/// overwritten, so a dirty workspace yields bit-identical results.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_into(
+    params: &Params,
+    aux: &mut AuxState,
+    image: &[f32],
+    bn_eta: f32,
+    bn_stream: bool,
+    w_bits: u32,
+    train: bool,
+    ws: &mut Workspace,
+) {
     let _ = qw_bits(w_bits); // grid fixed at programming time
     let al = alphas();
-    let mut a: Vec<f32> = image.iter().map(|&v| QA.q(v)).collect();
-    let mut conv_caches = Vec::new();
+    let Workspace { caches, act, z: zbuf, bn: bn_ws, .. } = ws;
+    act.clear();
+    act.extend(image.iter().map(|&v| QA.q(v)));
     for (i, spec) in CONVS.iter().enumerate() {
-        let pat = im2col(spec, &a);
+        let cache = &mut caches.conv[i];
+        im2col_into(spec, act, &mut cache.pat);
         // NVM reads are already on the Qw grid (quantization is
         // idempotent), so no per-step re-quantization copy is needed.
         let w = &params.w[i];
         // pixels x K @ (cout x K)^T through the blocked/threaded kernels
-        let mut z = kernels::matmul_transb(&pat, w);
+        let z = &mut zbuf[i];
+        kernels::matmul_transb_into(&cache.pat, w, z);
         z.scale(al[i]);
         for p in 0..z.rows {
             for j in 0..z.cols {
                 *z.at_mut(p, j) += params.b[i][j];
             }
         }
-        let f = if train {
-            bn::forward_train(
-                &mut aux.bn[i], &z, &params.gamma[i], &params.beta[i],
-                bn_eta, bn_stream,
-            )
-        } else {
-            let y = bn::forward_infer(
-                &aux.bn[i], &z, &params.gamma[i], &params.beta[i],
+        if train {
+            bn::forward_train_into(
+                &mut aux.bn[i],
+                z,
+                &params.gamma[i],
+                &params.beta[i],
+                bn_eta,
+                bn_stream,
+                &mut cache.z_hat,
+                &mut cache.y_bn,
+                &mut cache.inv,
+                bn_ws,
             );
-            bn::BnFwd {
-                z_hat: y.clone(),
-                inv: vec![1.0; spec.cout],
-                y,
-            }
-        };
-        let mut y = f.y.clone();
-        for v in &mut y.data {
+        } else {
+            bn::forward_infer_into(
+                &aux.bn[i],
+                z,
+                &params.gamma[i],
+                &params.beta[i],
+                &mut cache.y_bn,
+                bn_ws,
+            );
+            cache.z_hat.copy_from(&cache.y_bn);
+            cache.inv.fill(1.0);
+        }
+        cache.y.copy_from(&cache.y_bn);
+        for v in &mut cache.y.data {
             *v = v.max(0.0);
         }
-        a = y.data.iter().map(|&v| QA.q(v)).collect();
-        conv_caches.push(ConvCache {
-            pat,
-            z_hat: f.z_hat,
-            inv: f.inv,
-            y_bn: f.y,
-            y,
-        });
+        act.clear();
+        act.extend(cache.y.data.iter().map(|&v| QA.q(v)));
     }
-    // a is now (pixels * cout) of conv4 = 512, already row-major HWC
-    let mut fc_caches = Vec::new();
-    let mut logits = Vec::new();
+    // act is now (pixels * cout) of conv4 = 512, already row-major HWC
     for (j, &(_, _n_out)) in FCS.iter().enumerate() {
         let i = CONVS.len() + j;
         let w = &params.w[i];
-        let mut z = kernels::matvec(w, &a);
-        for (k, v) in z.iter_mut().enumerate() {
+        let cache = &mut caches.fc[j];
+        cache.a_in.copy_from_slice(act);
+        kernels::matvec_into(w, act, &mut cache.z);
+        for (k, v) in cache.z.iter_mut().enumerate() {
             *v = *v * al[i] + params.b[i][k];
         }
         if j + 1 < FCS.len() {
-            let y: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
-            let a_next: Vec<f32> = y.iter().map(|&v| QA.q(v)).collect();
-            fc_caches.push(FcCache { a_in: a.clone(), z: z.clone(), y });
-            a = a_next;
+            for (yv, &zv) in cache.y.iter_mut().zip(cache.z.iter()) {
+                *yv = zv.max(0.0);
+            }
+            act.clear();
+            act.extend(cache.y.iter().map(|&v| QA.q(v)));
         } else {
-            logits = z.clone();
-            fc_caches.push(FcCache {
-                a_in: a.clone(),
-                z: z.clone(),
-                y: z.clone(),
-            });
+            caches.logits.copy_from_slice(&cache.z);
+            cache.y.copy_from_slice(&cache.z);
         }
     }
-    Caches { conv: conv_caches, fc: fc_caches, logits }
 }
 
 /// Softmax cross-entropy loss + dlogits.
 pub fn softmax_xent(logits: &[f32], label: usize) -> (f32, Vec<f32>) {
+    let mut d = vec![0.0f32; logits.len()];
+    let loss = softmax_xent_into(logits, label, &mut d);
+    (loss, d)
+}
+
+/// `softmax_xent` into a preallocated gradient slice (every element
+/// written; `d` doubles as the exp scratch, so no allocation).
+pub fn softmax_xent_into(logits: &[f32], label: usize, d: &mut [f32]) -> f32 {
+    assert_eq!(d.len(), logits.len());
     let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = logits.iter().map(|&v| (v - maxl).exp()).collect();
-    let sum: f32 = exps.iter().sum();
+    for (e, &v) in d.iter_mut().zip(logits.iter()) {
+        *e = (v - maxl).exp();
+    }
+    let sum: f32 = d.iter().sum();
     let logz = maxl + sum.ln();
     let loss = logz - logits[label];
-    let mut d: Vec<f32> = exps.iter().map(|&e| e / sum).collect();
+    for e in d.iter_mut() {
+        *e /= sum;
+    }
     d[label] -= 1.0;
-    (loss, d)
+    loss
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -195,6 +265,7 @@ pub fn argmax(xs: &[f32]) -> usize {
 }
 
 /// Per-layer Kronecker factors + bias/BN gradients (Fig. 8 flow).
+#[derive(Debug)]
 pub struct Grads {
     /// Weight-gradient factors per layer: (dzw (P x n_o), ain (P x n_i));
     /// fc layers have P = 1. Gradient = dzw^T @ ain.
@@ -206,15 +277,44 @@ pub struct Grads {
 }
 
 impl Grads {
+    /// Exact-shape preallocation: conv layers carry one factor row per
+    /// output pixel, fc layers one row per sample — all known at
+    /// compile time, so the backward pass never constructs placeholder
+    /// `Mat::zeros(0, 0)` dummies (nor anything else).
+    pub fn preallocate() -> Grads {
+        let mut dzw = Vec::with_capacity(N_LAYERS);
+        let mut ain = Vec::with_capacity(N_LAYERS);
+        for (i, &(n_o, n_i)) in LAYER_DIMS.iter().enumerate() {
+            let p = if i < CONVS.len() { CONVS[i].pixels() } else { 1 };
+            dzw.push(Mat::zeros(p, n_o));
+            ain.push(Mat::zeros(p, n_i));
+        }
+        Grads {
+            dzw,
+            ain,
+            db: LAYER_DIMS.iter().map(|&(n_o, _)| vec![0.0; n_o]).collect(),
+            dg: CONVS.iter().map(|c| vec![0.0; c.cout]).collect(),
+            dbe: CONVS.iter().map(|c| vec![0.0; c.cout]).collect(),
+        }
+    }
+
     /// Dense weight gradient of layer `i` (the SGD baseline path):
     /// dzw^T @ ain without materializing the transpose, bit-identical to
     /// the naive `t().matmul` reference.
     pub fn full(&self, i: usize) -> Mat {
         kernels::matmul_atb(&self.dzw[i], &self.ain[i])
     }
+
+    /// `full` into a preallocated (n_o, n_i) buffer — bit-identical.
+    pub fn full_into(&self, i: usize, out: &mut Mat) {
+        kernels::matmul_atb_into(&self.dzw[i], &self.ain[i], out);
+    }
 }
 
 /// Manual backward pass (mirrors `model.backward`); consumes the caches.
+///
+/// Allocating convenience form over [`backward_into`] — the hot paths
+/// keep one retained [`Workspace`] instead.
 pub fn backward(
     params: &Params,
     aux: &mut AuxState,
@@ -223,19 +323,46 @@ pub fn backward(
     use_maxnorm: bool,
     w_bits: u32,
 ) -> Grads {
+    let mut ws = Workspace::step_scratch_with(caches);
+    ws.dlogits.copy_from_slice(dlogits);
+    backward_into(params, aux, &mut ws, use_maxnorm, w_bits);
+    ws.grads
+}
+
+/// Backward pass over `ws.caches` / `ws.dlogits` into `ws.grads`,
+/// allocation-free: factor matrices, bias/BN gradients, and every
+/// intermediate live in the workspace's exact-shape slots (no
+/// `Mat::zeros(0, 0)` placeholder dummies). Arithmetic is identical to
+/// the historical allocating pass, so results are bit-identical.
+pub fn backward_into(
+    params: &Params,
+    aux: &mut AuxState,
+    ws: &mut Workspace,
+    use_maxnorm: bool,
+    w_bits: u32,
+) {
     let _ = qw_bits(w_bits);
     let al = alphas();
     aux.mnk += 1.0;
     let k = aux.mnk;
 
-    let mut dzw: Vec<Mat> = (0..N_LAYERS).map(|_| Mat::zeros(0, 0)).collect();
-    let mut ain: Vec<Mat> = (0..N_LAYERS).map(|_| Mat::zeros(0, 0)).collect();
-    let mut db: Vec<Vec<f32>> = vec![Vec::new(); N_LAYERS];
-    let mut dg: Vec<Vec<f32>> = vec![Vec::new(); 4];
-    let mut dbe: Vec<Vec<f32>> = vec![Vec::new(); 4];
+    let Workspace {
+        caches,
+        grads,
+        dlogits,
+        dz,
+        dzn,
+        prev,
+        dy,
+        dz_pre,
+        dzn_m,
+        dpatch,
+        ..
+    } = ws;
 
     // ---- fc layers, last to first -----------------------------------
-    let mut dz: Vec<f32> = dlogits.to_vec();
+    dz.clear();
+    dz.extend_from_slice(dlogits);
     for j in (0..FCS.len()).rev() {
         let i = CONVS.len() + j;
         let cache = &caches.fc[j];
@@ -247,75 +374,87 @@ pub fn backward(
                 *v = if pass && relu { QG.q(*v) } else { 0.0 };
             }
         }
-        let mut dzn = dz.clone();
-        maxnorm::apply(&mut dzn, &mut aux.mn[i], k, use_maxnorm);
-        let mut dzw_i: Vec<f32> =
-            dzn.iter().map(|&v| QG.q(al[i] * v)).collect();
-        db[i] = dzn.iter().map(|&v| QG.q(v)).collect();
-        dzw[i] = Mat::from_vec(1, dzw_i.len(), std::mem::take(&mut dzw_i));
-        ain[i] = Mat::from_vec(1, cache.a_in.len(), cache.a_in.clone());
+        dzn.clear();
+        dzn.extend_from_slice(dz);
+        maxnorm::apply(dzn, &mut aux.mn[i], k, use_maxnorm);
+        for (o, &v) in grads.dzw[i].row_mut(0).iter_mut().zip(dzn.iter()) {
+            *o = QG.q(al[i] * v);
+        }
+        for (o, &v) in grads.db[i].iter_mut().zip(dzn.iter()) {
+            *o = QG.q(v);
+        }
+        grads.ain[i].row_mut(0).copy_from_slice(&cache.a_in);
         // propagate: dz_prev = alpha * W^T dz
-        let mut prev = params.w[i].t_matvec(&dz);
-        for v in &mut prev {
+        prev.clear();
+        prev.resize(params.w[i].cols, 0.0);
+        params.w[i].t_matvec_into(dz, prev);
+        for v in prev.iter_mut() {
             *v *= al[i];
         }
-        dz = prev;
+        std::mem::swap(dz, prev);
     }
 
     // ---- conv layers, last to first ---------------------------------
     // dz currently holds d/d(flattened conv4 activation).
-    let mut da = dz;
     for i in (0..CONVS.len()).rev() {
         let spec: &ConvSpec = &CONVS[i];
         let cache = &caches.conv[i];
         let p = spec.pixels();
-        let mut dy = Mat::from_vec(p, spec.cout, da.clone());
+        let dyi = &mut dy[i];
+        dyi.data.copy_from_slice(dz);
         for t in 0..p {
             for c in 0..spec.cout {
                 let pass = cache.y.at(t, c) >= QA.lo
                     && cache.y.at(t, c) <= QA.hi;
                 let relu = cache.y_bn.at(t, c) > 0.0;
-                let v = dy.at(t, c);
-                *dy.at_mut(t, c) =
+                let v = dyi.at(t, c);
+                *dyi.at_mut(t, c) =
                     if pass && relu { QG.q(v) } else { 0.0 };
             }
         }
         // streaming-BN backward, stats as constants
-        let mut dgi = vec![0.0f32; spec.cout];
-        let mut dbei = vec![0.0f32; spec.cout];
-        let mut dz_pre = Mat::zeros(p, spec.cout);
+        let dzp = &mut dz_pre[i];
+        grads.dg[i].fill(0.0);
+        grads.dbe[i].fill(0.0);
         for t in 0..p {
             for c in 0..spec.cout {
-                dgi[c] += dy.at(t, c) * cache.z_hat.at(t, c);
-                dbei[c] += dy.at(t, c);
-                *dz_pre.at_mut(t, c) =
-                    dy.at(t, c) * params.gamma[i][c] * cache.inv[c];
+                grads.dg[i][c] += dyi.at(t, c) * cache.z_hat.at(t, c);
+                grads.dbe[i][c] += dyi.at(t, c);
+                *dzp.at_mut(t, c) =
+                    dyi.at(t, c) * params.gamma[i][c] * cache.inv[c];
             }
         }
-        dg[i] = dgi;
-        dbe[i] = dbei;
 
-        let mut dzn = dz_pre.clone();
-        maxnorm::apply(&mut dzn.data, &mut aux.mn[i], k, use_maxnorm);
-        let mut dzw_i = dzn.clone();
-        for v in &mut dzw_i.data {
-            *v = QG.q(al[i] * *v);
+        let dznm = &mut dzn_m[i];
+        dznm.copy_from(dzp);
+        maxnorm::apply(&mut dznm.data, &mut aux.mn[i], k, use_maxnorm);
+        for (o, &v) in
+            grads.dzw[i].data.iter_mut().zip(dznm.data.iter())
+        {
+            *o = QG.q(al[i] * v);
         }
-        dzw[i] = dzw_i;
-        ain[i] = cache.pat.clone();
-        let mut dbi = vec![0.0f32; spec.cout];
+        grads.ain[i].copy_from(&cache.pat);
+        grads.db[i].fill(0.0);
         for t in 0..p {
             for c in 0..spec.cout {
-                dbi[c] += dzn.at(t, c);
+                grads.db[i][c] += dznm.at(t, c);
             }
         }
-        db[i] = dbi.iter().map(|&v| QG.q(v)).collect();
+        for v in grads.db[i].iter_mut() {
+            *v = QG.q(*v);
+        }
 
         if i > 0 {
-            let mut dz_scaled = dz_pre;
-            dz_scaled.scale(al[i]);
-            let mut prev =
-                conv_input_grad(spec, &dz_scaled, &params.w[i]);
+            dzp.scale(al[i]);
+            prev.clear();
+            prev.resize(spec.h_in * spec.w_in * spec.cin, 0.0);
+            conv_input_grad_into(
+                spec,
+                dzp,
+                &params.w[i],
+                &mut dpatch[i],
+                prev,
+            );
             // STE through the previous layer's Qa
             let prev_cache = &caches.conv[i - 1];
             for (t, v) in prev.iter_mut().enumerate() {
@@ -324,11 +463,9 @@ pub fn backward(
                     *v = 0.0;
                 }
             }
-            da = prev;
+            std::mem::swap(dz, prev);
         }
     }
-
-    Grads { dzw, ain, db, dg, dbe }
 }
 
 /// Per-sample bias / BN-affine SGD update (Qb-quantized), applied at

@@ -1,0 +1,306 @@
+//! Per-device scratch workspace: every buffer the training hot path
+//! needs, allocated once and reused forever.
+//!
+//! The paper's whole premise is training under tight auxiliary-memory
+//! budgets, yet the pre-PR-4 hot loop re-heap-allocated every
+//! intermediate — a fresh im2col patch matrix per conv layer per sample,
+//! fresh `z`/`dzw`/`ain`/`dz_pre` each step, fresh `delta`/`factors`
+//! matrices per flush evaluation. The architecture is a compile-time
+//! constant (`nn::arch`), so every one of those shapes is known up
+//! front: [`Workspace::new`] allocates the whole working set once, and
+//! the `_into` code paths (`model::forward_into` / `model::backward_into`
+//! / `LrtState::delta_into` / the `tensor::kernels` `_into` entry
+//! points) write into it — after one warm-up step a training step
+//! performs **zero** heap allocations on the stepping thread
+//! (`tests/alloc_steady_state.rs` proves it with
+//! `util::allocwatch::CountingAlloc`).
+//!
+//! Reuse is numerics-neutral: every consumer either zero-fills its
+//! buffer first or overwrites every element, so results are
+//! bit-identical to the fresh-allocation path even when the buffers are
+//! dirty — `tests/workspace_reuse.rs` pins that by poisoning the whole
+//! workspace with sentinel values between steps, and
+//! `tests/kernel_conformance.rs` pins the `_into` kernels against their
+//! allocating forms in every (kernel x tier x threads x shape) cell.
+//!
+//! Ownership: one `Workspace` per `NativeDevice` (the per-sample loop is
+//! sequential), one per worker in the batched-inference and validation
+//! fan-outs (`step_batch` / `trainer::validate` hand each pool worker a
+//! contiguous slice and one retained workspace). The `delta`/`cand`
+//! slots dominate its footprint (~2x the weight cells — the same dense
+//! matrices the old code allocated per flush; the *simulator* retains
+//! them for speed, which does not change the simulated device's LAM
+//! story: the accumulators it models stay r(n_i+n_o)b).
+
+use super::arch::{CONVS, FCS, LAYER_DIMS, NUM_CLASSES};
+use super::bn::BnScratch;
+use super::model::{Caches, Grads};
+use crate::tensor::Mat;
+
+/// Capacity-retaining scratch for one training stream. Fields are `pub`
+/// for the engine layers that thread it; contents are unspecified
+/// between steps (tests poison them to prove nothing stale is read).
+#[derive(Debug)]
+pub struct Workspace {
+    /// Forward caches, filled by `model::forward_into`.
+    pub caches: Caches,
+    /// Gradient factors, filled by `model::backward_into`.
+    pub grads: Grads,
+    /// Softmax gradient, filled by `model::softmax_xent_into`.
+    pub dlogits: Vec<f32>,
+    /// Running activation (forward) — quantized layer input.
+    pub act: Vec<f32>,
+    /// Pre-BN conv responses, one per conv layer.
+    pub z: Vec<Mat>,
+    /// Streaming-BN per-channel temporaries.
+    pub bn: BnScratch,
+    /// Running upstream gradient (backward).
+    pub dz: Vec<f32>,
+    /// Max-normed fc gradient.
+    pub dzn: Vec<f32>,
+    /// Next upstream gradient (swapped with `dz` layer by layer).
+    pub prev: Vec<f32>,
+    /// Post-STE conv gradient, one per conv layer.
+    pub dy: Vec<Mat>,
+    /// Pre-BN conv gradient, one per conv layer.
+    pub dz_pre: Vec<Mat>,
+    /// Max-normed conv gradient, one per conv layer.
+    pub dzn_m: Vec<Mat>,
+    /// im2col-space gradient scratch for `conv_input_grad_into`.
+    pub dpatch: Vec<Mat>,
+    /// Dense gradient estimate per layer (flush evaluation / SGD).
+    pub delta: Vec<Mat>,
+    /// Candidate weight matrix per layer (quantized update target).
+    pub cand: Vec<Mat>,
+}
+
+impl Workspace {
+    /// Widest vector any stage needs: the image, any conv layer's
+    /// activation/input-gradient, any fc width.
+    fn max_vec() -> usize {
+        let mut max_vec = NUM_CLASSES;
+        for spec in CONVS.iter() {
+            max_vec = max_vec
+                .max(spec.h_in * spec.w_in * spec.cin)
+                .max(spec.pixels() * spec.cout);
+        }
+        for &(n_i, n_o) in FCS.iter() {
+            max_vec = max_vec.max(n_i).max(n_o);
+        }
+        max_vec
+    }
+
+    fn conv_mats(f: impl Fn(&super::arch::ConvSpec) -> (usize, usize)) -> Vec<Mat> {
+        CONVS
+            .iter()
+            .map(|c| {
+                let (r, cols) = f(c);
+                Mat::zeros(r, cols)
+            })
+            .collect()
+    }
+
+    /// Full training workspace (forward + backward + flush slots).
+    pub fn new() -> Workspace {
+        Workspace {
+            delta: LAYER_DIMS
+                .iter()
+                .map(|&(n_o, n_i)| Mat::zeros(n_o, n_i))
+                .collect(),
+            cand: LAYER_DIMS
+                .iter()
+                .map(|&(n_o, n_i)| Mat::zeros(n_o, n_i))
+                .collect(),
+            ..Self::step_scratch()
+        }
+    }
+
+    /// Forward + backward scratch without the flush-evaluation
+    /// `delta`/`cand` slots — exactly the per-step working set the
+    /// pre-PR-4 code allocated each sample (the `backward` wrapper and
+    /// the fresh-vs-workspace bench baseline use it; the device's
+    /// flush/SGD paths need [`Workspace::new`]).
+    pub fn step_scratch() -> Workspace {
+        Self::step_scratch_with(Caches::preallocate())
+    }
+
+    /// [`Workspace::step_scratch`] adopting the caller's caches instead
+    /// of preallocating a set that would be replaced immediately (the
+    /// `backward` compatibility wrapper's path).
+    pub fn step_scratch_with(caches: Caches) -> Workspace {
+        let max_vec = Self::max_vec();
+        Workspace {
+            grads: Grads::preallocate(),
+            dz: Vec::with_capacity(max_vec),
+            dzn: Vec::with_capacity(max_vec),
+            prev: Vec::with_capacity(max_vec),
+            dy: Self::conv_mats(|c| (c.pixels(), c.cout)),
+            dz_pre: Self::conv_mats(|c| (c.pixels(), c.cout)),
+            dzn_m: Self::conv_mats(|c| (c.pixels(), c.cout)),
+            dpatch: Self::conv_mats(|c| (c.pixels(), c.k())),
+            ..Self::forward_only_with(caches)
+        }
+    }
+
+    /// Forward-pass-only workspace: caches, activation, pre-BN and BN
+    /// scratch, dlogits — everything inference/scoring touches, and
+    /// nothing else (no gradient factors, no backward scratch, no
+    /// dense `delta`/`cand` weight-sized slots). ~2x the weight cells
+    /// lighter than [`Workspace::new`]; calling `backward_into` on one
+    /// panics on the empty slots, which only the training paths own.
+    pub fn forward_only() -> Workspace {
+        Self::forward_only_with(Caches::preallocate())
+    }
+
+    /// [`Workspace::forward_only`] adopting the caller's caches.
+    pub fn forward_only_with(caches: Caches) -> Workspace {
+        Workspace {
+            caches,
+            grads: Grads {
+                dzw: Vec::new(),
+                ain: Vec::new(),
+                db: Vec::new(),
+                dg: Vec::new(),
+                dbe: Vec::new(),
+            },
+            dlogits: vec![0.0; NUM_CLASSES],
+            act: Vec::with_capacity(Self::max_vec()),
+            z: Self::conv_mats(|c| (c.pixels(), c.cout)),
+            bn: BnScratch::with_channels(
+                CONVS.iter().map(|c| c.cout).max().unwrap_or(1),
+            ),
+            dz: Vec::new(),
+            dzn: Vec::new(),
+            prev: Vec::new(),
+            dy: Vec::new(),
+            dz_pre: Vec::new(),
+            dzn_m: Vec::new(),
+            dpatch: Vec::new(),
+            delta: Vec::new(),
+            cand: Vec::new(),
+        }
+    }
+
+    /// Overwrite every retained buffer with `v` — the stale-data test
+    /// hook: a poisoned workspace must produce results bit-identical to
+    /// a fresh one, or something read state it should have written.
+    pub fn poison(&mut self, v: f32) {
+        for c in &mut self.caches.conv {
+            c.pat.data.fill(v);
+            c.z_hat.data.fill(v);
+            c.inv.fill(v);
+            c.y_bn.data.fill(v);
+            c.y.data.fill(v);
+        }
+        for f in &mut self.caches.fc {
+            f.a_in.fill(v);
+            f.z.fill(v);
+            f.y.fill(v);
+        }
+        self.caches.logits.fill(v);
+        for i in 0..self.grads.dzw.len() {
+            self.grads.dzw[i].data.fill(v);
+            self.grads.ain[i].data.fill(v);
+            self.grads.db[i].fill(v);
+        }
+        for i in 0..self.grads.dg.len() {
+            self.grads.dg[i].fill(v);
+            self.grads.dbe[i].fill(v);
+        }
+        self.dlogits.fill(v);
+        self.bn.poison(v);
+        for buf in [&mut self.act, &mut self.dz, &mut self.dzn, &mut self.prev]
+        {
+            // fill the whole capacity, not just the current length — a
+            // stale tail must be as poisoned as live elements
+            let cap = buf.capacity();
+            buf.clear();
+            buf.resize(cap, v);
+        }
+        for mats in [
+            &mut self.z,
+            &mut self.dy,
+            &mut self.dz_pre,
+            &mut self.dzn_m,
+            &mut self.dpatch,
+            &mut self.delta,
+            &mut self.cand,
+        ] {
+            for m in mats.iter_mut() {
+                m.data.fill(v);
+            }
+        }
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fan `n` independent forward-only samples out across the kernel pool
+/// in contiguous per-worker slices, preserving order. Each worker gets
+/// ONE retained [`Workspace::forward_only`] and ONE `setup()` state
+/// (e.g. an `AuxState` clone) reused across its whole slice, so
+/// per-sample scoring stays allocation-free. Only valid for
+/// cross-sample-independent work (eval-mode forwards) — the chunking
+/// must not change results. Shared by `NativeDevice::step_batch`
+/// inference and `trainer::validate`.
+pub fn map_samples<S, T, Setup, F>(n: usize, setup: Setup, f: F) -> Vec<T>
+where
+    T: Send,
+    Setup: Fn() -> S + Sync,
+    F: Fn(usize, &mut Workspace, &mut S) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = crate::tensor::kernels::max_threads().min(n);
+    let chunk = n.div_ceil(workers);
+    crate::tensor::kernels::run_scoped(workers, |w| {
+        let mut ws = Workspace::forward_only();
+        let mut state = setup();
+        let lo = w * chunk;
+        let hi = ((w + 1) * chunk).min(n);
+        (lo..hi).map(|s| f(s, &mut ws, &mut state)).collect::<Vec<T>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_architecture() {
+        let ws = Workspace::new();
+        assert_eq!(ws.caches.conv.len(), CONVS.len());
+        assert_eq!(ws.caches.fc.len(), FCS.len());
+        assert_eq!(ws.delta.len(), LAYER_DIMS.len());
+        for (i, &(n_o, n_i)) in LAYER_DIMS.iter().enumerate() {
+            assert_eq!((ws.delta[i].rows, ws.delta[i].cols), (n_o, n_i));
+            assert_eq!((ws.cand[i].rows, ws.cand[i].cols), (n_o, n_i));
+        }
+        for (i, spec) in CONVS.iter().enumerate() {
+            assert_eq!(ws.caches.conv[i].pat.rows, spec.pixels());
+            assert_eq!(ws.dpatch[i].cols, spec.k());
+        }
+        // activation buffer must hold the widest stage without growing
+        assert!(ws.act.capacity() >= 28 * 28);
+        assert!(ws.act.capacity() >= CONVS[0].pixels() * CONVS[0].cout);
+    }
+
+    #[test]
+    fn poison_touches_everything_visible() {
+        let mut ws = Workspace::new();
+        ws.poison(7.5);
+        assert!(ws.caches.logits.iter().all(|&v| v == 7.5));
+        assert!(ws.grads.dzw[3].data.iter().all(|&v| v == 7.5));
+        assert!(ws.delta[5].data.iter().all(|&v| v == 7.5));
+        assert!(ws.act.iter().all(|&v| v == 7.5));
+        assert_eq!(ws.act.len(), ws.act.capacity());
+    }
+}

@@ -52,11 +52,18 @@ impl NvmArray {
     /// Read the full array as a weight matrix (re-quantized — the sense
     /// amplifier snaps the analog level to the nearest code).
     pub fn read(&self) -> Mat {
-        Mat::from_vec(
-            self.rows,
-            self.cols,
-            self.values.iter().map(|&v| self.quant.q(v)).collect(),
-        )
+        let mut out = Mat::zeros(self.rows, self.cols);
+        self.read_into(&mut out);
+        out
+    }
+
+    /// `read` into a preallocated matrix of the array's shape (every
+    /// cell written — the allocation-free weight-refresh path).
+    pub fn read_into(&self, out: &mut Mat) {
+        assert_eq!((out.rows, out.cols), (self.rows, self.cols));
+        for (o, &v) in out.data.iter_mut().zip(self.values.iter()) {
+            *o = self.quant.q(v);
+        }
     }
 
     /// Raw analog values (for drift bookkeeping / tests).

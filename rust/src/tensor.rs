@@ -11,7 +11,7 @@
 pub mod kernels;
 
 /// Row-major 2-D f32 matrix.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -43,7 +43,19 @@ impl Mat {
     }
 
     pub fn eye(n: usize) -> Mat {
-        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+        let mut m = Mat::zeros(n, n);
+        m.set_eye();
+        m
+    }
+
+    /// Overwrite this (square) matrix with the identity in place — the
+    /// allocation-free twin of [`Mat::eye`] for retained scratch.
+    pub fn set_eye(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        self.data.fill(0.0);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] = 1.0;
+        }
     }
 
     #[inline]
@@ -142,12 +154,27 @@ impl Mat {
 
     /// y = self.T @ x.
     pub fn t_matvec(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(self.rows, x.len());
         let mut y = vec![0.0f32; self.cols];
-        for i in 0..self.rows {
-            axpy(x[i], self.row(i), &mut y);
-        }
+        self.t_matvec_into(x, &mut y);
         y
+    }
+
+    /// y = self.T @ x into a preallocated buffer (zeroed first, so a
+    /// dirty buffer gives results bit-identical to `t_matvec`).
+    pub fn t_matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(self.rows, x.len());
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            axpy(x[i], self.row(i), y);
+        }
+    }
+
+    /// Copy another matrix of identical shape into this one (the
+    /// workspace-reuse primitive — no allocation).
+    pub fn copy_from(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.copy_from_slice(&other.data);
     }
 
     /// self += scale * (u (x) v).

@@ -50,6 +50,18 @@
 //! (block sizes), `PAR_MIN_WORK` (minimum per-thread flops before the
 //! pool is consulted). Tests and benches switch both knobs in-process
 //! with [`with_overrides`].
+//!
+//! Allocation contract: the `_into` forms (`matmul_into`,
+//! `matmul_transb_into`, `matmul_atb_into`, `matvec_into`) are the
+//! primary entry points — they write every output element into a
+//! caller-provided buffer and perform **zero heap allocations**
+//! (`add_outer` is already an in-place accumulator). The allocating
+//! names are thin wrappers that `Mat::zeros` + delegate, so both paths
+//! are bit-identical for any (tier, thread count) — including into a
+//! dirty reused buffer (`tests/kernel_conformance.rs` pins the workspace
+//! axis). The hot training path runs exclusively on the `_into` forms
+//! via `nn::workspace::Workspace`; `util::allocwatch` instruments the
+//! claim.
 
 use super::Mat;
 use std::cell::Cell;
@@ -366,6 +378,12 @@ where
         return (0..n).map(f).collect();
     }
     let _guard = BudgetGuard(extra);
+    // Thread spawning heap-allocates by nature (stacks, join state,
+    // boxed closures); that is pool machinery, not hot-path traffic, so
+    // the whole fan-out scope is exempt from alloc counting. See
+    // `util::allocwatch` for why this exemption is honest (the
+    // single-threaded alloc-watch leg never enters this branch).
+    let _alloc_pause = crate::util::allocwatch::pause();
     // Fair share per worker: with w workers splitting the pool, each
     // one's inner kernels should take at most cap/w - 1 extra tokens.
     // Min with the caller's own hint so a nested fan-out cannot widen
@@ -386,7 +404,13 @@ where
                     if i >= n {
                         break;
                     }
-                    let v = f(i);
+                    // user work is NOT pool machinery: re-enable alloc
+                    // counting around it (matters on the calling
+                    // thread, which runs this loop inside the pause)
+                    let v = {
+                        let _live = crate::util::allocwatch::unpause();
+                        f(i)
+                    };
                     slots.lock().unwrap()[i] = Some(v);
                 }
             };
@@ -421,6 +445,10 @@ where
         return;
     }
     let _guard = BudgetGuard(extra);
+    // Spawn machinery is exempt from alloc counting (see run_scoped /
+    // util::allocwatch); the worker closures run on their own threads,
+    // whose counters are not the stepping thread's.
+    let _alloc_pause = crate::util::allocwatch::pause();
     let workers = extra + 1;
     let rows_per = rows.div_ceil(workers);
     std::thread::scope(|scope| {
@@ -1004,9 +1032,20 @@ pub fn matmul_atb_into(a: &Mat, b: &Mat, out: &mut Mat) {
 
 /// y = a @ x with tiered dot rows (the fc-layer forward).
 pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; a.rows];
+    matvec_into(a, x, &mut out);
+    out
+}
+
+/// out = a @ x into a preallocated slice. Every element is written, so a
+/// dirty `out` yields results bit-identical to the allocating form.
+pub fn matvec_into(a: &Mat, x: &[f32], out: &mut [f32]) {
     assert_eq!(a.cols, x.len());
+    assert_eq!(out.len(), a.rows);
     let tier = isa();
-    (0..a.rows).map(|i| dot_dispatch(tier, a.row(i), x)).collect()
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot_dispatch(tier, a.row(i), x);
+    }
 }
 
 /// m += scale * (u (x) v), threaded over row blocks; per-row arithmetic

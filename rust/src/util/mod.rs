@@ -2,6 +2,7 @@
 //! serde/clap/rand/proptest/criterion, so their minimal equivalents live
 //! here (DESIGN.md section 6, substitution 5).
 
+pub mod allocwatch;
 pub mod cli;
 pub mod json;
 pub mod prop;

@@ -13,6 +13,9 @@
 //!   it on the `scalar` tier, and the `native` tier is bit-identical to
 //!   `unrolled` (same lanes, same reduction tree, no FMA);
 //! - results never depend on the thread count;
+//! - the **workspace axis**: every `_into` kernel writing into a dirty
+//!   reused buffer is bit-identical to its allocating form in every
+//!   cell (the PR-4 zero-allocation hot path changes no numbers);
 //! - the batched engine (`step_batch`) is bit-exact against per-sample
 //!   stepping under every tier.
 //!
@@ -331,6 +334,73 @@ fn strided_mgs_helpers_conform_in_every_cell() {
                 }
             }
         }
+    }
+}
+
+/// The workspace axis (PR 4): every `_into` kernel, fed a *dirty*
+/// reused output buffer, must be bit-identical to its allocating form
+/// in every (kernel x tier x thread-count x shape) cell — reused-buffer
+/// results never depend on what the buffer previously held.
+#[test]
+fn into_variants_bit_identical_with_dirty_buffers_in_every_cell() {
+    let mut rng = Rng::new(8);
+    // NaN poison: any cell the kernel fails to overwrite (or worse,
+    // accumulates into) turns the output NaN and fails the bit-compare.
+    const POISON: f32 = f32::NAN;
+    for (label, m, k, n) in SHAPES {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let bt = rand_mat(&mut rng, n, k);
+        let p = rand_mat(&mut rng, k, m); // matmul_atb: (p x m)^T @ (p x n)
+        let pb = rand_mat(&mut rng, k, n);
+        let x = rand_vec(&mut rng, k);
+        // the allocating reference runs inside the SAME (tier, threads)
+        // cell as the dirty-buffer `_into` call — matmul_transb/matvec
+        // results are tier-dependent by contract
+        for_every_cell(
+            || {
+                let mut mm = Mat::zeros(m, n);
+                mm.data.fill(POISON);
+                kernels::matmul_into(&a, &b, &mut mm);
+                let mut tb = Mat::zeros(m, n);
+                tb.data.fill(POISON);
+                kernels::matmul_transb_into(&a, &bt, &mut tb);
+                let mut atb = Mat::zeros(m, n);
+                atb.data.fill(POISON);
+                kernels::matmul_atb_into(&p, &pb, &mut atb);
+                let mut mv = vec![POISON; m];
+                kernels::matvec_into(&a, &x, &mut mv);
+                let alloc = (
+                    kernels::matmul(&a, &b),
+                    kernels::matmul_transb(&a, &bt),
+                    kernels::matmul_atb(&p, &pb),
+                    kernels::matvec(&a, &x),
+                );
+                ((mm, tb, atb, mv), alloc)
+            },
+            |tier, threads, (into, alloc)| {
+                let what = format!(
+                    "{label} tier={} threads={threads}",
+                    tier.name()
+                );
+                assert_eq!(
+                    into.0.data, alloc.0.data,
+                    "matmul_into dirty-buffer {what}"
+                );
+                assert_eq!(
+                    into.1.data, alloc.1.data,
+                    "matmul_transb_into dirty-buffer {what}"
+                );
+                assert_eq!(
+                    into.2.data, alloc.2.data,
+                    "matmul_atb_into dirty-buffer {what}"
+                );
+                assert_eq!(
+                    into.3, alloc.3,
+                    "matvec_into dirty-buffer {what}"
+                );
+            },
+        );
     }
 }
 

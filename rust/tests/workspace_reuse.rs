@@ -1,0 +1,140 @@
+//! Workspace reuse never leaks state between steps: a workspace
+//! *poisoned* with sentinel values (including NaN — any stale read that
+//! flows into an output turns it NaN) must produce results bit-identical
+//! to a fresh-allocation run, across the heterogeneous layer sequence
+//! (conv then fc), every scheme, and flush boundaries.
+
+use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+use lrt_nvm::coordinator::device::NativeDevice;
+use lrt_nvm::lrt::Variant;
+use lrt_nvm::nn::model::{self, AuxState, Params};
+use lrt_nvm::nn::workspace::Workspace;
+use lrt_nvm::util::rng::Rng;
+
+fn image(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..784).map(|_| rng.normal_f32(0.5, 0.5).clamp(0.0, 2.0)).collect()
+}
+
+const SENTINELS: [f32; 3] = [f32::NAN, 777.0, -1e30];
+
+/// forward/backward on a poisoned reused workspace vs a fresh workspace
+/// each step: caches and gradient factors must match bit for bit.
+#[test]
+fn poisoned_workspace_matches_fresh_forward_backward() {
+    let mut rng = Rng::new(3);
+    let params = Params::init(&mut rng, 8);
+    let mut aux_reused = AuxState::new();
+    let mut aux_fresh = AuxState::new();
+    let mut reused = Workspace::new();
+    for step in 0..SENTINELS.len() * 2 {
+        let img = image(50 + step as u64);
+        // poison EVERY retained buffer before reuse
+        reused.poison(SENTINELS[step % SENTINELS.len()]);
+        model::forward_into(
+            &params, &mut aux_reused, &img, 0.99, true, 8, true,
+            &mut reused,
+        );
+        let mut fresh = Workspace::new();
+        model::forward_into(
+            &params, &mut aux_fresh, &img, 0.99, true, 8, true, &mut fresh,
+        );
+        assert_eq!(
+            reused.caches.logits, fresh.caches.logits,
+            "step {step}: logits diverged"
+        );
+        for i in 0..4 {
+            assert_eq!(
+                reused.caches.conv[i].pat.data,
+                fresh.caches.conv[i].pat.data,
+                "step {step}: conv {i} patches"
+            );
+            assert_eq!(
+                reused.caches.conv[i].y.data,
+                fresh.caches.conv[i].y.data,
+                "step {step}: conv {i} activations"
+            );
+        }
+        let label = step % 10;
+        let l1 = model::softmax_xent_into(
+            &reused.caches.logits,
+            label,
+            &mut reused.dlogits,
+        );
+        let l2 = model::softmax_xent_into(
+            &fresh.caches.logits,
+            label,
+            &mut fresh.dlogits,
+        );
+        assert_eq!(l1.to_bits(), l2.to_bits(), "step {step}: loss");
+        model::backward_into(&params, &mut aux_reused, &mut reused, true, 8);
+        model::backward_into(&params, &mut aux_fresh, &mut fresh, true, 8);
+        for i in 0..6 {
+            assert_eq!(
+                reused.grads.dzw[i].data, fresh.grads.dzw[i].data,
+                "step {step}: dzw layer {i}"
+            );
+            assert_eq!(
+                reused.grads.ain[i].data, fresh.grads.ain[i].data,
+                "step {step}: ain layer {i}"
+            );
+            assert_eq!(
+                reused.grads.db[i], fresh.grads.db[i],
+                "step {step}: db layer {i}"
+            );
+        }
+        for i in 0..4 {
+            assert_eq!(reused.grads.dg[i], fresh.grads.dg[i]);
+            assert_eq!(reused.grads.dbe[i], fresh.grads.dbe[i]);
+        }
+    }
+}
+
+/// Whole-device lockstep: one device gets its workspace poisoned between
+/// every step (including across flush commits and drift-free reads); a
+/// control device never does. Losses, NVM write counters, weights, and
+/// the LRT accumulator state must stay identical.
+#[test]
+fn poisoned_device_tracks_control_device_exactly() {
+    for scheme in [
+        Scheme::Sgd,
+        Scheme::Lrt { variant: Variant::Biased },
+        Scheme::Lrt { variant: Variant::Unbiased },
+    ] {
+        let mut cfg = RunConfig::default();
+        cfg.scheme = scheme;
+        cfg.batch = [2, 2, 2, 2, 3, 3]; // flushes land inside the run
+        let params = Params::init(&mut Rng::new(1), cfg.w_bits);
+        let mut control =
+            NativeDevice::new(cfg.clone(), params.clone(), AuxState::new());
+        let mut poisoned = NativeDevice::new(cfg, params, AuxState::new());
+        for t in 0..10u64 {
+            poisoned
+                .ws
+                .poison(SENTINELS[(t as usize) % SENTINELS.len()]);
+            let img = image(t);
+            let label = (t % 10) as usize;
+            let (l1, c1) = control.step(&img, label);
+            let (l2, c2) = poisoned.step(&img, label);
+            assert_eq!(
+                (l1.to_bits(), c1),
+                (l2.to_bits(), c2),
+                "{scheme:?}: step {t} diverged"
+            );
+        }
+        assert_eq!(control.total_writes(), poisoned.total_writes());
+        assert_eq!(control.max_cell_writes(), poisoned.max_cell_writes());
+        for i in 0..6 {
+            assert_eq!(
+                control.arrays[i].read().data,
+                poisoned.arrays[i].read().data,
+                "{scheme:?}: weights layer {i}"
+            );
+            assert_eq!(
+                control.lrt[i].ql.data, poisoned.lrt[i].ql.data,
+                "{scheme:?}: LRT basis layer {i}"
+            );
+            assert_eq!(control.lrt[i].cx, poisoned.lrt[i].cx);
+        }
+    }
+}
