@@ -12,6 +12,53 @@ use lrt_nvm::tensor::{kernels, Mat};
 use lrt_nvm::util::rng::Rng;
 use lrt_nvm::util::table::Table;
 
+/// One row block of the tiled matmul_transb inner loop (`TILE_J`
+/// blocking over `b`'s rows, ISA-dispatched dots) — shared by the
+/// spawn-era dispatch replica so both sides of the pool-latency table
+/// run identical arithmetic.
+fn transb_rows(a: &Mat, b: &Mat, row0: usize, block: &mut [f32]) {
+    let cols = b.rows;
+    let nrows = block.len() / cols;
+    for jb in (0..cols).step_by(kernels::TILE_J) {
+        let jend = (jb + kernels::TILE_J).min(cols);
+        for ri in 0..nrows {
+            let arow = a.row(row0 + ri);
+            let orow = &mut block[ri * cols..(ri + 1) * cols];
+            for j in jb..jend {
+                orow[j] = kernels::dot_fast(arow, b.row(j));
+            }
+        }
+    }
+}
+
+/// Faithful replica of the pre-PR-5 dispatch: spawn+join scoped threads
+/// per call, with the same uniform row partition and `PAR_MIN_WORK`
+/// gating the kernel layer used then (and still uses for the parked
+/// pool), so the table's delta isolates dispatch mechanics.
+fn spawn_era_transb(a: &Mat, b: &Mat, out: &mut Mat, budget: usize) {
+    let (rows, cols) = (out.rows, out.cols);
+    let min_rows = (kernels::PAR_MIN_WORK / (a.cols * cols).max(1)).max(1);
+    let workers = (rows / min_rows).max(1).min(budget);
+    if workers <= 1 {
+        transb_rows(a, b, 0, &mut out.data);
+        return;
+    }
+    let rows_per = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut out.data;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = rows_per.min(rows - row0);
+            let (block, tail) =
+                std::mem::take(&mut rest).split_at_mut(take * cols);
+            rest = tail;
+            let first = row0;
+            scope.spawn(move || transb_rows(a, b, first, block));
+            row0 += take;
+        }
+    });
+}
+
 fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     // warmup
     f();
@@ -277,6 +324,76 @@ fn main() {
             std::hint::black_box(kernels::dot_stride(&sm.data, 17, 3, &sv));
         });
         tt.print();
+        println!();
+        for line in &json_lines {
+            println!("{line}");
+        }
+        println!();
+    }
+
+    println!("== spawn-pool vs parked-pool dispatch latency ==");
+    println!(
+        "(PR 5: fan-outs dispatch onto persistent parked workers instead \
+         of spawning+joining OS threads per kernel call. 'spawn' below \
+         is a faithful replica of the pre-PR-5 dispatch — same row \
+         partitioning, same PAR_MIN_WORK gating, same tiled dot inner \
+         loop — so the delta is pure dispatch latency. Per-layer \
+         matmul_transb shapes at batch 128; rows below the gating \
+         threshold never dispatch on either side and should tie.)\n"
+    );
+    {
+        let mut r = Rng::new(19);
+        let mut rand = |rows: usize, cols: usize| {
+            Mat::from_fn(rows, cols, |_, _| r.normal_f32(0.0, 1.0))
+        };
+        let mut tp = Table::new(vec![
+            "layer (n_o x n_i)",
+            "threads",
+            "spawn us",
+            "parked us",
+            "speedup",
+        ]);
+        let mut json_lines: Vec<String> = Vec::new();
+        for &(n_o, n_i, label, reps) in &[
+            (8usize, 9usize, "conv1 8x9", 400usize),
+            (16, 72, "conv2 16x72", 400),
+            (32, 144, "conv4 32x144", 200),
+            (64, 512, "fc5 64x512", 100),
+        ] {
+            let a = rand(128, n_i);
+            let w = rand(n_o, n_i);
+            for &threads in &[1usize, 4] {
+                let mut out_s = Mat::zeros(128, n_o);
+                let spawn_us = time_median(reps, || {
+                    spawn_era_transb(&a, &w, &mut out_s, threads);
+                    std::hint::black_box(&out_s);
+                });
+                let mut out_p = Mat::zeros(128, n_o);
+                let parked_us =
+                    kernels::with_overrides(None, Some(threads), || {
+                        time_median(reps, || {
+                            kernels::matmul_transb_into(&a, &w, &mut out_p);
+                            std::hint::black_box(&out_p);
+                        })
+                    });
+                tp.row(vec![
+                    label.to_string(),
+                    format!("{threads}"),
+                    format!("{spawn_us:.1}"),
+                    format!("{parked_us:.1}"),
+                    format!("{:.2}x", spawn_us / parked_us.max(1e-9)),
+                ]);
+                json_lines.push(format!(
+                    "BENCH_JSON {{\"bench\":\"hotpath_pool\",\
+                     \"layer\":\"{label}\",\"threads\":{threads},\
+                     \"spawn_us\":{spawn_us:.2},\
+                     \"parked_us\":{parked_us:.2},\
+                     \"speedup\":{:.3}}}",
+                    spawn_us / parked_us.max(1e-9),
+                ));
+            }
+        }
+        tp.print();
         println!();
         for line in &json_lines {
             println!("{line}");

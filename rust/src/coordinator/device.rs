@@ -233,7 +233,8 @@ impl NativeDevice {
             // (eval-mode forward leaves AuxState untouched; the clone
             // only satisfies the &mut signature). Forwards are
             // independent, so the chunking changes nothing numerically
-            // — it just keeps per-sample traffic allocation-free.
+            // — it just keeps per-sample traffic allocation-free, and
+            // the parked pool keeps per-batch dispatch spawn-free.
             return workspace::map_samples(
                 images.len(),
                 || aux.clone(),

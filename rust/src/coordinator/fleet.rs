@@ -82,7 +82,9 @@ impl FleetReport {
 }
 
 /// Run `n_devices` trainers in parallel on shard seeds derived from
-/// `cfg.seed`; every device deploys the same pretrained weights.
+/// `cfg.seed`; every device deploys the same pretrained weights. The
+/// fan-out dispatches onto the persistent parked worker pool, so a
+/// fleet pays thread-start cost once (lazy pool start), not per wave.
 pub fn run_fleet(cfg: &RunConfig, n_devices: usize) -> FleetReport {
     let (params, aux) = pretrain(cfg, false);
     let devices: Vec<RunReport> = kernels::run_scoped(n_devices, |d| {

@@ -19,8 +19,8 @@ pub struct FlushScheduler {
     /// warrants, sized from the layer's flop count via
     /// `kernels::suggested_workers`. The device installs it around the
     /// evaluation with `kernels::affinity`, so tiny conv layers never
-    /// pay thread-spawn overhead and big fc layers don't hoard the pool
-    /// from concurrent fleet devices or sweep cells.
+    /// even wake the parked worker pool and big fc layers don't hoard
+    /// it from concurrent fleet devices or sweep cells.
     pub par_cap: usize,
     /// Samples accumulated since the last *committed* flush.
     samples_pending: usize,

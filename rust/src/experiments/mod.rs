@@ -129,12 +129,13 @@ pub fn results_index(dir: &Path) -> std::io::Result<Vec<ResultsEntry>> {
 /// Run `n` closures on worker threads, preserving order — the fan-out
 /// primitive behind the sweep engine's cells.
 ///
-/// Delegates to the shared `tensor::kernels` pool, so sweep cells and
-/// the blocked kernels inside each cell split one global thread budget
-/// (`LRT_KERNEL_THREADS`) instead of oversubscribing the machine. The
-/// pool gives every cell worker a fair-share affinity hint, so the
-/// first cell to hit a big kernel no longer starves its siblings of
-/// worker tokens.
+/// Delegates to the shared `tensor::kernels` pool (persistent parked
+/// workers — a sweep's cells reuse the same threads call after call),
+/// so sweep cells and the blocked kernels inside each cell split one
+/// global thread budget (`LRT_KERNEL_THREADS`) instead of
+/// oversubscribing the machine. The pool gives every cell worker a
+/// fair-share affinity hint, so the first cell to hit a big kernel no
+/// longer starves its siblings of worker tokens.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,

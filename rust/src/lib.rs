@@ -18,8 +18,10 @@
 //! (`TILE_J`/`TILE_K`) matmul / matmul_transb / matmul_atb kernels with
 //! ISA-dispatched inner loops (`LRT_KERNEL_ISA=scalar|unrolled|native`;
 //! native = runtime-detected AVX2/NEON, bit-identical to the portable
-//! unrolled tier), plus one shared worker pool (`LRT_KERNEL_THREADS`,
-//! default `available_parallelism`) drawn on by the kernels,
+//! unrolled tier), plus one shared **persistent parked worker pool**
+//! (`tensor::pool`; `LRT_KERNEL_THREADS` workers, default
+//! `available_parallelism`, started lazily on the first real fan-out
+//! and parked on condvars between calls) drawn on by the kernels,
 //! `experiments::parallel_map` sweep points, fleet devices, and batched
 //! inference (`NativeDevice::step_batch`) without oversubscription —
 //! fan-outs install fair-share affinity hints so consumers split the
@@ -36,8 +38,10 @@
 //! The training hot path is **allocation-free in steady state**: the
 //! kernels' `_into` entry points write into a per-device
 //! `nn::workspace::Workspace` (plus per-state scratch inside
-//! `lrt::LrtState`), so after one warm-up step a training step performs
-//! zero heap allocations on the stepping thread —
+//! `lrt::LrtState`), and kernel fan-out submission onto the parked pool
+//! is itself allocation-free (retained job slots, no boxed closures),
+//! so after one warm-up step a training step performs zero heap
+//! allocations — absolutely, on every thread, with no exemption —
 //! `tests/alloc_steady_state.rs` proves it with the
 //! `util::allocwatch::CountingAlloc` instrumentation, and
 //! `tests/workspace_reuse.rs` proves buffer reuse is numerics-neutral.

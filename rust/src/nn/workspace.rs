@@ -243,10 +243,12 @@ impl Default for Workspace {
 /// in contiguous per-worker slices, preserving order. Each worker gets
 /// ONE retained [`Workspace::forward_only`] and ONE `setup()` state
 /// (e.g. an `AuxState` clone) reused across its whole slice, so
-/// per-sample scoring stays allocation-free. Only valid for
-/// cross-sample-independent work (eval-mode forwards) — the chunking
-/// must not change results. Shared by `NativeDevice::step_batch`
-/// inference and `trainer::validate`.
+/// per-sample scoring stays allocation-free — and the fan-out itself
+/// dispatches onto the persistent parked worker pool, so back-to-back
+/// batches reuse the same threads with no spawn/join between them.
+/// Only valid for cross-sample-independent work (eval-mode forwards) —
+/// the chunking must not change results. Shared by
+/// `NativeDevice::step_batch` inference and `trainer::validate`.
 pub fn map_samples<S, T, Setup, F>(n: usize, setup: Setup, f: F) -> Vec<T>
 where
     T: Send,

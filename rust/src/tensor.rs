@@ -5,10 +5,11 @@
 //! matrices, matmuls, outer products, and a few slice helpers. The `Mat`
 //! methods here are the naive, always-correct reference; the hot paths of
 //! the engine go through [`kernels`] — cache-blocked, multi-threaded
-//! variants sharing one worker pool — which the parity tests pin against
-//! these reference implementations.
+//! variants sharing one persistent parked worker pool ([`pool`]) — which
+//! the parity tests pin against these reference implementations.
 
 pub mod kernels;
+pub mod pool;
 
 /// Row-major 2-D f32 matrix.
 #[derive(Debug, Clone, Default, PartialEq)]

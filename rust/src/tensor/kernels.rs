@@ -22,17 +22,23 @@
 //!     to the unrolled tier** — switching machines never moves numbers;
 //! - a global *thread budget* shared by every consumer: `run_scoped`
 //!   (the `experiments::parallel_map` engine, also used by the fleet and
-//!   batched inference) and the kernels draw workers from one pool sized
+//!   batched inference) and the kernels draw workers from one
+//!   **persistent parked pool** ([`super::pool`]) sized
 //!   `LRT_KERNEL_THREADS` (default: `available_parallelism`), so fleet
 //!   devices x sweep points x kernel threads never oversubscribe — when
 //!   outer parallelism saturates the budget, inner kernels degrade to
-//!   sequential automatically;
+//!   sequential automatically. Workers start lazily on the first real
+//!   fan-out and park on condvars between calls (no spawn/join per
+//!   kernel, no busy-spin); dispatch writes a two-pointer job into
+//!   retained per-worker slots, so submission is **allocation-free** in
+//!   steady state — there is no alloc-counting exemption anywhere;
 //! - **affinity hints**: an outer fan-out (`run_scoped` with n > 1)
 //!   installs a per-worker fair share of the budget, so N fleet devices
 //!   or sweep cells each get ~cap/N inner kernel threads instead of the
 //!   first consumer hoarding every token. Per-layer consumers (the flush
 //!   evaluation in `NativeDevice`) cap themselves with [`affinity`] using
-//!   [`suggested_workers`], so tiny conv layers never pay spawn overhead.
+//!   [`suggested_workers`], so tiny conv layers never pay dispatch
+//!   overhead at all — below `PAR_MIN_WORK` the pool isn't even woken.
 //!
 //! Numerics: `matmul` and `matmul_atb` accumulate in exactly the naive
 //! reference order under **every** ISA tier and thread count (tiling only
@@ -49,7 +55,12 @@
 //! sequential path), `LRT_KERNEL_ISA` (dispatch tier), `TILE_J`/`TILE_K`
 //! (block sizes), `PAR_MIN_WORK` (minimum per-thread flops before the
 //! pool is consulted). Tests and benches switch both knobs in-process
-//! with [`with_overrides`].
+//! with [`with_overrides`]; raising the thread budget grows the parked
+//! pool lazily, lowering it just leaves the surplus workers parked.
+//! `pool::shutdown` joins every worker (the next fan-out restarts the
+//! pool); `tests/pool_lifecycle.rs` pins lazy start, parking, panic
+//! recovery, and shutdown, and `tests/pool_fairness.rs` pins ordering
+//! under interleaved fan-outs from several dispatching threads.
 //!
 //! Allocation contract: the `_into` forms (`matmul_into`,
 //! `matmul_transb_into`, `matmul_atb_into`, `matvec_into`) are the
@@ -60,9 +71,12 @@
 //! are bit-identical for any (tier, thread count) — including into a
 //! dirty reused buffer (`tests/kernel_conformance.rs` pins the workspace
 //! axis). The hot training path runs exclusively on the `_into` forms
-//! via `nn::workspace::Workspace`; `util::allocwatch` instruments the
-//! claim.
+//! via `nn::workspace::Workspace`, and dispatching onto the parked pool
+//! allocates nothing either, so the steady-state zero-allocation claim
+//! is **absolute on every thread** — `util::allocwatch` instruments it
+//! with no pause/exemption machinery left.
 
+use super::pool;
 use super::Mat;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -266,6 +280,14 @@ pub fn max_threads() -> usize {
 /// Tokens currently in use (the caller thread always owns one).
 static IN_USE: AtomicUsize = AtomicUsize::new(1);
 
+/// Worker-budget tokens currently held across the process (1 when the
+/// pool is fully idle — the calling thread always owns its own token).
+/// Observability hook for the lifecycle tests: proves a panicking job
+/// can't leak budget.
+pub fn tokens_in_use() -> usize {
+    IN_USE.load(Ordering::Relaxed)
+}
+
 thread_local! {
     /// This thread's affinity hint: the most extra worker tokens a
     /// single acquisition may take. `usize::MAX` = unhinted.
@@ -348,13 +370,60 @@ fn release(n: usize) {
 }
 
 /// Releases acquired tokens on drop, so a panicking worker closure
-/// (propagated out of `thread::scope`) can't leak budget and silently
-/// degrade every later caller to sequential execution.
+/// (re-raised on the caller by [`fan_out`]) can't leak budget and
+/// silently degrade every later caller to sequential execution.
 struct BudgetGuard(usize);
 
 impl Drop for BudgetGuard {
     fn drop(&mut self) {
         release(self.0);
+    }
+}
+
+/// Type-erased job entry: `p` is the dispatch site's `&W` work closure.
+/// Monomorphized per dispatch-site closure type so the pool can stay
+/// fully type-erased (two raw pointers per job, nothing boxed).
+unsafe fn job_entry<W: Fn() + Sync>(p: *const ()) {
+    (*(p as *const W))();
+}
+
+/// Run `work` on the caller plus up to `extra` parked pool workers and
+/// block until every dispatched copy returned — the one primitive both
+/// `run_scoped` and `par_row_blocks` dispatch through.
+///
+/// Submission is allocation-free: the pool is grown lazily (an atomic
+/// check in steady state), the job is a `Copy` of two stack pointers
+/// written into retained per-worker slots, and the completion latch is
+/// futex-backed stack state. When fewer than `extra` workers are
+/// parked (the rest busy on a sibling dispatch), the unfilled seats
+/// are forfeited and the caller simply does a larger share itself.
+///
+/// Panic contract: a panic in any copy of `work` (worker or caller) is
+/// propagated to the caller, but only after every copy finished — no
+/// worker can outlive the stack borrows inside `work` (the latch wait
+/// sits in a drop guard, so it runs even while unwinding).
+fn fan_out<W: Fn() + Sync>(extra: usize, work: &W) {
+    pool::ensure(max_threads().saturating_sub(1));
+    let latch = pool::Latch::new(extra);
+    let job = pool::Job {
+        run: job_entry::<W>,
+        ctx: work as *const W as *const (),
+        latch: &latch as *const pool::Latch,
+    };
+    let published = pool::publish(extra, job);
+    latch.forfeit(extra - published);
+    {
+        struct WaitOnDrop<'a>(&'a pool::Latch);
+        impl Drop for WaitOnDrop<'_> {
+            fn drop(&mut self) {
+                self.0.wait();
+            }
+        }
+        let _wait = WaitOnDrop(&latch);
+        work();
+    }
+    if let Some(payload) = latch.take_panic() {
+        std::panic::resume_unwind(payload);
     }
 }
 
@@ -378,17 +447,12 @@ where
         return (0..n).map(f).collect();
     }
     let _guard = BudgetGuard(extra);
-    // Thread spawning heap-allocates by nature (stacks, join state,
-    // boxed closures); that is pool machinery, not hot-path traffic, so
-    // the whole fan-out scope is exempt from alloc counting. See
-    // `util::allocwatch` for why this exemption is honest (the
-    // single-threaded alloc-watch leg never enters this branch).
-    let _alloc_pause = crate::util::allocwatch::pause();
     // Fair share per worker: with w workers splitting the pool, each
     // one's inner kernels should take at most cap/w - 1 extra tokens.
     // Min with the caller's own hint so a nested fan-out cannot widen
-    // what an enclosing scope already narrowed (worker threads start
-    // with a fresh thread-local cap, so inheritance is explicit here).
+    // what an enclosing scope already narrowed (the affinity guard
+    // installed inside `work` restores each pool worker's cap when the
+    // job ends, so persistent workers never leak a hint across jobs).
     let share = (max_threads() / (extra + 1))
         .saturating_sub(1)
         .min(affinity_cap());
@@ -396,38 +460,35 @@ where
     {
         let next = AtomicUsize::new(0);
         let slots = std::sync::Mutex::new(&mut out);
-        std::thread::scope(|scope| {
-            let work = || {
-                let _aff = affinity(share);
-                loop {
-                    let i = next.fetch_add(1, Ordering::SeqCst);
-                    if i >= n {
-                        break;
-                    }
-                    // user work is NOT pool machinery: re-enable alloc
-                    // counting around it (matters on the calling
-                    // thread, which runs this loop inside the pause)
-                    let v = {
-                        let _live = crate::util::allocwatch::unpause();
-                        f(i)
-                    };
-                    slots.lock().unwrap()[i] = Some(v);
+        let work = || {
+            let _aff = affinity(share);
+            loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
                 }
-            };
-            let work = &work;
-            for _ in 0..extra {
-                scope.spawn(move || work());
+                let v = f(i);
+                slots.lock().unwrap()[i] = Some(v);
             }
-            work();
-        });
+        };
+        fan_out(extra, &work);
     }
     out.into_iter().map(|v| v.unwrap()).collect()
 }
 
+/// `*mut f32` allowed across the pool boundary: `par_row_blocks` hands
+/// each ticket a disjoint row range of one exclusively-borrowed matrix,
+/// and `fan_out` joins every worker before the borrow ends.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 /// Split `out`'s rows into contiguous blocks and run `f(first_row,
-/// block_data)` on pool workers (static partition: uniform work). Falls
-/// back to one sequential call over the whole matrix when the matrix is
-/// small or the budget is exhausted.
+/// block_data)` on pool workers (uniform static partition, claimed by
+/// dynamic tickets so missing workers just shift blocks to the caller).
+/// Falls back to one sequential call over the whole matrix when the
+/// matrix is small or the budget is exhausted. This is the kernel hot
+/// path: dispatch performs zero heap allocations.
 fn par_row_blocks<F>(out: &mut Mat, min_rows: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -439,32 +500,42 @@ where
     let min_rows = min_rows.max(1);
     let max_extra =
         (rows / min_rows).saturating_sub(1).min(max_threads().saturating_sub(1));
-    let extra = acquire(max_extra);
+    let mut extra = acquire(max_extra);
     if extra == 0 {
         f(0, &mut out.data);
         return;
     }
-    let _guard = BudgetGuard(extra);
-    // Spawn machinery is exempt from alloc counting (see run_scoped /
-    // util::allocwatch); the worker closures run on their own threads,
-    // whose counters are not the stepping thread's.
-    let _alloc_pause = crate::util::allocwatch::pause();
     let workers = extra + 1;
     let rows_per = rows.div_ceil(workers);
-    std::thread::scope(|scope| {
-        let f = &f;
-        let mut rest: &mut [f32] = &mut out.data;
-        let mut row0 = 0usize;
-        while row0 < rows {
-            let take = rows_per.min(rows - row0);
-            let (block, tail) =
-                std::mem::take(&mut rest).split_at_mut(take * cols);
-            rest = tail;
-            let first = row0;
-            scope.spawn(move || f(first, block));
-            row0 += take;
+    let nblocks = rows.div_ceil(rows_per);
+    // Ragged case: fewer blocks than granted tokens — return the
+    // surplus immediately so sibling dispatchers can use it.
+    if nblocks - 1 < extra {
+        release(extra - (nblocks - 1));
+        extra = nblocks - 1;
+    }
+    let _guard = BudgetGuard(extra);
+    let base = SendPtr(out.data.as_mut_ptr());
+    let ticket = AtomicUsize::new(0);
+    let work = || loop {
+        let t = ticket.fetch_add(1, Ordering::SeqCst);
+        if t >= nblocks {
+            break;
         }
-    });
+        let row0 = t * rows_per;
+        let take = rows_per.min(rows - row0);
+        // Safety: tickets are unique, so the [row0, row0 + take) row
+        // ranges are disjoint; `out` is exclusively borrowed by this
+        // call, and fan_out joins every worker before returning.
+        let block = unsafe {
+            std::slice::from_raw_parts_mut(
+                base.0.add(row0 * cols),
+                take * cols,
+            )
+        };
+        f(row0, block);
+    };
+    fan_out(extra, &work);
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,374 @@
+//! Persistent parked worker pool behind `tensor::kernels`.
+//!
+//! Before PR 5 every fan-out (`run_scoped`, the blocked-matmul row
+//! partitioner) spawned and joined OS threads per call, so per-kernel
+//! dispatch latency was dominated by spawn overhead on the paper's
+//! small conv layers, and the alloc-watch instrumentation had to carve
+//! a `pause()` exemption around the spawn machinery. This module
+//! replaces that with **`LRT_KERNEL_THREADS - 1` long-lived workers
+//! parked on per-worker condvars between calls**:
+//!
+//! - **Lazy start** — no thread exists until the first fan-out actually
+//!   dispatches ([`ensure`] is only called from `kernels::fan_out`);
+//!   tiny kernels below `PAR_MIN_WORK` never start the pool. Growing
+//!   the pool (first use, or a larger `with_overrides` budget) spawns
+//!   threads and allocates; that is one-time warm-up traffic, never
+//!   steady state.
+//! - **Parked, not spinning** — an idle worker blocks in
+//!   `Condvar::wait` on its own retained job slot; it consumes no CPU
+//!   and is woken by exactly one `notify_one` when claimed
+//!   (`tests/pool_lifecycle.rs` pins both the stable thread count and
+//!   the idle-CPU ceiling).
+//! - **Allocation-free submission** — a dispatch pops worker ids from a
+//!   retained idle stack and writes a two-pointer [`Job`] (type-erased
+//!   closure + completion [`Latch`], both living on the dispatching
+//!   caller's stack) into each claimed worker's retained `Option<Job>`
+//!   slot. No boxed closures, no channels, no per-call heap traffic:
+//!   `std`'s futex-based `Mutex`/`Condvar` never allocate, so the
+//!   zero-alloc steady-state contract holds **absolutely** on every
+//!   thread (`tests/alloc_steady_state.rs`), and
+//!   `util::allocwatch::pause` is gone.
+//! - **Scoped-borrow safety** — the caller publishes jobs referencing
+//!   its own stack frame, participates in the work itself, and blocks
+//!   on the latch before the frame can die (even when unwinding: the
+//!   wait lives in a drop guard in `kernels::fan_out`). A worker's
+//!   final touch of caller memory is its `Latch::done_one`.
+//! - **Panic containment** — a panicking job is caught on the worker,
+//!   its payload parked in the latch, and re-raised on the caller after
+//!   every sibling finished; the worker itself survives and re-parks,
+//!   and the kernel thread-budget tokens are released by the caller's
+//!   unwind (`BudgetGuard`), so one bad job can't leak capacity.
+//! - **Clean shutdown** — [`shutdown`] wakes every worker with a quit
+//!   flag and joins them; the next dispatch restarts the pool lazily.
+//!   Test binaries exit without hangs either way (parked threads never
+//!   outlive `main`), but an explicit shutdown lets the lifecycle tests
+//!   prove the thread count returns to baseline. An `epoch` stamp keeps
+//!   a worker that is still draining its last job from re-registering a
+//!   stale id with a pool generation that replaced it.
+//!
+//! Lock order is strictly `POOL -> worker.state`; workers take
+//! `worker.state` alone (parking) or `POOL` alone (idle re-entry), so
+//! no cycle exists. [`shutdown`] assumes no dispatch is in flight
+//! (concurrent dispatch degrades gracefully to inline execution but a
+//! concurrent `ensure` could orphan a fresh worker generation — tests
+//! serialize shutdown behind `with_overrides`' lock or their own).
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One unit of fan-out work: a type-erased pointer to the dispatch
+/// site's shared closure, the entry fn that knows its concrete type,
+/// and the completion latch on the dispatcher's stack. Both pointers
+/// stay valid until the dispatcher's `Latch::wait` returns, which is
+/// guaranteed before its frame unwinds (see `kernels::fan_out`).
+#[derive(Clone, Copy)]
+pub(crate) struct Job {
+    pub run: unsafe fn(*const ()),
+    pub ctx: *const (),
+    pub latch: *const Latch,
+}
+
+// Safety: the pointers reference the dispatching thread's stack frame,
+// which outlives every worker's use of them (latch-ordered, see above);
+// the pointee closure is `Sync` by `fan_out`'s bound.
+unsafe impl Send for Job {}
+
+/// Completion latch + panic mailbox for one dispatch, living on the
+/// dispatching caller's stack. Futex-backed `Mutex`/`Condvar`, so
+/// construction and use are allocation-free (the panic payload box is
+/// allocated by the panic machinery itself, never on the happy path).
+pub(crate) struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Latch {
+    pub fn new(expected: usize) -> Self {
+        Latch {
+            remaining: Mutex::new(expected),
+            cv: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    /// One dispatched copy of the work finished (worker side).
+    pub fn done_one(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Give up `n` seats that found no idle worker (caller side) so the
+    /// wait below doesn't expect them.
+    pub fn forfeit(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut g = self.remaining.lock().unwrap();
+        *g -= n;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every non-forfeited seat called [`done_one`].
+    ///
+    /// [`done_one`]: Latch::done_one
+    pub fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Park a worker-side panic payload (first one wins) for the caller
+    /// to re-raise after the fan-out completes.
+    pub fn record_panic(&self, payload: Box<dyn Any + Send>) {
+        let mut slot =
+            self.panic.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    pub fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.panic.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+}
+
+/// A worker's retained job slot. `quit` is only ever set by
+/// [`shutdown`]; a job published before the flag is always run first
+/// (take-job-then-check-quit in the loop), so no published work is lost.
+struct WorkerState {
+    job: Option<Job>,
+    quit: bool,
+}
+
+struct Worker {
+    state: Mutex<WorkerState>,
+    cv: Condvar,
+}
+
+struct PoolState {
+    /// Bumped by [`shutdown`]; a worker only re-registers as idle while
+    /// its spawn-time epoch is still current, so a worker draining its
+    /// final job can't push a stale id into a successor generation.
+    epoch: u64,
+    workers: Vec<Arc<Worker>>,
+    /// Retained LIFO stack of parked worker ids (indices into
+    /// `workers`). Popping/pushing never allocates after warm-up.
+    idle: Vec<usize>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+static POOL: Mutex<PoolState> = Mutex::new(PoolState {
+    epoch: 0,
+    workers: Vec::new(),
+    idle: Vec::new(),
+    handles: Vec::new(),
+});
+
+/// Poison-tolerant pool lock: a panic under this lock must never
+/// cascade into a worker's re-park (which runs before the worker's
+/// final `Latch::done_one` — a secondary panic there would strand the
+/// dispatcher's latch forever). The state is a few Vec push/pops, so
+/// recovering the inner value is always sound.
+fn lock_pool() -> std::sync::MutexGuard<'static, PoolState> {
+    POOL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Fast-path mirror of `POOL.workers.len()` so the steady-state
+/// dispatch never takes the pool lock just to learn the pool is big
+/// enough.
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Jobs completed by pool workers since process start (test/bench
+/// observability: proves dispatches land on parked workers).
+static JOBS: AtomicU64 = AtomicU64::new(0);
+
+/// Workers currently spawned (parked or busy). 0 until the first real
+/// fan-out — the pool starts lazily.
+pub fn spawned_workers() -> usize {
+    SPAWNED.load(Ordering::Acquire)
+}
+
+/// Total jobs pool workers have completed since process start (or the
+/// last restart — the counter is monotone across shutdowns).
+pub fn jobs_completed() -> u64 {
+    JOBS.load(Ordering::Relaxed)
+}
+
+/// Grow the pool to `target` workers if it is smaller. Steady state is
+/// a single atomic load; growth (first fan-out, or a larger
+/// `with_overrides` budget) spawns and allocates — warm-up traffic by
+/// definition.
+pub(crate) fn ensure(target: usize) {
+    if target == 0 || SPAWNED.load(Ordering::Acquire) >= target {
+        return;
+    }
+    let mut pool = lock_pool();
+    while pool.workers.len() < target {
+        let id = pool.workers.len();
+        let epoch = pool.epoch;
+        let worker = Arc::new(Worker {
+            state: Mutex::new(WorkerState { job: None, quit: false }),
+            cv: Condvar::new(),
+        });
+        let spawned = std::thread::Builder::new()
+            .name(format!("lrt-pool-{id}"))
+            .spawn({
+                let worker = Arc::clone(&worker);
+                move || worker_loop(worker, id, epoch)
+            });
+        let Ok(handle) = spawned else {
+            // Thread exhaustion degrades: the pool stays smaller, the
+            // dispatcher forfeits the unfilled seats and does more work
+            // itself. Never panic here — the lock is held, and a
+            // poisoned pool would make a worker's re-park panic before
+            // its final done_one, stranding that dispatch's latch.
+            break;
+        };
+        pool.workers.push(worker);
+        pool.idle.push(id);
+        pool.handles.push(handle);
+    }
+    SPAWNED.store(pool.workers.len(), Ordering::Release);
+}
+
+/// Hand `job` to up to `max` parked workers; returns how many accepted.
+/// Unfilled seats (pool busy elsewhere, or draining a shutdown) must be
+/// forfeited on the latch by the caller. Allocation-free: pops retained
+/// idle ids, writes a `Copy` job into retained slots, `notify_one`.
+pub(crate) fn publish(max: usize, job: Job) -> usize {
+    if max == 0 {
+        return 0;
+    }
+    let mut pool = lock_pool();
+    let mut published = 0;
+    while published < max {
+        let Some(id) = pool.idle.pop() else { break };
+        // Defensive: a stale id (possible only around an unsynchronized
+        // shutdown) just doesn't count as a seat.
+        let Some(worker) = pool.workers.get(id).map(Arc::clone) else {
+            continue;
+        };
+        {
+            let mut st = worker.state.lock().unwrap();
+            if st.quit {
+                continue;
+            }
+            st.job = Some(job);
+        }
+        // Notify AFTER releasing the state lock so the woken worker
+        // never immediately re-blocks on it (the park loop re-checks
+        // `st.job` before waiting, so the wakeup cannot be lost).
+        worker.cv.notify_one();
+        published += 1;
+    }
+    published
+}
+
+/// Join every worker and reset the pool; the next fan-out restarts it
+/// lazily. For tests and orderly teardown — callers must ensure no
+/// dispatch is in flight. A worker mid-job finishes that job first
+/// (its latch still completes), so even a racing dispatch only loses
+/// parallelism, never results.
+pub fn shutdown() {
+    let (workers, handles) = {
+        let mut pool = lock_pool();
+        // reborrow once so the two field moves below split cleanly
+        let st = &mut *pool;
+        st.epoch += 1;
+        st.idle.clear();
+        SPAWNED.store(0, Ordering::Release);
+        (std::mem::take(&mut st.workers), std::mem::take(&mut st.handles))
+    };
+    for worker in &workers {
+        {
+            let mut st = worker.state.lock().unwrap();
+            st.quit = true;
+        }
+        worker.cv.notify_one();
+    }
+    for handle in handles {
+        let _ = handle.join();
+    }
+}
+
+fn worker_loop(me: Arc<Worker>, id: usize, epoch: u64) {
+    loop {
+        // Park until claimed (or told to quit). A job published
+        // together with the quit flag is still run — publish happens
+        // strictly before quit is observable, so no latch is stranded.
+        let job = {
+            let mut st = me.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.job.take() {
+                    break Some(job);
+                }
+                if st.quit {
+                    break None;
+                }
+                st = me.cv.wait(st).unwrap();
+            }
+        };
+        let Some(job) = job else { return };
+        // Contain job panics: the worker survives, the payload rides
+        // the latch back to the dispatching caller.
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| unsafe { (job.run)(job.ctx) }),
+        );
+        JOBS.fetch_add(1, Ordering::Relaxed);
+        // Re-park BEFORE signaling completion, so when the caller
+        // unblocks this worker is already claimable again — back-to-
+        // back dispatches find a full idle stack. Skip if a shutdown
+        // replaced this pool generation while we were busy.
+        {
+            let mut pool = lock_pool();
+            if pool.epoch == epoch {
+                pool.idle.push(id);
+            }
+        }
+        // Last touches of the caller's stack frame: panic mailbox, then
+        // the latch decrement that may free it.
+        let latch = unsafe { &*job.latch };
+        if let Err(payload) = result {
+            latch.record_panic(payload);
+        }
+        latch.done_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The pool is process-global, so the end-to-end lifecycle contracts
+    // (lazy start, parking, panic recovery, shutdown/restart, thread
+    // counts) live in their own binary: `tests/pool_lifecycle.rs`.
+    // Here: the latch seat arithmetic in isolation.
+
+    #[test]
+    fn latch_forfeit_and_done_reach_zero() {
+        let latch = Latch::new(3);
+        latch.forfeit(2);
+        latch.done_one();
+        latch.wait(); // would hang if seats were miscounted
+        assert!(latch.take_panic().is_none());
+    }
+
+    #[test]
+    fn latch_parks_first_panic_only() {
+        let latch = Latch::new(0);
+        latch.record_panic(Box::new("first"));
+        latch.record_panic(Box::new("second"));
+        let p = latch.take_panic().expect("payload parked");
+        assert_eq!(*p.downcast::<&str>().unwrap(), "first");
+        assert!(latch.take_panic().is_none());
+    }
+}

@@ -16,6 +16,12 @@
 //! - the **workspace axis**: every `_into` kernel writing into a dirty
 //!   reused buffer is bit-identical to its allocating form in every
 //!   cell (the PR-4 zero-allocation hot path changes no numbers);
+//! - the **pool-regime axis**: results are bit-identical whether the
+//!   persistent worker pool is cold (lazily starting mid-call), warm
+//!   (workers parked from a previous call), or freshly resized through
+//!   `with_overrides` — the PR-5 parked pool reproduces the spawn-era
+//!   reference values exactly (the dispatch mechanism repartitions
+//!   loops, it never touches arithmetic);
 //! - the batched engine (`step_batch`) is bit-exact against per-sample
 //!   stepping under every tier.
 //!
@@ -477,6 +483,113 @@ fn batched_engine_bit_exact_per_tier() {
             );
             assert_eq!(ibat.total_writes(), 0);
         });
+    }
+}
+
+/// The pool-regime axis (PR 5): for every kernel x tier x shape cell,
+/// the result must not depend on the worker pool's lifecycle state —
+/// cold (this very call lazily starts the workers), warm (workers
+/// parked from the previous call), or resized (a `with_overrides`
+/// budget change grew/shrank the usable pool under parked workers).
+/// The warm-pool result doubles as the spawn-era reference: dispatch
+/// mechanics (spawn-per-call then, parked workers now) only repartition
+/// loops, so the bit-exact kernels are pinned to the naive `Mat` values
+/// and the reassociating ones to their own tier value across regimes.
+#[test]
+fn pool_regimes_bit_identical_to_spawn_era_reference() {
+    use lrt_nvm::tensor::pool;
+    let mut rng = Rng::new(9);
+    for (label, m, k, n) in SHAPES {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let bt = rand_mat(&mut rng, n, k);
+        let x = rand_vec(&mut rng, k);
+        let naive_mm = a.matmul(&b);
+        let naive_tb = a.matmul_transb(&bt);
+        for tier in kernels::available_isas() {
+            let run = || {
+                (
+                    kernels::matmul(&a, &b),
+                    kernels::matmul_transb(&a, &bt),
+                    kernels::matvec(&a, &x),
+                )
+            };
+            let warm = kernels::with_overrides(Some(tier), Some(4), || {
+                // cold: joining the pool forces the next dispatch to
+                // lazily restart it mid-kernel
+                pool::shutdown();
+                let cold = run();
+                // warm: the workers the cold call started are parked now
+                let warm = run();
+                assert_eq!(
+                    cold.0.data,
+                    warm.0.data,
+                    "matmul {label} tier={}: cold vs warm pool",
+                    tier.name()
+                );
+                assert_eq!(
+                    cold.1.data,
+                    warm.1.data,
+                    "matmul_transb {label} tier={}: cold vs warm pool",
+                    tier.name()
+                );
+                assert_eq!(
+                    cold.2, warm.2,
+                    "matvec {label} tier={}: cold vs warm pool",
+                    tier.name()
+                );
+                warm
+            });
+            // the spawn-era contracts, against the warm parked pool:
+            // bit-exact kernels match naive exactly, reassociating ones
+            // stay within tolerance (and exactly on the scalar tier)
+            assert_eq!(
+                warm.0.data,
+                naive_mm.data,
+                "matmul {label} tier={}: parked pool vs naive reference",
+                tier.name()
+            );
+            assert_within(
+                &warm.1.data,
+                &naive_tb.data,
+                1e-5,
+                &format!("transb {label} tier={} parked pool", tier.name()),
+            );
+            if tier == kernels::Isa::Scalar {
+                assert_eq!(
+                    warm.1.data, naive_tb.data,
+                    "transb {label}: scalar tier must stay bit-exact \
+                     under the parked pool"
+                );
+            }
+            // resized: shrink the usable budget under the parked
+            // workers, then grow it back — parked-but-unused workers
+            // and a re-grown pool must reproduce the same bits
+            for threads in [2usize, 4] {
+                let resized =
+                    kernels::with_overrides(Some(tier), Some(threads), run);
+                assert_eq!(
+                    resized.0.data,
+                    warm.0.data,
+                    "matmul {label} tier={} threads={threads}: resized \
+                     pool regime changed results",
+                    tier.name()
+                );
+                assert_eq!(
+                    resized.1.data,
+                    warm.1.data,
+                    "matmul_transb {label} tier={} threads={threads}: \
+                     resized pool regime changed results",
+                    tier.name()
+                );
+                assert_eq!(
+                    resized.2, warm.2,
+                    "matvec {label} tier={} threads={threads}: resized \
+                     pool regime changed results",
+                    tier.name()
+                );
+            }
+        }
     }
 }
 

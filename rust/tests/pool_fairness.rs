@@ -1,0 +1,133 @@
+//! Submission-order fairness property for the parked worker pool:
+//! interleaved fan-outs from multiple dispatching threads (the
+//! trainer-thread + background-validate pattern) must never deadlock,
+//! and every call must get its own results back in per-call submission
+//! order, no matter how the schedule interleaves.
+//!
+//! Loom-style schedule shuffling without new deps: each fan-out closure
+//! inserts a seeded number of `yield_now` points (a cheap deterministic
+//! hash of seed x call x index), so across seeds the workers hit the
+//! shared idle stack, job slots, and latches in many different orders.
+//! The assertions are pure ordering invariants — `run_scoped(n, f)[i]`
+//! must equal `f(i)` of *this* call, never a sibling's — so any
+//! cross-call slot mixup or latch miscount fails deterministically,
+//! and a lost wakeup hangs loudly (a watchdog turns a deadlock into a
+//! failed exit instead of a silent CI timeout).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use lrt_nvm::nn::workspace;
+use lrt_nvm::tensor::kernels;
+
+/// Deterministic per-(seed, call, index) yield count in 0..4.
+fn yields(seed: u64, call: usize, i: usize) -> usize {
+    let mut h = seed
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(call as u64)
+        .wrapping_mul(0x100_0000_01b3)
+        .wrapping_add(i as u64);
+    h ^= h >> 33;
+    (h % 4) as usize
+}
+
+fn shuffle_point(seed: u64, call: usize, i: usize) {
+    for _ in 0..yields(seed, call, i) {
+        std::thread::yield_now();
+    }
+}
+
+/// The "trainer" role: a stream of small fan-outs, some of them nested
+/// (a fan-out issued from inside a pool job must still run to
+/// completion inline or on leftover workers, in order).
+fn trainer_role(seed: u64, calls: usize) {
+    for call in 0..calls {
+        let n = 1 + (yields(seed, call, 7) * 2) % 7; // 1..=7, seeded
+        let out = kernels::run_scoped(n, |i| {
+            shuffle_point(seed, call, i);
+            let nested = if i == 0 && call % 5 == 0 {
+                let inner = kernels::run_scoped(3, move |j| {
+                    shuffle_point(seed ^ 0xabcd, call, j);
+                    call * 10 + j
+                });
+                assert_eq!(
+                    inner,
+                    (0..3).map(|j| call * 10 + j).collect::<Vec<_>>(),
+                    "nested fan-out lost per-call ordering"
+                );
+                1
+            } else {
+                0
+            };
+            (call, i, i * 31 + call * 7, nested)
+        });
+        assert_eq!(out.len(), n);
+        for (i, &(c, idx, v, _)) in out.iter().enumerate() {
+            assert_eq!(
+                (c, idx, v),
+                (call, i, i * 31 + call * 7),
+                "trainer call {call} slot {i} got a sibling's result"
+            );
+        }
+    }
+}
+
+/// The "background validate" role: chunked sample scoring through
+/// `workspace::map_samples` (one retained workspace per pool worker),
+/// racing the trainer's fan-outs for the same parked workers.
+fn validate_role(seed: u64, calls: usize) {
+    for call in 0..calls {
+        let n = 5 + (yields(seed, call, 3) * 3) % 8; // 5..=12, seeded
+        let scores = workspace::map_samples(
+            n,
+            || 0usize,
+            |s, _ws, scratch| {
+                shuffle_point(seed, call, s);
+                *scratch += 1; // per-worker state must stay per-worker
+                s * 13 + call
+            },
+        );
+        assert_eq!(
+            scores,
+            (0..n).map(|s| s * 13 + call).collect::<Vec<_>>(),
+            "validate call {call} lost per-sample ordering"
+        );
+    }
+}
+
+#[test]
+fn interleaved_fanouts_never_deadlock_and_preserve_order() {
+    // Deadlock => loud failure instead of a silent CI hang.
+    let done = Arc::new(AtomicBool::new(false));
+    {
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let deadline = std::time::Instant::now()
+                + std::time::Duration::from_secs(300);
+            while std::time::Instant::now() < deadline {
+                if done.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+            eprintln!(
+                "pool_fairness: interleaved fan-outs deadlocked \
+                 (watchdog fired after 300s)"
+            );
+            std::process::exit(101);
+        });
+    }
+
+    kernels::with_overrides(None, Some(4), || {
+        for seed in 0..8u64 {
+            std::thread::scope(|s| {
+                s.spawn(|| trainer_role(seed * 2 + 1, 40));
+                s.spawn(|| validate_role(seed * 2 + 2, 40));
+                // the test thread itself is a third dispatcher, so the
+                // pool sees three interleaved submitters per seed
+                trainer_role(seed * 2 + 3, 20);
+            });
+        }
+    });
+    done.store(true, Ordering::Relaxed);
+}

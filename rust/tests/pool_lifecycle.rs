@@ -1,0 +1,284 @@
+//! Lifecycle contracts of the persistent parked worker pool
+//! (`tensor::pool`), pinned end to end:
+//!
+//! - **lazy start** — no worker thread exists until the first fan-out
+//!   that actually dispatches; kernels below `PAR_MIN_WORK` never wake
+//!   the pool;
+//! - **parking, not respawning** — repeated dispatches reuse the same
+//!   parked workers (stable `Threads:` count in `/proc/self/status`)
+//!   and an idle pool burns no CPU (no busy-spin);
+//! - **panic containment** — a panicking job propagates to the caller,
+//!   releases its thread-budget tokens, and leaves the workers alive
+//!   and correct;
+//! - **clean shutdown** — `pool::shutdown` joins every worker (thread
+//!   count returns to baseline) and the next dispatch restarts the pool
+//!   lazily with identical results.
+//!
+//! This binary finishing at all is itself part of the contract: parked
+//! workers must never keep a `cargo test` process from exiting (they
+//! park on condvars, and the process exits when `main` returns).
+//!
+//! The pool is process-global state, so the tests serialize on a local
+//! mutex (they reshape the pool under each other otherwise). The
+//! `/proc` probes are Linux-only and skip gracefully elsewhere.
+
+use std::sync::Mutex;
+
+use lrt_nvm::tensor::{kernels, pool, Mat};
+use lrt_nvm::util::rng::Rng;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Let the libtest harness finish spawning (or retiring) its own test
+/// threads before a thread-count probe, so `Threads:` deltas can be
+/// attributed to the pool alone. Sibling tests in this binary are
+/// blocked on `SERIAL` for the whole measurement, so after this window
+/// the only thing that can change the count is the pool itself.
+fn settle() {
+    std::thread::sleep(std::time::Duration::from_millis(200));
+}
+
+/// `Threads:` from /proc/self/status (Linux), else None.
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("Threads:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// utime+stime clock ticks of this process from /proc/self/stat
+/// (Linux), else None. Field numbering is relative to the ')' that
+/// terminates the comm field, which may itself contain spaces.
+fn cpu_ticks() -> Option<u64> {
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    let after_comm = stat.rsplit(')').next()?;
+    let fields: Vec<&str> = after_comm.split_whitespace().collect();
+    // after ')' the fields are state(0) ppid(1) ... utime(11) stime(12)
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some(utime + stime)
+}
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal_f32(0.0, 1.0))
+}
+
+/// Big enough that a 4-thread budget always fans out.
+fn big_pair() -> (Mat, Mat) {
+    let mut rng = Rng::new(21);
+    (rand_mat(&mut rng, 128, 512), rand_mat(&mut rng, 512, 64))
+}
+
+#[test]
+fn workers_start_lazily_and_park_between_calls() {
+    let _serial = lock();
+    kernels::with_overrides(None, Some(4), || {
+        // clean slate: an earlier test in this binary may have warmed
+        // the pool already
+        pool::shutdown();
+        assert_eq!(pool::spawned_workers(), 0, "shutdown left workers");
+        settle();
+        let t_base = thread_count();
+
+        // a kernel below PAR_MIN_WORK must not start the pool
+        let mut rng = Rng::new(5);
+        let small_a = rand_mat(&mut rng, 8, 9);
+        let small_b = rand_mat(&mut rng, 9, 4);
+        std::hint::black_box(kernels::matmul(&small_a, &small_b));
+        assert_eq!(
+            pool::spawned_workers(),
+            0,
+            "tiny kernels must never wake (or create) the pool"
+        );
+
+        // the first real fan-out starts exactly the budget's workers
+        let (a, b) = big_pair();
+        let first = kernels::matmul(&a, &b);
+        assert_eq!(
+            pool::spawned_workers(),
+            3,
+            "4-thread budget => 3 lazily spawned workers + the caller"
+        );
+        let t_warm = thread_count();
+        if let (Some(base), Some(warm)) = (t_base, t_warm) {
+            assert_eq!(
+                warm,
+                base + 3,
+                "process thread count must grow by exactly the pool size"
+            );
+        }
+
+        // steady state: dispatches land on parked workers — the thread
+        // count never moves again and the job counter proves the
+        // workers (not fresh spawns) did the work
+        let jobs_before = pool::jobs_completed();
+        for _ in 0..40 {
+            let again = kernels::matmul(&a, &b);
+            assert_eq!(again.data, first.data, "parked-pool results moved");
+        }
+        assert!(
+            pool::jobs_completed() > jobs_before,
+            "dispatches did not reach the pool workers"
+        );
+        assert_eq!(pool::spawned_workers(), 3, "steady state respawned");
+        if let (Some(warm), Some(now)) = (t_warm, thread_count()) {
+            assert_eq!(
+                now, warm,
+                "thread count changed across 40 dispatches — the pool \
+                 must reuse parked workers, not spawn per call"
+            );
+        }
+
+        // parked means parked: an idle pool burns (almost) no CPU. A
+        // busy-spinning 3-worker pool would burn ~120 ticks in this
+        // window; condvar-parked workers burn none.
+        if let Some(before) = cpu_ticks() {
+            std::thread::sleep(std::time::Duration::from_millis(400));
+            let burned = cpu_ticks().unwrap_or(before) - before;
+            assert!(
+                burned < 15,
+                "idle pool burned {burned} clock ticks in 400ms — \
+                 workers are spinning instead of parking"
+            );
+        }
+    });
+}
+
+#[test]
+fn panic_in_job_propagates_and_recovers_budget() {
+    let _serial = lock();
+    kernels::with_overrides(None, Some(4), || {
+        // warm the pool so the panic exercises parked workers
+        let (a, b) = big_pair();
+        let want = kernels::matmul(&a, &b);
+        let spawned = pool::spawned_workers();
+        assert!(spawned > 0);
+        let tokens_before = kernels::tokens_in_use();
+
+        // silence the expected panic's default backtrace spew
+        let prev_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let result = std::panic::catch_unwind(|| {
+            kernels::run_scoped(8, |i| {
+                if i >= 4 {
+                    panic!("deliberate job panic {i}");
+                }
+                i
+            })
+        });
+        std::panic::set_hook(prev_hook);
+
+        let payload = result.expect_err("job panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains("deliberate job panic"),
+            "wrong payload: {msg:?}"
+        );
+
+        // budget tokens released, workers alive, results still correct
+        assert_eq!(
+            kernels::tokens_in_use(),
+            tokens_before,
+            "a panicking fan-out leaked thread-budget tokens"
+        );
+        assert_eq!(
+            pool::spawned_workers(),
+            spawned,
+            "a job panic must not kill (or respawn) pool workers"
+        );
+        let jobs_before = pool::jobs_completed();
+        let v = kernels::run_scoped(16, |i| i * 2);
+        assert_eq!(v, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(
+            pool::jobs_completed() > jobs_before,
+            "post-panic dispatches no longer reach the workers"
+        );
+        assert_eq!(kernels::matmul(&a, &b).data, want.data);
+    });
+}
+
+#[test]
+fn shutdown_joins_workers_and_restarts_lazily() {
+    let _serial = lock();
+    kernels::with_overrides(None, Some(4), || {
+        let (a, b) = big_pair();
+        let before = kernels::matmul(&a, &b);
+        let spawned = pool::spawned_workers();
+        assert!(spawned > 0);
+        settle();
+        let t_warm = thread_count();
+
+        pool::shutdown();
+        assert_eq!(pool::spawned_workers(), 0, "shutdown left workers");
+        // joined threads can linger in /proc for an instant; settle
+        // before attributing the count delta to the pool
+        settle();
+        if let (Some(warm), Some(now)) = (t_warm, thread_count()) {
+            assert_eq!(
+                now,
+                warm - spawned,
+                "shutdown must join every pool thread"
+            );
+        }
+
+        // the next dispatch restarts the pool lazily, bit-identically
+        let after = kernels::matmul(&a, &b);
+        assert_eq!(after.data, before.data, "restart moved results");
+        assert_eq!(pool::spawned_workers(), 3, "pool did not restart");
+
+        // idempotent double-shutdown, and a shut-down pool still
+        // computes correctly (inline when nothing respawns it first)
+        pool::shutdown();
+        pool::shutdown();
+        assert_eq!(pool::spawned_workers(), 0);
+        assert_eq!(kernels::matmul(&a, &b).data, before.data);
+    });
+}
+
+#[test]
+fn budget_resize_grows_pool_lazily_and_keeps_results() {
+    let _serial = lock();
+    let (a, b) = big_pair();
+    // sequential reference with the pool entirely out of the picture
+    let reference = kernels::with_overrides(None, Some(1), || {
+        kernels::matmul(&a, &b)
+    });
+    let small = kernels::with_overrides(None, Some(2), || {
+        pool::shutdown();
+        let m = kernels::matmul(&a, &b);
+        assert_eq!(
+            pool::spawned_workers(),
+            1,
+            "2-thread budget => 1 worker"
+        );
+        m
+    });
+    let grown = kernels::with_overrides(None, Some(4), || {
+        let m = kernels::matmul(&a, &b);
+        assert_eq!(
+            pool::spawned_workers(),
+            3,
+            "raising the budget must grow the parked pool lazily"
+        );
+        m
+    });
+    // shrinking the budget leaves surplus workers parked (and unused)
+    let shrunk = kernels::with_overrides(None, Some(2), || {
+        let m = kernels::matmul(&a, &b);
+        assert_eq!(
+            pool::spawned_workers(),
+            3,
+            "lowering the budget must not join parked workers"
+        );
+        m
+    });
+    assert_eq!(small.data, reference.data);
+    assert_eq!(grown.data, reference.data);
+    assert_eq!(shrunk.data, reference.data);
+}
