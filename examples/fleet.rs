@@ -68,7 +68,8 @@ fn main() {
         states.push(st);
     }
     let refs: Vec<&LrtState> = states.iter().collect();
-    let (_agg, rel) = aggregate_factors(&refs, cfg.rank, &mut rng);
+    let (_agg, rel) =
+        aggregate_factors(&refs, cfg.rank, &mut rng).expect("uniform fleet");
     println!(
         "server aggregation of 3 devices' fc5 factors: rank-{} recompression \
          error {:.1}% of the exact factor average",

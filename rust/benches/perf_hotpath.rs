@@ -564,6 +564,79 @@ fn main() {
         println!();
     }
 
+    println!("== sharded fleet record throughput ==");
+    println!(
+        "(population-scale engine: devices as compact records over \
+         shared base weights, hydrated into pooled carcasses per wave. \
+         records/s includes hydrate + step + extract; bytes/record is \
+         the suspended footprint the O(shard) memory bound is built \
+         from; BENCH_JSON lines are the machine baseline.)\n"
+    );
+    {
+        use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+        use lrt_nvm::coordinator::sharded::{
+            run_sharded_fleet, ShardedFleetCfg,
+        };
+        let mut t5 = Table::new(vec![
+            "scheme",
+            "population",
+            "shard",
+            "samples/dev",
+            "records/s",
+            "B/record",
+            "peak resident B",
+        ]);
+        let mut json_lines: Vec<String> = Vec::new();
+        for (name, scheme, samples) in [
+            ("inference", Scheme::Inference, 4usize),
+            ("lrt-biased", Scheme::Lrt { variant: Variant::Biased }, 4),
+        ] {
+            let mut cfg = RunConfig::default();
+            cfg.scheme = scheme;
+            cfg.samples = samples;
+            cfg.offline_samples = 0; // throughput bench, not accuracy
+            cfg.batch = [2, 2, 2, 2, 4, 4];
+            let mut scfg = ShardedFleetCfg::new(cfg, 256);
+            scfg.shard = 64;
+            scfg.wave = 2; // two waves: every record suspends/resumes
+            let rep = std::cell::RefCell::new(None);
+            let us = time_median(3, || {
+                *rep.borrow_mut() =
+                    Some(run_sharded_fleet(&scfg).unwrap());
+            });
+            let rep = rep.into_inner().unwrap();
+            let records_per_s = scfg.n_devices as f64 / (us / 1e6);
+            t5.row(vec![
+                name.to_string(),
+                format!("{}", scfg.n_devices),
+                format!("{}", scfg.shard),
+                format!("{samples}"),
+                format!("{records_per_s:.0}"),
+                format!("{:.0}", rep.mean_record_bytes),
+                format!("{}", rep.peak_resident_bytes),
+            ]);
+            json_lines.push(format!(
+                "BENCH_JSON {{\"bench\":\"sharded_fleet\",\
+                 \"scheme\":\"{name}\",\"population\":{},\"shard\":{},\
+                 \"samples_per_device\":{samples},\
+                 \"records_per_s\":{records_per_s:.1},\
+                 \"mean_record_bytes\":{:.0},\
+                 \"peak_resident_bytes\":{},\"carcass_bytes\":{}}}",
+                scfg.n_devices,
+                scfg.shard,
+                rep.mean_record_bytes,
+                rep.peak_resident_bytes,
+                rep.carcass_bytes,
+            ));
+        }
+        t5.print();
+        println!();
+        for line in &json_lines {
+            println!("{line}");
+        }
+        println!();
+    }
+
     println!("== batched vs per-sample engine steps ==");
     {
         use lrt_nvm::coordinator::config::{RunConfig, Scheme};

@@ -312,6 +312,24 @@ impl NativeDevice {
     pub fn lrt_aux_bytes(&self) -> usize {
         self.lrt.iter().map(|s| s.aux_bytes(16)).sum()
     }
+
+    /// Clones of the device's RNG streams, in their current positions
+    /// (sharded-fleet record suspension).
+    pub(crate) fn streams(&self) -> (Rng, Rng) {
+        (self.rng.clone(), self.drift_rng.clone())
+    }
+
+    /// Hydrate the RNG streams from a suspended record.
+    pub(crate) fn set_streams(&mut self, rng: Rng, drift_rng: Rng) {
+        self.rng = rng;
+        self.drift_rng = drift_rng;
+    }
+
+    /// Force a weight re-read before the next step — used after a
+    /// hydration path mutates `arrays` behind the device's back.
+    pub(crate) fn mark_weights_dirty(&mut self) {
+        self.weights_dirty = true;
+    }
 }
 
 

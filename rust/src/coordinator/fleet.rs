@@ -20,11 +20,14 @@
 //! a device, each layer's flush evaluation further caps itself to what
 //! its size warrants (`FlushScheduler::par_cap`).
 
+use anyhow::{bail, Result};
+
 use super::config::RunConfig;
 use super::metrics::RunReport;
 use super::trainer::{pretrain, Trainer};
 use crate::lrt::LrtState;
 use crate::tensor::{kernels, Mat};
+use crate::util::hash::fnv1a64_words;
 use crate::util::stats;
 use crate::util::table::Row;
 
@@ -70,26 +73,44 @@ impl FleetReport {
                     self.federated_payload_bytes as u64,
                 )
                 .int("dense_payload_bytes", self.dense_payload_bytes as u64)
-                .int(
+                // real-valued ratio: integer division here used to
+                // truncate e.g. 9.5x down to 9x
+                .num(
                     "payload_compression",
-                    (self.dense_payload_bytes
-                        / self.federated_payload_bytes.max(1))
-                        as u64,
+                    self.dense_payload_bytes as f64
+                        / self.federated_payload_bytes.max(1) as f64,
+                    1,
                 ),
         );
         rows
     }
 }
 
+/// Per-device stream seed: FNV-mix of (fleet seed, device index) — the
+/// same mixer the registry uses for cell seeds (`base ^ fnv1a64(id)`).
+/// The old additive scheme (`seed + 1000 + d`) aliased across fleet
+/// runs whose base seeds differ by small offsets — device d of the
+/// cell at seed S collided with device d-1 at seed S+1 — so "distinct
+/// environments" silently shared a data shard. The keyed mix keeps
+/// every (seed, device) pair in its own region of seed space.
+pub fn device_seed(fleet_seed: u64, device: usize) -> u64 {
+    fnv1a64_words(&[fleet_seed, device as u64])
+}
+
 /// Run `n_devices` trainers in parallel on shard seeds derived from
-/// `cfg.seed`; every device deploys the same pretrained weights. The
-/// fan-out dispatches onto the persistent parked worker pool, so a
-/// fleet pays thread-start cost once (lazy pool start), not per wave.
+/// `cfg.seed` (see [`device_seed`]); every device deploys the same
+/// pretrained weights. The fan-out dispatches onto the persistent
+/// parked worker pool, so a fleet pays thread-start cost once (lazy
+/// pool start), not per wave.
+///
+/// `n_devices == 0` is a valid degenerate fleet: the report has no
+/// device rows, zero aggregates (mean/std 0.0), and `to_rows` emits
+/// just the summary row.
 pub fn run_fleet(cfg: &RunConfig, n_devices: usize) -> FleetReport {
     let (params, aux) = pretrain(cfg, false);
     let devices: Vec<RunReport> = kernels::run_scoped(n_devices, |d| {
         let mut dcfg = cfg.clone();
-        dcfg.seed = cfg.seed.wrapping_add(1000 + d as u64);
+        dcfg.seed = device_seed(cfg.seed, d);
         Trainer::new(dcfg, params.clone(), aux.clone()).run()
     });
 
@@ -125,14 +146,37 @@ pub fn run_fleet(cfg: &RunConfig, n_devices: usize) -> FleetReport {
 /// accumulator — the same OK machinery, reused as a gradient-compression
 /// codec. Returns the aggregated LrtState and the exact-vs-compressed
 /// reconstruction error (Frobenius) for telemetry.
+///
+/// Every device must agree on layer shape and rank — a mismatched
+/// upload is a protocol error, reported up front with the offending
+/// device index rather than a panic (or silent corruption) deep inside
+/// `add_outer`.
 pub fn aggregate_factors(
     devices: &[&LrtState],
     rank: usize,
     rng: &mut crate::util::rng::Rng,
-) -> (LrtState, f32) {
-    assert!(!devices.is_empty());
-    let n_o = devices[0].n_o();
-    let n_i = devices[0].n_i();
+) -> Result<(LrtState, f32)> {
+    let Some(first) = devices.first() else {
+        bail!("aggregate_factors: no devices to aggregate");
+    };
+    let n_o = first.n_o();
+    let n_i = first.n_i();
+    for (d, dev) in devices.iter().enumerate() {
+        if (dev.n_o(), dev.n_i()) != (n_o, n_i) {
+            bail!(
+                "aggregate_factors: device {d} has shape {}x{}, \
+                 expected {n_o}x{n_i}",
+                dev.n_o(),
+                dev.n_i(),
+            );
+        }
+        if dev.rank != rank {
+            bail!(
+                "aggregate_factors: device {d} has rank {}, expected {rank}",
+                dev.rank,
+            );
+        }
+    }
     let mut agg = LrtState::new(n_o, n_i, rank);
     agg.quantize_state = false;
     // Feed each device's rank-r factors into the accumulator as r
@@ -163,7 +207,7 @@ pub fn aggregate_factors(
     } else {
         0.0
     };
-    (agg, rel)
+    Ok((agg, rel))
 }
 
 #[cfg(test)]
@@ -200,7 +244,7 @@ mod tests {
             states.push(st);
         }
         let refs: Vec<&LrtState> = states.iter().collect();
-        let (agg, rel) = aggregate_factors(&refs, r, &mut rng);
+        let (agg, rel) = aggregate_factors(&refs, r, &mut rng).unwrap();
         assert!(rel < 0.15, "aggregation error {rel}");
         // the aggregate's top direction aligns with the common signal
         let delta = agg.delta();
@@ -216,9 +260,94 @@ mod tests {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(5);
         let st = LrtState::new(4, 6, 2);
-        let (agg, rel) = aggregate_factors(&[&st], 2, &mut rng);
+        let (agg, rel) = aggregate_factors(&[&st], 2, &mut rng).unwrap();
         assert_eq!(agg.delta().frob_norm(), 0.0);
         assert_eq!(rel, 0.0);
+    }
+
+    /// Regression (validation bugfix): a device with a mismatched layer
+    /// shape or rank must be rejected with a clear error naming the
+    /// offender, never fed into `add_outer`.
+    #[test]
+    fn aggregate_factors_rejects_mismatched_devices() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(6);
+        let good = LrtState::new(4, 6, 2);
+        let wrong_shape = LrtState::new(5, 6, 2);
+        let err = aggregate_factors(&[&good, &wrong_shape], 2, &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("device 1"), "{err}");
+        assert!(err.contains("5x6"), "{err}");
+        assert!(err.contains("4x6"), "{err}");
+
+        let wrong_rank = LrtState::new(4, 6, 3);
+        let err = aggregate_factors(&[&good, &wrong_rank], 2, &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rank 3"), "{err}");
+
+        let err =
+            aggregate_factors(&[], 2, &mut rng).unwrap_err().to_string();
+        assert!(err.contains("no devices"), "{err}");
+    }
+
+    /// Regression (seed-aliasing bugfix): the old additive derivation
+    /// (`seed + 1000 + d`) collided across neighboring base seeds; the
+    /// FNV mix must not.
+    #[test]
+    fn device_seeds_do_not_alias_across_base_seeds() {
+        // the exact collision the old scheme produced
+        let old = |s: u64, d: u64| s.wrapping_add(1000 + d);
+        assert_eq!(old(7, 5), old(8, 4), "old scheme really aliased");
+        assert_ne!(device_seed(7, 5), device_seed(8, 4));
+
+        // and broadly: (seed, device) pairs map to distinct streams
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..32u64 {
+            for d in 0..64usize {
+                seen.insert(device_seed(seed, d));
+            }
+        }
+        assert_eq!(seen.len(), 32 * 64, "device seed collision");
+    }
+
+    /// Degenerate fleet, n = 1: the summary row's std hits the
+    /// `std_unbiased` n < 2 zero path.
+    #[test]
+    fn single_device_fleet_has_zero_std() {
+        let mut cfg = RunConfig::default();
+        cfg.samples = 10;
+        cfg.offline_samples = 20;
+        cfg.scheme = Scheme::Inference;
+        let rep = run_fleet(&cfg, 1);
+        assert_eq!(rep.devices.len(), 1);
+        assert_eq!(rep.std_final_ema, 0.0);
+        assert_eq!(rep.mean_final_ema, rep.devices[0].final_ema);
+        let rows = rep.to_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].text("kind"), Some("fleet"));
+        assert_eq!(rows[1].text("devices"), Some("1"));
+    }
+
+    /// Degenerate fleet, n = 0: documented empty report — no device
+    /// rows, zero aggregates, just the summary row.
+    #[test]
+    fn empty_fleet_is_an_empty_report() {
+        let mut cfg = RunConfig::default();
+        cfg.samples = 10;
+        cfg.offline_samples = 20;
+        cfg.scheme = Scheme::Inference;
+        let rep = run_fleet(&cfg, 0);
+        assert!(rep.devices.is_empty());
+        assert_eq!(rep.mean_final_ema, 0.0);
+        assert_eq!(rep.std_final_ema, 0.0);
+        assert_eq!(rep.worst_cell_writes, 0);
+        assert_eq!(rep.total_energy_pj, 0.0);
+        let rows = rep.to_rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].text("kind"), Some("fleet"));
+        assert_eq!(rows[0].text("devices"), Some("0"));
     }
 
     #[test]
@@ -243,5 +372,14 @@ mod tests {
         assert_eq!(rows[0].text("kind"), Some("device"));
         assert_eq!(rows[3].text("kind"), Some("fleet"));
         assert_eq!(rows[3].text("devices"), Some("3"));
+        // regression (truncation bugfix): the compression ratio is a
+        // real-valued num — at rank 4 the architecture gives 9.5x,
+        // which integer division used to truncate to 9
+        let want = format!(
+            "{:.1}",
+            rep.dense_payload_bytes as f64 / rep.federated_payload_bytes as f64
+        );
+        assert_eq!(rows[3].text("payload_compression"), Some(want.as_str()));
+        assert_eq!(want, "9.5");
     }
 }

@@ -62,6 +62,15 @@ impl Metrics {
         }
         self.correct as f64 / self.seen as f64
     }
+
+    /// Resident bytes of this tracker's heap buffers (tail window +
+    /// logged series) — feeds the sharded fleet's per-record memory
+    /// accounting, which sums actual buffer capacities.
+    pub fn approx_bytes(&self) -> usize {
+        self.tail.capacity() * std::mem::size_of::<bool>()
+            + self.series.capacity()
+                * std::mem::size_of::<(usize, f64, u64)>()
+    }
 }
 
 /// Final report of one online run.

@@ -12,6 +12,7 @@ pub mod device;
 pub mod fleet;
 pub mod metrics;
 pub mod scheduler;
+pub mod sharded;
 pub mod trainer;
 
 pub use config::{RunConfig, Scheme};

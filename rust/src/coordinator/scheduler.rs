@@ -90,6 +90,36 @@ impl FlushScheduler {
     pub fn effective_batch(&self) -> usize {
         self.samples_pending
     }
+
+    /// Suspend the mutable scheduler state to a compact record (the
+    /// config fields `batch`/`rho_min`/`par_cap` are derived from the
+    /// run config at hydration time, so they are not stored).
+    pub fn state(&self) -> SchedState {
+        SchedState {
+            samples_pending: self.samples_pending,
+            since_attempt: self.since_attempt,
+            commits: self.commits,
+            deferrals: self.deferrals,
+        }
+    }
+
+    /// Hydrate the mutable scheduler state from a suspended record.
+    pub fn restore(&mut self, s: &SchedState) {
+        self.samples_pending = s.samples_pending;
+        self.since_attempt = s.since_attempt;
+        self.commits = s.commits;
+        self.deferrals = s.deferrals;
+    }
+}
+
+/// Compact suspended form of one layer's [`FlushScheduler`] — the
+/// mutable counters only (sharded-fleet device records).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedState {
+    pub samples_pending: usize,
+    pub since_attempt: usize,
+    pub commits: u64,
+    pub deferrals: u64,
 }
 
 #[cfg(test)]
@@ -147,6 +177,29 @@ mod tests {
             assert_eq!(s2.on_sample(), FlushDecision::NotYet);
         }
         assert!(matches!(s2.on_sample(), FlushDecision::Evaluate { .. }));
+    }
+
+    #[test]
+    fn suspend_restore_roundtrips_mid_batch() {
+        let mut s = FlushScheduler::new(10, 0.01);
+        for _ in 0..10 {
+            s.on_sample();
+        }
+        assert!(!s.decide(0.001)); // one deferral, 10 pending
+        for _ in 0..3 {
+            s.on_sample(); // mid-batch: since_attempt = 3
+        }
+        let snap = s.state();
+        let mut back = FlushScheduler::new(10, 0.01);
+        back.restore(&snap);
+        // both continue in lockstep to the next boundary + commit
+        for t in 0..7 {
+            assert_eq!(s.on_sample(), back.on_sample(), "t={t}");
+        }
+        assert_eq!(s.decide(0.5), back.decide(0.5));
+        assert_eq!(s.state(), back.state());
+        assert_eq!(back.commits, 1);
+        assert_eq!(back.deferrals, 1);
     }
 
     #[test]

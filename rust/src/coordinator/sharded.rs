@@ -1,0 +1,805 @@
+//! Sharded fleet engine: 10^5+ simulated devices as compact records.
+//!
+//! `fleet::run_fleet` clones a full `NativeDevice` (NVM arrays, dense
+//! workspace, caches — several MB) per device, which caps fleets at a
+//! handful of devices. This engine stores each device as a
+//! [`DeviceRecord`] — rank-r LRT factor snapshots, BN/bias state, a
+//! sparse overlay of *written* NVM cells over the shared frozen
+//! pretrained base weights, RNG stream positions, a lazy drift clock,
+//! and write/energy counters — a few KB instead of several MB. Records
+//! are stepped in round-robin *waves* on the persistent parked worker
+//! pool (`kernels::run_scoped`): each pool worker keeps one reusable
+//! [`Carcass`] (a real `NativeDevice` + pristine array images) and, per
+//! record, hydrates it, streams the wave's samples, and extracts the
+//! record back. Populations are processed shard by shard with streaming
+//! aggregation of the per-device reports, so resident memory is
+//! O(shard) + O(workers) while the population scales to 10^5–10^6.
+//!
+//! ## Fidelity contract
+//!
+//! With drift disabled, suspend/resume is **bit-lossless** for every
+//! scheme: unwritten cells equal the shared pristine image exactly;
+//! written cells hold `decode(code)` values that survive the overlay
+//! round-trip exactly; LRT/scheduler/BN/RNG/metrics state is restored
+//! field-for-field (`tests/sharded_fleet.rs` pins a sharded run against
+//! `run_fleet` per-device reports byte-for-byte). With drift enabled,
+//! committed codes and written-cell analog values remain exact, while
+//! unwritten cells use a *lazy drift clock*: at hydration the total
+//! elapsed drift is re-drawn in one shot with the exact Brownian /
+//! XOR-composed bit-flip marginal (`drift::apply_rounds`) — trajectories
+//! are resampled at wave boundaries, marginal distributions are not.
+//!
+//! ## Federated averaging
+//!
+//! With `federate` on (LRT schemes), every wave boundary aggregates the
+//! shard cohort's per-layer rank-r factors through the hardened
+//! `fleet::aggregate_factors` codec and redistributes the aggregate
+//! accumulator to every record — the paper §8 wire protocol (rank-r
+//! factors as the payload) against the isolated-device baseline.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use super::config::{RunConfig, Scheme};
+use super::device::NativeDevice;
+use super::fleet::{aggregate_factors, device_seed};
+use super::metrics::{Metrics, RunReport};
+use super::scheduler::SchedState;
+use super::trainer::{assemble_report, pretrain_cached};
+use crate::data::online::{OnlineStream, Partition};
+use crate::lrt::{LrtSnapshot, LrtState};
+use crate::nn::arch::{LAYER_DIMS, N_LAYERS};
+use crate::nn::model::{AuxState, Params};
+use crate::nvm::{drift, NvmArray};
+use crate::tensor::kernels;
+use crate::util::hash::fnv1a64_words;
+use crate::util::rng::Rng;
+use crate::util::table::Row;
+
+/// Domain tag mixed into federated-aggregation RNG seeds.
+const FED_RNG_TAG: u64 = 0xFEDA_66u64;
+
+/// One written NVM cell in a suspended device record: the analog value
+/// at suspension (for committed-and-undrifted cells this is exactly
+/// `decode(code)`) plus the per-cell write counter.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlayCell {
+    pub idx: u32,
+    pub value: f32,
+    pub writes: u64,
+}
+
+/// Compact suspended form of one simulated device. Everything a
+/// `NativeDevice` accumulates beyond the shared pretrained base
+/// weights, at sparse/low-rank size.
+#[derive(Debug, Clone)]
+pub struct DeviceRecord {
+    /// Fleet-wide device index.
+    pub device: usize,
+    /// Stream seed (`fleet::device_seed(cfg.seed, device)`).
+    pub seed: u64,
+    /// Online samples consumed so far.
+    pub t: usize,
+    /// Per-layer LRT accumulator snapshots (LRT schemes only; empty
+    /// means "freshly reset" and covers the non-LRT schemes too).
+    pub lrt: Vec<LrtSnapshot>,
+    /// Per-layer flush-scheduler counters.
+    pub sched: Vec<SchedState>,
+    /// Trainable non-NVM parameters (biases, BN affine).
+    pub bias: Vec<Vec<f32>>,
+    pub gamma: Vec<Vec<f32>>,
+    pub beta: Vec<Vec<f32>>,
+    /// BN running stats + max-norm EMAs.
+    pub aux: AuxState,
+    /// Per-layer sparse overlay of cells with `writes > 0`.
+    pub overlay: Vec<Vec<OverlayCell>>,
+    /// Per-layer (total_writes, commits) array counters.
+    pub totals: Vec<(u64, u64)>,
+    pub kappa_skips: u64,
+    /// Training / drift RNG streams, at their suspended positions.
+    pub rng: Rng,
+    pub drift_rng: Rng,
+    pub metrics: Metrics,
+    /// Drift injection rounds elapsed since deployment (lazy clock).
+    pub drift_rounds: u64,
+    /// Final report, filled when `t` reaches `cfg.samples`.
+    pub report: Option<RunReport>,
+}
+
+impl DeviceRecord {
+    /// A freshly deployed device: replicates `NativeDevice::new`'s RNG
+    /// derivation exactly so a sharded device is indistinguishable from
+    /// a `Trainer`-driven one.
+    pub fn fresh(device: usize, seed: u64, params: &Params, aux: &AuxState) -> DeviceRecord {
+        let mut rng = Rng::new(seed ^ 0xDE71CE);
+        let drift_rng = rng.fork(0xD217F7);
+        DeviceRecord {
+            device,
+            seed,
+            t: 0,
+            lrt: Vec::new(),
+            sched: vec![SchedState::default(); N_LAYERS],
+            bias: params.b.clone(),
+            gamma: params.gamma.clone(),
+            beta: params.beta.clone(),
+            aux: aux.clone(),
+            overlay: vec![Vec::new(); N_LAYERS],
+            totals: vec![(0, 0); N_LAYERS],
+            kappa_skips: 0,
+            rng,
+            drift_rng,
+            metrics: Metrics::new(500),
+            drift_rounds: 0,
+            report: None,
+        }
+    }
+
+    /// Resident bytes of this record's heap buffers (actual lengths,
+    /// not estimates — the O(shard) memory assertion sums these).
+    pub fn bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let mut n = std::mem::size_of::<Self>();
+        n += self.lrt.iter().map(LrtSnapshot::bytes).sum::<usize>();
+        n += self.sched.capacity() * std::mem::size_of::<SchedState>();
+        for group in [&self.bias, &self.gamma, &self.beta] {
+            n += group.iter().map(|v| v.capacity() * f).sum::<usize>();
+        }
+        for bn in &self.aux.bn {
+            n += (bn.mu_s.capacity() + bn.sq_s.capacity()) * f;
+        }
+        n += self.aux.mn.capacity() * f;
+        n += self
+            .overlay
+            .iter()
+            .map(|o| o.capacity() * std::mem::size_of::<OverlayCell>())
+            .sum::<usize>();
+        n += self.totals.capacity() * std::mem::size_of::<(u64, u64)>();
+        n += self.metrics.approx_bytes();
+        if let Some(rep) = &self.report {
+            n += rep.series.capacity() * std::mem::size_of::<(usize, f64, u64)>();
+            n += rep.scheme.len() + rep.env.len();
+        }
+        n
+    }
+}
+
+/// A reusable full-size device one pool worker owns for the duration of
+/// a run: hydrated from a [`DeviceRecord`] before a wave, harvested
+/// back after. `pristine` keeps the as-programmed array images so a
+/// dirtied carcass can be reset without re-quantizing the weights.
+struct Carcass {
+    dev: NativeDevice,
+    pristine: Vec<NvmArray>,
+    /// Arrays differ from `pristine` (commits, drift, or a hydrated
+    /// overlay). Pure-inference fleets never dirty a carcass, so the
+    /// per-record array reset cost is zero for them.
+    arrays_dirty: bool,
+}
+
+impl Carcass {
+    fn new(cfg: &RunConfig, params: &Params, aux: &AuxState) -> Carcass {
+        let dev = NativeDevice::new(cfg.clone(), params.clone(), aux.clone());
+        let pristine = dev.arrays.clone();
+        Carcass { dev, pristine, arrays_dirty: false }
+    }
+
+    /// Resident bytes of one carcass (base weights + arrays + pristine
+    /// images + workspace) — the O(workers) term of the memory model.
+    fn bytes(&self) -> usize {
+        let cells: usize =
+            LAYER_DIMS.iter().map(|&(n_o, n_i)| n_o * n_i).sum();
+        // params.w + dev.arrays (f32 value + u64 counter) + pristine
+        let arrays = 2 * cells * (4 + 8);
+        let weights = cells * 4;
+        weights + arrays + self.dev.ws.approx_bytes()
+    }
+}
+
+/// Hydrate `car` from `rec`. Array order matters: pristine reset, then
+/// lazy drift catch-up (fresh draws for every cell), then the overlay —
+/// written cells end at their exact suspended values, unwritten cells
+/// at the pristine image plus exact-marginal drift.
+fn hydrate(car: &mut Carcass, rec: &DeviceRecord, cfg: &RunConfig) {
+    let dev = &mut car.dev;
+    if car.arrays_dirty {
+        for (arr, pr) in dev.arrays.iter_mut().zip(car.pristine.iter()) {
+            arr.clone_from(pr);
+        }
+        car.arrays_dirty = false;
+        dev.mark_weights_dirty();
+    }
+    let mut drift_rng = rec.drift_rng.clone();
+    let touches_arrays = rec.totals.iter().any(|&(tw, c)| tw > 0 || c > 0)
+        || (cfg.drift.enabled() && rec.drift_rounds > 0);
+    if touches_arrays {
+        if cfg.drift.enabled() && rec.drift_rounds > 0 {
+            for arr in dev.arrays.iter_mut() {
+                drift::apply_rounds(
+                    arr,
+                    &mut drift_rng,
+                    &cfg.drift,
+                    rec.drift_rounds,
+                );
+            }
+        }
+        for (l, ov) in rec.overlay.iter().enumerate() {
+            for cell in ov {
+                dev.arrays[l].restore_cell(
+                    cell.idx as usize,
+                    cell.value,
+                    cell.writes,
+                );
+            }
+            let (tw, c) = rec.totals[l];
+            dev.arrays[l].restore_totals(tw, c);
+        }
+        car.arrays_dirty = true;
+        dev.mark_weights_dirty();
+    }
+    dev.set_streams(rec.rng.clone(), drift_rng);
+    for (dst, src) in dev.params.b.iter_mut().zip(rec.bias.iter()) {
+        dst.copy_from_slice(src);
+    }
+    for (dst, src) in dev.params.gamma.iter_mut().zip(rec.gamma.iter()) {
+        dst.copy_from_slice(src);
+    }
+    for (dst, src) in dev.params.beta.iter_mut().zip(rec.beta.iter()) {
+        dst.copy_from_slice(src);
+    }
+    dev.aux.clone_from(&rec.aux);
+    if rec.lrt.is_empty() {
+        for st in dev.lrt.iter_mut() {
+            st.reset();
+        }
+    } else {
+        for (st, snap) in dev.lrt.iter_mut().zip(rec.lrt.iter()) {
+            st.restore(snap);
+        }
+    }
+    for (sched, snap) in dev.sched.iter_mut().zip(rec.sched.iter()) {
+        sched.restore(snap);
+    }
+    dev.kappa_skips = rec.kappa_skips;
+}
+
+/// Harvest `car` back into `rec` after a wave.
+fn extract(
+    car: &mut Carcass,
+    rec: &mut DeviceRecord,
+    cfg: &RunConfig,
+    wave_rounds: u64,
+) {
+    let dev = &car.dev;
+    for l in 0..N_LAYERS {
+        let arr = &dev.arrays[l];
+        let ov = &mut rec.overlay[l];
+        ov.clear();
+        for (i, &w) in arr.cell_writes().iter().enumerate() {
+            if w > 0 {
+                ov.push(OverlayCell {
+                    idx: i as u32,
+                    value: arr.raw()[i],
+                    writes: w,
+                });
+            }
+        }
+        rec.totals[l] = (arr.total_writes, arr.commits);
+        rec.sched[l] = dev.sched[l].state();
+    }
+    if matches!(cfg.scheme, Scheme::Lrt { .. }) {
+        if rec.lrt.len() != N_LAYERS {
+            rec.lrt = vec![LrtSnapshot::default(); N_LAYERS];
+        }
+        for (snap, st) in rec.lrt.iter_mut().zip(dev.lrt.iter()) {
+            st.snapshot_into(snap);
+        }
+    }
+    let (rng, drift_rng) = dev.streams();
+    rec.rng = rng;
+    rec.drift_rng = drift_rng;
+    rec.kappa_skips = dev.kappa_skips;
+    for (dst, src) in rec.bias.iter_mut().zip(dev.params.b.iter()) {
+        dst.copy_from_slice(src);
+    }
+    for (dst, src) in rec.gamma.iter_mut().zip(dev.params.gamma.iter()) {
+        dst.copy_from_slice(src);
+    }
+    for (dst, src) in rec.beta.iter_mut().zip(dev.params.beta.iter()) {
+        dst.copy_from_slice(src);
+    }
+    rec.aux.clone_from(&dev.aux);
+    rec.drift_rounds += wave_rounds;
+    if wave_rounds > 0
+        || dev.arrays.iter().any(|a| a.total_writes > 0 || a.commits > 0)
+    {
+        car.arrays_dirty = true;
+    }
+}
+
+/// Step one record from `rec.t` to `end`, replicating `Trainer::run`'s
+/// per-sample cadence (drift at `t % drift_every == 0`, log points at
+/// `t % log_every == 0`) so a multi-wave sharded device produces the
+/// same numbers as an uninterrupted `Trainer` run.
+fn step_record(
+    car: &mut Carcass,
+    rec: &mut DeviceRecord,
+    end: usize,
+    cfg: &RunConfig,
+) {
+    let drift_every = cfg.drift.every.max(1) as usize;
+    let log_every = cfg.log_every.max(1);
+    hydrate(car, rec, cfg);
+    let mut stream = OnlineStream::new(rec.seed, Partition::Online, cfg.env);
+    stream.shift_period = cfg.shift_period;
+    let mut wave_rounds = 0u64;
+    for t in rec.t..end {
+        let s = stream.sample(t as u64);
+        let (loss, correct) = car.dev.step(&s.image, s.label);
+        rec.metrics.record(correct, loss as f64);
+        let t1 = t + 1;
+        if cfg.drift.enabled() && t1 % drift_every == 0 {
+            car.dev.drift();
+            wave_rounds += 1;
+        }
+        if t1 % log_every == 0 {
+            rec.metrics.log_point(t1, car.dev.max_cell_writes());
+        }
+    }
+    rec.t = end;
+    extract(car, rec, cfg, wave_rounds);
+    if end >= cfg.samples {
+        // wall time deliberately 0.0: a record's report must be a pure
+        // function of (config, seed), and `to_row` drops it anyway
+        rec.report = Some(assemble_report(cfg, &car.dev, &rec.metrics, 0.0));
+    }
+}
+
+/// Sharded fleet run parameters.
+#[derive(Debug, Clone)]
+pub struct ShardedFleetCfg {
+    /// Per-device run config; `cfg.seed` is the fleet seed that device
+    /// stream seeds derive from.
+    pub cfg: RunConfig,
+    /// Population size.
+    pub n_devices: usize,
+    /// Devices resident at once (memory bound: O(shard)).
+    pub shard: usize,
+    /// Online samples per wave; 0 runs each device to completion in one
+    /// wave. Federated averaging fires at every interior wave boundary.
+    pub wave: usize,
+    /// Aggregate + redistribute LRT factors across the shard cohort at
+    /// wave boundaries (requires an LRT scheme).
+    pub federate: bool,
+    /// Keep the first N per-device `RunReport`s in the summary report
+    /// (the rest are folded into the streaming aggregates and dropped).
+    pub keep_reports: usize,
+}
+
+impl ShardedFleetCfg {
+    pub fn new(cfg: RunConfig, n_devices: usize) -> ShardedFleetCfg {
+        ShardedFleetCfg {
+            cfg,
+            n_devices,
+            shard: 128,
+            wave: 0,
+            federate: false,
+            keep_reports: 0,
+        }
+    }
+}
+
+/// Streaming summary of a sharded fleet run.
+#[derive(Debug, Clone)]
+pub struct ShardedFleetReport {
+    pub population: usize,
+    pub shard: usize,
+    pub wave: usize,
+    pub federated: bool,
+    /// Streaming mean/std of per-device final accuracy EMA (one-pass
+    /// sum/sum-of-squares; `std` uses the unbiased n-1 form and the
+    /// n < 2 zero convention of `stats::std_unbiased`).
+    pub mean_final_ema: f64,
+    pub std_final_ema: f64,
+    pub worst_cell_writes: u64,
+    pub total_writes: u64,
+    pub total_energy_pj: f64,
+    /// Record-size accounting (actual buffer lengths, not estimates).
+    pub mean_record_bytes: f64,
+    pub max_record_bytes: usize,
+    /// Peak of sum(record.bytes()) over all waves — the O(shard) term.
+    pub peak_resident_bytes: usize,
+    /// Per-carcass resident bytes — the O(workers) term.
+    pub carcass_bytes: usize,
+    /// Mean relative aggregation error across federation events.
+    pub agg_rel_err_mean: f64,
+    /// Number of federation events (wave boundaries that aggregated).
+    pub agg_rounds: u64,
+    pub federated_payload_bytes: usize,
+    pub dense_payload_bytes: usize,
+    /// First `keep_reports` per-device reports (device order).
+    pub devices: Vec<RunReport>,
+}
+
+impl ShardedFleetReport {
+    /// One streaming summary row (plus, when `keep_reports` retained
+    /// any, the kept device rows first — mirroring `FleetReport`).
+    pub fn to_rows(&self) -> Vec<Row> {
+        let mut rows: Vec<Row> = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(d, rep)| {
+                Row::new()
+                    .str("kind", "device")
+                    .int("device", d as u64)
+                    .extend(rep.to_row())
+            })
+            .collect();
+        let mut row = Row::new()
+            .str("kind", "sharded-fleet")
+            .int("population", self.population as u64)
+            .int("shard", self.shard as u64)
+            .int("wave", self.wave as u64)
+            .boolean("federated", self.federated)
+            .num("mean_acc_ema", self.mean_final_ema, 3)
+            .num("std_acc_ema", self.std_final_ema, 3)
+            .int("worst_cell_writes", self.worst_cell_writes)
+            .int("total_writes", self.total_writes)
+            .num("total_energy_uj", self.total_energy_pj / 1e6, 1)
+            .num("mean_record_bytes", self.mean_record_bytes, 0)
+            .int("max_record_bytes", self.max_record_bytes as u64)
+            .int("peak_resident_bytes", self.peak_resident_bytes as u64)
+            .int(
+                "federated_payload_bytes",
+                self.federated_payload_bytes as u64,
+            )
+            .int("dense_payload_bytes", self.dense_payload_bytes as u64)
+            .num(
+                "payload_compression",
+                self.dense_payload_bytes as f64
+                    / self.federated_payload_bytes.max(1) as f64,
+                1,
+            );
+        if self.federated {
+            row = row
+                .num("agg_rel_err", self.agg_rel_err_mean, 4)
+                .int("agg_rounds", self.agg_rounds);
+        }
+        rows.push(row);
+        rows
+    }
+}
+
+/// Aggregate the shard cohort's LRT factors layer by layer through the
+/// `aggregate_factors` codec and redistribute the aggregate to every
+/// record. Returns the mean relative reconstruction error over layers.
+fn federate_shard(
+    records: &mut [DeviceRecord],
+    cfg: &RunConfig,
+    shard_start: usize,
+    round: u64,
+) -> Result<f64> {
+    if records.is_empty() {
+        return Ok(0.0);
+    }
+    let mut err_sum = 0.0f64;
+    for l in 0..N_LAYERS {
+        let (n_o, n_i) = LAYER_DIMS[l];
+        let states: Vec<LrtState> = records
+            .iter()
+            .map(|r| {
+                let mut st = LrtState::new(n_o, n_i, cfg.rank);
+                st.restore(&r.lrt[l]);
+                st
+            })
+            .collect();
+        let refs: Vec<&LrtState> = states.iter().collect();
+        // deterministic server-side RNG, keyed like every other seed
+        // derivation in the repo
+        let mut rng = Rng::new(fnv1a64_words(&[
+            FED_RNG_TAG,
+            cfg.seed,
+            shard_start as u64,
+            round,
+            l as u64,
+        ]));
+        let (agg, rel) = aggregate_factors(&refs, cfg.rank, &mut rng)?;
+        err_sum += rel as f64;
+        let snap = agg.snapshot();
+        for r in records.iter_mut() {
+            r.lrt[l] = snap.clone();
+        }
+    }
+    Ok(err_sum / N_LAYERS as f64)
+}
+
+/// Run one wave: every record steps `[rec.t, end)` on the worker pool.
+/// Contiguous per-worker chunks + ordered `run_scoped` output keep the
+/// records in device order; each worker reuses one pooled [`Carcass`]
+/// across its whole chunk (and, via `pool`, across waves and shards).
+fn run_wave(
+    records: Vec<DeviceRecord>,
+    end: usize,
+    cfg: &RunConfig,
+    params: &Params,
+    aux0: &AuxState,
+    pool: &Mutex<Vec<Carcass>>,
+) -> Vec<DeviceRecord> {
+    let n = records.len();
+    if n == 0 {
+        return records;
+    }
+    let workers = kernels::max_threads().min(n).max(1);
+    let chunk = n.div_ceil(workers);
+    let slots: Vec<Mutex<Option<DeviceRecord>>> =
+        records.into_iter().map(|r| Mutex::new(Some(r))).collect();
+    kernels::run_scoped(workers, |w| {
+        let lo = w * chunk;
+        let hi = ((w + 1) * chunk).min(n);
+        if lo >= hi {
+            return Vec::new();
+        }
+        let mut car = pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Carcass::new(cfg, params, aux0));
+        let mut done = Vec::with_capacity(hi - lo);
+        for slot in slots.iter().take(hi).skip(lo) {
+            let mut rec = slot.lock().unwrap().take().expect("record taken");
+            step_record(&mut car, &mut rec, end, cfg);
+            done.push(rec);
+        }
+        pool.lock().unwrap().push(car);
+        done
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+/// Run a sharded fleet. See the module docs for the memory model and
+/// fidelity contract. `n_devices == 0` returns an empty report (no
+/// device rows, zeroed aggregates) like `run_fleet`.
+pub fn run_sharded_fleet(scfg: &ShardedFleetCfg) -> Result<ShardedFleetReport> {
+    let cfg = &scfg.cfg;
+    if scfg.shard == 0 {
+        bail!("sharded fleet: shard size must be >= 1");
+    }
+    let is_lrt = matches!(cfg.scheme, Scheme::Lrt { .. });
+    if scfg.federate && !is_lrt {
+        bail!(
+            "sharded fleet: federated averaging needs an LRT scheme \
+             (got {})",
+            cfg.scheme.name()
+        );
+    }
+    let wave = if scfg.wave == 0 { cfg.samples.max(1) } else { scfg.wave };
+    let (params, aux0) = pretrain_cached(cfg);
+    let pool: Mutex<Vec<Carcass>> = Mutex::new(Vec::new());
+
+    // streaming aggregates (one pass; no per-device state survives the
+    // shard that produced it beyond these scalars)
+    let mut n_done = 0u64;
+    let mut ema_sum = 0.0f64;
+    let mut ema_sumsq = 0.0f64;
+    let mut worst_cell_writes = 0u64;
+    let mut total_writes = 0u64;
+    let mut total_energy_pj = 0.0f64;
+    let mut record_bytes_sum = 0usize;
+    let mut max_record_bytes = 0usize;
+    let mut peak_resident_bytes = 0usize;
+    let mut agg_err_sum = 0.0f64;
+    let mut agg_rounds = 0u64;
+    let mut kept: Vec<RunReport> = Vec::new();
+
+    let mut shard_start = 0usize;
+    while shard_start < scfg.n_devices {
+        let shard_end = (shard_start + scfg.shard).min(scfg.n_devices);
+        let mut records: Vec<DeviceRecord> = (shard_start..shard_end)
+            .map(|d| {
+                DeviceRecord::fresh(
+                    d,
+                    device_seed(cfg.seed, d),
+                    &params,
+                    &aux0,
+                )
+            })
+            .collect();
+        let mut t = 0usize;
+        let mut round = 0u64;
+        loop {
+            let end = cfg.samples.min(t + wave);
+            records = run_wave(records, end, cfg, &params, &aux0, &pool);
+            t = end;
+            let resident: usize =
+                records.iter().map(DeviceRecord::bytes).sum();
+            peak_resident_bytes = peak_resident_bytes.max(resident);
+            if t >= cfg.samples {
+                break;
+            }
+            if scfg.federate {
+                agg_err_sum +=
+                    federate_shard(&mut records, cfg, shard_start, round)?;
+                agg_rounds += 1;
+                round += 1;
+            }
+        }
+        for rec in records {
+            let bytes = rec.bytes();
+            record_bytes_sum += bytes;
+            max_record_bytes = max_record_bytes.max(bytes);
+            let rep = rec.report.expect("completed record has a report");
+            n_done += 1;
+            ema_sum += rep.final_ema;
+            ema_sumsq += rep.final_ema * rep.final_ema;
+            worst_cell_writes = worst_cell_writes.max(rep.max_cell_writes);
+            total_writes += rep.total_writes;
+            total_energy_pj += rep.write_energy_pj;
+            if kept.len() < scfg.keep_reports {
+                kept.push(rep);
+            }
+        }
+        shard_start = shard_end;
+    }
+
+    let mean = if n_done > 0 { ema_sum / n_done as f64 } else { 0.0 };
+    let std = if n_done >= 2 {
+        ((ema_sumsq - n_done as f64 * mean * mean).max(0.0)
+            / (n_done - 1) as f64)
+            .sqrt()
+    } else {
+        0.0
+    };
+    let rank = cfg.rank;
+    let fed: usize = LAYER_DIMS
+        .iter()
+        .map(|&(n_o, n_i)| (n_o + n_i) * rank * 2) // 16-bit factors
+        .sum();
+    let dense: usize =
+        LAYER_DIMS.iter().map(|&(n_o, n_i)| n_o * n_i * 2).sum();
+    let carcass_bytes = pool
+        .into_inner()
+        .unwrap()
+        .first()
+        .map(Carcass::bytes)
+        .unwrap_or(0);
+    Ok(ShardedFleetReport {
+        population: scfg.n_devices,
+        shard: scfg.shard,
+        wave,
+        federated: scfg.federate,
+        mean_final_ema: mean,
+        std_final_ema: std,
+        worst_cell_writes,
+        total_writes,
+        total_energy_pj,
+        mean_record_bytes: if n_done > 0 {
+            record_bytes_sum as f64 / n_done as f64
+        } else {
+            0.0
+        },
+        max_record_bytes,
+        peak_resident_bytes,
+        carcass_bytes,
+        agg_rel_err_mean: if agg_rounds > 0 {
+            agg_err_sum / agg_rounds as f64
+        } else {
+            0.0
+        },
+        agg_rounds,
+        federated_payload_bytes: fed,
+        dense_payload_bytes: dense,
+        devices: kept,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lrt::Variant;
+
+    fn tiny(scheme: Scheme) -> ShardedFleetCfg {
+        let mut cfg = RunConfig::default();
+        cfg.samples = 20;
+        cfg.offline_samples = 30;
+        cfg.scheme = scheme;
+        cfg.batch = [5, 5, 5, 5, 10, 10];
+        cfg.log_every = 10;
+        ShardedFleetCfg::new(cfg, 3)
+    }
+
+    #[test]
+    fn rejects_zero_shard_and_non_lrt_federation() {
+        let mut s = tiny(Scheme::Inference);
+        s.shard = 0;
+        assert!(run_sharded_fleet(&s).unwrap_err().to_string().contains("shard"));
+        let mut s = tiny(Scheme::Sgd);
+        s.federate = true;
+        let err = run_sharded_fleet(&s).unwrap_err().to_string();
+        assert!(err.contains("LRT"), "{err}");
+    }
+
+    #[test]
+    fn empty_population_is_an_empty_report() {
+        let mut s = tiny(Scheme::Inference);
+        s.n_devices = 0;
+        let rep = run_sharded_fleet(&s).unwrap();
+        assert_eq!(rep.population, 0);
+        assert_eq!(rep.mean_final_ema, 0.0);
+        assert_eq!(rep.std_final_ema, 0.0);
+        assert!(rep.devices.is_empty());
+        let rows = rep.to_rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].text("kind"), Some("sharded-fleet"));
+    }
+
+    #[test]
+    fn multi_wave_equals_single_wave_bitwise() {
+        // suspending/resuming at wave boundaries must not change any
+        // reported number (drift disabled: bit-lossless contract)
+        let mut one = tiny(Scheme::Lrt { variant: Variant::Biased });
+        one.keep_reports = 3;
+        let mut many = one.clone();
+        many.wave = 7; // deliberately not a divisor of samples or batch
+        let a = run_sharded_fleet(&one).unwrap();
+        let b = run_sharded_fleet(&many).unwrap();
+        assert_eq!(a.devices.len(), 3);
+        for (ra, rb) in a.devices.iter().zip(b.devices.iter()) {
+            assert_eq!(ra.to_row().jsonl(), rb.to_row().jsonl());
+            assert_eq!(ra.series, rb.series);
+        }
+        assert_eq!(a.worst_cell_writes, b.worst_cell_writes);
+        assert_eq!(a.total_writes, b.total_writes);
+    }
+
+    #[test]
+    fn shard_size_does_not_change_results() {
+        let mut big = tiny(Scheme::Lrt { variant: Variant::Biased });
+        big.n_devices = 5;
+        big.keep_reports = 5;
+        let mut small = big.clone();
+        small.shard = 2; // 3 shards: 2 + 2 + 1
+        let a = run_sharded_fleet(&big).unwrap();
+        let b = run_sharded_fleet(&small).unwrap();
+        for (ra, rb) in a.devices.iter().zip(b.devices.iter()) {
+            assert_eq!(ra.to_row().jsonl(), rb.to_row().jsonl());
+        }
+        assert_eq!(a.mean_final_ema, b.mean_final_ema);
+        assert_eq!(a.total_writes, b.total_writes);
+    }
+
+    #[test]
+    fn drifted_multi_wave_run_completes_with_sane_rows() {
+        // drift on: trajectories are resampled at boundaries (documented
+        // semantics), so we assert structural sanity, not bit-equality
+        let mut s = tiny(Scheme::Lrt { variant: Variant::Biased });
+        s.cfg.drift = crate::nvm::drift::DriftCfg::analog(10.0);
+        s.cfg.drift.every = 5;
+        s.wave = 8;
+        s.keep_reports = 1;
+        let rep = run_sharded_fleet(&s).unwrap();
+        assert_eq!(rep.devices.len(), 1);
+        let rows = rep.to_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].text("kind"), Some("sharded-fleet"));
+        assert!(rep.mean_record_bytes > 0.0);
+        assert!(rep.peak_resident_bytes > 0);
+    }
+
+    #[test]
+    fn federated_run_aggregates_every_interior_boundary() {
+        let mut s = tiny(Scheme::Lrt { variant: Variant::Biased });
+        s.federate = true;
+        s.wave = 5; // 20 samples -> boundaries at 5, 10, 15 (3 interior)
+        let rep = run_sharded_fleet(&s).unwrap();
+        assert!(rep.federated);
+        assert_eq!(rep.agg_rounds, 3);
+        assert!(rep.agg_rel_err_mean >= 0.0);
+        let rows = rep.to_rows();
+        let summary = rows.last().unwrap();
+        assert_eq!(summary.text("agg_rounds"), Some("3"));
+        assert!(summary.text("agg_rel_err").is_some());
+    }
+}

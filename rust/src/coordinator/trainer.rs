@@ -176,28 +176,47 @@ impl Trainer {
                 self.metrics.log_point(t, w);
             }
         }
-        let (commits, deferrals) = self.device.flush_stats();
-        let total_writes = self.device.total_writes();
-        RunReport {
-            scheme: self.cfg.scheme.name().to_string(),
-            env: self.cfg.env.name().to_string(),
-            final_ema: self.metrics.acc_ema.get(),
-            tail_acc: self.metrics.tail_acc(),
-            overall_acc: self.metrics.overall_acc(),
-            max_cell_writes: self.device.max_cell_writes(),
+        assemble_report(
+            &self.cfg,
+            &self.device,
+            &self.metrics,
+            t0.elapsed().as_secs_f64(),
+        )
+    }
+}
+
+/// Assemble the final [`RunReport`] from a finished device + metrics
+/// pair. Shared between [`Trainer::run`] and the sharded fleet engine
+/// so per-device reports are field-identical by construction (only
+/// `wall_secs` — excluded from Row output by the purity contract —
+/// depends on the caller).
+pub(crate) fn assemble_report(
+    cfg: &RunConfig,
+    device: &NativeDevice,
+    metrics: &Metrics,
+    wall_secs: f64,
+) -> RunReport {
+    let (commits, deferrals) = device.flush_stats();
+    let total_writes = device.total_writes();
+    RunReport {
+        scheme: cfg.scheme.name().to_string(),
+        env: cfg.env.name().to_string(),
+        final_ema: metrics.acc_ema.get(),
+        tail_acc: metrics.tail_acc(),
+        overall_acc: metrics.overall_acc(),
+        max_cell_writes: device.max_cell_writes(),
+        total_writes,
+        write_energy_pj: RunReport::energy_from_writes(
             total_writes,
-            write_energy_pj: RunReport::energy_from_writes(
-                total_writes,
-                self.cfg.w_bits,
-            ),
-            endurance_used: self.device.max_cell_writes() as f64
-                / crate::nvm::energy::ENDURANCE_WRITES,
-            series: self.metrics.series.clone(),
-            flush_commits: commits,
-            flush_deferrals: deferrals,
-            kappa_skips: self.device.kappa_skips,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        }
+            cfg.w_bits,
+        ),
+        endurance_used: device.max_cell_writes() as f64
+            / crate::nvm::energy::ENDURANCE_WRITES,
+        series: metrics.series.clone(),
+        flush_commits: commits,
+        flush_deferrals: deferrals,
+        kappa_skips: device.kappa_skips,
+        wall_secs,
     }
 }
 

@@ -41,6 +41,7 @@ use anyhow::{anyhow, ensure, Context as _, Result};
 
 use crate::coordinator::config::{RunConfig, SetOutcome};
 use crate::util::cli::{full_scale, Args};
+use crate::util::hash::fnv1a64;
 use crate::util::json::Json;
 use crate::util::table::{render_rows, Row};
 
@@ -233,15 +234,6 @@ impl Cell {
     }
 }
 
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
-
 // ---------------------------------------------------------------------
 // Scenario trait + registry
 // ---------------------------------------------------------------------
@@ -286,6 +278,9 @@ pub fn all() -> Vec<&'static dyn Scenario> {
         sc::drift_stress::DriftStress;
     static CLASS_INC: sc::class_incremental::ClassIncremental =
         sc::class_incremental::ClassIncremental;
+    static SHARDED_FLEET: sc::sharded_fleet::ShardedFleet =
+        sc::sharded_fleet::ShardedFleet;
+    static FED_AVG: sc::fed_avg::FedAvg = sc::fed_avg::FedAvg;
     vec![
         &FIG3,
         &FIG5,
@@ -299,6 +294,8 @@ pub fn all() -> Vec<&'static dyn Scenario> {
         &FLEET,
         &DRIFT_STRESS,
         &CLASS_INC,
+        &SHARDED_FLEET,
+        &FED_AVG,
     ]
 }
 

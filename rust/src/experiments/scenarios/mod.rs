@@ -15,10 +15,12 @@ pub mod adapt;
 pub mod class_incremental;
 pub mod convex;
 pub mod drift_stress;
+pub mod fed_avg;
 pub mod fleet;
 pub mod grads;
 pub mod lr_sweep;
 pub mod rank_bits;
+pub mod sharded_fleet;
 pub mod transfer;
 pub mod variants;
 pub mod writes;

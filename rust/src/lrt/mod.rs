@@ -11,4 +11,4 @@ pub mod mgs;
 pub mod state;
 pub mod svd;
 
-pub use state::{LrtDiag, LrtState, Variant};
+pub use state::{LrtDiag, LrtSnapshot, LrtState, Variant};

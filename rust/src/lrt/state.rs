@@ -28,6 +28,31 @@ pub struct LrtDiag {
     pub skipped: bool,
 }
 
+/// Compact copy of the persistent accumulator state — exactly the
+/// fields that survive across samples (`ql`, `qr`, `cx`, `updates`).
+/// All of `LrtState`'s private buffers are scratch that every `update`
+/// fully overwrites before reading, so suspending a device to a
+/// snapshot and later restoring into a recycled `LrtState` carcass is
+/// bit-lossless. This is the per-device record the sharded fleet
+/// engine stores at 10^5+ population scale: r(n_i + n_o) floats per
+/// layer instead of a whole `NativeDevice`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LrtSnapshot {
+    pub ql: Vec<f32>,
+    pub qr: Vec<f32>,
+    pub cx: Vec<f32>,
+    pub updates: u64,
+}
+
+impl LrtSnapshot {
+    /// Resident bytes of this snapshot's buffers.
+    pub fn bytes(&self) -> usize {
+        (self.ql.len() + self.qr.len() + self.cx.len())
+            * std::mem::size_of::<f32>()
+            + std::mem::size_of::<u64>()
+    }
+}
+
 /// Rank-r Kronecker-sum accumulator for one (n_o x n_i) weight matrix.
 ///
 /// Auxiliary-memory footprint is exactly the paper's r(n_i + n_o)b budget
@@ -116,6 +141,37 @@ impl LrtState {
         self.qr.data.fill(0.0);
         self.cx.fill(0.0);
         self.updates = 0;
+    }
+
+    /// Copy the persistent state into `snap`, reusing its buffers.
+    pub fn snapshot_into(&self, snap: &mut LrtSnapshot) {
+        snap.ql.clear();
+        snap.ql.extend_from_slice(&self.ql.data);
+        snap.qr.clear();
+        snap.qr.extend_from_slice(&self.qr.data);
+        snap.cx.clear();
+        snap.cx.extend_from_slice(&self.cx);
+        snap.updates = self.updates;
+    }
+
+    /// Fresh snapshot of the persistent state.
+    pub fn snapshot(&self) -> LrtSnapshot {
+        let mut snap = LrtSnapshot::default();
+        self.snapshot_into(&mut snap);
+        snap
+    }
+
+    /// Restore persistent state from `snap` (dims must match this
+    /// state's construction — panics otherwise; scratch is untouched
+    /// because every update overwrites it before reading).
+    pub fn restore(&mut self, snap: &LrtSnapshot) {
+        assert_eq!(snap.ql.len(), self.ql.data.len(), "ql size mismatch");
+        assert_eq!(snap.qr.len(), self.qr.data.len(), "qr size mismatch");
+        assert_eq!(snap.cx.len(), self.cx.len(), "cx size mismatch");
+        self.ql.data.copy_from_slice(&snap.ql);
+        self.qr.data.copy_from_slice(&snap.qr);
+        self.cx.copy_from_slice(&snap.cx);
+        self.updates = snap.updates;
     }
 
     /// One per-sample (or per-pixel, for convs) rank update.
@@ -600,6 +656,50 @@ mod tests {
         // r(n_i + n_o) * b plus the q-th column — the paper's LAM bound
         // with q = r + 1.
         assert_eq!(st.aux_bytes(16), (64 + 512) * 5 * 2);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_bit_identically() {
+        let mut rng = Rng::new(5);
+        let (dzs, as_) = rand_samples(&mut rng, 10, 8, 12);
+        let st = run(&dzs, &as_, 3, Variant::Unbiased, 11);
+        let snap = st.snapshot();
+        assert_eq!(
+            snap.bytes(),
+            (8 + 12 + 1) * 4 * 4 + 8,
+            "snapshot bytes = (n_o + n_i + 1) * q floats + updates"
+        );
+
+        // restore into a dirty carcass of the same shape, then continue
+        // both states in lockstep: they must stay bit-identical.
+        let mut carcass = {
+            let (d2, a2) = rand_samples(&mut rng, 5, 8, 12);
+            run(&d2, &a2, 3, Variant::Unbiased, 13)
+        };
+        carcass.restore(&snap);
+        assert_eq!(carcass.ql.data, st.ql.data);
+        assert_eq!(carcass.qr.data, st.qr.data);
+        assert_eq!(carcass.cx, st.cx);
+        assert_eq!(carcass.updates, st.updates);
+
+        let mut cont = st.clone();
+        let (d3, a3) = rand_samples(&mut rng, 6, 8, 12);
+        let (mut r1, mut r2) = (Rng::new(99), Rng::new(99));
+        for (d, a) in d3.iter().zip(a3.iter()) {
+            cont.update(d, a, &mut r1, Variant::Unbiased, 100.0);
+            carcass.update(d, a, &mut r2, Variant::Unbiased, 100.0);
+        }
+        assert_eq!(carcass.ql.data, cont.ql.data);
+        assert_eq!(carcass.qr.data, cont.qr.data);
+        assert_eq!(carcass.cx, cont.cx);
+        assert_eq!(carcass.snapshot(), cont.snapshot());
+    }
+
+    #[test]
+    #[should_panic(expected = "ql size mismatch")]
+    fn restore_rejects_mismatched_dims() {
+        let snap = LrtState::new(4, 4, 2).snapshot();
+        LrtState::new(5, 4, 2).restore(&snap);
     }
 
     #[test]

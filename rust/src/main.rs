@@ -343,8 +343,10 @@ fn print_help() {
            writes->fig3  convex->fig5  grads->fig9  sweep->fig7|fig11\n\
            table1 table2 table3 fleet\n\n\
          Scenarios include the paper's figures/tables (fig3 fig5 fig6 fig7\n\
-         fig9 fig11 table1 table2 table3), the federated fleet runner, and\n\
-         deployment studies (drift-stress, class-incremental).\n\
+         fig9 fig11 table1 table2 table3), the federated fleet runners\n\
+         (fleet, sharded-fleet for 10^5+ device populations, fed-avg for\n\
+         factor averaging vs isolated baselines), and deployment studies\n\
+         (drift-stress, class-incremental).\n\
          Set LRT_FULL=1 for paper-scale workloads."
     );
 }

@@ -181,6 +181,52 @@ impl Workspace {
         }
     }
 
+    /// Approximate resident bytes of the retained f32 buffers (cache
+    /// matrices, gradient factors, vector scratch, flush slots; the
+    /// tiny BN per-channel scratch is omitted). The sharded fleet's
+    /// memory accounting uses this to separate the O(shard) carcass
+    /// cost — workspaces live per pool worker, never per device record
+    /// — from the per-record footprint.
+    pub fn approx_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let mut n = 0usize;
+        for c in &self.caches.conv {
+            n += c.pat.data.len()
+                + c.z_hat.data.len()
+                + c.inv.len()
+                + c.y_bn.data.len()
+                + c.y.data.len();
+        }
+        for fc in &self.caches.fc {
+            n += fc.a_in.len() + fc.z.len() + fc.y.len();
+        }
+        n += self.caches.logits.len();
+        for i in 0..self.grads.dzw.len() {
+            n += self.grads.dzw[i].data.len()
+                + self.grads.ain[i].data.len()
+                + self.grads.db[i].len();
+        }
+        for i in 0..self.grads.dg.len() {
+            n += self.grads.dg[i].len() + self.grads.dbe[i].len();
+        }
+        n += self.dlogits.len();
+        for buf in [&self.act, &self.dz, &self.dzn, &self.prev] {
+            n += buf.capacity();
+        }
+        for mats in [
+            &self.z,
+            &self.dy,
+            &self.dz_pre,
+            &self.dzn_m,
+            &self.dpatch,
+            &self.delta,
+            &self.cand,
+        ] {
+            n += mats.iter().map(|m| m.data.len()).sum::<usize>();
+        }
+        n * f
+    }
+
     /// Overwrite every retained buffer with `v` — the stale-data test
     /// hook: a poisoned workspace must produce results bit-identical to
     /// a fresh one, or something read state it should have written.
@@ -293,6 +339,19 @@ mod tests {
         // activation buffer must hold the widest stage without growing
         assert!(ws.act.capacity() >= 28 * 28);
         assert!(ws.act.capacity() >= CONVS[0].pixels() * CONVS[0].cout);
+    }
+
+    #[test]
+    fn approx_bytes_reflects_working_set() {
+        let full = Workspace::new().approx_bytes();
+        let fwd = Workspace::forward_only().approx_bytes();
+        // the delta/cand flush slots alone are 2x the weight cells
+        let weight_cells: usize =
+            LAYER_DIMS.iter().map(|&(n_o, n_i)| n_o * n_i).sum();
+        assert!(full > fwd, "full {full} <= forward-only {fwd}");
+        assert!(full - fwd >= 2 * weight_cells * 4);
+        // sane absolute scale: hundreds of KB, not GB
+        assert!(full < 64 << 20, "workspace ballooned: {full}");
     }
 
     #[test]

@@ -128,6 +128,27 @@ impl NvmArray {
     pub fn endurance_used(&self) -> f64 {
         self.max_cell_writes() as f64 / super::energy::ENDURANCE_WRITES
     }
+
+    /// Per-cell write counters (sharded-fleet record extraction scans
+    /// these to build the sparse written-cell overlay).
+    pub fn cell_writes(&self) -> &[u64] {
+        &self.writes
+    }
+
+    /// Hydrate one cell from a suspended device record: sets the analog
+    /// value and write counter directly, with NO write accounting — this
+    /// is state restoration, not a program pulse.
+    pub fn restore_cell(&mut self, idx: usize, value: f32, writes: u64) {
+        self.values[idx] = value;
+        self.writes[idx] = writes;
+    }
+
+    /// Hydrate the array-level counters from a suspended device record
+    /// (pairs with [`NvmArray::restore_cell`]).
+    pub fn restore_totals(&mut self, total_writes: u64, commits: u64) {
+        self.total_writes = total_writes;
+        self.commits = commits;
+    }
 }
 
 #[cfg(test)]
@@ -261,5 +282,48 @@ mod tests {
         }
         assert_eq!(arr.max_cell_writes(), 100);
         assert!((arr.endurance_used() - 1e-4).abs() < 1e-9);
+    }
+
+    /// Suspending a written array to a sparse overlay (written cells
+    /// only) and hydrating it back into a pristine clone reproduces the
+    /// original bit-for-bit — the sharded fleet's record contract.
+    #[test]
+    fn sparse_overlay_roundtrip_is_lossless() {
+        prop::check("nvm-overlay-roundtrip", 10, |rng| {
+            let m = Mat::from_fn(4, 6, |_, _| rng.normal_f32(0.0, 0.3));
+            let pristine = NvmArray::program(&m, QW);
+            let mut arr = pristine.clone();
+            for _ in 0..3 {
+                let new = Mat::from_fn(4, 6, |i, j| {
+                    arr.read().at(i, j) + rng.normal_f32(0.0, 0.05)
+                });
+                arr.commit(&new);
+            }
+            // suspend: written cells only
+            let overlay: Vec<(usize, f32, u64)> = arr
+                .cell_writes()
+                .iter()
+                .enumerate()
+                .filter(|(_, &w)| w > 0)
+                .map(|(i, &w)| (i, arr.raw()[i], w))
+                .collect();
+            // hydrate into a fresh pristine copy
+            let mut back = pristine.clone();
+            for &(i, v, w) in &overlay {
+                back.restore_cell(i, v, w);
+            }
+            back.restore_totals(arr.total_writes, arr.commits);
+            crate::prop_assert!(back.raw() == arr.raw(), "values differ");
+            crate::prop_assert!(
+                back.cell_writes() == arr.cell_writes(),
+                "write counters differ"
+            );
+            crate::prop_assert!(
+                back.total_writes == arr.total_writes
+                    && back.commits == arr.commits,
+                "totals differ"
+            );
+            Ok(())
+        });
     }
 }

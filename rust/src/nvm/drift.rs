@@ -88,6 +88,65 @@ pub fn apply(arr: &mut NvmArray, rng: &mut Rng, cfg: &DriftCfg) {
     }
 }
 
+/// Apply `rounds` rounds of analog drift in one shot: the sum of n
+/// independent N(0, sigma_step) increments is N(0, sigma_step*sqrt(n)),
+/// so a single draw per cell has the exact Brownian marginal of the
+/// n-round loop (one clamp at the end instead of n — a boundary effect
+/// only for cells pinned at the rails). `rounds == 1` is bit-identical
+/// to [`apply_analog`]. This is the sharded fleet's lazy drift clock:
+/// a suspended device record catches up on all elapsed rounds at
+/// hydration time with O(cells) work independent of `rounds`.
+pub fn apply_analog_rounds(
+    arr: &mut NvmArray,
+    rng: &mut Rng,
+    sigma_step: f64,
+    rounds: u64,
+) {
+    if rounds == 0 {
+        return;
+    }
+    apply_analog(arr, rng, sigma_step * (rounds as f64).sqrt());
+}
+
+/// Apply `rounds` rounds of digital drift in one shot: n independent
+/// per-bit Bernoulli(p) flips XOR-compose, so the net flip probability
+/// is p_net = (1 - (1 - 2p)^n) / 2. `rounds == 1` uses `p_step`
+/// unchanged and is bit-identical to [`apply_digital`].
+pub fn apply_digital_rounds(
+    arr: &mut NvmArray,
+    rng: &mut Rng,
+    p_step: f64,
+    rounds: u64,
+) {
+    if rounds == 0 {
+        return;
+    }
+    let p_net = if rounds == 1 {
+        p_step
+    } else {
+        (1.0 - (1.0 - 2.0 * p_step).powi(rounds.min(i32::MAX as u64) as i32))
+            / 2.0
+    };
+    apply_digital(arr, rng, p_net);
+}
+
+/// Apply `rounds` elapsed injection rounds of the configured drift
+/// processes in one shot (lazy drift-clock catch-up; exact marginals,
+/// resampled trajectories — see [`apply_analog_rounds`]).
+pub fn apply_rounds(
+    arr: &mut NvmArray,
+    rng: &mut Rng,
+    cfg: &DriftCfg,
+    rounds: u64,
+) {
+    if cfg.sigma0 > 0.0 {
+        apply_analog_rounds(arr, rng, cfg.sigma_step(), rounds);
+    }
+    if cfg.p0 > 0.0 {
+        apply_digital_rounds(arr, rng, cfg.p_step(), rounds);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +221,72 @@ mod tests {
         assert_eq!(arr.raw(), &before[..]);
         assert!(!DriftCfg::NONE.enabled());
         assert!(DriftCfg::analog(10.0).enabled());
+    }
+
+    #[test]
+    fn single_round_catchup_is_bit_identical() {
+        let mut rng = Rng::new(11);
+        let m = Mat::from_fn(4, 16, |_, _| rng.normal_f32(0.0, 0.3));
+        for cfg in [DriftCfg::analog(10.0), DriftCfg::digital(10_000.0)] {
+            let mut a = NvmArray::program(&m, QW);
+            let mut b = NvmArray::program(&m, QW);
+            let (mut ra, mut rb) = (Rng::new(5), Rng::new(5));
+            apply(&mut a, &mut ra, &cfg);
+            apply_rounds(&mut b, &mut rb, &cfg, 1);
+            assert_eq!(a.raw(), b.raw(), "rounds=1 must match apply");
+        }
+    }
+
+    #[test]
+    fn zero_rounds_is_noop() {
+        let m = Mat::from_vec(1, 4, vec![0.5, -0.5, 0.25, 0.0]);
+        let mut arr = NvmArray::program(&m, QW);
+        let before = arr.raw().to_vec();
+        let mut rng = Rng::new(4);
+        apply_rounds(&mut arr, &mut rng, &DriftCfg::analog(10.0), 0);
+        apply_rounds(&mut arr, &mut rng, &DriftCfg::digital(10.0), 0);
+        assert_eq!(arr.raw(), &before[..]);
+    }
+
+    #[test]
+    fn analog_catchup_matches_brownian_marginal() {
+        // one-shot n-round catch-up has the same std as the n-round loop
+        let n_cells = 4096;
+        let m = Mat::zeros(1, n_cells);
+        let mut arr = NvmArray::program(&m, QW);
+        let mut rng = Rng::new(17);
+        let cfg = DriftCfg::analog(10.0);
+        let rounds = 50;
+        apply_analog_rounds(&mut arr, &mut rng, cfg.sigma_step(), rounds);
+        let vals: Vec<f64> = arr.raw().iter().map(|&x| x as f64).collect();
+        let sd = stats::std_unbiased(&vals);
+        let expect = cfg.sigma_step() * (rounds as f64).sqrt();
+        assert!(
+            (sd - expect).abs() < 0.25 * expect,
+            "sd {sd} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn digital_catchup_matches_net_flip_rate() {
+        // p_net = (1 - (1-2p)^n)/2; with p = 0.01, n = 10: ~0.0909
+        let n_cells = 20_000;
+        let m = Mat::zeros(1, n_cells);
+        let mut arr = NvmArray::program(&m, QW);
+        let mut rng = Rng::new(23);
+        let (p, n) = (0.01f64, 10);
+        apply_digital_rounds(&mut arr, &mut rng, p, n);
+        let changed = arr
+            .raw()
+            .iter()
+            .filter(|&&v| QW.code(v) != QW.code(0.0))
+            .count();
+        let p_net = (1.0 - (1.0 - 2.0 * p).powi(n as i32)) / 2.0;
+        let expect = (1.0 - (1.0 - p_net).powi(8)) * n_cells as f64;
+        assert!(
+            (changed as f64 - expect).abs() < 0.15 * expect,
+            "changed {changed} vs {expect}"
+        );
     }
 
     #[test]

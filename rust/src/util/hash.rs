@@ -1,0 +1,59 @@
+//! FNV-1a 64-bit hashing — the repo's one deterministic byte-mixer.
+//!
+//! The sweep engine derives cell seeds as `base ^ fnv1a64(cell_id)`;
+//! the fleet engines derive per-device seeds as
+//! `fnv1a64(cell_seed || device_index)` (see
+//! `coordinator::fleet::device_seed`). Sharing one implementation (and
+//! one pair of constants) is what makes the two derivations live in
+//! disjoint regions of seed space by construction: the old additive
+//! device scheme (`seed + 1000 + d`) aliased with neighboring sweep
+//! cells, which is exactly the bug the shared mix retired.
+
+/// FNV-1a over `bytes` (64-bit offset basis / prime).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Mix a sequence of 64-bit words through [`fnv1a64`] (little-endian
+/// byte order) — the keyed-seed derivation used for (cell seed, device
+/// index) and (fleet seed, round, layer) style tuples.
+pub fn fnv1a64_words(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn words_match_byte_form() {
+        let w = [0x0123_4567_89ab_cdefu64, 42];
+        let mut bytes = Vec::new();
+        for x in w {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(fnv1a64_words(&w), fnv1a64(&bytes));
+        // order matters (it is a keyed derivation, not a set hash)
+        assert_ne!(fnv1a64_words(&[1, 2]), fnv1a64_words(&[2, 1]));
+    }
+}

@@ -201,3 +201,87 @@ fn every_registered_scenario_has_a_wellformed_grid() {
         assert!(!sc.description().is_empty());
     }
 }
+
+#[test]
+fn fed_avg_is_deterministic_and_covers_both_modes() {
+    let kv = [
+        ("samples", "20"),
+        ("offline", "20"),
+        ("devices", "3"),
+        ("rounds", "2"),
+    ];
+    let a = run_ephemeral("fed-avg", &kv).unwrap();
+    let b = run_ephemeral("fed-avg", &kv).unwrap();
+    assert!(a.complete);
+    // mode axis (isolated, fedavg) x one device count
+    assert_eq!(a.cells_total, 2);
+    // 2 cells x (3 device rows + 1 summary row)
+    assert_eq!(a.rows.len(), 8);
+    assert_eq!(rows_jsonl(&a), rows_jsonl(&b), "fed-avg not deterministic");
+    let body = rows_jsonl(&a);
+    assert!(body.contains("\"mode\":\"isolated\""));
+    assert!(body.contains("\"mode\":\"fedavg\""));
+    assert!(body.contains("\"agg_rounds\":2"));
+}
+
+#[test]
+fn killed_fed_avg_sweep_resumes_to_identical_results_file() {
+    let sc = find("fed-avg").unwrap();
+    let mut args = Args::default();
+    args.command = "run".to_string();
+    args.positional.push("fed-avg".to_string());
+    for (k, v) in
+        [("samples", "20"), ("offline", "20"), ("devices", "2"), ("rounds", "2")]
+    {
+        args.options.insert(k.to_string(), v.to_string());
+    }
+    let full_path = tmp("fedavg-full");
+    let part_path = tmp("fedavg-part");
+
+    let full =
+        run_sweep(sc, &args, &SweepOptions::to_file(full_path.clone()))
+            .unwrap();
+    assert!(full.complete);
+
+    let mut partial = SweepOptions::to_file(part_path.clone());
+    partial.limit = Some(1);
+    let killed = run_sweep(sc, &args, &partial).unwrap();
+    assert!(!killed.complete);
+
+    let mut resume = SweepOptions::to_file(part_path.clone());
+    resume.resume = true;
+    let resumed = run_sweep(sc, &args, &resume).unwrap();
+    assert!(resumed.complete);
+    assert_eq!(resumed.cells_restored, 1);
+    assert_eq!(resumed.cells_run, 1);
+
+    assert_eq!(
+        std::fs::read_to_string(&full_path).unwrap(),
+        std::fs::read_to_string(&part_path).unwrap(),
+        "resumed fed-avg sweep differs from uninterrupted run"
+    );
+    let _ = std::fs::remove_file(&full_path);
+    let _ = std::fs::remove_file(&part_path);
+}
+
+#[test]
+fn sharded_fleet_scenario_smoke() {
+    let out = run_ephemeral(
+        "sharded-fleet",
+        &[
+            ("samples", "10"),
+            ("offline", "20"),
+            ("devices", "50"),
+            ("shard", "16"),
+        ],
+    )
+    .unwrap();
+    assert!(out.complete);
+    assert_eq!(out.cells_total, 1);
+    // streaming engine: one summary row, no per-device rows
+    assert_eq!(out.rows.len(), 1);
+    let line = out.rows[0].jsonl();
+    assert!(line.contains("\"population\":50"));
+    assert!(line.contains("\"kind\":\"sharded-fleet\""));
+    assert!(line.contains("\"peak_resident_bytes\":"));
+}
