@@ -19,8 +19,9 @@ use lrt_nvm::util::table::Table;
 fn transb_rows(a: &Mat, b: &Mat, row0: usize, block: &mut [f32]) {
     let cols = b.rows;
     let nrows = block.len() / cols;
-    for jb in (0..cols).step_by(kernels::TILE_J) {
-        let jend = (jb + kernels::TILE_J).min(cols);
+    let tile_j = kernels::tile_j();
+    for jb in (0..cols).step_by(tile_j) {
+        let jend = (jb + tile_j).min(cols);
         for ri in 0..nrows {
             let arow = a.row(row0 + ri);
             let orow = &mut block[ri * cols..(ri + 1) * cols];
@@ -37,7 +38,8 @@ fn transb_rows(a: &Mat, b: &Mat, row0: usize, block: &mut [f32]) {
 /// pool), so the table's delta isolates dispatch mechanics.
 fn spawn_era_transb(a: &Mat, b: &Mat, out: &mut Mat, budget: usize) {
     let (rows, cols) = (out.rows, out.cols);
-    let min_rows = (kernels::PAR_MIN_WORK / (a.cols * cols).max(1)).max(1);
+    let min_rows =
+        (kernels::par_min_work() / (a.cols * cols).max(1)).max(1);
     let workers = (rows / min_rows).max(1).min(budget);
     if workers <= 1 {
         transb_rows(a, b, 0, &mut out.data);
@@ -78,6 +80,24 @@ fn fmt_json(v: Option<f64>) -> String {
         Some(v) => format!("{v:.2}"),
         None => "null".to_string(),
     }
+}
+
+/// Run-metadata fragment carried on EVERY `BENCH_JSON` line so
+/// cross-run/cross-machine lines are self-describing instead of
+/// requiring the config to be inferred from context: ISA tier, thread
+/// budget, active tile sizes, and the arch triple.
+fn run_meta(
+    isa: &str,
+    threads: usize,
+    tile_j: usize,
+    tile_k: usize,
+) -> String {
+    format!(
+        "\"isa\":\"{isa}\",\"threads\":{threads},\"tile_j\":{tile_j},\
+         \"tile_k\":{tile_k},\"arch\":\"{}-{}\"",
+        std::env::consts::ARCH,
+        std::env::consts::OS,
+    )
 }
 
 fn main() {
@@ -220,12 +240,13 @@ fn main() {
 
     println!("== ISA tier speedups per kernel (single-thread) ==");
     println!(
-        "active tier: {} (LRT_KERNEL_ISA=scalar|unrolled|native to \
-         override); native available: {}\n\
+        "active tier: {} (LRT_KERNEL_ISA=scalar|unrolled|native|fma to \
+         override); native available: {}; fma available: {}\n\
          (pool pinned to 1 thread so the tier effect isn't washed out \
          by threading; BENCH_JSON lines are the machine baseline)\n",
         kernels::isa().name(),
-        kernels::native_available()
+        kernels::native_available(),
+        kernels::fma_available()
     );
     {
         use lrt_nvm::tensor::kernels::Isa;
@@ -258,6 +279,7 @@ fn main() {
             "scalar us",
             "unrolled us",
             "native us",
+            "fma us",
             "best vs scalar",
         ]);
         let mut json_lines: Vec<String> = Vec::new();
@@ -284,15 +306,24 @@ fn main() {
                 fmt(Some(scalar)),
                 fmt(get(Isa::Unrolled)),
                 fmt(get(Isa::Native)),
+                fmt(get(Isa::Fma)),
                 format!("{:.2}x", scalar / best.max(1e-9)),
             ]);
             json_lines.push(format!(
                 "BENCH_JSON {{\"bench\":\"isa_tier\",\"kernel\":\"{label}\",\
                  \"scalar_us\":{scalar:.2},\"unrolled_us\":{},\
-                 \"native_us\":{},\"best_speedup_vs_scalar\":{:.3}}}",
+                 \"native_us\":{},\"fma_us\":{},\
+                 \"best_speedup_vs_scalar\":{:.3},{}}}",
                 fmt_json(get(Isa::Unrolled)),
                 fmt_json(get(Isa::Native)),
+                fmt_json(get(Isa::Fma)),
                 scalar / best.max(1e-9),
+                run_meta(
+                    kernels::isa().name(),
+                    1,
+                    kernels::tile_j(),
+                    kernels::tile_k()
+                ),
             ));
         };
 
@@ -324,6 +355,80 @@ fn main() {
             std::hint::black_box(kernels::dot_stride(&sm.data, 17, 3, &sv));
         });
         tt.print();
+        println!();
+        for line in &json_lines {
+            println!("{line}");
+        }
+        println!();
+    }
+
+    println!("== tile autotune sweep (single-thread, per tier) ==");
+    println!(
+        "(TILE_J x TILE_K grid over the blocked matmul/transb inner \
+         loops; the committed per-arch table in kernels::default_tiles \
+         is regenerated from this sweep's BENCH_JSON hotpath_tile lines \
+         on a toolchain-equipped machine — pick the (tile_j, tile_k) \
+         row with the lowest us per op and arch. Results are \
+         tile-invariant by contract, so the table swap is numerics-free; \
+         kernel_conformance pins that.)\n"
+    );
+    {
+        let mut r = Rng::new(23);
+        let mut rand = |rows: usize, cols: usize| {
+            Mat::from_fn(rows, cols, |_, _| r.normal_f32(0.0, 1.0))
+        };
+        let a = rand(128, 512);
+        let w = rand(64, 512);
+        let wl = rand(256, 1024);
+        let x = rand(1024, 256);
+        let mut ts = Table::new(vec![
+            "op (shape)", "tier", "tile_j", "tile_k", "us",
+        ]);
+        let mut json_lines: Vec<String> = Vec::new();
+        for tier in kernels::available_isas() {
+            for &tile_j in &[8usize, 16, 32] {
+                for &tile_k in &[64usize, 128, 256] {
+                    let (tb_us, mm_us) = kernels::with_overrides_full(
+                        Some(tier),
+                        Some(1),
+                        Some(tile_j),
+                        Some(tile_k),
+                        || {
+                            (
+                                time_median(30, || {
+                                    std::hint::black_box(
+                                        kernels::matmul_transb(&a, &w),
+                                    );
+                                }),
+                                time_median(10, || {
+                                    std::hint::black_box(kernels::matmul(
+                                        &wl, &x,
+                                    ));
+                                }),
+                            )
+                        },
+                    );
+                    for (op, us) in [
+                        ("matmul_transb fc5 (128x512 @ 64x512^T)", tb_us),
+                        ("matmul linreg (256x1024 @ 1024x256)", mm_us),
+                    ] {
+                        ts.row(vec![
+                            op.to_string(),
+                            tier.name().to_string(),
+                            format!("{tile_j}"),
+                            format!("{tile_k}"),
+                            format!("{us:.1}"),
+                        ]);
+                        json_lines.push(format!(
+                            "BENCH_JSON {{\"bench\":\"hotpath_tile\",\
+                             \"op\":\"{op}\",\"us\":{us:.2},{}}}",
+                            run_meta(tier.name(), 1, tile_j, tile_k),
+                        ));
+                    }
+                }
+            }
+        }
+        ts.print();
         println!();
         for line in &json_lines {
             println!("{line}");
@@ -385,11 +490,17 @@ fn main() {
                 ]);
                 json_lines.push(format!(
                     "BENCH_JSON {{\"bench\":\"hotpath_pool\",\
-                     \"layer\":\"{label}\",\"threads\":{threads},\
+                     \"layer\":\"{label}\",\
                      \"spawn_us\":{spawn_us:.2},\
                      \"parked_us\":{parked_us:.2},\
-                     \"speedup\":{:.3}}}",
+                     \"speedup\":{:.3},{}}}",
                     spawn_us / parked_us.max(1e-9),
+                    run_meta(
+                        kernels::isa().name(),
+                        threads,
+                        kernels::tile_j(),
+                        kernels::tile_k()
+                    ),
                 ));
             }
         }
@@ -398,6 +509,73 @@ fn main() {
         for line in &json_lines {
             println!("{line}");
         }
+        println!();
+    }
+
+    println!("== work-stealing fan-out: stolen vs forfeited seats ==");
+    println!(
+        "(two dispatchers hammer a 4-thread budget with interleaved \
+         fan-outs; pre-steal, every budget-denied seat was forfeited — \
+         now the backlog converts freed sibling budget into stolen \
+         seats on parked workers. The stolen/forfeited split is the \
+         utilization headline; wall time is the contended throughput.)\n"
+    );
+    {
+        use lrt_nvm::tensor::pool;
+        let spin = |i: usize| -> f32 {
+            // ~1-2us of register arithmetic per item, long enough that
+            // the two dispatchers genuinely overlap
+            let mut acc = i as f32 + 1.0;
+            for k in 0..2000 {
+                acc = acc.mul_add(1.0000001, (k & 7) as f32 * 1e-9);
+            }
+            acc
+        };
+        let rounds = 200usize;
+        let stolen0 = pool::seats_stolen();
+        let forfeited0 = pool::seats_forfeited();
+        let wall_us = kernels::with_overrides(None, Some(4), || {
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    for _ in 0..rounds {
+                        std::hint::black_box(kernels::run_scoped(8, spin));
+                    }
+                });
+                for _ in 0..rounds {
+                    std::hint::black_box(kernels::run_scoped(8, spin));
+                }
+            });
+            t0.elapsed().as_secs_f64() * 1e6
+        });
+        let stolen = pool::seats_stolen() - stolen0;
+        let forfeited = pool::seats_forfeited() - forfeited0;
+        let mut tsl = Table::new(vec![
+            "rounds x2",
+            "seats stolen",
+            "seats forfeited",
+            "wall us",
+        ]);
+        tsl.row(vec![
+            format!("{rounds}"),
+            format!("{stolen}"),
+            format!("{forfeited}"),
+            format!("{wall_us:.0}"),
+        ]);
+        tsl.print();
+        println!();
+        println!(
+            "BENCH_JSON {{\"bench\":\"hotpath_steal\",\"rounds\":{},\
+             \"seats_stolen\":{stolen},\"seats_forfeited\":{forfeited},\
+             \"wall_us\":{wall_us:.0},{}}}",
+            rounds * 2,
+            run_meta(
+                kernels::isa().name(),
+                4,
+                kernels::tile_j(),
+                kernels::tile_k()
+            ),
+        );
         println!();
     }
 
@@ -459,11 +637,16 @@ fn main() {
                 ]);
                 json_lines.push(format!(
                     "BENCH_JSON {{\"bench\":\"hotpath_ws\",\
-                     \"op\":\"{label}\",\"tier\":\"{}\",\
+                     \"op\":\"{label}\",\
                      \"fresh_us\":{f_us:.2},\"workspace_us\":{w_us:.2},\
-                     \"speedup\":{:.3}}}",
-                    tier.name(),
+                     \"speedup\":{:.3},{}}}",
                     f_us / w_us.max(1e-9),
+                    run_meta(
+                        tier.name(),
+                        1,
+                        kernels::tile_j(),
+                        kernels::tile_k()
+                    ),
                 ));
             };
 
@@ -621,12 +804,18 @@ fn main() {
                  \"samples_per_device\":{samples},\
                  \"records_per_s\":{records_per_s:.1},\
                  \"mean_record_bytes\":{:.0},\
-                 \"peak_resident_bytes\":{},\"carcass_bytes\":{}}}",
+                 \"peak_resident_bytes\":{},\"carcass_bytes\":{},{}}}",
                 scfg.n_devices,
                 scfg.shard,
                 rep.mean_record_bytes,
                 rep.peak_resident_bytes,
                 rep.carcass_bytes,
+                run_meta(
+                    kernels::isa().name(),
+                    kernels::max_threads(),
+                    kernels::tile_j(),
+                    kernels::tile_k()
+                ),
             ));
         }
         t5.print();

@@ -1,0 +1,432 @@
+//! Cross-sweep results diffing (`lrt-nvm diff <a.jsonl> <b.jsonl>`).
+//!
+//! Compares two sweep checkpoint files cell-by-cell, keyed on the cell
+//! ids recorded in each `{"idx":..,"cell":..,"rows":[..]}` line, so two
+//! runs of the same scenario can be checked for regressions even when
+//! the files were produced on different machines, kernel tiers, or
+//! commits. Numeric row fields compare within a tolerance band
+//!
+//! ```text
+//! |a - b| <= atol + rtol * max(|a|, |b|)
+//! ```
+//!
+//! with both knobs defaulting to 0 (bit-exact, the contract of the
+//! scalar/unrolled/native tiers). Per-metric absolute tolerances
+//! (`--tol ema=0.01,total_writes=50`) override the band for named
+//! fields — the intended use is diffing an fma-tier sweep against the
+//! scalar anchor sweep, where the README's documented bands apply to a
+//! handful of metrics. Every mismatch is one counted difference:
+//! missing/extra cells, row-count changes, missing fields, numeric
+//! values outside the band, and unequal non-numeric values. The CLI
+//! exits non-zero when the count is non-zero, so the command gates CI
+//! jobs directly.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tolerance policy for numeric fields.
+#[derive(Debug, Clone, Default)]
+pub struct Tolerance {
+    /// Absolute term of the default band.
+    pub atol: f64,
+    /// Relative term of the default band.
+    pub rtol: f64,
+    /// Per-metric absolute overrides, keyed on the bare field name
+    /// (row-index suffixes like `ema[3]` match their `ema` entry). An
+    /// override replaces the whole band: `|a-b| <= tol`, rtol unused.
+    pub per_metric: BTreeMap<String, f64>,
+}
+
+impl Tolerance {
+    /// Parse `--tol name=abs,name=abs` (comma-separated pairs).
+    pub fn parse_overrides(spec: &str) -> Result<BTreeMap<String, f64>> {
+        let mut out = BTreeMap::new();
+        for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let Some((name, val)) = pair.split_once('=') else {
+                bail!(
+                    "--tol entry '{pair}' is not name=value \
+                     (e.g. --tol ema=0.01,total_writes=50)"
+                );
+            };
+            let tol: f64 = val.trim().parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--tol value '{val}' for metric '{name}' is not a number"
+                )
+            })?;
+            if !(tol >= 0.0) {
+                bail!("--tol value for metric '{name}' must be >= 0");
+            }
+            out.insert(name.trim().to_string(), tol);
+        }
+        Ok(out)
+    }
+
+    /// Is `|a - b|` within the band for the metric named `name`?
+    fn within(&self, name: &str, a: f64, b: f64) -> bool {
+        // both-NaN (serialized as null elsewhere) never reaches here;
+        // a NaN on one side should always flag
+        if !a.is_finite() || !b.is_finite() {
+            return a == b;
+        }
+        let bare = name.split('[').next().unwrap_or(name);
+        let diff = (a - b).abs();
+        match self.per_metric.get(bare) {
+            Some(&t) => diff <= t,
+            None => diff <= self.atol + self.rtol * a.abs().max(b.abs()),
+        }
+    }
+}
+
+/// One parsed checkpoint: scenario name + cell id -> rows.
+struct SweepFile {
+    scenario: String,
+    cells: BTreeMap<String, Vec<Json>>,
+}
+
+/// Parse a checkpoint the same way `resume` does: first non-empty line
+/// is the header (scenario under `"sweep"`), each later parseable line
+/// with an `idx`/`cell`/`rows` triple is one completed cell, torn tail
+/// lines are skipped, duplicate cell ids keep the last record (an
+/// interrupted resume can append a cell twice; the rewrite-on-complete
+/// keeps one, and the later line is the one it keeps).
+fn load(path: &Path) -> Result<SweepFile> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = body.lines().filter(|l| !l.trim().is_empty());
+    let header_line = lines
+        .next()
+        .with_context(|| format!("{} is empty", path.display()))?;
+    let header = Json::parse(header_line).map_err(|e| {
+        anyhow::anyhow!("bad header in {}: {e}", path.display())
+    })?;
+    let scenario = header
+        .get("sweep")
+        .and_then(Json::as_str)
+        .with_context(|| {
+            format!(
+                "{} has no \"sweep\" key in its header — not a sweep \
+                 checkpoint file",
+                path.display()
+            )
+        })?
+        .to_string();
+    let mut cells = BTreeMap::new();
+    for line in lines {
+        let Ok(rec) = Json::parse(line) else { continue };
+        let (Some(id), Some(rows)) = (
+            rec.get("cell").and_then(Json::as_str),
+            rec.get("rows").and_then(Json::as_arr),
+        ) else {
+            continue;
+        };
+        cells.insert(id.to_string(), rows.to_vec());
+    }
+    Ok(SweepFile { scenario, cells })
+}
+
+/// The outcome of a diff: human-readable findings plus the counts the
+/// CLI turns into an exit code.
+#[derive(Debug)]
+pub struct DiffReport {
+    /// One line per difference, cell-sorted.
+    pub lines: Vec<String>,
+    /// Cells present in both files.
+    pub cells_shared: usize,
+    /// Total counted differences (cells + fields).
+    pub differences: usize,
+}
+
+/// Flatten a record's rows into `field -> value`: a single row keeps
+/// bare field names; multi-row records suffix the row index (`ema[2]`)
+/// so per-row metrics stay distinguishable while `--tol` overrides
+/// still match on the bare name.
+fn flatten(rows: &[Json]) -> BTreeMap<String, Json> {
+    let mut out = BTreeMap::new();
+    for (i, row) in rows.iter().enumerate() {
+        let Json::Obj(m) = row else {
+            out.insert(format!("row[{i}]"), row.clone());
+            continue;
+        };
+        for (k, v) in m {
+            let name = if rows.len() == 1 {
+                k.clone()
+            } else {
+                format!("{k}[{i}]")
+            };
+            out.insert(name, v.clone());
+        }
+    }
+    out
+}
+
+/// Render a value for a finding line (compact JSON keeps strings quoted
+/// so `"4"` vs `4` mismatches are visible).
+fn show(v: &Json) -> String {
+    v.to_string_compact()
+}
+
+/// Diff two checkpoint files. Pure function of the file contents and
+/// the tolerance policy; never exits — the CLI layer owns that.
+pub fn diff_files(a: &Path, b: &Path, tol: &Tolerance) -> Result<DiffReport> {
+    let fa = load(a)?;
+    let fb = load(b)?;
+    let mut lines = Vec::new();
+    let mut differences = 0usize;
+
+    if fa.scenario != fb.scenario {
+        lines.push(format!(
+            "scenario mismatch: '{}' vs '{}' (cell ids are only \
+             comparable within one scenario)",
+            fa.scenario, fb.scenario
+        ));
+        differences += 1;
+    }
+
+    let ids: BTreeSet<&String> =
+        fa.cells.keys().chain(fb.cells.keys()).collect();
+    let mut cells_shared = 0usize;
+    for id in ids {
+        let (ra, rb) = match (fa.cells.get(id), fb.cells.get(id)) {
+            (Some(ra), Some(rb)) => (ra, rb),
+            (Some(_), None) => {
+                lines.push(format!("cell '{id}': only in {}", a.display()));
+                differences += 1;
+                continue;
+            }
+            (None, Some(_)) => {
+                lines.push(format!("cell '{id}': only in {}", b.display()));
+                differences += 1;
+                continue;
+            }
+            (None, None) => unreachable!(),
+        };
+        cells_shared += 1;
+        if ra.len() != rb.len() {
+            lines.push(format!(
+                "cell '{id}': {} rows vs {} rows",
+                ra.len(),
+                rb.len()
+            ));
+            differences += 1;
+            continue;
+        }
+        let ma = flatten(ra);
+        let mb = flatten(rb);
+        let fields: BTreeSet<&String> = ma.keys().chain(mb.keys()).collect();
+        for field in fields {
+            match (ma.get(field), mb.get(field)) {
+                (Some(va), Some(vb)) => match (va, vb) {
+                    (Json::Num(x), Json::Num(y)) => {
+                        if !tol.within(field, *x, *y) {
+                            lines.push(format!(
+                                "cell '{id}' {field}: {x} vs {y} \
+                                 (|d|={:.3e})",
+                                (x - y).abs()
+                            ));
+                            differences += 1;
+                        }
+                    }
+                    _ => {
+                        if va != vb {
+                            lines.push(format!(
+                                "cell '{id}' {field}: {} vs {}",
+                                show(va),
+                                show(vb)
+                            ));
+                            differences += 1;
+                        }
+                    }
+                },
+                (Some(_), None) => {
+                    lines.push(format!(
+                        "cell '{id}' {field}: missing in {}",
+                        b.display()
+                    ));
+                    differences += 1;
+                }
+                (None, Some(_)) => {
+                    lines.push(format!(
+                        "cell '{id}' {field}: missing in {}",
+                        a.display()
+                    ));
+                    differences += 1;
+                }
+                (None, None) => unreachable!(),
+            }
+        }
+    }
+
+    Ok(DiffReport { lines, cells_shared, differences })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn write_tmp(name: &str, body: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("lrt-diff-{}-{name}", std::process::id()));
+        std::fs::write(&p, body).unwrap();
+        p
+    }
+
+    const HEADER: &str = r#"{"sweep":"toy","options":{}}"#;
+
+    /// Baseline file under a per-test name (tests share one process, so
+    /// a shared path would race one test's cleanup against another's
+    /// read).
+    fn file_a(tag: &str) -> PathBuf {
+        write_tmp(
+            &format!("{tag}-a.jsonl"),
+            &format!(
+                "{HEADER}\n\
+                 {{\"idx\":0,\"cell\":\"r1\",\"rows\":[{{\"cell\":\"r1\",\
+                 \"ema\":0.5,\"writes\":100}}]}}\n\
+                 {{\"idx\":1,\"cell\":\"r4\",\"rows\":[{{\"cell\":\"r4\",\
+                 \"ema\":0.75,\"writes\":220}}]}}\n"
+            ),
+        )
+    }
+
+    #[test]
+    fn identical_files_have_no_differences() {
+        let a = file_a("ident");
+        let rep = diff_files(&a, &a, &Tolerance::default()).unwrap();
+        assert_eq!(rep.differences, 0, "{:?}", rep.lines);
+        assert_eq!(rep.cells_shared, 2);
+        std::fs::remove_file(&a).ok();
+    }
+
+    #[test]
+    fn numeric_drift_counts_until_tolerance_covers_it() {
+        let a = file_a("drift");
+        let b = write_tmp(
+            "b.jsonl",
+            &format!(
+                "{HEADER}\n\
+                 {{\"idx\":0,\"cell\":\"r1\",\"rows\":[{{\"cell\":\"r1\",\
+                 \"ema\":0.5002,\"writes\":100}}]}}\n\
+                 {{\"idx\":1,\"cell\":\"r4\",\"rows\":[{{\"cell\":\"r4\",\
+                 \"ema\":0.75,\"writes\":220}}]}}\n"
+            ),
+        );
+        // exact compare flags the drifted ema
+        let rep = diff_files(&a, &b, &Tolerance::default()).unwrap();
+        assert_eq!(rep.differences, 1, "{:?}", rep.lines);
+        assert!(rep.lines[0].contains("ema"), "{:?}", rep.lines);
+        // a wide default band covers it
+        let tol =
+            Tolerance { atol: 1e-3, rtol: 0.0, per_metric: BTreeMap::new() };
+        assert_eq!(diff_files(&a, &b, &tol).unwrap().differences, 0);
+        // a per-metric override covers it without loosening anything else
+        let tol = Tolerance {
+            atol: 0.0,
+            rtol: 0.0,
+            per_metric: Tolerance::parse_overrides("ema=0.001").unwrap(),
+        };
+        assert_eq!(diff_files(&a, &b, &tol).unwrap().differences, 0);
+        // ...and a too-tight override still flags
+        let tol = Tolerance {
+            atol: 0.0,
+            rtol: 0.0,
+            per_metric: Tolerance::parse_overrides("ema=0.00001").unwrap(),
+        };
+        assert_eq!(diff_files(&a, &b, &tol).unwrap().differences, 1);
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn added_and_missing_cells_and_fields_are_counted() {
+        let a = file_a("cells");
+        // r1 dropped, r9 added, r4 loses `writes` and gains `acc`
+        let b = write_tmp(
+            "c.jsonl",
+            &format!(
+                "{HEADER}\n\
+                 {{\"idx\":1,\"cell\":\"r4\",\"rows\":[{{\"cell\":\"r4\",\
+                 \"ema\":0.75,\"acc\":0.9}}]}}\n\
+                 {{\"idx\":2,\"cell\":\"r9\",\"rows\":[{{\"cell\":\"r9\",\
+                 \"ema\":0.8}}]}}\n"
+            ),
+        );
+        let rep = diff_files(&a, &b, &Tolerance::default()).unwrap();
+        // r1 only-in-a, r9 only-in-b, r4: writes missing + acc missing
+        assert_eq!(rep.differences, 4, "{:?}", rep.lines);
+        assert_eq!(rep.cells_shared, 1);
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn scenario_mismatch_and_bad_files_are_loud() {
+        let a = file_a("loud");
+        let b = write_tmp(
+            "d.jsonl",
+            "{\"sweep\":\"other\",\"options\":{}}\n",
+        );
+        let rep = diff_files(&a, &b, &Tolerance::default()).unwrap();
+        assert!(rep.differences >= 1);
+        assert!(rep.lines[0].contains("scenario mismatch"), "{:?}", rep.lines);
+
+        let no_header = write_tmp("e.jsonl", "{\"idx\":0}\n");
+        let err = diff_files(&a, &no_header, &Tolerance::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sweep"), "{err}");
+        assert!(
+            diff_files(&a, Path::new("/nonexistent/x.jsonl"), &Tolerance::default())
+                .is_err()
+        );
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+        std::fs::remove_file(&no_header).ok();
+    }
+
+    #[test]
+    fn tol_override_parser_rejects_garbage() {
+        assert!(Tolerance::parse_overrides("ema").is_err());
+        assert!(Tolerance::parse_overrides("ema=abc").is_err());
+        assert!(Tolerance::parse_overrides("ema=-1").is_err());
+        let m = Tolerance::parse_overrides("ema=0.1, writes=5").unwrap();
+        assert_eq!(m.get("ema"), Some(&0.1));
+        assert_eq!(m.get("writes"), Some(&5.0));
+        assert!(Tolerance::parse_overrides("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn multi_row_records_diff_per_row_but_match_bare_tol_names() {
+        let h = HEADER;
+        let a = write_tmp(
+            "f.jsonl",
+            &format!(
+                "{h}\n{{\"idx\":0,\"cell\":\"s\",\"rows\":\
+                 [{{\"ema\":0.5}},{{\"ema\":0.6}}]}}\n"
+            ),
+        );
+        let b = write_tmp(
+            "g.jsonl",
+            &format!(
+                "{h}\n{{\"idx\":0,\"cell\":\"s\",\"rows\":\
+                 [{{\"ema\":0.5}},{{\"ema\":0.61}}]}}\n"
+            ),
+        );
+        let rep = diff_files(&a, &b, &Tolerance::default()).unwrap();
+        assert_eq!(rep.differences, 1);
+        assert!(rep.lines[0].contains("ema[1]"), "{:?}", rep.lines);
+        // bare-name override applies to every row's instance
+        let tol = Tolerance {
+            atol: 0.0,
+            rtol: 0.0,
+            per_metric: Tolerance::parse_overrides("ema=0.02").unwrap(),
+        };
+        assert_eq!(diff_files(&a, &b, &tol).unwrap().differences, 0);
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+}

@@ -10,6 +10,7 @@
 //! Default workloads are CI-sized; `LRT_FULL=1` (recorded in the
 //! results-file header) switches to paper-scale sample counts.
 
+pub mod diff;
 pub mod registry;
 pub mod scenarios;
 

@@ -15,17 +15,23 @@
 //!   and quantized matmul hot-spots.
 //!
 //! Native-engine hot paths run on `tensor::kernels`: cache-blocked
-//! (`TILE_J`/`TILE_K`) matmul / matmul_transb / matmul_atb kernels with
-//! ISA-dispatched inner loops (`LRT_KERNEL_ISA=scalar|unrolled|native`;
-//! native = runtime-detected AVX2/NEON, bit-identical to the portable
-//! unrolled tier), plus one shared **persistent parked worker pool**
+//! matmul / matmul_transb / matmul_atb kernels (tile sizes from a
+//! committed per-arch table, overridable via `LRT_TILE_J`/`LRT_TILE_K`
+//! — results-invariant, perf-only) with ISA-dispatched inner loops
+//! (`LRT_KERNEL_ISA=scalar|unrolled|native|fma`; native =
+//! runtime-detected AVX2/NEON, bit-identical to the portable unrolled
+//! tier; fma = opt-in fused multiply-add, fastest but
+//! tolerance-contracted against the scalar anchor rather than
+//! bit-exact), plus one shared **persistent parked worker pool**
 //! (`tensor::pool`; `LRT_KERNEL_THREADS` workers, default
 //! `available_parallelism`, started lazily on the first real fan-out
 //! and parked on condvars between calls) drawn on by the kernels,
 //! `experiments::parallel_map` sweep points, fleet devices, and batched
 //! inference (`NativeDevice::step_batch`) without oversubscription —
 //! fan-outs install fair-share affinity hints so consumers split the
-//! budget evenly. The naive `Mat` methods remain the reference;
+//! budget evenly, and budget-denied seats queue on a bounded backlog
+//! that sibling releases backfill (work stealing; scheduling-only,
+//! never numerics). The naive `Mat` methods remain the reference;
 //! `tests/kernel_conformance.rs` pins every (kernel x tier x
 //! thread-count x shape-class) cell to <= 1e-5 of it (bit-exact where
 //! the contract says so), `tests/kernel_parity.rs` pins the default

@@ -9,6 +9,9 @@
 //!   resume <scenario>          continue a killed sweep from its file
 //!   results                    aggregate index of results/*.jsonl
 //!                              (scenario, cells done/total, mtime)
+//!   diff <a.jsonl> <b.jsonl>   cell-keyed comparison of two sweeps
+//!                              (--atol/--rtol/--tol name=abs; exits
+//!                              non-zero on any difference)
 //!   run <scenario> --help      axes, options, and notes for one scenario
 //!   run <scenario> --dry-run   list the cells without running them
 //!   info                       PJRT platform + artifact inventory
@@ -48,6 +51,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "results" => results(&args),
+        "diff" => diff(&args),
         "run" | "resume" => {
             let Some(name) = args.positional.first().cloned() else {
                 bail!(
@@ -266,6 +270,51 @@ fn results(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `lrt-nvm diff <a.jsonl> <b.jsonl> [--rtol R] [--atol A]
+/// [--tol name=abs,...]` — cell-keyed comparison of two sweep
+/// checkpoint files; exits non-zero when any difference survives the
+/// tolerance policy, so CI can gate on it directly.
+fn diff(args: &Args) -> Result<()> {
+    let [a, b] = args.positional.as_slice() else {
+        bail!(
+            "usage: lrt-nvm diff <a.jsonl> <b.jsonl> [--rtol R] \
+             [--atol A] [--tol metric=abs,metric=abs]"
+        );
+    };
+    let tol = exp::diff::Tolerance {
+        atol: args.f64_opt("atol", 0.0),
+        rtol: args.f64_opt("rtol", 0.0),
+        per_metric: match args.options.get("tol") {
+            Some(spec) => exp::diff::Tolerance::parse_overrides(spec)?,
+            None => Default::default(),
+        },
+    };
+    if tol.atol < 0.0 || tol.rtol < 0.0 {
+        bail!("--atol/--rtol must be >= 0");
+    }
+    let a = PathBuf::from(a);
+    let b = PathBuf::from(b);
+    let rep = exp::diff::diff_files(&a, &b, &tol)?;
+    for line in &rep.lines {
+        println!("{line}");
+    }
+    if rep.differences == 0 {
+        println!(
+            "no differences ({} shared cells, atol={} rtol={})",
+            rep.cells_shared, tol.atol, tol.rtol
+        );
+        Ok(())
+    } else {
+        bail!(
+            "{} difference(s) between {} and {} ({} shared cells)",
+            rep.differences,
+            a.display(),
+            b.display(),
+            rep.cells_shared
+        );
+    }
+}
+
 fn list(args: &Args) {
     let mut t = Table::new(vec!["scenario", "cells", "description"]);
     for sc in exp::all() {
@@ -334,6 +383,10 @@ fn print_help() {
                               run byte-for-byte\n\
            results            aggregate index of results/*.jsonl: scenario,\n\
                               cells done/total, last modified (--dir DIR)\n\
+           diff <a> <b>       compare two sweep checkpoint files cell-by-\n\
+                              cell; numeric fields within --atol/--rtol (or\n\
+                              per-metric --tol ema=0.01,...); exits non-zero\n\
+                              on any difference, so it gates CI directly\n\
            info               PJRT platform + compiled artifact inventory\n\
            adapt              one online-adaptation run (--scheme inference|\n\
                               bias|sgd|lrt|lrt-unbiased, --env control|shift|\n\

@@ -7,10 +7,10 @@
 //! fleet devices, sweep points) routes through this layer instead:
 //!
 //! - `matmul` / `matmul_transb` / `matmul_atb` — tiled over the B operand
-//!   (TILE_J / TILE_K) so the streamed block stays in L1/L2, with
+//!   ([`tile_j`] / [`tile_k`]) so the streamed block stays in L1/L2, with
 //!   row-partitioned threading and ISA-dispatched inner loops;
 //! - an **ISA tier** for the dot/axpy cores, selected once at first use
-//!   and overridable via `LRT_KERNEL_ISA=scalar|unrolled|native`:
+//!   and overridable via `LRT_KERNEL_ISA=scalar|unrolled|native|fma`:
 //!   - `scalar` — sequential reference loops, bit-identical to the naive
 //!     `Mat` ops (the debugging tier);
 //!   - `unrolled` — portable 8-lane (4-lane strided) multi-accumulator
@@ -20,6 +20,15 @@
 //!     unrolled tier's lane assignment and reduction tree exactly and
 //!     use mul-then-add (no FMA), so the native tier is **bit-identical
 //!     to the unrolled tier** — switching machines never moves numbers;
+//!   - `fma` — fused-multiply-add intrinsics (AVX2+FMA on x86_64, NEON
+//!     `fmla` on aarch64), runtime-detected and **never auto-selected**:
+//!     fusing mul+add into one rounding deliberately changes f32 bits,
+//!     so the tier is opt-in only. Results stay within the documented
+//!     tolerance of the scalar anchor (`tests/kernel_conformance.rs`,
+//!     `tests/golden_trainer.rs`), and every within-tier invariant
+//!     (thread count, workspace reuse, pool regime) remains bitwise.
+//!     Requesting `fma` on hardware without it falls back loudly to the
+//!     best bit-exact tier;
 //! - a global *thread budget* shared by every consumer: `run_scoped`
 //!   (the `experiments::parallel_map` engine, also used by the fleet and
 //!   batched inference) and the kernels draw workers from one
@@ -41,26 +50,34 @@
 //!   overhead at all — below `PAR_MIN_WORK` the pool isn't even woken.
 //!
 //! Numerics: `matmul` and `matmul_atb` accumulate in exactly the naive
-//! reference order under **every** ISA tier and thread count (tiling only
-//! repartitions the loop; the inner axpy is element-wise, which no tier
-//! reassociates) and are bit-identical to the `Mat` methods.
+//! reference order under the scalar/unrolled/native tiers and every
+//! thread count (tiling only repartitions the loop; the inner axpy is
+//! element-wise, which those tiers never reassociate) and are
+//! bit-identical to the `Mat` methods there. The `fma` tier fuses the
+//! axpy's multiply and add into one rounding, so it trades that
+//! bit-identity for speed and stays within tolerance instead.
 //! `matmul_transb` / `matvec` and the strided helpers reduce across
-//! accumulator lanes in the unrolled/native tiers, which reorders f32
-//! additions; `tests/kernel_conformance.rs` pins every (kernel x tier x
-//! thread-count x shape-class) cell to <= 1e-5 of the naive reference,
-//! the scalar tier to bit-equality with it, and native to bit-equality
-//! with unrolled. Results never depend on the thread count.
+//! accumulator lanes in the unrolled/native/fma tiers, which reorders
+//! f32 additions; `tests/kernel_conformance.rs` pins every (kernel x
+//! tier x thread-count x shape-class) cell to <= 1e-5 of the naive
+//! reference, the scalar tier to bit-equality with it, and native to
+//! bit-equality with unrolled. Results never depend on the thread count
+//! or on the tile sizes under **any** tier — partitioning and blocking
+//! never change per-row arithmetic.
 //!
 //! Tuning knobs: `LRT_KERNEL_THREADS` (pool size, set 1 to force the
-//! sequential path), `LRT_KERNEL_ISA` (dispatch tier), `TILE_J`/`TILE_K`
-//! (block sizes), `PAR_MIN_WORK` (minimum per-thread flops before the
-//! pool is consulted). Tests and benches switch both knobs in-process
-//! with [`with_overrides`]; raising the thread budget grows the parked
-//! pool lazily, lowering it just leaves the surplus workers parked.
-//! `pool::shutdown` joins every worker (the next fan-out restarts the
-//! pool); `tests/pool_lifecycle.rs` pins lazy start, parking, panic
-//! recovery, and shutdown, and `tests/pool_fairness.rs` pins ordering
-//! under interleaved fan-outs from several dispatching threads.
+//! sequential path), `LRT_KERNEL_ISA` (dispatch tier), `LRT_TILE_J` /
+//! `LRT_TILE_K` (block sizes, defaulting from the committed per-arch
+//! [`default_tiles`] table), `LRT_PAR_MIN_WORK` (minimum per-thread
+//! flops before the pool is consulted). Tests and benches switch the
+//! knobs in-process with [`with_overrides`] / [`with_overrides_full`];
+//! raising the thread budget grows the parked pool lazily, lowering it
+//! just leaves the surplus workers parked. `pool::shutdown` joins every
+//! worker (the next fan-out restarts the pool); `tests/pool_lifecycle.rs`
+//! pins lazy start, parking, panic recovery, and shutdown, and
+//! `tests/pool_fairness.rs` pins ordering under interleaved fan-outs
+//! from several dispatching threads plus the work-stealing backfill of
+//! budget-denied seats (see [`fan_out`]'s doc).
 //!
 //! Allocation contract: the `_into` forms (`matmul_into`,
 //! `matmul_transb_into`, `matmul_atb_into`, `matvec_into`) are the
@@ -82,15 +99,121 @@ use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Rows of the transposed-B operand processed per block (TILE_J rows of
-/// `b` stay hot across consecutive rows of `a`).
-pub const TILE_J: usize = 16;
-/// Reduction-dimension block (TILE_K rows of `b` stay hot across the
-/// whole row block in `matmul` / `matmul_atb`).
-pub const TILE_K: usize = 128;
-/// Minimum useful flops per worker thread; below this the pool is not
-/// even consulted.
-pub const PAR_MIN_WORK: usize = 1 << 15;
+// ---------------------------------------------------------------------
+// Tile / gating knobs: runtime-resolved, env-overridable
+// ---------------------------------------------------------------------
+
+/// One row of the committed per-arch tuning table: the tile sizes the
+/// blocked matmuls use and the parallelism-gating threshold. Tiles are
+/// **results-invariant** — they only repartition loops, never per-row
+/// arithmetic — so retuning them can never move experiment numbers
+/// (`tests/kernel_conformance.rs` pins this across override grids).
+#[derive(Debug, Clone, Copy)]
+pub struct TileConfig {
+    /// Rows of the transposed-B operand processed per block (`tile_j`
+    /// rows of `b` stay hot across consecutive rows of `a`).
+    pub tile_j: usize,
+    /// Reduction-dimension block (`tile_k` rows of `b` stay hot across
+    /// the whole row block in `matmul` / `matmul_atb`).
+    pub tile_k: usize,
+    /// Minimum useful flops per worker thread; below this the pool is
+    /// not even consulted.
+    pub par_min_work: usize,
+}
+
+/// The committed per-arch default table. Regenerate it from the
+/// `hotpath_tile` sweep: `cargo bench --bench perf_hotpath` emits one
+/// `BENCH_JSON {"bench":"hotpath_tile",...}` line per (tier, tile_j,
+/// tile_k) grid point — pick the fastest cell per arch and update the
+/// rows below. The current values are the pre-autotune defaults carried
+/// since PR 1 (no toolchain-equipped runner has recorded a sweep yet).
+pub fn default_tiles() -> TileConfig {
+    match std::env::consts::ARCH {
+        "x86_64" => {
+            TileConfig { tile_j: 16, tile_k: 128, par_min_work: 1 << 15 }
+        }
+        "aarch64" => {
+            TileConfig { tile_j: 16, tile_k: 128, par_min_work: 1 << 15 }
+        }
+        _ => TileConfig { tile_j: 16, tile_k: 128, par_min_work: 1 << 15 },
+    }
+}
+
+/// Parse one `LRT_TILE_J` / `LRT_TILE_K` / `LRT_PAR_MIN_WORK` value.
+/// Pure (no env access) so `tests/isa_tile_env.rs` can exercise every
+/// failure message; `max` bounds the accepted range (tiles cap at 4096,
+/// the work gate at 2^30).
+pub fn parse_tile_env(
+    name: &str,
+    raw: &str,
+    max: usize,
+) -> Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(v) if (1..=max).contains(&v) => Ok(v),
+        Ok(v) => Err(format!(
+            "{name}={v} is out of range (must be 1..={max}); unset {name} \
+             to use the committed per-arch table (see README \
+             \"Performance tuning\")"
+        )),
+        Err(_) => Err(format!(
+            "{name}='{raw}' is not a positive integer; unset it or pass \
+             e.g. {name}=16 (see README \"Performance tuning\")"
+        )),
+    }
+}
+
+/// Active tile/gating values; 0 = not yet resolved (resolution reads
+/// the env once, then the value is a relaxed atomic load — hot-path
+/// cheap, and overridable in-process via [`with_overrides_full`]).
+static TILE_J_ACTIVE: AtomicUsize = AtomicUsize::new(0);
+static TILE_K_ACTIVE: AtomicUsize = AtomicUsize::new(0);
+static PAR_MIN_WORK_ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_knob(
+    cache: &AtomicUsize,
+    env: &str,
+    max: usize,
+    default: usize,
+) -> usize {
+    let c = cache.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let v = match std::env::var(env).ok() {
+        // A bad explicit override fails loudly and actionably rather
+        // than silently running a different (results-identical but
+        // differently-performing) configuration than the user asked for.
+        Some(raw) => parse_tile_env(env, &raw, max).unwrap_or_else(|msg| {
+            panic!("{msg}");
+        }),
+        None => default,
+    };
+    cache.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Active `tile_j` (transb block width): `LRT_TILE_J`, else the
+/// committed per-arch table.
+pub fn tile_j() -> usize {
+    resolve_knob(&TILE_J_ACTIVE, "LRT_TILE_J", 4096, default_tiles().tile_j)
+}
+
+/// Active `tile_k` (reduction block depth): `LRT_TILE_K`, else the
+/// committed per-arch table.
+pub fn tile_k() -> usize {
+    resolve_knob(&TILE_K_ACTIVE, "LRT_TILE_K", 4096, default_tiles().tile_k)
+}
+
+/// Active parallelism gate (flops per worker below which the pool is
+/// not consulted): `LRT_PAR_MIN_WORK`, else the committed table.
+pub fn par_min_work() -> usize {
+    resolve_knob(
+        &PAR_MIN_WORK_ACTIVE,
+        "LRT_PAR_MIN_WORK",
+        1 << 30,
+        default_tiles().par_min_work,
+    )
+}
 
 // ---------------------------------------------------------------------
 // ISA dispatch tier
@@ -109,6 +232,14 @@ pub enum Isa {
     /// Same lane structure as `Unrolled`, mul-then-add (no FMA), so
     /// bit-identical to it; falls back to `Unrolled` where unsupported.
     Native,
+    /// Fused-multiply-add intrinsics (AVX2+FMA / NEON `fmla`): one
+    /// rounding per multiply-add instead of two, so the fastest tier —
+    /// and the only one whose results are NOT bit-identical to the
+    /// others. Never auto-selected; opt in with `LRT_KERNEL_ISA=fma`.
+    /// Within-tier invariants (thread count, tiles, workspace reuse,
+    /// pool regime) stay bitwise; cross-tier agreement is tolerance-
+    /// based against the scalar anchor.
+    Fma,
 }
 
 impl Isa {
@@ -117,7 +248,15 @@ impl Isa {
             Isa::Scalar => "scalar",
             Isa::Unrolled => "unrolled",
             Isa::Native => "native",
+            Isa::Fma => "fma",
         }
+    }
+
+    /// True for the tiers whose results are bit-identical to today's
+    /// cross-machine baseline (everything except `Fma`). Test suites
+    /// branch on this to pick bitwise vs tolerance assertions.
+    pub fn bit_exact(self) -> bool {
+        self != Isa::Fma
     }
 }
 
@@ -126,6 +265,7 @@ fn isa_code(i: Isa) -> usize {
         Isa::Scalar => 1,
         Isa::Unrolled => 2,
         Isa::Native => 3,
+        Isa::Fma => 4,
     }
 }
 
@@ -133,6 +273,7 @@ fn isa_from_code(c: usize) -> Isa {
     match c {
         1 => Isa::Scalar,
         2 => Isa::Unrolled,
+        4 => Isa::Fma,
         _ => Isa::Native,
     }
 }
@@ -155,12 +296,36 @@ pub fn native_available() -> bool {
     detect()
 }
 
+/// True when this build+machine can run the `Fma` tier: AVX2+FMA on
+/// x86_64 (both CPUID bits — Haswell and later), NEON on aarch64
+/// (`fmla` is baseline NEON, so detection mirrors the native tier).
+pub fn fma_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    fn detect() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(target_arch = "aarch64")]
+    fn detect() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn detect() -> bool {
+        false
+    }
+    detect()
+}
+
 /// Every tier that can actually run on this machine, in ascending
-/// sophistication (the conformance/bench enumeration order).
+/// sophistication (the conformance/bench enumeration order). `Fma`
+/// rides last: runnable wherever detected, but never the default.
 pub fn available_isas() -> Vec<Isa> {
     let mut v = vec![Isa::Scalar, Isa::Unrolled];
     if native_available() {
         v.push(Isa::Native);
+    }
+    if fma_available() {
+        v.push(Isa::Fma);
     }
     v
 }
@@ -169,9 +334,10 @@ pub fn available_isas() -> Vec<Isa> {
 static ISA: AtomicUsize = AtomicUsize::new(0);
 
 /// The active dispatch tier, resolved once at first kernel use (pool
-/// init): `LRT_KERNEL_ISA=scalar|unrolled|native` wins, else the best
-/// detected tier. A `native` request on a machine without AVX2/NEON
-/// degrades to `unrolled`.
+/// init): `LRT_KERNEL_ISA=scalar|unrolled|native|fma` wins, else the
+/// best detected **bit-exact** tier (`fma` is never auto-selected — it
+/// changes numerics). A `native`/`fma` request on a machine without the
+/// hardware degrades loudly via [`effective_isa`].
 pub fn isa() -> Isa {
     let c = ISA.load(Ordering::Relaxed);
     if c != 0 {
@@ -180,6 +346,39 @@ pub fn isa() -> Isa {
     let resolved = resolve_isa();
     ISA.store(isa_code(resolved), Ordering::Relaxed);
     resolved
+}
+
+/// Pure `LRT_KERNEL_ISA` value → requested tier mapping (`None` =
+/// unrecognized). No env access or detection, so `tests/isa_tile_env.rs`
+/// can pin the parse table.
+pub fn parse_isa_env(raw: &str) -> Option<Isa> {
+    match raw {
+        "scalar" => Some(Isa::Scalar),
+        "unrolled" => Some(Isa::Unrolled),
+        "native" => Some(Isa::Native),
+        "fma" => Some(Isa::Fma),
+        _ => None,
+    }
+}
+
+/// Degrade a requested tier to what this machine can actually run:
+/// `native` without AVX2/NEON becomes `unrolled`; `fma` without FMA
+/// hardware becomes the best **bit-exact** tier (never panics, never
+/// silently keeps the request). Callers that took the request from the
+/// environment print the degradation (see [`isa`]); in-process override
+/// scopes degrade silently, mirroring the native tier's behavior.
+pub fn effective_isa(pick: Isa) -> Isa {
+    match pick {
+        Isa::Native if !native_available() => Isa::Unrolled,
+        Isa::Fma if !fma_available() => {
+            if native_available() {
+                Isa::Native
+            } else {
+                Isa::Unrolled
+            }
+        }
+        other => other,
+    }
 }
 
 fn resolve_isa() -> Isa {
@@ -191,23 +390,28 @@ fn resolve_isa() -> Isa {
         }
     };
     let pick = match std::env::var("LRT_KERNEL_ISA").ok().as_deref() {
-        Some("scalar") => Isa::Scalar,
-        Some("unrolled") => Isa::Unrolled,
-        Some("native") => Isa::Native,
-        Some(other) => {
+        Some(raw) => parse_isa_env(raw).unwrap_or_else(|| {
             eprintln!(
-                "LRT_KERNEL_ISA='{other}' is not scalar|unrolled|native; \
+                "LRT_KERNEL_ISA='{raw}' is not scalar|unrolled|native|fma; \
                  autodetecting"
             );
             detect()
-        }
+        }),
         None => detect(),
     };
-    if pick == Isa::Native && !native_available() {
-        Isa::Unrolled
-    } else {
-        pick
+    let effective = effective_isa(pick);
+    if effective != pick {
+        // Loud fallback, not a panic and not a silent swap: the run
+        // proceeds on deterministic bit-exact numerics, and the log says
+        // so (satisfying "fma on non-FMA hardware falls back loudly").
+        eprintln!(
+            "LRT_KERNEL_ISA={} requested but this machine lacks the \
+             hardware; falling back to the {} tier",
+            pick.name(),
+            effective.name()
+        );
     }
+    effective
 }
 
 /// Serializes [`with_overrides`] scopes: the overrides are process-
@@ -217,36 +421,61 @@ static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
 /// Run `f` with the dispatch tier and/or pool size overridden — the
 /// test/bench hook behind the conformance matrix and the per-tier bench
 /// tables. Overrides are process-global (worker threads must see them),
-/// so scopes are serialized on an internal lock; do not nest. A `Native`
-/// override on a machine without AVX2/NEON degrades to `Unrolled`.
+/// so scopes are serialized on an internal lock; do not nest (including
+/// inside [`with_overrides_full`] — both take the same non-reentrant
+/// lock). A `Native`/`Fma` override on a machine without the hardware
+/// degrades via [`effective_isa`].
 pub fn with_overrides<T>(
     isa_override: Option<Isa>,
     threads: Option<usize>,
+    f: impl FnOnce() -> T,
+) -> T {
+    with_overrides_full(isa_override, threads, None, None, f)
+}
+
+/// [`with_overrides`] plus tile overrides: the hook behind the
+/// `hotpath_tile` autotune sweep and the tile-invariance conformance
+/// tests. `None` leaves a knob at its current (env-or-table) value.
+pub fn with_overrides_full<T>(
+    isa_override: Option<Isa>,
+    threads: Option<usize>,
+    tile_j_override: Option<usize>,
+    tile_k_override: Option<usize>,
     f: impl FnOnce() -> T,
 ) -> T {
     let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     struct Restore {
         isa: usize,
         threads: usize,
+        tile_j: usize,
+        tile_k: usize,
     }
     impl Drop for Restore {
         fn drop(&mut self) {
             ISA.store(self.isa, Ordering::Relaxed);
             THREADS.store(self.threads, Ordering::Relaxed);
+            TILE_J_ACTIVE.store(self.tile_j, Ordering::Relaxed);
+            TILE_K_ACTIVE.store(self.tile_k, Ordering::Relaxed);
         }
     }
-    // Resolve both knobs first so the restore state is concrete.
-    let _restore = Restore { isa: isa_code(isa()), threads: max_threads() };
+    // Resolve every knob first so the restore state is concrete.
+    let _restore = Restore {
+        isa: isa_code(isa()),
+        threads: max_threads(),
+        tile_j: tile_j(),
+        tile_k: tile_k(),
+    };
     if let Some(i) = isa_override {
-        let i = if i == Isa::Native && !native_available() {
-            Isa::Unrolled
-        } else {
-            i
-        };
-        ISA.store(isa_code(i), Ordering::Relaxed);
+        ISA.store(isa_code(effective_isa(i)), Ordering::Relaxed);
     }
     if let Some(n) = threads {
         THREADS.store(n.max(1), Ordering::Relaxed);
+    }
+    if let Some(j) = tile_j_override {
+        TILE_J_ACTIVE.store(j.max(1), Ordering::Relaxed);
+    }
+    if let Some(k) = tile_k_override {
+        TILE_K_ACTIVE.store(k.max(1), Ordering::Relaxed);
     }
     f()
 }
@@ -331,23 +560,28 @@ pub fn affinity(extra_workers: usize) -> AffinityGuard {
 /// Per-layer affinity hint: how many extra pool workers a kernel pass
 /// of `flops` multiply-adds warrants (0 = not worth a spawn).
 pub fn suggested_workers(flops: usize) -> usize {
-    (flops / PAR_MIN_WORK).min(max_threads().saturating_sub(1))
+    (flops / par_min_work()).min(max_threads().saturating_sub(1))
 }
 
-/// Try to take up to `want` extra worker tokens; returns how many were
-/// granted (possibly 0 when outer parallelism holds the budget or the
-/// thread's affinity hint says to stay sequential).
-fn acquire(want: usize) -> usize {
+/// Try to take up to `want` extra worker tokens; returns `(granted,
+/// denied)`. `granted` tokens were taken from the budget; `denied`
+/// seats were refused because sibling dispatchers hold the budget right
+/// now — those are the work-stealing candidates ([`fan_out`] queues
+/// them on the pool backlog, and workers whose dispatchers finish first
+/// backfill them instead of parking). An affinity hint of 0 (or a
+/// 1-thread pool) yields `(0, 0)`: the caller stays purely sequential
+/// and the pool is never consulted, exactly as before.
+fn acquire(want: usize) -> (usize, usize) {
     let want = want.min(affinity_cap());
     if want == 0 {
-        return 0;
+        return (0, 0);
     }
     let cap = max_threads();
     loop {
         let used = IN_USE.load(Ordering::Relaxed);
         let take = want.min(cap.saturating_sub(used));
         if take == 0 {
-            return 0;
+            return (0, want);
         }
         if IN_USE
             .compare_exchange(
@@ -358,12 +592,54 @@ fn acquire(want: usize) -> usize {
             )
             .is_ok()
         {
-            return take;
+            return (take, want - take);
         }
     }
 }
 
-fn release(n: usize) {
+/// Claim a single budget token for the pool's steal path. Raw capacity
+/// check only — no affinity narrowing (a stolen seat executes on a pool
+/// worker for a dispatcher whose own hints were applied at `acquire`
+/// time, so the claimer's thread-local hint is irrelevant). Atomic-only,
+/// so safe to call while holding the pool lock.
+pub(crate) fn try_take_token() -> bool {
+    let cap = max_threads();
+    loop {
+        let used = IN_USE.load(Ordering::Relaxed);
+        if used >= cap {
+            return false;
+        }
+        if IN_USE
+            .compare_exchange(
+                used,
+                used + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            )
+            .is_ok()
+        {
+            return true;
+        }
+    }
+}
+
+/// Return `n` tokens and, if sibling fan-outs have queued backlog
+/// seats, immediately try to convert the freed capacity into stolen
+/// work on parked workers. The backfill check is one atomic load when
+/// the backlog is empty (the common case), so the hot release path
+/// stays cheap. Must not be called while holding the pool lock —
+/// [`release_raw`] exists for that.
+pub(crate) fn release(n: usize) {
+    if n > 0 {
+        IN_USE.fetch_sub(n, Ordering::Relaxed);
+        pool::backfill_idle();
+    }
+}
+
+/// Token return without the backfill hook: for call sites that already
+/// hold the pool lock (the worker steal path) or that are immediately
+/// followed by an explicit backfill.
+pub(crate) fn release_raw(n: usize) {
     if n > 0 {
         IN_USE.fetch_sub(n, Ordering::Relaxed);
     }
@@ -387,39 +663,69 @@ unsafe fn job_entry<W: Fn() + Sync>(p: *const ()) {
     (*(p as *const W))();
 }
 
-/// Run `work` on the caller plus up to `extra` parked pool workers and
+/// Run `work` on the caller plus up to `granted` parked pool workers,
+/// queue `denied` budget-refused seats for work-stealing backfill, and
 /// block until every dispatched copy returned — the one primitive both
 /// `run_scoped` and `par_row_blocks` dispatch through.
 ///
 /// Submission is allocation-free: the pool is grown lazily (an atomic
 /// check in steady state), the job is a `Copy` of two stack pointers
 /// written into retained per-worker slots, and the completion latch is
-/// futex-backed stack state. When fewer than `extra` workers are
+/// futex-backed stack state. When fewer than `granted` workers are
 /// parked (the rest busy on a sibling dispatch), the unfilled seats
 /// are forfeited and the caller simply does a larger share itself.
 ///
-/// Panic contract: a panic in any copy of `work` (worker or caller) is
-/// propagated to the caller, but only after every copy finished — no
-/// worker can outlive the stack borrows inside `work` (the latch wait
-/// sits in a drop guard, so it runs even while unwinding).
-fn fan_out<W: Fn() + Sync>(extra: usize, work: &W) {
+/// Work-stealing: `denied` seats — ones [`acquire`] refused because a
+/// sibling fan-out held the budget — are enqueued token-less on the
+/// pool backlog ([`pool::publish`]). When a sibling releases tokens
+/// (its guard drops, or its workers finish), parked capacity claims a
+/// backlog seat, takes a fresh token, and joins this fan-out's ticket
+/// loop mid-flight instead of idling. Because every consumer claims
+/// work by dynamic tickets over a partition fixed up front, a seat that
+/// is backfilled late (or never) changes which thread computes a block,
+/// never what is computed — results stay bit-identical. On exit the
+/// drop guard revokes whatever was never claimed and forfeits it on the
+/// latch, so the seat ledger always closes: every seat ends exactly one
+/// of published, stolen, revoked, or forfeited.
+///
+/// Panic contract: a panic in any copy of `work` (worker, stolen seat,
+/// or caller) is propagated to the caller, but only after every copy
+/// finished — no worker can outlive the stack borrows inside `work`
+/// (the revoke + latch wait sit in a drop guard, so they run even while
+/// unwinding).
+fn fan_out<W: Fn() + Sync>(granted: usize, denied: usize, work: &W) {
     pool::ensure(max_threads().saturating_sub(1));
-    let latch = pool::Latch::new(extra);
+    let latch = pool::Latch::new(granted + denied);
     let job = pool::Job {
         run: job_entry::<W>,
         ctx: work as *const W as *const (),
         latch: &latch as *const pool::Latch,
+        owns_token: false,
     };
-    let published = pool::publish(extra, job);
-    latch.forfeit(extra - published);
+    let (published, queued) = pool::publish(granted, denied, job);
+    // Seats the budget granted but no parked worker took, plus denied
+    // seats the backlog had no room for, die here exactly as before.
+    latch.forfeit((granted - published) + (denied - queued));
+    if queued > 0 {
+        // Cover the race where the blocking sibling released its tokens
+        // between our `acquire` and the enqueue above — without this
+        // kick the seats would only be claimed by the *next* release.
+        pool::backfill_idle();
+    }
     {
-        struct WaitOnDrop<'a>(&'a pool::Latch);
-        impl Drop for WaitOnDrop<'_> {
+        /// Runs even while unwinding: pull still-unclaimed seats off
+        /// the backlog (a worker that already claimed one is inside
+        /// `work` and holds a latch seat, which `wait` covers), then
+        /// block until every live copy of `work` returned.
+        struct FinishOnDrop<'a>(&'a pool::Latch);
+        impl Drop for FinishOnDrop<'_> {
             fn drop(&mut self) {
+                let revoked = pool::revoke(self.0 as *const pool::Latch);
+                self.0.forfeit(revoked);
                 self.0.wait();
             }
         }
-        let _wait = WaitOnDrop(&latch);
+        let _finish = FinishOnDrop(&latch);
         work();
     }
     if let Some(payload) = latch.take_panic() {
@@ -442,18 +748,20 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let extra = acquire((n - 1).min(max_threads().saturating_sub(1)));
-    if extra == 0 {
+    let (granted, denied) =
+        acquire((n - 1).min(max_threads().saturating_sub(1)));
+    if granted + denied == 0 {
         return (0..n).map(f).collect();
     }
-    let _guard = BudgetGuard(extra);
-    // Fair share per worker: with w workers splitting the pool, each
-    // one's inner kernels should take at most cap/w - 1 extra tokens.
-    // Min with the caller's own hint so a nested fan-out cannot widen
-    // what an enclosing scope already narrowed (the affinity guard
-    // installed inside `work` restores each pool worker's cap when the
-    // job ends, so persistent workers never leak a hint across jobs).
-    let share = (max_threads() / (extra + 1))
+    let _guard = BudgetGuard(granted);
+    // Fair share per seat: with w seats splitting the pool (granted
+    // workers, backfillable denied seats, and the caller), each one's
+    // inner kernels should take at most cap/w - 1 extra tokens. Min
+    // with the caller's own hint so a nested fan-out cannot widen what
+    // an enclosing scope already narrowed (the affinity guard installed
+    // inside `work` restores each pool worker's cap when the job ends,
+    // so persistent workers never leak a hint across jobs).
+    let share = (max_threads() / (granted + denied + 1))
         .saturating_sub(1)
         .min(affinity_cap());
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -471,7 +779,7 @@ where
                 slots.lock().unwrap()[i] = Some(v);
             }
         };
-        fan_out(extra, &work);
+        fan_out(granted, denied, &work);
     }
     out.into_iter().map(|v| v.unwrap()).collect()
 }
@@ -500,21 +808,30 @@ where
     let min_rows = min_rows.max(1);
     let max_extra =
         (rows / min_rows).saturating_sub(1).min(max_threads().saturating_sub(1));
-    let mut extra = acquire(max_extra);
-    if extra == 0 {
+    let (mut granted, mut denied) = acquire(max_extra);
+    if granted + denied == 0 {
         f(0, &mut out.data);
         return;
     }
-    let workers = extra + 1;
+    // Partition for every seat — granted workers AND backfillable
+    // denied seats — so a stolen seat has blocks to claim. Partition
+    // shape never changes what is computed (per-row arithmetic is
+    // partition-invariant), only who computes it.
+    let workers = granted + denied + 1;
     let rows_per = rows.div_ceil(workers);
     let nblocks = rows.div_ceil(rows_per);
-    // Ragged case: fewer blocks than granted tokens — return the
-    // surplus immediately so sibling dispatchers can use it.
-    if nblocks - 1 < extra {
-        release(extra - (nblocks - 1));
-        extra = nblocks - 1;
+    // Ragged case: fewer blocks than seats — drop backfill seats first
+    // (they hold no tokens), then return surplus tokens immediately so
+    // sibling dispatchers can use them.
+    if nblocks - 1 < granted + denied {
+        let cut = granted + denied - (nblocks - 1);
+        let cut_denied = cut.min(denied);
+        denied -= cut_denied;
+        let cut_granted = cut - cut_denied;
+        release(cut_granted);
+        granted -= cut_granted;
     }
-    let _guard = BudgetGuard(extra);
+    let _guard = BudgetGuard(granted);
     let base = SendPtr(out.data.as_mut_ptr());
     let ticket = AtomicUsize::new(0);
     let work = || loop {
@@ -535,7 +852,7 @@ where
         };
         f(row0, block);
     };
-    fan_out(extra, &work);
+    fan_out(granted, denied, &work);
 }
 
 // ---------------------------------------------------------------------
@@ -572,6 +889,7 @@ fn dot_dispatch(tier: Isa, a: &[f32], b: &[f32]) -> f32 {
         Isa::Scalar => super::dot(a, b),
         Isa::Unrolled => dot_unrolled(a, b),
         Isa::Native => dot_native(a, b),
+        Isa::Fma => dot_fma(a, b),
     }
 }
 
@@ -614,6 +932,9 @@ fn axpy_dispatch(tier: Isa, alpha: f32, x: &[f32], out: &mut [f32]) {
         Isa::Scalar => super::axpy(alpha, x, out),
         Isa::Unrolled => axpy_unrolled(alpha, x, out),
         Isa::Native => axpy_native(alpha, x, out),
+        // the one tier where even element-wise axpy moves bits: each
+        // out[i] += alpha*x[i] becomes a single fused rounding
+        Isa::Fma => axpy_fma(alpha, x, out),
     }
 }
 
@@ -694,6 +1015,7 @@ pub fn dot_stride(src: &[f32], stride: usize, offset: usize, v: &[f32]) -> f32 {
         Isa::Scalar => dot_stride_scalar(src, stride, offset, v),
         Isa::Unrolled => dot_stride_unrolled(src, stride, offset, v),
         Isa::Native => dot_stride_native(src, stride, offset, v),
+        Isa::Fma => dot_stride_fma(src, stride, offset, v),
     }
 }
 
@@ -869,6 +1191,96 @@ mod x86 {
         }
         s
     }
+
+    /// 8-lane AVX2+FMA dot: the unrolled tier's lane assignment and
+    /// reduction tree, with each lane update fused into one rounding.
+    /// NOT bit-identical to the other tiers — the fma tier's contract.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_fma_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = (n / 8) * 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc = _mm256_fmadd_ps(va, vb, acc);
+            i += 8;
+        }
+        let mut l = [0.0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = ((l[0] + l[4]) + (l[2] + l[6]))
+            + ((l[1] + l[5]) + (l[3] + l[7]));
+        while i < n {
+            s = (*pa.add(i)).mul_add(*pb.add(i), s);
+            i += 1;
+        }
+        s
+    }
+
+    /// 8-lane AVX2+FMA axpy: each out[i] += alpha*x[i] is one fused
+    /// rounding — the only tier where even element-wise axpy moves bits.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy_fma_avx2(alpha: f32, x: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let n8 = (n / 8) * 8;
+        let va = _mm256_set1_ps(alpha);
+        let px = x.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut i = 0;
+        while i < n8 {
+            let vx = _mm256_loadu_ps(px.add(i));
+            let vo = _mm256_loadu_ps(po.add(i));
+            _mm256_storeu_ps(po.add(i), _mm256_fmadd_ps(va, vx, vo));
+            i += 8;
+        }
+        while i < n {
+            *po.add(i) = alpha.mul_add(*px.add(i), *po.add(i));
+            i += 1;
+        }
+    }
+
+    /// 4-lane gathered fused strided dot mirroring the portable fused
+    /// lanes (`dot_stride_fma_portable`) bit-for-bit. Caller guarantees
+    /// 4*stride fits in i32.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_stride_fma_avx2(
+        src: &[f32],
+        stride: usize,
+        offset: usize,
+        v: &[f32],
+    ) -> f32 {
+        let n = v.len();
+        let n4 = (n / 4) * 4;
+        let vindex = _mm_setr_epi32(
+            0,
+            stride as i32,
+            (2 * stride) as i32,
+            (3 * stride) as i32,
+        );
+        let mut acc = _mm_setzero_ps();
+        let ps = src.as_ptr();
+        let pv = v.as_ptr();
+        let mut idx = offset;
+        let mut i = 0;
+        while i < n4 {
+            let g = _mm_i32gather_ps::<4>(ps.add(idx), vindex);
+            let vv = _mm_loadu_ps(pv.add(i));
+            acc = _mm_fmadd_ps(g, vv, acc);
+            idx += 4 * stride;
+            i += 4;
+        }
+        let mut l = [0.0f32; 4];
+        _mm_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = (l[0] + l[2]) + (l[1] + l[3]);
+        while i < n {
+            s = (*ps.add(idx)).mul_add(*pv.add(i), s);
+            idx += stride;
+            i += 1;
+        }
+        s
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -959,6 +1371,59 @@ mod arm {
             i += 1;
         }
     }
+
+    /// Two 4-lane NEON `fmla` accumulators mirroring the 8-lane
+    /// portable tier's lanes and reduction tree, with each lane update
+    /// fused into one rounding. NOT bit-identical to the other tiers.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_fma_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = (n / 8) * 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < n8 {
+            lo = vfmaq_f32(lo, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            hi = vfmaq_f32(
+                hi,
+                vld1q_f32(pa.add(i + 4)),
+                vld1q_f32(pb.add(i + 4)),
+            );
+            i += 8;
+        }
+        let mut l = [0.0f32; 8];
+        vst1q_f32(l.as_mut_ptr(), lo);
+        vst1q_f32(l.as_mut_ptr().add(4), hi);
+        let mut s = ((l[0] + l[4]) + (l[2] + l[6]))
+            + ((l[1] + l[5]) + (l[3] + l[7]));
+        while i < n {
+            s = (*pa.add(i)).mul_add(*pb.add(i), s);
+            i += 1;
+        }
+        s
+    }
+
+    /// 4-lane NEON `fmla` axpy: each out[i] += alpha*x[i] fused into
+    /// one rounding — the only tier where element-wise axpy moves bits.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_fma_neon(alpha: f32, x: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let n4 = (n / 4) * 4;
+        let va = vdupq_n_f32(alpha);
+        let px = x.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut i = 0;
+        while i < n4 {
+            let vo = vld1q_f32(po.add(i));
+            vst1q_f32(po.add(i), vfmaq_f32(vo, va, vld1q_f32(px.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *po.add(i) = alpha.mul_add(*px.add(i), *po.add(i));
+            i += 1;
+        }
+    }
 }
 
 #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
@@ -985,10 +1450,140 @@ fn dot_stride_native(
 }
 
 // ---------------------------------------------------------------------
+// FMA (AVX2+FMA / NEON fmla) tier
+// ---------------------------------------------------------------------
+//
+// Same lane assignment and reduction trees as the unrolled/native tiers,
+// but every multiply-add is fused into one rounding — faster and
+// slightly *more* accurate, and deliberately NOT bit-identical to the
+// other tiers. Only dispatchable after `fma_available()` passed
+// (`effective_isa` degrades the request otherwise), so the
+// `target_feature` safety contract always holds.
+
+/// Portable 4-lane fused strided dot: the aarch64 fma strided path and
+/// the x86_64 huge-stride fallback. `f32::mul_add` is a correctly-
+/// rounded fused operation on every platform (hardware fmadd where the
+/// target has it, libm otherwise), so both bodies produce identical
+/// bits — the fma tier stays self-consistent across its entry points.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline]
+fn dot_stride_fma_portable(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
+    let n = v.len();
+    let n4 = (n / 4) * 4;
+    let mut acc = [0.0f32; 4];
+    let mut idx = offset;
+    let mut i = 0;
+    while i < n4 {
+        acc[0] = src[idx].mul_add(v[i], acc[0]);
+        acc[1] = src[idx + stride].mul_add(v[i + 1], acc[1]);
+        acc[2] = src[idx + 2 * stride].mul_add(v[i + 2], acc[2]);
+        acc[3] = src[idx + 3 * stride].mul_add(v[i + 3], acc[3]);
+        idx += 4 * stride;
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    while i < n {
+        s = src[idx].mul_add(v[i], s);
+        idx += stride;
+        i += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    // Safety: the Fma tier is only dispatchable after AVX2+FMA
+    // detection (`effective_isa` degrades it otherwise).
+    unsafe { x86::dot_fma_avx2(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn axpy_fma(alpha: f32, x: &[f32], out: &mut [f32]) {
+    unsafe { x86::axpy_fma_avx2(alpha, x, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_stride_fma(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
+    // Gather offsets are i32 element indices; enormous strides (never
+    // produced by the MGS call sites) fall back to the bit-identical
+    // portable fused lanes.
+    if stride > (i32::MAX as usize) / 4 {
+        return dot_stride_fma_portable(src, stride, offset, v);
+    }
+    unsafe { x86::dot_stride_fma_avx2(src, stride, offset, v) }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    // Safety: the Fma tier is only dispatchable after NEON detection.
+    unsafe { arm::dot_fma_neon(a, b) }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn axpy_fma(alpha: f32, x: &[f32], out: &mut [f32]) {
+    unsafe { arm::axpy_fma_neon(alpha, x, out) }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn dot_stride_fma(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
+    // NEON has no gather; the portable fused lanes are the fma strided
+    // path (mul_add lowers to fmadd — fused FP is baseline aarch64).
+    dot_stride_fma_portable(src, stride, offset, v)
+}
+
+// Unreachable stubs: `fma_available()` is false on these arches, so the
+// Fma tier can never be dispatched — the bodies only keep the match
+// arms compiling.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    dot_unrolled(a, b)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn axpy_fma(alpha: f32, x: &[f32], out: &mut [f32]) {
+    axpy_unrolled(alpha, x, out)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn dot_stride_fma(
+    src: &[f32],
+    stride: usize,
+    offset: usize,
+    v: &[f32],
+) -> f32 {
+    dot_stride_unrolled(src, stride, offset, v)
+}
+
+// ---------------------------------------------------------------------
 // Blocked / threaded matmuls
 // ---------------------------------------------------------------------
 
-/// a @ b, blocked + threaded. Bit-identical to `Mat::matmul`.
+/// a @ b, blocked + threaded. Bit-identical to `Mat::matmul` under
+/// every bit-exact tier; within tolerance on the fma tier.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     let mut out = Mat::zeros(a.rows, b.cols);
     matmul_into(a, b, &mut out);
@@ -996,23 +1591,24 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// out = a @ b. Accumulation order per output row is ascending k exactly
-/// like the naive ikj reference, and the inner axpy is element-wise (no
-/// tier reassociates it), so results are bit-identical to `Mat::matmul`
-/// under every ISA tier and thread count; TILE_K only keeps a block of
-/// `b` rows hot across the row block.
+/// like the naive ikj reference, and the inner axpy is element-wise
+/// (only the fma tier re-rounds it), so results are bit-identical to
+/// `Mat::matmul` under every bit-exact ISA tier and thread count;
+/// `tile_k` only keeps a block of `b` rows hot across the row block.
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(out.rows, a.rows);
     assert_eq!(out.cols, b.cols);
     let k_dim = a.cols;
     let tier = isa();
-    let min_rows = (PAR_MIN_WORK / (k_dim * b.cols).max(1)).max(1);
+    let tile_k = tile_k();
+    let min_rows = (par_min_work() / (k_dim * b.cols).max(1)).max(1);
     par_row_blocks(out, min_rows, |row0, block| {
         let cols = b.cols;
         let nrows = block.len() / cols;
         block.fill(0.0);
-        for kb in (0..k_dim).step_by(TILE_K) {
-            let kend = (kb + TILE_K).min(k_dim);
+        for kb in (0..k_dim).step_by(tile_k) {
+            let kend = (kb + tile_k).min(k_dim);
             for ri in 0..nrows {
                 let arow = a.row(row0 + ri);
                 let orow = &mut block[ri * cols..(ri + 1) * cols];
@@ -1044,12 +1640,13 @@ pub fn matmul_transb_into(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(out.cols, b.rows);
     let k_dim = a.cols;
     let tier = isa();
-    let min_rows = (PAR_MIN_WORK / (k_dim * b.rows).max(1)).max(1);
+    let tile_j = tile_j();
+    let min_rows = (par_min_work() / (k_dim * b.rows).max(1)).max(1);
     par_row_blocks(out, min_rows, |row0, block| {
         let cols = b.rows;
         let nrows = block.len() / cols;
-        for jb in (0..cols).step_by(TILE_J) {
-            let jend = (jb + TILE_J).min(cols);
+        for jb in (0..cols).step_by(tile_j) {
+            let jend = (jb + tile_j).min(cols);
             for ri in 0..nrows {
                 let arow = a.row(row0 + ri);
                 let orow = &mut block[ri * cols..(ri + 1) * cols];
@@ -1062,9 +1659,10 @@ pub fn matmul_transb_into(a: &Mat, b: &Mat, out: &mut Mat) {
 }
 
 /// a.T @ b without materializing the transpose (the dense weight
-/// gradient dzw^T @ ain). Accumulation order per output row is ascending
-/// p exactly like `a.t().matmul(&b)`, so results are bit-identical to
-/// the naive reference path under every tier and thread count.
+/// gradient dzw^T @ ain). Accumulation order per output row is
+/// ascending p exactly like `a.t().matmul(&b)`, so results are
+/// bit-identical to the naive reference path under every bit-exact
+/// tier and thread count (fma re-rounds the inner axpy).
 pub fn matmul_atb(a: &Mat, b: &Mat) -> Mat {
     let mut out = Mat::zeros(a.cols, b.cols);
     matmul_atb_into(a, b, &mut out);
@@ -1078,13 +1676,14 @@ pub fn matmul_atb_into(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(out.cols, b.cols);
     let p_dim = a.rows;
     let tier = isa();
-    let min_rows = (PAR_MIN_WORK / (p_dim * b.cols).max(1)).max(1);
+    let tile_k = tile_k();
+    let min_rows = (par_min_work() / (p_dim * b.cols).max(1)).max(1);
     par_row_blocks(out, min_rows, |row0, block| {
         let cols = b.cols;
         let nrows = block.len() / cols;
         block.fill(0.0);
-        for pb in (0..p_dim).step_by(TILE_K) {
-            let pend = (pb + TILE_K).min(p_dim);
+        for pb in (0..p_dim).step_by(tile_k) {
+            let pend = (pb + tile_k).min(p_dim);
             for p in pb..pend {
                 let arow = a.row(p);
                 let brow = b.row(p);
@@ -1120,12 +1719,13 @@ pub fn matvec_into(a: &Mat, x: &[f32], out: &mut [f32]) {
 }
 
 /// m += scale * (u (x) v), threaded over row blocks; per-row arithmetic
-/// identical to `Mat::add_outer` under every tier.
+/// identical to `Mat::add_outer` under every bit-exact tier (fma fuses
+/// the per-element multiply-add into one rounding).
 pub fn add_outer(m: &mut Mat, scale: f32, u: &[f32], v: &[f32]) {
     assert_eq!(u.len(), m.rows);
     assert_eq!(v.len(), m.cols);
     let tier = isa();
-    let min_rows = (PAR_MIN_WORK / m.cols.max(1)).max(1);
+    let min_rows = (par_min_work() / m.cols.max(1)).max(1);
     par_row_blocks(m, min_rows, |row0, block| {
         let cols = v.len();
         for (ri, orow) in block.chunks_mut(cols).enumerate() {
@@ -1154,6 +1754,18 @@ mod tests {
         }
     }
 
+    /// Bitwise where the active tier promises it, tolerance on fma
+    /// (these in-module tests run under whatever tier the environment
+    /// selected — the CI fma leg runs the whole suite with
+    /// LRT_KERNEL_ISA=fma).
+    fn assert_matches_naive(got: &Mat, naive: &Mat, what: &str) {
+        if isa().bit_exact() {
+            assert_eq!(got.data, naive.data, "{what}");
+        } else {
+            assert_close(got, naive, 1e-5, what);
+        }
+    }
+
     #[test]
     fn matmul_bit_identical_to_naive() {
         let mut rng = Rng::new(1);
@@ -1163,7 +1775,7 @@ mod tests {
             let a = rand_mat(&mut rng, m, k);
             let b = rand_mat(&mut rng, k, n);
             let got = matmul(&a, &b);
-            assert_eq!(got.data, a.matmul(&b).data, "{m}x{k}x{n}");
+            assert_matches_naive(&got, &a.matmul(&b), "matmul");
         }
     }
 
@@ -1175,7 +1787,7 @@ mod tests {
             let a = rand_mat(&mut rng, p, m);
             let b = rand_mat(&mut rng, p, n);
             let got = matmul_atb(&a, &b);
-            assert_eq!(got.data, a.t().matmul(&b).data, "{p}x{m}x{n}");
+            assert_matches_naive(&got, &a.t().matmul(&b), "atb");
         }
     }
 
@@ -1233,7 +1845,7 @@ mod tests {
         let mut m2 = a.clone();
         m1.add_outer(0.7, &u, &x);
         add_outer(&mut m2, 0.7, &u, &x);
-        assert_eq!(m1.data, m2.data);
+        assert_matches_naive(&m2, &m1, "add_outer");
     }
 
     #[test]
@@ -1338,10 +1950,36 @@ mod tests {
         // pin the pool size so the expectations are exact (and the
         // override lock serializes us against the other override test)
         with_overrides(None, Some(4), || {
+            let gate = par_min_work();
             assert_eq!(suggested_workers(0), 0);
-            assert_eq!(suggested_workers(PAR_MIN_WORK - 1), 0);
-            assert_eq!(suggested_workers(PAR_MIN_WORK), 1);
+            assert_eq!(suggested_workers(gate - 1), 0);
+            assert_eq!(suggested_workers(gate), 1);
             assert_eq!(suggested_workers(usize::MAX / 2), 3);
         });
+    }
+
+    #[test]
+    fn tile_env_parsing_and_defaults() {
+        // the committed table must always be sane
+        let t = default_tiles();
+        assert!(t.tile_j >= 1 && t.tile_k >= 1 && t.par_min_work >= 1);
+        // valid values parse
+        assert_eq!(parse_tile_env("LRT_TILE_J", "16", 4096), Ok(16));
+        assert_eq!(parse_tile_env("LRT_TILE_K", " 64 ", 4096), Ok(64));
+        // bad values fail with an actionable message naming the var
+        for raw in ["abc", "", "-3", "0", "99999"] {
+            let err = parse_tile_env("LRT_TILE_J", raw, 4096).unwrap_err();
+            assert!(err.contains("LRT_TILE_J"), "{err}");
+            assert!(err.contains("unset"), "{err}");
+        }
+    }
+
+    #[test]
+    fn tile_overrides_apply_and_restore() {
+        let (j0, k0) = (tile_j(), tile_k());
+        with_overrides_full(None, None, Some(8), Some(64), || {
+            assert_eq!((tile_j(), tile_k()), (8, 64));
+        });
+        assert_eq!((tile_j(), tile_k()), (j0, k0));
     }
 }

@@ -38,20 +38,46 @@
 //!   every sibling finished; the worker itself survives and re-parks,
 //!   and the kernel thread-budget tokens are released by the caller's
 //!   unwind (`BudgetGuard`), so one bad job can't leak capacity.
+//! - **Work-stealing backfill** — a fan-out whose [`kernels`] budget
+//!   request was partly *denied* (sibling dispatchers hold the tokens)
+//!   used to forfeit those seats outright. Now [`publish`] queues them
+//!   as token-less [`Pending`] entries on a bounded retained backlog.
+//!   When budget frees up — a sibling's guard drops, or a worker
+//!   finishes a stolen seat — [`backfill_idle`] pairs one fresh token
+//!   with one parked worker per queued seat, and a worker finishing any
+//!   job checks the backlog (reusing its seat's token where it owns
+//!   one) before re-parking. Because every fan-out consumer claims work
+//!   by dynamic tickets over a fixed partition, a seat backfilled late
+//!   (or never) changes which thread computes a block, never what is
+//!   computed. The dispatcher's drop guard [`revoke`]s whatever was
+//!   never claimed before its stack frame dies, so no queued pointer
+//!   can dangle; every seat ends exactly one of published, stolen,
+//!   revoked, or forfeited ([`seats_stolen`] / [`seats_forfeited`] are
+//!   the observability counters, `tests/pool_fairness.rs` the
+//!   choreographed proof).
 //! - **Clean shutdown** — [`shutdown`] wakes every worker with a quit
 //!   flag and joins them; the next dispatch restarts the pool lazily.
 //!   Test binaries exit without hangs either way (parked threads never
 //!   outlive `main`), but an explicit shutdown lets the lifecycle tests
 //!   prove the thread count returns to baseline. An `epoch` stamp keeps
 //!   a worker that is still draining its last job from re-registering a
-//!   stale id with a pool generation that replaced it.
+//!   stale id with a pool generation that replaced it. The backlog is
+//!   left alone: entries are only ever removed by a steal or by the
+//!   owning dispatcher's revoke, and that dispatcher is by definition
+//!   still inside its fan-out.
 //!
 //! Lock order is strictly `POOL -> worker.state`; workers take
-//! `worker.state` alone (parking) or `POOL` alone (idle re-entry), so
-//! no cycle exists. [`shutdown`] assumes no dispatch is in flight
-//! (concurrent dispatch degrades gracefully to inline execution but a
-//! concurrent `ensure` could orphan a fresh worker generation — tests
-//! serialize shutdown behind `with_overrides`' lock or their own).
+//! `worker.state` alone (parking) or `POOL` (idle re-entry and the
+//! steal decision), so no cycle exists. Token traffic under the pool
+//! lock is atomic-only (`kernels::try_take_token` / `release_raw`);
+//! the full `kernels::release` (which re-enters the pool via
+//! [`backfill_idle`]) is never called with the lock held. [`shutdown`]
+//! assumes no dispatch is in flight (concurrent dispatch degrades
+//! gracefully to inline execution but a concurrent `ensure` could
+//! orphan a fresh worker generation — tests serialize shutdown behind
+//! `with_overrides`' lock or their own).
+
+use super::kernels;
 
 use std::any::Any;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -68,6 +94,11 @@ pub(crate) struct Job {
     pub run: unsafe fn(*const ()),
     pub ctx: *const (),
     pub latch: *const Latch,
+    /// True only for stolen (backfilled) seats: the running worker
+    /// holds the budget token for this seat and must hand it on to its
+    /// next stolen seat or release it. Slot-published seats are
+    /// `false` — their tokens live in the dispatcher's `BudgetGuard`.
+    pub owns_token: bool,
 }
 
 // Safety: the pointers reference the dispatching thread's stack frame,
@@ -154,6 +185,20 @@ struct Worker {
     cv: Condvar,
 }
 
+/// One fan-out's queued backfill seats: the (Copy) job plus how many
+/// seats remain claimable. At most one entry per in-flight fan-out
+/// (keyed by the latch pointer, which is unique per dispatch frame).
+struct Pending {
+    job: Job,
+    open: usize,
+}
+
+/// Backlog capacity, reserved once at pool growth so enqueueing never
+/// allocates in steady state. More simultaneous dispatchers than this
+/// would be pathological (each is a live thread blocked in `fan_out`);
+/// overflow seats are simply forfeited, exactly the pre-steal behavior.
+const BACKLOG_CAP: usize = 32;
+
 struct PoolState {
     /// Bumped by [`shutdown`]; a worker only re-registers as idle while
     /// its spawn-time epoch is still current, so a worker draining its
@@ -163,6 +208,9 @@ struct PoolState {
     /// Retained LIFO stack of parked worker ids (indices into
     /// `workers`). Popping/pushing never allocates after warm-up.
     idle: Vec<usize>,
+    /// Budget-denied seats awaiting a (token, parked worker) pair —
+    /// FIFO so the longest-waiting fan-out is backfilled first.
+    backlog: Vec<Pending>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -170,6 +218,7 @@ static POOL: Mutex<PoolState> = Mutex::new(PoolState {
     epoch: 0,
     workers: Vec::new(),
     idle: Vec::new(),
+    backlog: Vec::new(),
     handles: Vec::new(),
 });
 
@@ -191,6 +240,18 @@ static SPAWNED: AtomicUsize = AtomicUsize::new(0);
 /// observability: proves dispatches land on parked workers).
 static JOBS: AtomicU64 = AtomicU64::new(0);
 
+/// Fast-path mirror of the backlog's total open seat count, so the
+/// token-release hot path learns "nothing to backfill" from one atomic
+/// load without touching the pool lock.
+static PENDING: AtomicUsize = AtomicUsize::new(0);
+
+/// Seats claimed from the backlog by workers (process-monotone).
+static STOLEN: AtomicU64 = AtomicU64::new(0);
+
+/// Seats given up — publish shortfall, backlog overflow, or revoked
+/// unclaimed at fan-out exit (process-monotone).
+static FORFEITED: AtomicU64 = AtomicU64::new(0);
+
 /// Workers currently spawned (parked or busy). 0 until the first real
 /// fan-out — the pool starts lazily.
 pub fn spawned_workers() -> usize {
@@ -203,6 +264,24 @@ pub fn jobs_completed() -> u64 {
     JOBS.load(Ordering::Relaxed)
 }
 
+/// Backfill seats stolen by pool workers since process start — the
+/// work-stealing win counter (`hotpath_steal` bench, fairness tests).
+pub fn seats_stolen() -> u64 {
+    STOLEN.load(Ordering::Relaxed)
+}
+
+/// Seats given up since process start: publish shortfall (no parked
+/// worker), backlog overflow, or revoked unclaimed at fan-out exit.
+pub fn seats_forfeited() -> u64 {
+    FORFEITED.load(Ordering::Relaxed)
+}
+
+/// Backfill seats currently queued (test observability; racy by
+/// nature — exact only when the observer controls all dispatchers).
+pub fn seats_pending() -> usize {
+    PENDING.load(Ordering::Acquire)
+}
+
 /// Grow the pool to `target` workers if it is smaller. Steady state is
 /// a single atomic load; growth (first fan-out, or a larger
 /// `with_overrides` budget) spawns and allocates — warm-up traffic by
@@ -212,6 +291,12 @@ pub(crate) fn ensure(target: usize) {
         return;
     }
     let mut pool = lock_pool();
+    // One-time warm-up alloc alongside the spawns: the backlog must
+    // never grow on the (allocation-free) dispatch path.
+    if pool.backlog.capacity() < BACKLOG_CAP {
+        let need = BACKLOG_CAP - pool.backlog.len();
+        pool.backlog.reserve(need);
+    }
     while pool.workers.len() < target {
         let id = pool.workers.len();
         let epoch = pool.epoch;
@@ -240,13 +325,20 @@ pub(crate) fn ensure(target: usize) {
     SPAWNED.store(pool.workers.len(), Ordering::Release);
 }
 
-/// Hand `job` to up to `max` parked workers; returns how many accepted.
-/// Unfilled seats (pool busy elsewhere, or draining a shutdown) must be
-/// forfeited on the latch by the caller. Allocation-free: pops retained
-/// idle ids, writes a `Copy` job into retained slots, `notify_one`.
-pub(crate) fn publish(max: usize, job: Job) -> usize {
-    if max == 0 {
-        return 0;
+/// Hand `job` to up to `max` parked workers and queue `backlog_seats`
+/// budget-denied copies for work-stealing backfill; returns
+/// `(published, queued)`. Unfilled slot seats and unqueued backlog
+/// seats must be forfeited on the latch by the caller. Allocation-free:
+/// pops retained idle ids, writes a `Copy` job into retained slots
+/// (`notify_one` each) and pushes at most one entry onto the
+/// capacity-reserved backlog.
+pub(crate) fn publish(
+    max: usize,
+    backlog_seats: usize,
+    job: Job,
+) -> (usize, usize) {
+    if max == 0 && backlog_seats == 0 {
+        return (0, 0);
     }
     let mut pool = lock_pool();
     let mut published = 0;
@@ -270,7 +362,121 @@ pub(crate) fn publish(max: usize, job: Job) -> usize {
         worker.cv.notify_one();
         published += 1;
     }
-    published
+    if published < max {
+        FORFEITED.fetch_add((max - published) as u64, Ordering::Relaxed);
+    }
+    let mut queued = 0;
+    if backlog_seats > 0 {
+        if pool.backlog.len() < BACKLOG_CAP {
+            pool.backlog.push(Pending { job, open: backlog_seats });
+            PENDING.fetch_add(backlog_seats, Ordering::Release);
+            queued = backlog_seats;
+        } else {
+            FORFEITED.fetch_add(backlog_seats as u64, Ordering::Relaxed);
+        }
+    }
+    (published, queued)
+}
+
+/// Remove every still-unclaimed backlog seat belonging to `latch`;
+/// returns how many were pulled (the dispatcher forfeits them). Called
+/// from `fan_out`'s drop guard strictly before the latch's stack frame
+/// can die, so a queued job pointer never dangles: a seat is either
+/// claimed under the pool lock (the worker then holds a latch seat the
+/// guard's `wait` covers) or revoked here — never both.
+pub(crate) fn revoke(latch: *const Latch) -> usize {
+    // Fast path: dispatchers whose seats were all claimed (or that
+    // never queued any) skip the lock. Exact enough — our own entry
+    // contributes to PENDING until claimed or revoked.
+    if PENDING.load(Ordering::Acquire) == 0 {
+        return 0;
+    }
+    let mut pool = lock_pool();
+    let mut revoked = 0;
+    pool.backlog.retain(|e| {
+        if std::ptr::eq(e.job.latch, latch) {
+            revoked += e.open;
+            false
+        } else {
+            true
+        }
+    });
+    if revoked > 0 {
+        PENDING.fetch_sub(revoked, Ordering::Release);
+        FORFEITED.fetch_add(revoked as u64, Ordering::Relaxed);
+    }
+    revoked
+}
+
+/// Claim one queued seat (FIFO — longest-waiting fan-out first) for a
+/// runner that already holds a budget token. Caller holds the pool
+/// lock.
+fn claim_backlog_seat(pool: &mut PoolState) -> Option<Job> {
+    let entry = pool.backlog.first_mut()?;
+    entry.open -= 1;
+    let mut job = entry.job;
+    job.owns_token = true;
+    if entry.open == 0 {
+        pool.backlog.remove(0);
+    }
+    PENDING.fetch_sub(1, Ordering::Release);
+    STOLEN.fetch_add(1, Ordering::Relaxed);
+    Some(job)
+}
+
+/// Convert freed budget into stolen work: while seats are queued and
+/// the budget has room, pair one token with one parked worker per seat
+/// and wake it. Called by `kernels::release` (a sibling's guard
+/// dropping is exactly when denied seats become fillable) and once by
+/// `fan_out` right after enqueueing (covering tokens freed between its
+/// `acquire` and its enqueue). One atomic load when the backlog is
+/// empty; never called while holding the pool lock.
+pub(crate) fn backfill_idle() {
+    loop {
+        if PENDING.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        if !kernels::try_take_token() {
+            return;
+        }
+        // Token in hand: hand one queued seat to one parked worker.
+        let handed = {
+            let mut pool = lock_pool();
+            if pool.backlog.is_empty() {
+                None
+            } else {
+                let mut found = None;
+                while let Some(id) = pool.idle.pop() {
+                    let Some(worker) = pool.workers.get(id).map(Arc::clone)
+                    else {
+                        continue;
+                    };
+                    let mut st = worker.state.lock().unwrap();
+                    if st.quit {
+                        continue;
+                    }
+                    let job = claim_backlog_seat(&mut pool)
+                        .expect("backlog checked non-empty under lock");
+                    st.job = Some(job);
+                    drop(st);
+                    found = Some(worker);
+                    break;
+                }
+                found
+            }
+        };
+        match handed {
+            // Notify outside both locks, as in `publish`.
+            Some(worker) => worker.cv.notify_one(),
+            None => {
+                // Seats vanished (claimed/revoked) or no parked worker
+                // left — hand the token back without re-triggering
+                // ourselves and let the next release retry.
+                kernels::release_raw(1);
+                return;
+            }
+        }
+    }
 }
 
 /// Join every worker and reset the pool; the next fan-out restarts it
@@ -317,30 +523,75 @@ fn worker_loop(me: Arc<Worker>, id: usize, epoch: u64) {
                 st = me.cv.wait(st).unwrap();
             }
         };
-        let Some(job) = job else { return };
-        // Contain job panics: the worker survives, the payload rides
-        // the latch back to the dispatching caller.
-        let result = std::panic::catch_unwind(
-            std::panic::AssertUnwindSafe(|| unsafe { (job.run)(job.ctx) }),
-        );
-        JOBS.fetch_add(1, Ordering::Relaxed);
-        // Re-park BEFORE signaling completion, so when the caller
-        // unblocks this worker is already claimable again — back-to-
-        // back dispatches find a full idle stack. Skip if a shutdown
-        // replaced this pool generation while we were busy.
-        {
-            let mut pool = lock_pool();
-            if pool.epoch == epoch {
-                pool.idle.push(id);
+        let Some(mut job) = job else { return };
+        // Inner loop: run the claimed job, then try to steal a queued
+        // backfill seat before re-parking.
+        loop {
+            // Contain job panics: the worker survives, the payload
+            // rides the latch back to the dispatching caller.
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || unsafe { (job.run)(job.ctx) },
+                ));
+            JOBS.fetch_add(1, Ordering::Relaxed);
+            // Steal-or-re-park, decided under the pool lock BEFORE the
+            // finished job's `done_one`: a stolen seat is claimed (and
+            // thus safe from the owner's revoke) before any dispatcher
+            // can observe this worker as done; a re-park lands the id
+            // on the idle stack before the caller unblocks, so back-to-
+            // back dispatches find a full stack — same invariant as
+            // pre-steal. Token logic: a seat this worker stole came
+            // with a token it can hand straight to the next steal; for
+            // a slot-published seat (token owned by the dispatcher's
+            // guard) it must win a fresh one. `try_take_token` is
+            // atomic-only, so taking it under the pool lock respects
+            // the lock order.
+            let mut next: Option<Job> = None;
+            let mut surplus_token = false;
+            {
+                let mut pool = lock_pool();
+                if pool.epoch == epoch {
+                    let mut token = job.owns_token;
+                    if !token && !pool.backlog.is_empty() {
+                        token = kernels::try_take_token();
+                    }
+                    if token {
+                        match claim_backlog_seat(&mut pool) {
+                            Some(j) => next = Some(j),
+                            None => {
+                                // Backlog drained between check and
+                                // claim (or was empty and we owned a
+                                // token) — release after done_one.
+                                surplus_token = true;
+                                pool.idle.push(id);
+                            }
+                        }
+                    } else {
+                        pool.idle.push(id);
+                    }
+                } else if job.owns_token {
+                    // Shutdown replaced this generation: don't re-park
+                    // a stale id, but never leak a stolen seat's token.
+                    surplus_token = true;
+                }
+            }
+            // Last touches of the finished caller's stack frame: panic
+            // mailbox, then the latch decrement that may free it.
+            let latch = unsafe { &*job.latch };
+            if let Err(payload) = result {
+                latch.record_panic(payload);
+            }
+            latch.done_one();
+            if surplus_token {
+                // Full release (may re-trigger backfill) strictly after
+                // done_one and outside the pool lock.
+                kernels::release(1);
+            }
+            match next {
+                Some(j) => job = j,
+                None => break,
             }
         }
-        // Last touches of the caller's stack frame: panic mailbox, then
-        // the latch decrement that may free it.
-        let latch = unsafe { &*job.latch };
-        if let Err(payload) = result {
-            latch.record_panic(payload);
-        }
-        latch.done_one();
     }
 }
 

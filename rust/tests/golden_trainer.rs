@@ -2,20 +2,46 @@
 //! the final EMA loss/accuracy and the NVM write counters so kernel-layer
 //! changes can't silently shift the Fig. 3/6 numbers.
 //!
-//! Snapshot protocol: the first run on a fresh checkout writes
-//! `tests/golden/seed11.txt` and passes (bootstrap); later runs compare
-//! against it exactly. Re-bless intentionally with `LRT_BLESS=1`.
-//! Determinism within one process is always asserted (two identical runs
-//! must agree bitwise), so even the bootstrap run has teeth.
+//! # Per-tier golden policy ([`GoldenPolicy`])
+//!
+//! ISA tiers legitimately differ in f32 arithmetic (the scalar tier is
+//! the sequential reference reduction; unrolled/native reassociate
+//! lanes; fma fuses multiply-adds), so one snapshot file cannot pin all
+//! of them. Instead each numerics class owns a golden file and every
+//! file is compared **bitwise** against runs of its own class:
+//!
+//! - `seed11.txt` — the production tiers (`unrolled`, and `native`,
+//!   which is bit-identical to unrolled by contract). The historical
+//!   file; CI requires it committed.
+//! - `seed11_scalar.txt` — the scalar tier. Doubles as the **anchor**:
+//!   the paper-faithful sequential arithmetic every other tier is
+//!   toleranced against.
+//! - `seed11_fma.txt` — the fma tier, where detected. Bitwise within
+//!   the tier (fused rounding is deterministic), and additionally
+//!   checked against the scalar anchor within the documented tolerance
+//!   band below.
+//!
+//! **Anchor tolerance contract** (documented in README "Performance
+//! tuning"): per-element kernel outputs differ from scalar by <=1e-5
+//! relative (see `kernel_conformance.rs`), but a 120-sample training
+//! run amplifies that through discrete decisions (write gates, flush
+//! commits), so the end-to-end band is deliberately loose: EMA loss and
+//! tail accuracy within **0.2 absolute**, write counters within **50%
+//! relative**. The band is a tripwire for catastrophic numerics bugs —
+//! the tight regression teeth are each tier's own bitwise file.
+//!
+//! Snapshot protocol (per file): the first run on a fresh checkout
+//! writes the file and passes (bootstrap); later runs compare exactly.
+//! Re-bless intentionally with `LRT_BLESS=1` — it blesses only the
+//! active tier's file. Determinism within one process is always
+//! asserted (two identical runs must agree bitwise), so even the
+//! bootstrap run has teeth.
 //!
 //! CI hardening: on CI (the `CI` env var) a silent bootstrap is a
 //! FAILURE — a run that never compares anything proves nothing — unless
 //! `LRT_GOLDEN_BOOTSTRAP=1` opts in explicitly (the workflow's first
 //! test pass does; a later workflow step then fails loudly if the
-//! bootstrapped file is not committed). The snapshot is defined for the
-//! production kernel tiers: under `LRT_KERNEL_ISA=scalar` the dot
-//! reductions reassociate differently, so the scalar leg asserts
-//! determinism and ranges but skips the snapshot compare.
+//! bootstrapped `seed11.txt` is not committed).
 
 use std::path::PathBuf;
 
@@ -47,8 +73,37 @@ fn run_seed11() -> RunReport {
     Trainer::new(cfg, params, AuxState::new()).run()
 }
 
-fn golden_path() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/seed11.txt")
+/// Which golden file a tier's runs are pinned to, and whether they are
+/// additionally toleranced against the scalar anchor file.
+struct GoldenPolicy {
+    /// Snapshot file for this tier's numerics class (bitwise compare).
+    file: &'static str,
+    /// `Some` only for tiers whose arithmetic is *not* one of the
+    /// committed bit-exact classes: compare against `seed11_scalar.txt`
+    /// within the documented band when that anchor exists.
+    anchored: bool,
+}
+
+impl GoldenPolicy {
+    fn for_tier(tier: kernels::Isa) -> GoldenPolicy {
+        match tier {
+            kernels::Isa::Scalar => {
+                GoldenPolicy { file: "seed11_scalar.txt", anchored: false }
+            }
+            // native ≡ unrolled bitwise by contract, so they share the
+            // historical production snapshot
+            kernels::Isa::Unrolled | kernels::Isa::Native => {
+                GoldenPolicy { file: "seed11.txt", anchored: false }
+            }
+            kernels::Isa::Fma => {
+                GoldenPolicy { file: "seed11_fma.txt", anchored: true }
+            }
+        }
+    }
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
 }
 
 fn render(rep: &RunReport) -> String {
@@ -63,6 +118,50 @@ fn render(rep: &RunReport) -> String {
     )
 }
 
+/// Parse a rendered snapshot back into (final_ema, tail_acc,
+/// total_writes) for the anchor-tolerance compare.
+fn parse_snapshot(text: &str) -> Option<(f64, f64, u64)> {
+    let mut ema = None;
+    let mut acc = None;
+    let mut writes = None;
+    for line in text.lines() {
+        let (key, val) = line.split_once('=')?;
+        match key {
+            "final_ema" => ema = val.parse::<f64>().ok(),
+            "tail_acc" => acc = val.parse::<f64>().ok(),
+            "total_writes" => writes = val.parse::<u64>().ok(),
+            _ => {}
+        }
+    }
+    Some((ema?, acc?, writes?))
+}
+
+/// The documented anchor band: EMA/accuracy within 0.2 absolute, write
+/// counters within 50% relative (see module docs for why it is loose).
+fn assert_within_anchor_band(rep: &RunReport, anchor: (f64, f64, u64)) {
+    let (a_ema, a_acc, a_writes) = anchor;
+    assert!(
+        (rep.final_ema - a_ema).abs() <= 0.2,
+        "fma final_ema {} vs scalar anchor {a_ema}: outside the 0.2 \
+         absolute band",
+        rep.final_ema
+    );
+    assert!(
+        (rep.tail_acc - a_acc).abs() <= 0.2,
+        "fma tail_acc {} vs scalar anchor {a_acc}: outside the 0.2 \
+         absolute band",
+        rep.tail_acc
+    );
+    let hi = (a_writes as f64) * 1.5;
+    let lo = (a_writes as f64) * 0.5;
+    assert!(
+        (lo..=hi).contains(&(rep.total_writes as f64)),
+        "fma total_writes {} vs scalar anchor {a_writes}: outside the \
+         50% relative band",
+        rep.total_writes
+    );
+}
+
 #[test]
 fn seed11_trainer_matches_golden_snapshot() {
     let rep1 = run_seed11();
@@ -75,26 +174,11 @@ fn seed11_trainer_matches_golden_snapshot() {
     assert!((0.0..=1.0).contains(&rep1.final_ema), "{rep1:?}");
     assert!(rep1.total_writes > 0, "LRT run committed nothing");
 
+    let tier = kernels::isa();
+    let policy = GoldenPolicy::for_tier(tier);
     let got = render(&rep1);
-    let path = golden_path();
+    let path = golden_dir().join(policy.file);
     let bless = std::env::var("LRT_BLESS").is_ok_and(|v| v == "1");
-    if kernels::isa() == kernels::Isa::Scalar {
-        // scalar-tier numbers legitimately differ from the snapshot
-        // (sequential vs lane-reassociated f32 reductions); the
-        // determinism and range asserts above are this leg's teeth —
-        // and blessing scalar numbers would break every default-tier
-        // run afterwards, so refuse that outright
-        assert!(
-            !bless,
-            "refusing LRT_BLESS under LRT_KERNEL_ISA=scalar: the \
-             golden snapshot is defined for the unrolled/native tiers"
-        );
-        eprintln!(
-            "scalar ISA tier active — golden snapshot is defined for \
-             the unrolled/native tiers; compare skipped"
-        );
-        return;
-    }
     let on_ci = std::env::var("CI").is_ok_and(|v| {
         !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
     });
@@ -104,23 +188,49 @@ fn seed11_trainer_matches_golden_snapshot() {
         Ok(want) if !bless => {
             assert_eq!(
                 got, want,
-                "seed-11 golden numbers shifted — if intentional \
-                 (e.g. a kernel numerics change), re-bless with \
-                 LRT_BLESS=1 and call it out in the PR"
+                "seed-11 golden numbers shifted for the {} tier \
+                 ({}) — if intentional (e.g. a kernel numerics \
+                 change), re-bless with LRT_BLESS=1 and call it out \
+                 in the PR",
+                tier.name(),
+                policy.file,
             );
         }
         _ => {
             if on_ci && !bless && !explicit_bootstrap {
                 panic!(
-                    "tests/golden/seed11.txt is missing on CI: this run \
-                     would silently bless itself instead of comparing. \
-                     Commit the snapshot (contents below) or set \
-                     LRT_GOLDEN_BOOTSTRAP=1 to opt in explicitly.\n{got}"
+                    "tests/golden/{} is missing on CI: this run would \
+                     silently bless itself instead of comparing. Commit \
+                     the snapshot (contents below) or set \
+                     LRT_GOLDEN_BOOTSTRAP=1 to opt in explicitly.\n{got}",
+                    policy.file
                 );
             }
             std::fs::create_dir_all(path.parent().unwrap()).unwrap();
             std::fs::write(&path, &got).unwrap();
             eprintln!("golden snapshot written to {}", path.display());
+        }
+    }
+
+    // Anchor tolerance: tiers outside the committed bit-exact classes
+    // must also sit within the documented band of the scalar anchor.
+    if policy.anchored {
+        let anchor_path = golden_dir().join("seed11_scalar.txt");
+        match std::fs::read_to_string(&anchor_path) {
+            Ok(text) => {
+                let anchor = parse_snapshot(&text).unwrap_or_else(|| {
+                    panic!(
+                        "unparseable scalar anchor {}",
+                        anchor_path.display()
+                    )
+                });
+                assert_within_anchor_band(&rep1, anchor);
+            }
+            Err(_) => eprintln!(
+                "scalar anchor {} absent — run the scalar leg once to \
+                 bootstrap it; anchor-band compare skipped",
+                anchor_path.display()
+            ),
         }
     }
 }

@@ -1,0 +1,146 @@
+//! Configuration-surface tests for the kernel layer's environment
+//! knobs: the `LRT_KERNEL_ISA` parse table, the loud-fallback degrade
+//! path for tiers the machine can't run, the `LRT_TILE_*` validation
+//! messages, the committed per-arch default table, and the
+//! apply/restore semantics of the tile override scope.
+//!
+//! These exercise the *pure* halves (`parse_isa_env`, `parse_tile_env`,
+//! `effective_isa`) so every failure message and fallback edge is
+//! testable on any machine — including "fma requested on non-FMA
+//! hardware" — without mutating this process's environment (the rest of
+//! the suite resolves the same knobs, so `set_var` here would race).
+
+use lrt_nvm::tensor::kernels::{self, Isa};
+
+#[test]
+fn isa_env_parse_table() {
+    assert_eq!(kernels::parse_isa_env("scalar"), Some(Isa::Scalar));
+    assert_eq!(kernels::parse_isa_env("unrolled"), Some(Isa::Unrolled));
+    assert_eq!(kernels::parse_isa_env("native"), Some(Isa::Native));
+    assert_eq!(kernels::parse_isa_env("fma"), Some(Isa::Fma));
+    // unknown values are None (the resolver logs and autodetects);
+    // matching is deliberately exact — no case folding, no trimming
+    for bad in ["", "FMA", " fma", "avx2", "auto", "3"] {
+        assert_eq!(kernels::parse_isa_env(bad), None, "{bad:?}");
+    }
+}
+
+#[test]
+fn effective_isa_degrades_to_what_the_machine_runs() {
+    // the portable tiers never degrade
+    assert_eq!(kernels::effective_isa(Isa::Scalar), Isa::Scalar);
+    assert_eq!(kernels::effective_isa(Isa::Unrolled), Isa::Unrolled);
+
+    let native = kernels::native_available();
+    let fma = kernels::fma_available();
+    // native: keep if detected, else the portable unrolled tier
+    let want_native = if native { Isa::Native } else { Isa::Unrolled };
+    assert_eq!(kernels::effective_isa(Isa::Native), want_native);
+    // fma: keep only if detected; otherwise the best bit-exact tier —
+    // never a panic, never a silent keep (the resolver eprintlns)
+    let want_fma = if fma {
+        Isa::Fma
+    } else if native {
+        Isa::Native
+    } else {
+        Isa::Unrolled
+    };
+    assert_eq!(kernels::effective_isa(Isa::Fma), want_fma);
+    // fma hardware implies native hardware on both supported arches
+    if fma {
+        assert!(native, "fma detected without the native tier");
+    }
+}
+
+#[test]
+fn available_isas_is_ordered_and_consistent_with_detection() {
+    let isas = kernels::available_isas();
+    assert_eq!(&isas[..2], &[Isa::Scalar, Isa::Unrolled]);
+    assert_eq!(isas.contains(&Isa::Native), kernels::native_available());
+    assert_eq!(isas.contains(&Isa::Fma), kernels::fma_available());
+    // fma rides last so benches/conformance sweep it after the
+    // bit-exact tiers
+    if kernels::fma_available() {
+        assert_eq!(isas.last(), Some(&Isa::Fma));
+    }
+    // every advertised tier must survive an override round-trip
+    for &tier in &isas {
+        let got = kernels::with_overrides(Some(tier), None, kernels::isa);
+        assert_eq!(got, tier, "override to {} did not stick", tier.name());
+    }
+}
+
+#[test]
+fn tile_env_values_validate_with_actionable_messages() {
+    // happy path: in-range integers, surrounding whitespace tolerated
+    assert_eq!(kernels::parse_tile_env("LRT_TILE_J", "16", 4096), Ok(16));
+    assert_eq!(kernels::parse_tile_env("LRT_TILE_K", " 128 ", 4096), Ok(128));
+    assert_eq!(kernels::parse_tile_env("LRT_TILE_J", "1", 4096), Ok(1));
+    assert_eq!(
+        kernels::parse_tile_env("LRT_TILE_K", "4096", 4096),
+        Ok(4096)
+    );
+
+    // out of range: names the variable, the bound, and the remedy
+    let err = kernels::parse_tile_env("LRT_TILE_J", "0", 4096).unwrap_err();
+    assert!(err.contains("LRT_TILE_J"), "{err}");
+    assert!(err.contains("1..=4096"), "{err}");
+    assert!(err.contains("unset"), "{err}");
+    let err =
+        kernels::parse_tile_env("LRT_TILE_K", "5000", 4096).unwrap_err();
+    assert!(err.contains("out of range"), "{err}");
+
+    // non-numeric: names the variable, echoes the value, shows an example
+    for bad in ["abc", "-4", "1.5", ""] {
+        let err = kernels::parse_tile_env("LRT_TILE_J", bad, 4096)
+            .unwrap_err();
+        assert!(err.contains("LRT_TILE_J"), "{bad:?}: {err}");
+        assert!(err.contains("not a positive integer"), "{bad:?}: {err}");
+        assert!(err.contains("LRT_TILE_J=16"), "{bad:?}: {err}");
+    }
+}
+
+#[test]
+fn default_tile_table_is_sane_for_this_arch() {
+    let t = kernels::default_tiles();
+    // the committed table must itself pass the env validation bounds
+    assert!((1..=4096).contains(&t.tile_j), "tile_j={}", t.tile_j);
+    assert!((1..=4096).contains(&t.tile_k), "tile_k={}", t.tile_k);
+    assert!(
+        (1..=(1usize << 30)).contains(&t.par_min_work),
+        "par_min_work={}",
+        t.par_min_work
+    );
+    // and the resolved runtime knobs must respect the same bounds
+    // whatever env this suite runs under
+    assert!((1..=4096).contains(&kernels::tile_j()));
+    assert!((1..=4096).contains(&kernels::tile_k()));
+    assert!(kernels::par_min_work() >= 1);
+}
+
+#[test]
+fn tile_overrides_apply_and_restore() {
+    let (j0, k0) = (kernels::tile_j(), kernels::tile_k());
+    let (j1, k1) = kernels::with_overrides_full(
+        None,
+        None,
+        Some(7),
+        Some(33),
+        || (kernels::tile_j(), kernels::tile_k()),
+    );
+    assert_eq!((j1, k1), (7, 33), "overrides did not apply");
+    assert_eq!(
+        (kernels::tile_j(), kernels::tile_k()),
+        (j0, k0),
+        "overrides leaked out of the scope"
+    );
+    // partial override: only the named knob moves
+    let (j2, k2) = kernels::with_overrides_full(None, None, Some(9), None, || {
+        (kernels::tile_j(), kernels::tile_k())
+    });
+    assert_eq!((j2, k2), (9, k0));
+    // a zero override clamps to 1 instead of wedging the blocked loops
+    let j3 =
+        kernels::with_overrides_full(None, None, Some(0), None, kernels::tile_j);
+    assert_eq!(j3, 1);
+}

@@ -19,6 +19,24 @@ fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
     Mat::from_fn(r, c, |_, _| rng.normal_f32(0.0, 1.0))
 }
 
+/// Bit-exact tiers (scalar/unrolled/native) must match the naive
+/// reference bitwise; the fma tier fuses multiply-adds (one rounding
+/// instead of two) so it only promises the documented 1e-5 relative
+/// band — same contract as `kernel_conformance.rs`.
+fn assert_matches_naive(fast: &Mat, naive: &Mat, what: &str) {
+    if kernels::isa().bit_exact() {
+        assert_eq!(fast.data, naive.data, "{what}");
+        return;
+    }
+    let scale = naive.max_abs().max(1.0);
+    for (i, (x, y)) in fast.data.iter().zip(naive.data.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-5 * scale,
+            "{what} elem {i}: {x} vs {y} (fma tolerance)"
+        );
+    }
+}
+
 /// Odd shapes: 1x1, tall, wide, non-multiples of TILE_J/TILE_K, and the
 /// two acceptance shapes (fc5 64x512, linreg 256x1024).
 const SHAPES: [(usize, usize, usize); 8] = [
@@ -40,7 +58,7 @@ fn blocked_matmul_matches_naive_exactly() {
         let b = rand_mat(&mut rng, k, n);
         let fast = kernels::matmul(&a, &b);
         let naive = a.matmul(&b);
-        assert_eq!(fast.data, naive.data, "matmul {m}x{k}x{n}");
+        assert_matches_naive(&fast, &naive, &format!("matmul {m}x{k}x{n}"));
     }
 }
 
@@ -52,7 +70,7 @@ fn blocked_matmul_atb_matches_naive_exactly() {
         let b = rand_mat(&mut rng, p, n);
         let fast = kernels::matmul_atb(&a, &b);
         let naive = a.t().matmul(&b);
-        assert_eq!(fast.data, naive.data, "atb {p}x{m}x{n}");
+        assert_matches_naive(&fast, &naive, &format!("atb {p}x{m}x{n}"));
     }
 }
 

@@ -15,10 +15,10 @@
 //! failed exit instead of a silent CI timeout).
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 
 use lrt_nvm::nn::workspace;
-use lrt_nvm::tensor::kernels;
+use lrt_nvm::tensor::{kernels, pool};
 
 /// Deterministic per-(seed, call, index) yield count in 0..4.
 fn yields(seed: u64, call: usize, i: usize) -> usize {
@@ -128,6 +128,127 @@ fn interleaved_fanouts_never_deadlock_and_preserve_order() {
                 trainer_role(seed * 2 + 3, 20);
             });
         }
+    });
+    done.store(true, Ordering::Relaxed);
+}
+
+fn spin_until(what: &str, cond: impl Fn() -> bool) {
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(120);
+    while !cond() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "timed out waiting for {what}"
+        );
+        std::thread::yield_now();
+    }
+}
+
+/// Work-stealing choreography: with a 4-thread budget, dispatcher A's
+/// fan-out takes 3 of the 4 tokens and parks all 3 workers inside its
+/// items; sibling B then asks for 3, gets the leftover token granted
+/// (unpublishable — every worker is busy, so it is forfeited) and 2
+/// seats denied, which must be queued on the backlog rather than lost.
+/// When A's items finish and its budget guard drops, the release-path
+/// backfill must convert exactly those 2 queued seats into stolen work
+/// on the re-parked workers, so B's items run on pool threads despite
+/// B's own `acquire` having been refused — with per-call ordering
+/// intact. All counts are deterministic because the gates sequence
+/// every transition.
+#[test]
+fn denied_seats_backfilled_by_sibling_release() {
+    let done = Arc::new(AtomicBool::new(false));
+    {
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let deadline = std::time::Instant::now()
+                + std::time::Duration::from_secs(300);
+            while std::time::Instant::now() < deadline {
+                if done.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+            eprintln!(
+                "pool_fairness: backfill choreography deadlocked \
+                 (watchdog fired after 300s)"
+            );
+            std::process::exit(101);
+        });
+    }
+
+    kernels::with_overrides(None, Some(4), || {
+        let stolen0 = pool::seats_stolen();
+        let forfeited0 = pool::seats_forfeited();
+        assert_eq!(pool::seats_pending(), 0, "dirty backlog at test start");
+
+        // 4 A-items in flight (3 workers + A's caller) + this thread
+        let a_entered = Barrier::new(5);
+        let a_go = AtomicBool::new(false);
+        let b_go = AtomicBool::new(false);
+
+        std::thread::scope(|s| {
+            // Dispatcher A: holds every worker and all 3 tokens until
+            // a_go opens.
+            s.spawn(|| {
+                let out = kernels::run_scoped(4, |i| {
+                    a_entered.wait();
+                    while !a_go.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                    i * 2
+                });
+                assert_eq!(out, vec![0, 2, 4, 6], "A lost ordering");
+            });
+            a_entered.wait(); // all 4 A-items running, tokens pinned
+
+            // Dispatcher B: budget-starved fan-out; its denied seats
+            // must land on the backlog.
+            let b_caller_thread = std::sync::Mutex::new(None);
+            let b = s.spawn(|| {
+                *b_caller_thread.lock().unwrap() =
+                    Some(std::thread::current().id());
+                kernels::run_scoped(4, |i| {
+                    while !b_go.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                    (i * 7, std::thread::current().id())
+                })
+            });
+            spin_until("B's denied seats to be queued", || {
+                pool::seats_pending() == 2
+            });
+
+            // A drains; its guard's release must backfill both seats.
+            a_go.store(true, Ordering::Release);
+            spin_until("backfill to steal both queued seats", || {
+                pool::seats_stolen() == stolen0 + 2
+            });
+            assert_eq!(pool::seats_pending(), 0, "seats stolen but pending");
+
+            // Let B's items (caller + 2 stolen workers) finish.
+            b_go.store(true, Ordering::Release);
+            let out = b.join().expect("B panicked");
+            let vals: Vec<usize> = out.iter().map(|&(v, _)| v).collect();
+            assert_eq!(vals, vec![0, 7, 14, 21], "B lost ordering");
+            let b_caller = b_caller_thread.lock().unwrap().unwrap();
+            let on_workers =
+                out.iter().filter(|&&(_, id)| id != b_caller).count();
+            assert!(
+                on_workers >= 2,
+                "expected >=2 of B's items on stolen pool workers, \
+                 got {on_workers} (backfill never ran?)"
+            );
+        });
+
+        // Ledger: B's one granted-but-unpublishable seat is the only
+        // forfeit in this choreography.
+        assert_eq!(
+            pool::seats_forfeited(),
+            forfeited0 + 1,
+            "unexpected forfeit count"
+        );
+        assert_eq!(pool::seats_pending(), 0, "backlog not drained");
     });
     done.store(true, Ordering::Relaxed);
 }
