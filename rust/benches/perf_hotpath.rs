@@ -9,6 +9,7 @@
 
 use lrt_nvm::lrt::{LrtState, Variant};
 use lrt_nvm::tensor::{kernels, Mat};
+use lrt_nvm::util::bench::run_meta;
 use lrt_nvm::util::rng::Rng;
 use lrt_nvm::util::table::Table;
 
@@ -80,24 +81,6 @@ fn fmt_json(v: Option<f64>) -> String {
         Some(v) => format!("{v:.2}"),
         None => "null".to_string(),
     }
-}
-
-/// Run-metadata fragment carried on EVERY `BENCH_JSON` line so
-/// cross-run/cross-machine lines are self-describing instead of
-/// requiring the config to be inferred from context: ISA tier, thread
-/// budget, active tile sizes, and the arch triple.
-fn run_meta(
-    isa: &str,
-    threads: usize,
-    tile_j: usize,
-    tile_k: usize,
-) -> String {
-    format!(
-        "\"isa\":\"{isa}\",\"threads\":{threads},\"tile_j\":{tile_j},\
-         \"tile_k\":{tile_k},\"arch\":\"{}-{}\"",
-        std::env::consts::ARCH,
-        std::env::consts::OS,
-    )
 }
 
 fn main() {
@@ -819,6 +802,83 @@ fn main() {
             ));
         }
         t5.print();
+        println!();
+        for line in &json_lines {
+            println!("{line}");
+        }
+        println!();
+    }
+
+    println!("== serving engine: latency under synthetic load ==");
+    println!(
+        "(lrt-nvm serve hot path: virtual-clock discrete-event loop, \
+         bounded queue, adaptive micro-batches fanned out on the parked \
+         pool, trainer thread publishing epoch snapshots. Latency \
+         percentiles are *virtual* microseconds — deterministic, \
+         replayable — while wall_ms is the real cost of executing the \
+         run's forward passes; BENCH_JSON hotpath_serve lines carry \
+         both.)\n"
+    );
+    {
+        use lrt_nvm::coordinator::config::RunConfig;
+        use lrt_nvm::serve::{self, CostModel, ServeCfg, TraceCfg, TraceKind};
+        let requests = if lrt_nvm::util::cli::full_scale() {
+            5_000
+        } else {
+            400
+        };
+        let mut t6 = Table::new(vec![
+            "trace", "threads", "p50 ms", "p99 ms", "p999 ms", "drop",
+            "mean batch", "wall ms",
+        ]);
+        let mut json_lines: Vec<String> = Vec::new();
+        for kind in [TraceKind::Poisson, TraceKind::Bursty] {
+            for &threads in &[1usize, 4] {
+                let mut train = RunConfig::default();
+                train.offline_samples = 50;
+                let mut trace = TraceCfg::new(kind, 42, requests);
+                trace.rate_rps = 2_000.0;
+                let mut cfg = ServeCfg::new(trace, train);
+                cfg.cost = CostModel::new(200, 300, threads);
+                let rep = kernels::with_overrides(None, Some(threads), || {
+                    serve::run(&cfg)
+                });
+                t6.row(vec![
+                    kind.name().to_string(),
+                    format!("{threads}"),
+                    format!("{:.3}", rep.p50_us / 1e3),
+                    format!("{:.3}", rep.p99_us / 1e3),
+                    format!("{:.3}", rep.p999_us / 1e3),
+                    format!("{}", rep.dropped),
+                    format!("{:.2}", rep.mean_batch),
+                    format!("{:.1}", rep.wall_secs * 1e3),
+                ]);
+                json_lines.push(format!(
+                    "BENCH_JSON {{\"bench\":\"hotpath_serve\",\
+                     \"trace\":\"{}\",\"requests\":{},\
+                     \"p50_ms\":{:.3},\"p99_ms\":{:.3},\
+                     \"p999_ms\":{:.3},\"dropped\":{},\
+                     \"mean_batch\":{:.2},\"snapshots\":{},\
+                     \"wall_ms\":{:.1},{}}}",
+                    kind.name(),
+                    rep.requests,
+                    rep.p50_us / 1e3,
+                    rep.p99_us / 1e3,
+                    rep.p999_us / 1e3,
+                    rep.dropped,
+                    rep.mean_batch,
+                    rep.snapshots_published,
+                    rep.wall_secs * 1e3,
+                    run_meta(
+                        kernels::isa().name(),
+                        threads,
+                        kernels::tile_j(),
+                        kernels::tile_k()
+                    ),
+                ));
+            }
+        }
+        t6.print();
         println!();
         for line in &json_lines {
             println!("{line}");

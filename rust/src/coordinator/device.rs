@@ -26,6 +26,11 @@ pub struct NativeDevice {
     /// Weights in `params` are stale vs the NVM arrays (after a commit
     /// or drift round); cleared by `read_weights`.
     weights_dirty: bool,
+    /// Monotone count of NVM weight-change events (commits that wrote
+    /// cells, drift rounds, external hydrations). Never reset: the
+    /// serving path's snapshot publisher compares it across steps to
+    /// detect that a flush landed (`serve::snapshot`).
+    weights_version: u64,
     rng: Rng,
     drift_rng: Rng,
     /// Retained scratch for the whole training step — after the first
@@ -76,10 +81,26 @@ impl NativeDevice {
             sched,
             kappa_skips: 0,
             weights_dirty: true,
+            weights_version: 0,
             rng,
             drift_rng,
             ws: Workspace::new(),
         }
+    }
+
+    /// Record that the NVM arrays changed behind `params`: stale until
+    /// the next `read_weights`, and one tick on the version counter.
+    fn note_weight_change(&mut self) {
+        self.weights_dirty = true;
+        self.weights_version += 1;
+    }
+
+    /// Monotone weight-change counter: advances every time a commit
+    /// writes cells, a drift round runs, or a hydration path marks the
+    /// arrays dirty. `read_weights` does not touch it — it counts NVM
+    /// changes, not syncs.
+    pub fn weights_version(&self) -> u64 {
+        self.weights_version
     }
 
     /// Refresh the logical weights from NVM (drift may have moved them).
@@ -159,7 +180,9 @@ impl NativeDevice {
                 *wv = qw.q(*wv - lr_w * g);
             }
             if self.arrays[i].commit(&cand[i]) > 0 {
+                // note_weight_change inlined: the ws borrow is live
                 self.weights_dirty = true;
+                self.weights_version += 1;
             }
         }
     }
@@ -201,7 +224,9 @@ impl NativeDevice {
                 let density = self.arrays[i].density_of(&cand[i]);
                 if self.sched[i].decide(density) {
                     if self.arrays[i].commit(&cand[i]) > 0 {
+                        // note_weight_change inlined: ws borrow is live
                         self.weights_dirty = true;
+                        self.weights_version += 1;
                     }
                     self.lrt[i].reset();
                 }
@@ -274,7 +299,7 @@ impl NativeDevice {
         for arr in &mut self.arrays {
             drift::apply(arr, &mut self.drift_rng, &cfg);
         }
-        self.weights_dirty = true;
+        self.note_weight_change();
     }
 
     pub fn max_cell_writes(&self) -> u64 {
@@ -328,7 +353,7 @@ impl NativeDevice {
     /// Force a weight re-read before the next step — used after a
     /// hydration path mutates `arrays` behind the device's back.
     pub(crate) fn mark_weights_dirty(&mut self) {
-        self.weights_dirty = true;
+        self.note_weight_change();
     }
 }
 
@@ -430,6 +455,28 @@ mod tests {
                 Ok(())
             });
         }
+    }
+
+    #[test]
+    fn weights_version_counts_nvm_changes_not_syncs() {
+        let mut dev = mk(Scheme::Sgd);
+        assert_eq!(dev.weights_version(), 0);
+        dev.read_weights();
+        assert_eq!(dev.weights_version(), 0, "sync must not tick");
+        dev.step(&image(1), 3);
+        let after_commit = dev.weights_version();
+        assert!(after_commit > 0, "SGD commit must tick the version");
+        dev.read_weights();
+        assert_eq!(dev.weights_version(), after_commit);
+        dev.cfg.drift = crate::nvm::drift::DriftCfg::analog(100.0);
+        dev.drift();
+        assert_eq!(dev.weights_version(), after_commit + 1);
+        // inference never changes weights, so the version holds
+        let mut inf = mk(Scheme::Inference);
+        for t in 0..3 {
+            inf.step(&image(t), 0);
+        }
+        assert_eq!(inf.weights_version(), 0);
     }
 
     #[test]

@@ -51,6 +51,16 @@
 //! `tests/alloc_steady_state.rs` proves it with the
 //! `util::allocwatch::CountingAlloc` instrumentation, and
 //! `tests/workspace_reuse.rs` proves buffer reuse is numerics-neutral.
+//!
+//! The online serving path (`serve`, `lrt-nvm serve`) layers a
+//! latency-SLO inference engine on the same stack: deterministic
+//! synthetic load traces over a virtual clock, a bounded admission
+//! queue with explicit drop policies, adaptive micro-batches fanned
+//! out through `nn::workspace::map_samples` on the parked pool, and
+//! epoch-versioned weight snapshots (`serve::snapshot`) so inference
+//! pins an immutable epoch while a trainer thread concurrently
+//! applies LRT updates and publishes on flush — replayable
+//! byte-for-byte (`tests/serve_engine.rs`).
 
 pub mod baselines;
 pub mod convex;
@@ -63,5 +73,6 @@ pub mod nvm;
 pub mod coordinator;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

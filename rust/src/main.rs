@@ -18,6 +18,11 @@
 //!   adapt    [--scheme --env]  one online-adaptation run (Fig. 6 cell);
 //!                              `--backend artifact` drives the AOT HLO
 //!                              executables through the PJRT runtime
+//!   serve    [--trace ...]     latency-SLO batched inference under a
+//!                              seeded synthetic load trace while a
+//!                              trainer thread publishes epoch-versioned
+//!                              weight snapshots (virtual-clock latency
+//!                              report, byte-identical on replay)
 //!
 //! Legacy subcommands (`writes`, `convex`, `sweep`, `table1-3`, `grads`,
 //! `fleet`) forward to the registry and stay scriptable.
@@ -46,6 +51,7 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "info" => info(&args),
         "adapt" => adapt(&args),
+        "serve" => serve(&args),
         "list" => {
             list(&args);
             Ok(())
@@ -391,7 +397,17 @@ fn print_help() {
            adapt              one online-adaptation run (--scheme inference|\n\
                               bias|sgd|lrt|lrt-unbiased, --env control|shift|\n\
                               analog|digital, --samples N, --backend native|\n\
-                              artifact, --no-norm)\n\n\
+                              artifact, --no-norm)\n\
+           serve              latency-SLO batched inference under a seeded\n\
+                              synthetic load trace, with a trainer thread\n\
+                              publishing epoch-versioned weight snapshots\n\
+                              (--trace poisson|bursty|diurnal, --requests N,\n\
+                              --rate RPS, --queue-cap N, --drop newest|oldest,\n\
+                              --max-batch N, --hold-us U, --slo-us U,\n\
+                              --cost-us U, --overhead-us U, --train-every-us U,\n\
+                              --train-steps N, --threads N, --scheme/--env/\n\
+                              --seed/--offline as in adapt, --json). Virtual-\n\
+                              clock latency report: byte-identical on replay.\n\n\
          LEGACY ALIASES (forward to the registry):\n\
            writes->fig3  convex->fig5  grads->fig9  sweep->fig7|fig11\n\
            table1 table2 table3 fleet\n\n\
@@ -433,6 +449,106 @@ fn info(args: &Args) -> Result<()> {
         }
         Err(e) => println!("artifacts not loaded: {e:#}"),
     }
+    Ok(())
+}
+
+/// `lrt-nvm serve` — latency-SLO batched inference under a synthetic
+/// load trace while a trainer thread concurrently applies LRT updates
+/// (see `serve` module docs). The latency report is a pure function of
+/// the flags: virtual-clock accounting, wall time shown on stderr and
+/// in the BENCH_JSON line only.
+fn serve(args: &Args) -> Result<()> {
+    use lrt_nvm::serve::{
+        self, BatchPolicy, CostModel, DropPolicy, ServeCfg, TraceCfg,
+        TraceKind,
+    };
+    // Pin the kernel pool before its lazy start: --threads N is the
+    // serving thread budget (map_samples fan-out width).
+    if let Some(t) = args.options.get("threads") {
+        std::env::set_var("LRT_KERNEL_THREADS", t);
+    }
+    let kind_s = args.str_opt("trace", "poisson");
+    let Some(kind) = TraceKind::parse(&kind_s) else {
+        bail!("unknown --trace '{kind_s}' (poisson|bursty|diurnal)");
+    };
+    let drop_s = args.str_opt("drop", "newest");
+    let Some(drop_policy) = DropPolicy::parse(&drop_s) else {
+        bail!("unknown --drop '{drop_s}' (newest|oldest)");
+    };
+    let train = RunConfig::from_args(args);
+    let mut trace = TraceCfg::new(
+        kind,
+        train.seed,
+        args.usize_opt("requests", 2_000),
+    );
+    trace.rate_rps = args.f64_opt("rate", trace.rate_rps);
+    trace.burst_factor = args.f64_opt("burst-factor", trace.burst_factor);
+    trace.burst_duty = args.f64_opt("burst-duty", trace.burst_duty);
+    trace.burst_period_us = args.u64_opt(
+        "burst-period-ms",
+        trace.burst_period_us / 1_000,
+    ) * 1_000;
+    trace.day_us = args.u64_opt("day-ms", trace.day_us / 1_000) * 1_000;
+    trace.day_amp = args.f64_opt("day-amp", trace.day_amp);
+    let mut cfg = ServeCfg::new(trace, train);
+    cfg.queue_cap = args.usize_opt("queue-cap", cfg.queue_cap).max(1);
+    cfg.drop_policy = drop_policy;
+    cfg.policy = BatchPolicy {
+        // .max(1): the struct literal skips BatchPolicy::new's assert
+        max_batch: args
+            .usize_opt("max-batch", cfg.policy.max_batch)
+            .max(1),
+        hold_us: args.u64_opt("hold-us", cfg.policy.hold_us),
+    };
+    cfg.cost = CostModel::new(
+        args.u64_opt("overhead-us", cfg.cost.overhead_us),
+        args.u64_opt("cost-us", cfg.cost.per_sample_us),
+        lrt_nvm::tensor::kernels::max_threads(),
+    );
+    cfg.slo_us = args.u64_opt("slo-us", cfg.slo_us);
+    cfg.train_every_us =
+        args.u64_opt("train-every-us", cfg.train_every_us);
+    cfg.train_steps = args.usize_opt("train-steps", cfg.train_steps);
+
+    eprintln!(
+        "serve: trace={} requests={} rate={}rps queue={} drop={} \
+         max-batch={} slo={}us scheme={} (pretraining {} samples...)",
+        cfg.trace.kind.name(),
+        cfg.trace.requests,
+        cfg.trace.rate_rps,
+        cfg.queue_cap,
+        cfg.drop_policy.name(),
+        cfg.policy.max_batch,
+        cfg.slo_us,
+        cfg.train.scheme.name(),
+        cfg.train.offline_samples,
+    );
+    let rep = serve::run(&cfg);
+    let row = rep.to_row();
+    if args.flag("json") {
+        println!("{}", row.jsonl());
+    } else {
+        println!("{}", lrt_nvm::util::table::render_rows(&[row]));
+    }
+    // wall time is stderr/BENCH_JSON-only: the structured row above
+    // must be byte-identical across replays
+    eprintln!("wall: {:.2}s", rep.wall_secs);
+    println!(
+        "BENCH_JSON {{\"bench\":\"hotpath_serve\",\"trace\":\"{}\",\
+         \"requests\":{},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\
+         \"p999_ms\":{:.3},\"dropped\":{},\"mean_batch\":{:.2},\
+         \"snapshots\":{},\"wall_ms\":{:.1},{}}}",
+        rep.trace,
+        rep.requests,
+        rep.p50_us / 1e3,
+        rep.p99_us / 1e3,
+        rep.p999_us / 1e3,
+        rep.dropped,
+        rep.mean_batch,
+        rep.snapshots_published,
+        rep.wall_secs * 1e3,
+        lrt_nvm::util::bench::run_meta_current(),
+    );
     Ok(())
 }
 
@@ -487,7 +603,11 @@ fn adapt(args: &Args) -> Result<()> {
                         t + 1,
                         metrics.acc_ema.get(),
                         dev.max_cell_writes(),
-                        t0.elapsed().as_millis() as f64 / (t + 1) as f64
+                        // secs_f64 first: as_millis() truncates to
+                        // whole ms *before* the division, zeroing
+                        // sub-ms per-sample times on fast paths
+                        t0.elapsed().as_secs_f64() * 1e3
+                            / (t + 1) as f64
                     );
                 }
             }

@@ -306,6 +306,12 @@ where
     }
     let workers = crate::tensor::kernels::max_threads().min(n);
     let chunk = n.div_ceil(workers);
+    // ceil-sized chunks can cover n with fewer workers than requested
+    // (n=5, 4 workers -> chunk=2 -> worker 3 would get the empty 6..5);
+    // recompute so no pool seat is acquired just to process nothing —
+    // empty seats still count against the shared fan-out budget and
+    // starve concurrent dispatchers.
+    let workers = n.div_ceil(chunk);
     crate::tensor::kernels::run_scoped(workers, |w| {
         let mut ws = Workspace::forward_only();
         let mut state = setup();

@@ -1,0 +1,163 @@
+//! Adaptive micro-batch sizing and the virtual service-time model.
+//!
+//! Batch policy: depth-proportional. At dispatch time the batch takes
+//! `min(queue depth, max_batch)` requests — under light load every
+//! request is served solo (lowest latency); under backlog the batch
+//! grows toward `max_batch`, amortizing the per-dispatch overhead
+//! exactly when throughput matters. An optional hold-back window
+//! (`hold_us`) lets a dispatch wait a bounded sliver of virtual time
+//! for imminent arrivals when the batch is not yet full — the classic
+//! latency/throughput knob, off by default.
+//!
+//! Service time is charged in *virtual* microseconds from a
+//! deterministic cost model, never from wall time: the report must be
+//! byte-identical across runs and machines (`RunReport::to_row`'s
+//! wall-exclusion rule, applied to the whole serving path). The model
+//! is the standard affine one: a fixed per-dispatch overhead plus a
+//! per-sample cost divided across the worker threads the inference
+//! fan-out actually uses (`workspace::map_samples` gives each worker a
+//! contiguous slice, so the span is `ceil(batch / threads)` samples).
+//! Wall time is still *measured* around the real forward passes and
+//! reported out-of-band (stderr + `BENCH_JSON`), so the model can be
+//! recalibrated against hardware without touching replayability.
+
+/// Adaptive batch policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Hard cap on requests per dispatch.
+    pub max_batch: usize,
+    /// Virtual microseconds a non-full dispatch may wait for imminent
+    /// arrivals (0 disables hold-back).
+    pub hold_us: u64,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize) -> BatchPolicy {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        BatchPolicy { max_batch, hold_us: 0 }
+    }
+
+    /// Requests the next dispatch takes from a queue of `depth`.
+    pub fn batch_size(&self, depth: usize) -> usize {
+        depth.min(self.max_batch).max(1)
+    }
+}
+
+/// Deterministic virtual service-time model for one dispatch.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Fixed virtual cost per dispatch (scheduling, weight pinning).
+    pub overhead_us: u64,
+    /// Virtual cost per sample on one worker.
+    pub per_sample_us: u64,
+    /// Worker threads the inference fan-out spreads the batch over.
+    pub threads: usize,
+}
+
+impl CostModel {
+    pub fn new(
+        overhead_us: u64,
+        per_sample_us: u64,
+        threads: usize,
+    ) -> CostModel {
+        CostModel {
+            overhead_us,
+            per_sample_us,
+            threads: threads.max(1),
+        }
+    }
+
+    /// Virtual microseconds one dispatch of `batch` samples occupies
+    /// the server.
+    pub fn service_us(&self, batch: usize) -> u64 {
+        self.overhead_us
+            + self.per_sample_us * batch.div_ceil(self.threads) as u64
+    }
+}
+
+/// Exact batch-size histogram: `counts[k]` dispatches carried exactly
+/// `k` requests (index 0 unused — a dispatch is never empty).
+#[derive(Debug, Clone)]
+pub struct BatchHist {
+    counts: Vec<u64>,
+}
+
+impl BatchHist {
+    pub fn new(max_batch: usize) -> BatchHist {
+        BatchHist { counts: vec![0; max_batch + 1] }
+    }
+
+    pub fn record(&mut self, batch: usize) {
+        self.counts[batch] += 1;
+    }
+
+    /// `(size, dispatches)` pairs for every size that occurred.
+    pub fn nonzero(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(k, &c)| (k, c))
+            .collect()
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| k as u64 * c)
+            .sum()
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        let d = self.dispatches();
+        if d == 0 {
+            0.0
+        } else {
+            self.samples() as f64 / d as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_tracks_depth_up_to_cap() {
+        let p = BatchPolicy::new(8);
+        assert_eq!(p.batch_size(1), 1);
+        assert_eq!(p.batch_size(5), 5);
+        assert_eq!(p.batch_size(8), 8);
+        assert_eq!(p.batch_size(100), 8);
+        // degenerate call on an empty queue still forms a 1-slot batch
+        // (the engine never dispatches with an empty queue)
+        assert_eq!(p.batch_size(0), 1);
+    }
+
+    #[test]
+    fn service_time_amortizes_across_threads() {
+        let c = CostModel::new(200, 300, 4);
+        assert_eq!(c.service_us(1), 200 + 300);
+        assert_eq!(c.service_us(4), 200 + 300);
+        assert_eq!(c.service_us(5), 200 + 600);
+        let seq = CostModel::new(200, 300, 1);
+        assert_eq!(seq.service_us(5), 200 + 1500);
+    }
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let mut h = BatchHist::new(4);
+        h.record(1);
+        h.record(1);
+        h.record(4);
+        assert_eq!(h.dispatches(), 3);
+        assert_eq!(h.samples(), 6);
+        assert!((h.mean_batch() - 2.0).abs() < 1e-12);
+        assert_eq!(h.nonzero(), vec![(1, 2), (4, 1)]);
+    }
+}

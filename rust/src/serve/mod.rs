@@ -1,0 +1,488 @@
+//! Online serving engine: latency-SLO batched inference while the same
+//! device trains (`lrt-nvm serve`, ROADMAP direction 3).
+//!
+//! The paper's deployment story is a device that *serves* while LRT
+//! updates and NVM flushes land (cf. the PCM speech-command system of
+//! arXiv 2010.11741, classifying continuously during on-chip
+//! learning). This module is that path: a bounded admission queue fed
+//! by a deterministic synthetic load trace ([`trace`]), drained in
+//! adaptive micro-batches ([`batcher`]) whose forward passes fan out
+//! through `workspace::map_samples` on the parked kernel pool, while a
+//! trainer thread concurrently applies LRT updates and publishes
+//! epoch-versioned weight snapshots ([`snapshot`]) whenever a flush
+//! lands.
+//!
+//! ## Determinism: a discrete-event simulation with real compute
+//!
+//! Latency is accounted in **virtual microseconds**, never wall time.
+//! Arrivals come pre-generated from a seeded trace; each dispatch is
+//! charged a deterministic service time from [`batcher::CostModel`];
+//! the report is therefore a pure function of (trace, flags) and two
+//! runs with the same seed produce byte-identical rows — the same
+//! purity rule `RunReport::to_row` follows (wall time measured, shown
+//! out-of-band, excluded from structured output). The forward passes
+//! are still *really executed* on the pool (accuracy in the report is
+//! real model output), but their wall duration never feeds the
+//! latency columns.
+//!
+//! The trainer runs on a real `std::thread`, yet the set of snapshots
+//! any dispatch can observe is deterministic, via a **virtual-time
+//! rendezvous**: the trainer owns a monotone virtual clock advanced by
+//! a fixed amount per training step, and it *publishes before it
+//! advances*. The serving loop never pins weights for a dispatch at
+//! virtual time `t` until the trainer clock has reached `t` (or the
+//! trainer is done), so `pin_at(t)` always sees exactly the
+//! publishes with `vtime <= t` — no more, no fewer — regardless of OS
+//! scheduling. The trainer's step count is derived from the trace
+//! horizon, not from serving progress, so the full publish schedule is
+//! itself replayable.
+
+pub mod batcher;
+pub mod queue;
+pub mod snapshot;
+pub mod trace;
+
+pub use batcher::{BatchHist, BatchPolicy, CostModel};
+pub use queue::{BoundedQueue, DropPolicy, Request};
+pub use snapshot::{fingerprint, SnapshotStore, WeightSnapshot};
+pub use trace::{TraceCfg, TraceKind, US_PER_SEC};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::config::{RunConfig, Scheme};
+use crate::coordinator::device::NativeDevice;
+use crate::coordinator::trainer::pretrain_cached;
+use crate::data::online::Partition;
+use crate::data::OnlineStream;
+use crate::nn::{model, workspace};
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile};
+use crate::util::table::Row;
+
+/// Full configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Load shape (kind, seed, rate, request count).
+    pub trace: TraceCfg,
+    /// Admission queue capacity.
+    pub queue_cap: usize,
+    /// What a full queue drops.
+    pub drop_policy: DropPolicy,
+    /// Micro-batch sizing (cap + optional hold-back window).
+    pub policy: BatchPolicy,
+    /// Virtual service-time model for dispatches.
+    pub cost: CostModel,
+    /// Latency SLO (virtual µs); completions above it are violations.
+    pub slo_us: u64,
+    /// Trainer configuration (scheme `inference` disables the trainer
+    /// thread entirely — pure serving against the deploy snapshot).
+    pub train: RunConfig,
+    /// Virtual µs each training step occupies the trainer.
+    pub train_every_us: u64,
+    /// Training steps; 0 = auto (cover the trace horizon).
+    pub train_steps: usize,
+}
+
+impl ServeCfg {
+    pub fn new(trace: TraceCfg, train: RunConfig) -> ServeCfg {
+        ServeCfg {
+            trace,
+            queue_cap: 64,
+            drop_policy: DropPolicy::Newest,
+            policy: BatchPolicy::new(32),
+            cost: CostModel::new(200, 300, 1),
+            slo_us: 20_000,
+            train,
+            train_every_us: 5_000,
+            train_steps: 0,
+        }
+    }
+
+    /// Training steps this run will execute: explicit, or enough to
+    /// keep the trainer busy past the last arrival.
+    fn resolved_train_steps(&self, trace_end_us: u64) -> usize {
+        if self.train_steps > 0 {
+            self.train_steps
+        } else {
+            (trace_end_us / self.train_every_us.max(1)) as usize + 1
+        }
+    }
+}
+
+/// The trainer's published virtual clock. One writer (the trainer
+/// thread), one waiter (the serving loop). `advance` stores the new
+/// time *after* the step's snapshot publish, so a waiter released at
+/// `wait_until(t)` is guaranteed the snapshot store already holds
+/// every publish with `vtime <= t`.
+struct TrainerClock {
+    vtime: AtomicU64,
+    done: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl TrainerClock {
+    fn new() -> TrainerClock {
+        TrainerClock {
+            vtime: AtomicU64::new(0),
+            done: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn advance(&self, t: u64) {
+        self.vtime.store(t, Ordering::Release);
+        // take the lock before notifying so a waiter between its check
+        // and its wait cannot miss the wakeup
+        let _g = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    fn finish(&self) {
+        self.done.store(true, Ordering::Release);
+        let _g = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Block until the trainer clock reaches `t` or the trainer exits.
+    fn wait_until(&self, t: u64) {
+        if self.vtime.load(Ordering::Acquire) >= t
+            || self.done.load(Ordering::Acquire)
+        {
+            return;
+        }
+        let mut g = self.lock.lock().unwrap();
+        while self.vtime.load(Ordering::Acquire) < t
+            && !self.done.load(Ordering::Acquire)
+        {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Structured result of one serving run. Everything except
+/// `wall_secs` is a pure function of the config — `to_row` (the
+/// replayable record) excludes wall time by the same rule as
+/// `RunReport::to_row`.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub trace: &'static str,
+    pub seed: u64,
+    pub requests: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub mean_us: f64,
+    pub max_us: f64,
+    pub peak_depth: usize,
+    pub slo_us: u64,
+    pub slo_violations: u64,
+    pub accuracy: f64,
+    pub snapshots_published: u64,
+    pub final_epoch: u64,
+    pub epoch_switches: u64,
+    pub makespan_us: u64,
+    pub virtual_rps: f64,
+    pub batch_hist: Vec<(usize, u64)>,
+    /// Real elapsed time of the run — diagnostics/BENCH_JSON only,
+    /// never part of `to_row`.
+    pub wall_secs: f64,
+}
+
+impl ServeReport {
+    /// Deterministic structured row: byte-identical across replays of
+    /// the same config (wall time deliberately absent).
+    pub fn to_row(&self) -> Row {
+        let hist = Json::Arr(
+            self.batch_hist
+                .iter()
+                .map(|&(k, c)| {
+                    Json::Arr(vec![Json::Num(k as f64), Json::Num(c as f64)])
+                })
+                .collect(),
+        );
+        Row::new()
+            .str("bench", "serve")
+            .str("trace", self.trace)
+            .int("seed", self.seed)
+            .int("requests", self.requests)
+            .int("completed", self.completed)
+            .int("dropped", self.dropped)
+            .int("batches", self.batches)
+            .num("mean_batch", self.mean_batch, 2)
+            .num("p50_ms", self.p50_us / 1e3, 3)
+            .num("p99_ms", self.p99_us / 1e3, 3)
+            .num("p999_ms", self.p999_us / 1e3, 3)
+            .num("mean_ms", self.mean_us / 1e3, 3)
+            .num("max_ms", self.max_us / 1e3, 3)
+            .int("peak_depth", self.peak_depth as u64)
+            .int("slo_us", self.slo_us)
+            .int("slo_violations", self.slo_violations)
+            .num("acc", self.accuracy, 4)
+            .int("snapshots", self.snapshots_published)
+            .int("final_epoch", self.final_epoch)
+            .int("epoch_switches", self.epoch_switches)
+            .int("makespan_us", self.makespan_us)
+            .num("virtual_rps", self.virtual_rps, 1)
+            .detail("batch_hist", hist)
+    }
+}
+
+/// Run one serving simulation: pretrain (cached), deploy epoch 0,
+/// start the trainer thread (unless scheme is `inference`), and drain
+/// the trace through the queue/batcher/pool pipeline.
+pub fn run(cfg: &ServeCfg) -> ServeReport {
+    let wall_start = std::time::Instant::now();
+    let arrivals = cfg.trace.arrivals();
+    let n = arrivals.len();
+    let trace_end = arrivals.last().copied().unwrap_or(0);
+
+    // Deploy: offline-pretrained weights become snapshot epoch 0.
+    let (params, aux) = pretrain_cached(&cfg.train);
+    let store = Arc::new(SnapshotStore::new(params.clone(), aux.clone()));
+    let clock = Arc::new(TrainerClock::new());
+
+    // Trainer thread: fixed step count derived from the trace horizon
+    // (never from serving progress), one virtual tick per step,
+    // publish-on-flush *before* advancing the clock. With scheme
+    // `inference` there is nothing to train: the clock starts done and
+    // every dispatch pins epoch 0.
+    let trainer = if cfg.train.scheme == Scheme::Inference {
+        clock.finish();
+        None
+    } else {
+        let steps = cfg.resolved_train_steps(trace_end);
+        let every = cfg.train_every_us.max(1);
+        let train_cfg = cfg.train.clone();
+        let store_w = Arc::clone(&store);
+        let clock_w = Arc::clone(&clock);
+        Some(std::thread::spawn(move || {
+            let mut stream = OnlineStream::new(
+                train_cfg.seed,
+                Partition::Online,
+                train_cfg.env,
+            );
+            stream.shift_period = train_cfg.shift_period;
+            let mut dev =
+                NativeDevice::new(train_cfg, params, aux);
+            let mut published_version = 0u64;
+            for k in 0..steps {
+                let s = stream.sample(k as u64);
+                dev.step(&s.image, s.label);
+                let vt = (k as u64 + 1) * every;
+                if dev.weights_version() != published_version {
+                    published_version = dev.weights_version();
+                    dev.read_weights();
+                    store_w.publish(vt, &dev.params, &dev.aux);
+                }
+                clock_w.advance(vt);
+            }
+            clock_w.finish();
+        }))
+    };
+
+    // Request payloads come from the held-out partition so serving
+    // accuracy is a real validation signal, decorrelated from both the
+    // training stream and the trace's arrival RNG.
+    let mut req_stream = OnlineStream::new(
+        cfg.trace.seed ^ 0x5E4E_F00D,
+        Partition::Validation,
+        cfg.train.env,
+    );
+    req_stream.shift_period = cfg.train.shift_period;
+
+    let mut q = BoundedQueue::new(cfg.queue_cap, cfg.drop_policy);
+    let mut hist = BatchHist::new(cfg.policy.max_batch);
+    let mut latencies: Vec<f64> = Vec::with_capacity(n);
+    let mut next = 0usize; // next trace arrival not yet offered
+    let mut free_at = 0u64; // server busy until this virtual instant
+    let mut completed = 0u64;
+    let mut correct = 0u64;
+    let mut slo_violations = 0u64;
+    let mut last_epoch = 0u64;
+    let mut epoch_switches = 0u64;
+    let mut final_epoch = 0u64;
+
+    while next < n || !q.is_empty() {
+        if q.is_empty() {
+            // idle server: jump the event clock to the next arrival
+            let r = Request { id: next as u64, arrival_us: arrivals[next] };
+            q.offer(r);
+            next += 1;
+        }
+        let mut t_d = free_at.max(q.front_arrival().unwrap());
+        // admit everything that has arrived by the dispatch instant
+        // (each offer lands at its own arrival time; capacity decides)
+        while next < n && arrivals[next] <= t_d {
+            let r = Request { id: next as u64, arrival_us: arrivals[next] };
+            q.offer(r);
+            next += 1;
+        }
+        // bounded hold-back: trade a sliver of latency for batch fill
+        if cfg.policy.hold_us > 0 {
+            let deadline = t_d + cfg.policy.hold_us;
+            while q.len() < cfg.policy.max_batch
+                && next < n
+                && arrivals[next] <= deadline
+            {
+                let r =
+                    Request { id: next as u64, arrival_us: arrivals[next] };
+                t_d = t_d.max(r.arrival_us);
+                q.offer(r);
+                next += 1;
+            }
+        }
+
+        // Rendezvous: no weights are pinned for virtual time t_d until
+        // the trainer has published everything up to t_d.
+        clock.wait_until(t_d);
+        let snap = store.pin_at(t_d);
+        store.retire_before(t_d);
+        if snap.epoch != last_epoch {
+            epoch_switches += 1;
+            last_epoch = snap.epoch;
+        }
+        final_epoch = final_epoch.max(snap.epoch);
+
+        let take = cfg.policy.batch_size(q.len());
+        let reqs = q.take(take);
+        let samples: Vec<_> =
+            reqs.iter().map(|r| req_stream.sample(r.id)).collect();
+
+        // Real forward passes, fanned out on the parked pool against
+        // the pinned epoch. Wall time of this block never enters the
+        // latency accounting.
+        let bn_eta = cfg.train.bn_eta();
+        let bn_stream = cfg.train.bn_stream;
+        let w_bits = cfg.train.w_bits;
+        let snap_ref = &snap;
+        let hits = workspace::map_samples(
+            samples.len(),
+            || snap_ref.aux.clone(),
+            |s, ws, aux_w| {
+                model::forward_into(
+                    &snap_ref.params,
+                    aux_w,
+                    &samples[s].image,
+                    bn_eta,
+                    bn_stream,
+                    w_bits,
+                    false,
+                    ws,
+                );
+                model::argmax(&ws.caches.logits) == samples[s].label
+            },
+        );
+        correct += hits.iter().filter(|&&h| h).count() as u64;
+
+        let service = cfg.cost.service_us(reqs.len());
+        let t_c = t_d + service;
+        for r in &reqs {
+            let lat = (t_c - r.arrival_us) as f64;
+            if lat > cfg.slo_us as f64 {
+                slo_violations += 1;
+            }
+            latencies.push(lat);
+        }
+        completed += reqs.len() as u64;
+        hist.record(reqs.len());
+        free_at = t_c;
+    }
+
+    if let Some(h) = trainer {
+        h.join().expect("trainer thread panicked");
+    }
+
+    debug_assert_eq!(completed + q.dropped, n as u64);
+    let makespan_us = free_at;
+    ServeReport {
+        trace: cfg.trace.kind.name(),
+        seed: cfg.trace.seed,
+        requests: n as u64,
+        completed,
+        dropped: q.dropped,
+        batches: hist.dispatches(),
+        mean_batch: hist.mean_batch(),
+        p50_us: percentile(&latencies, 50.0),
+        p99_us: percentile(&latencies, 99.0),
+        p999_us: percentile(&latencies, 99.9),
+        mean_us: mean(&latencies),
+        max_us: latencies.iter().cloned().fold(0.0, f64::max),
+        peak_depth: q.peak_depth,
+        slo_us: cfg.slo_us,
+        slo_violations,
+        accuracy: if completed == 0 {
+            0.0
+        } else {
+            correct as f64 / completed as f64
+        },
+        snapshots_published: store.published(),
+        final_epoch,
+        epoch_switches,
+        makespan_us,
+        virtual_rps: if makespan_us == 0 {
+            0.0
+        } else {
+            completed as f64 / (makespan_us as f64 / US_PER_SEC)
+        },
+        batch_hist: hist.nonzero(),
+        wall_secs: wall_start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(kind: TraceKind, seed: u64, requests: usize) -> ServeCfg {
+        let mut train = RunConfig::default();
+        train.offline_samples = 20; // CI-sized pretrain
+        train.samples = 0;
+        let mut trace = TraceCfg::new(kind, seed, requests);
+        trace.rate_rps = 2_000.0;
+        let mut cfg = ServeCfg::new(trace, train);
+        cfg.cost = CostModel::new(100, 200, 2);
+        cfg.train_every_us = 2_000;
+        cfg
+    }
+
+    #[test]
+    fn inference_only_run_accounts_every_request() {
+        let mut cfg = small_cfg(TraceKind::Poisson, 11, 60);
+        cfg.train.scheme = Scheme::Inference;
+        let rep = run(&cfg);
+        assert_eq!(rep.completed + rep.dropped, 60);
+        assert_eq!(rep.snapshots_published, 0);
+        assert_eq!(rep.final_epoch, 0);
+        assert_eq!(
+            rep.batches,
+            rep.batch_hist.iter().map(|&(_, c)| c).sum::<u64>()
+        );
+        assert!(rep.p50_us <= rep.p99_us && rep.p99_us <= rep.p999_us);
+        assert!(rep.makespan_us > 0);
+    }
+
+    #[test]
+    fn trained_run_is_byte_identical_on_replay() {
+        let cfg = small_cfg(TraceKind::Bursty, 7, 50);
+        let a = run(&cfg).to_row().jsonl();
+        let b = run(&cfg).to_row().jsonl();
+        assert_eq!(a, b, "serve replay diverged");
+    }
+
+    #[test]
+    fn trainer_publishes_and_dispatches_switch_epochs() {
+        let mut cfg = small_cfg(TraceKind::Poisson, 3, 80);
+        cfg.train.scheme = Scheme::Sgd; // commits (and thus publishes) fast
+        let rep = run(&cfg);
+        assert!(rep.snapshots_published > 0, "no flush ever published");
+        assert!(rep.final_epoch > 0, "serving never saw a new epoch");
+        assert_eq!(rep.completed + rep.dropped, 80);
+    }
+}

@@ -1,0 +1,183 @@
+//! Bounded FIFO admission queue with explicit drop-policy accounting.
+//!
+//! Requests enter at their (virtual) arrival instants and leave in
+//! dispatch batches. Capacity is enforced *at admission* — the serving
+//! loop offers every arrival exactly when the virtual clock reaches
+//! it, so queue state between events is constant and the accounting is
+//! deterministic: every offered request ends as exactly one of
+//! *completed* or *dropped* (`completed + dropped == offered` at the
+//! engine level). Under `Newest` a rejected newcomer is never queued
+//! (`accepted + dropped == offered`); under `Oldest` every newcomer is
+//! admitted (`accepted == offered`) and `dropped` counts evictions.
+//!
+//! Two drop policies:
+//! - [`DropPolicy::Newest`] — a full queue rejects the incoming
+//!   request (tail drop; the arriving client sees the failure).
+//! - [`DropPolicy::Oldest`] — a full queue evicts its head to admit
+//!   the newcomer (the stalest request was going to miss its SLO
+//!   anyway; the fresh one still has budget).
+
+use std::collections::VecDeque;
+
+/// One inference request: `id` indexes the deterministic sample
+/// stream (the request "payload"), `arrival_us` is its virtual-clock
+/// arrival instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_us: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropPolicy {
+    Newest,
+    Oldest,
+}
+
+impl DropPolicy {
+    pub fn parse(s: &str) -> Option<DropPolicy> {
+        match s {
+            "newest" | "tail" | "reject" => Some(DropPolicy::Newest),
+            "oldest" | "head" | "evict" => Some(DropPolicy::Oldest),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DropPolicy::Newest => "newest",
+            DropPolicy::Oldest => "oldest",
+        }
+    }
+}
+
+/// Bounded FIFO with drop accounting. Not thread-safe by design: the
+/// serving loop is the only mutator (the discrete-event simulation is
+/// single-writer; concurrency lives in the snapshot store and the
+/// kernel pool, not here).
+#[derive(Debug)]
+pub struct BoundedQueue {
+    buf: VecDeque<Request>,
+    cap: usize,
+    policy: DropPolicy,
+    pub accepted: u64,
+    pub dropped: u64,
+    pub peak_depth: usize,
+}
+
+impl BoundedQueue {
+    pub fn new(cap: usize, policy: DropPolicy) -> BoundedQueue {
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        BoundedQueue {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+            policy,
+            accepted: 0,
+            dropped: 0,
+            peak_depth: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Arrival time of the oldest queued request (dispatch can start
+    /// no earlier than this).
+    pub fn front_arrival(&self) -> Option<u64> {
+        self.buf.front().map(|r| r.arrival_us)
+    }
+
+    /// Offer one request at its arrival instant. Returns the request
+    /// that was dropped, if any (the newcomer under `Newest`, the
+    /// evicted head under `Oldest`).
+    pub fn offer(&mut self, req: Request) -> Option<Request> {
+        let victim = if self.buf.len() == self.cap {
+            self.dropped += 1;
+            match self.policy {
+                DropPolicy::Newest => return Some(req),
+                DropPolicy::Oldest => self.buf.pop_front(),
+            }
+        } else {
+            None
+        };
+        self.accepted += 1;
+        self.buf.push_back(req);
+        self.peak_depth = self.peak_depth.max(self.buf.len());
+        victim
+    }
+
+    /// Dequeue up to `k` requests in FIFO order (one dispatch batch).
+    pub fn take(&mut self, k: usize) -> Vec<Request> {
+        let k = k.min(self.buf.len());
+        self.buf.drain(..k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(id: u64, t: u64) -> Request {
+        Request { id, arrival_us: t }
+    }
+
+    #[test]
+    fn fifo_order_and_peak_depth() {
+        let mut q = BoundedQueue::new(4, DropPolicy::Newest);
+        for i in 0..3 {
+            assert!(q.offer(r(i, i * 10)).is_none());
+        }
+        assert_eq!(q.peak_depth, 3);
+        assert_eq!(q.front_arrival(), Some(0));
+        let batch = q.take(2);
+        assert_eq!(
+            batch.iter().map(|x| x.id).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.front_arrival(), Some(20));
+    }
+
+    #[test]
+    fn newest_policy_rejects_incomer() {
+        let mut q = BoundedQueue::new(2, DropPolicy::Newest);
+        q.offer(r(0, 0));
+        q.offer(r(1, 1));
+        let victim = q.offer(r(2, 2));
+        assert_eq!(victim, Some(r(2, 2)));
+        assert_eq!(q.accepted, 2);
+        assert_eq!(q.dropped, 1);
+        // queue holds the two originals
+        assert_eq!(q.take(9).iter().map(|x| x.id).collect::<Vec<_>>(), [0, 1]);
+    }
+
+    #[test]
+    fn oldest_policy_evicts_head() {
+        let mut q = BoundedQueue::new(2, DropPolicy::Oldest);
+        q.offer(r(0, 0));
+        q.offer(r(1, 1));
+        let victim = q.offer(r(2, 2));
+        assert_eq!(victim, Some(r(0, 0)));
+        assert_eq!(q.accepted, 3);
+        assert_eq!(q.dropped, 1);
+        assert_eq!(q.take(9).iter().map(|x| x.id).collect::<Vec<_>>(), [1, 2]);
+    }
+
+    #[test]
+    fn accounting_closes() {
+        let mut q = BoundedQueue::new(3, DropPolicy::Oldest);
+        let offered = 17u64;
+        for i in 0..offered {
+            q.offer(r(i, i));
+        }
+        assert_eq!(q.accepted + q.dropped, offered + q.dropped);
+        assert_eq!(q.accepted, offered); // oldest admits every newcomer
+        assert_eq!(q.dropped, offered - 3);
+        assert_eq!(q.len(), 3);
+    }
+}

@@ -1,0 +1,246 @@
+//! Epoch-versioned weight snapshots: the reader/writer handoff between
+//! the serving path and the concurrently-training device.
+//!
+//! The contract, in NVM terms: the trainer owns the `NvmArray`s and the
+//! live `NativeDevice::params`; every time a flush *lands* (the
+//! device's `weights_version` advances) the trainer **publishes** an
+//! immutable snapshot — a deep copy of `Params` + `AuxState` wrapped in
+//! an `Arc`, stamped with a monotone epoch and the virtual time of the
+//! flush. Inference **pins** an epoch: `pin_at(t)` hands back the
+//! latest snapshot whose publish time is ≤ t as a cheap `Arc` clone,
+//! and the reader keeps using that exact bit pattern for the whole
+//! batch no matter how many flushes land meanwhile.
+//!
+//! Why inference never blocks on a commit: the expensive part of
+//! `publish` — cloning ~134k weight cells and checksumming them — runs
+//! entirely *outside* the store's mutex. The critical section is an
+//! O(1) `Vec::push` (publisher side) or an `Arc` clone after a short
+//! reverse scan (reader side). A reader can hold its pinned snapshot
+//! forever; immutability is structural (`Arc<WeightSnapshot>` with no
+//! interior mutability), so "epoch N is bit-unaffected by the epoch
+//! N+1 flush" is a type-system fact, and the FNV-1a [`fingerprint`]
+//! stored at publish time lets tests re-verify it against tearing
+//! (`tests/serve_engine.rs`).
+//!
+//! Single-publisher / multi-reader: exactly one trainer thread calls
+//! `publish` (epochs and publish times are strictly monotone, debug-
+//! asserted); any number of serving workers call `pin_at`/`pin_latest`.
+//! `retire_before` prunes snapshots no future pin can select — already-
+//! pinned `Arc`s stay alive until their readers drop them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::nn::model::{AuxState, Params};
+
+/// One immutable published weight set. `epoch` counts publishes (the
+/// deploy-time weights are epoch 0), `vtime_us` is the virtual-clock
+/// instant the flush landed, `checksum` is [`fingerprint`] of `params`
+/// at publish time — re-hash and compare to prove a pinned snapshot
+/// was never torn by later flushes.
+#[derive(Debug)]
+pub struct WeightSnapshot {
+    pub epoch: u64,
+    pub vtime_us: u64,
+    pub params: Params,
+    pub aux: AuxState,
+    pub checksum: u64,
+}
+
+/// FNV-1a over every parameter tensor's f32 bit pattern (weights,
+/// biases, BN scales/offsets), little-endian, in model order. Streaming
+/// and allocation-free; bit-exact, so two fingerprints match iff the
+/// parameter bytes match.
+pub fn fingerprint(params: &Params) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |xs: &[f32]| {
+        for &x in xs {
+            for b in x.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+    };
+    for w in &params.w {
+        mix(&w.data);
+    }
+    for b in &params.b {
+        mix(b);
+    }
+    for g in &params.gamma {
+        mix(g);
+    }
+    for be in &params.beta {
+        mix(be);
+    }
+    h
+}
+
+/// Append-only snapshot history with epoch pinning.
+pub struct SnapshotStore {
+    /// Published snapshots, ascending by (epoch, vtime). Append-only
+    /// except for `retire_before` pruning the unpinnable prefix.
+    inner: Mutex<Vec<Arc<WeightSnapshot>>>,
+    /// Publish counter, readable without the lock (progress metrics).
+    epochs: AtomicU64,
+}
+
+impl SnapshotStore {
+    /// Seed the store with the deploy-time weights as epoch 0 at t=0,
+    /// so `pin_at` always has an answer.
+    pub fn new(params: Params, aux: AuxState) -> SnapshotStore {
+        let checksum = fingerprint(&params);
+        let base = Arc::new(WeightSnapshot {
+            epoch: 0,
+            vtime_us: 0,
+            params,
+            aux,
+            checksum,
+        });
+        SnapshotStore {
+            inner: Mutex::new(vec![base]),
+            epochs: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish the trainer's current weights as the next epoch at
+    /// virtual time `vtime_us`. The deep copy and checksum happen on
+    /// the publisher's thread before the lock; the locked section is a
+    /// single push. Returns the new epoch. Single publisher only.
+    pub fn publish(
+        &self,
+        vtime_us: u64,
+        params: &Params,
+        aux: &AuxState,
+    ) -> u64 {
+        let params = params.clone();
+        let aux = aux.clone();
+        let checksum = fingerprint(&params);
+        let epoch = self.epochs.load(Ordering::Relaxed) + 1;
+        let snap = Arc::new(WeightSnapshot {
+            epoch,
+            vtime_us,
+            params,
+            aux,
+            checksum,
+        });
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(last) = inner.last() {
+            debug_assert!(
+                last.epoch < epoch && last.vtime_us <= vtime_us,
+                "publish must be monotone (single publisher)"
+            );
+        }
+        inner.push(snap);
+        drop(inner);
+        self.epochs.store(epoch, Ordering::Release);
+        epoch
+    }
+
+    /// Pin the latest snapshot published at or before virtual time
+    /// `t_us`. Never blocks on an in-flight publish: the clone/checksum
+    /// work happens outside the lock, so the wait here is bounded by an
+    /// O(1) push.
+    pub fn pin_at(&self, t_us: u64) -> Arc<WeightSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .iter()
+            .rev()
+            .find(|s| s.vtime_us <= t_us)
+            .unwrap_or_else(|| &inner[0])
+            .clone()
+    }
+
+    /// Pin the newest snapshot regardless of time.
+    pub fn pin_latest(&self) -> Arc<WeightSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner.last().expect("store seeded at construction").clone()
+    }
+
+    /// Drop every snapshot no `pin_at(t >= t_us)` can select — i.e.
+    /// all but the newest snapshot with `vtime_us <= t_us`. The serving
+    /// loop calls this with its dispatch clock, which only moves
+    /// forward; readers holding pinned `Arc`s are unaffected.
+    pub fn retire_before(&self, t_us: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        // index of the newest snapshot still pinnable at t_us
+        let keep = inner
+            .iter()
+            .rposition(|s| s.vtime_us <= t_us)
+            .unwrap_or(0);
+        if keep > 0 {
+            inner.drain(..keep);
+        }
+    }
+
+    /// Number of publishes so far (excludes the epoch-0 seed).
+    pub fn published(&self) -> u64 {
+        self.epochs.load(Ordering::Acquire)
+    }
+
+    /// Snapshots currently retained (retirement telemetry).
+    pub fn retained(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::Params;
+    use crate::util::rng::Rng;
+
+    fn params(seed: u64) -> Params {
+        Params::init(&mut Rng::new(seed), 4)
+    }
+
+    #[test]
+    fn fingerprint_is_bit_sensitive() {
+        let a = params(1);
+        let mut b = a.clone();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        b.w[3].data[7] += 1.0e-7; // one cell, one ULP-ish nudge
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn pin_at_selects_latest_at_or_before() {
+        let store = SnapshotStore::new(params(1), AuxState::new());
+        store.publish(100, &params(2), &AuxState::new());
+        store.publish(250, &params(3), &AuxState::new());
+        assert_eq!(store.pin_at(0).epoch, 0);
+        assert_eq!(store.pin_at(99).epoch, 0);
+        assert_eq!(store.pin_at(100).epoch, 1);
+        assert_eq!(store.pin_at(249).epoch, 1);
+        assert_eq!(store.pin_at(9_999).epoch, 2);
+        assert_eq!(store.pin_latest().epoch, 2);
+        assert_eq!(store.published(), 2);
+    }
+
+    #[test]
+    fn pinned_snapshot_survives_retirement() {
+        let store = SnapshotStore::new(params(1), AuxState::new());
+        let pinned = store.pin_at(0);
+        let sum_before = fingerprint(&pinned.params);
+        store.publish(10, &params(2), &AuxState::new());
+        store.publish(20, &params(3), &AuxState::new());
+        store.retire_before(25);
+        assert_eq!(store.retained(), 1, "only epoch 2 still pinnable");
+        // the reader's pinned epoch-0 Arc is untouched
+        assert_eq!(pinned.epoch, 0);
+        assert_eq!(fingerprint(&pinned.params), sum_before);
+        assert_eq!(pinned.checksum, sum_before);
+    }
+
+    #[test]
+    fn retire_keeps_the_pin_target() {
+        let store = SnapshotStore::new(params(1), AuxState::new());
+        store.publish(100, &params(2), &AuxState::new());
+        store.publish(200, &params(3), &AuxState::new());
+        store.retire_before(150);
+        // epoch 1 (t=100) must survive: it is pin_at(150)'s answer
+        assert_eq!(store.pin_at(150).epoch, 1);
+        assert_eq!(store.pin_at(500).epoch, 2);
+        assert_eq!(store.retained(), 2);
+    }
+}

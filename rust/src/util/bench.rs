@@ -1,0 +1,58 @@
+//! Shared helpers for the `BENCH_JSON` machine-readable bench lines.
+//!
+//! Every bench harness (and the `serve` subcommand) prints one
+//! `BENCH_JSON {...}` line per record; CI greps them out of the run
+//! log into the bench-json artifact. The [`run_meta`] fragment rides
+//! on every line so cross-run / cross-machine records are
+//! self-describing — ISA tier, thread budget, active tile sizes, and
+//! the arch triple — instead of requiring the config to be inferred
+//! from surrounding context.
+
+/// Run-metadata JSON fragment (no surrounding braces): splice it as
+/// the trailing fields of a `BENCH_JSON` object.
+pub fn run_meta(
+    isa: &str,
+    threads: usize,
+    tile_j: usize,
+    tile_k: usize,
+) -> String {
+    format!(
+        "\"isa\":\"{isa}\",\"threads\":{threads},\"tile_j\":{tile_j},\
+         \"tile_k\":{tile_k},\"arch\":\"{}-{}\"",
+        std::env::consts::ARCH,
+        std::env::consts::OS,
+    )
+}
+
+/// [`run_meta`] with every field read from the live kernel
+/// configuration — the common case for single-config harnesses.
+pub fn run_meta_current() -> String {
+    use crate::tensor::kernels;
+    run_meta(
+        kernels::isa().name(),
+        kernels::max_threads(),
+        kernels::tile_j(),
+        kernels::tile_k(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fragment_is_spliceable_json() {
+        let frag = run_meta("fma", 4, 16, 128);
+        let obj = format!("{{{frag}}}");
+        let parsed = crate::util::json::Json::parse(&obj).unwrap();
+        assert_eq!(
+            parsed.get("isa").and_then(|j| j.as_str()),
+            Some("fma")
+        );
+        assert_eq!(
+            parsed.get("threads").and_then(|j| j.as_f64()),
+            Some(4.0)
+        );
+        assert!(parsed.get("arch").is_some());
+    }
+}

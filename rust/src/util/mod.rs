@@ -3,6 +3,7 @@
 //! here (DESIGN.md section 6, substitution 5).
 
 pub mod allocwatch;
+pub mod bench;
 pub mod cli;
 pub mod hash;
 pub mod json;

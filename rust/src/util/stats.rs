@@ -48,12 +48,18 @@ impl Ema {
 }
 
 /// p-th percentile (linear interpolation), p in [0, 100].
+///
+/// Sorts by IEEE-754 total order (`f64::total_cmp`), so NaN input is
+/// well-defined instead of a panic: -NaN sorts below every number and
+/// +NaN above, skewing the affected tail — a poisoned sample shows up
+/// as a distorted percentile, never as a crash of the caller (the
+/// serve latency report and `grads.rs` feed this directly).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let idx = (p / 100.0) * (v.len() - 1) as f64;
     let lo = idx.floor() as usize;
     let hi = idx.ceil() as usize;
@@ -94,5 +100,26 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan_input() {
+        // regression: partial_cmp().unwrap() panicked here
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p0 = percentile(&xs, 0.0);
+        assert_eq!(p0, 1.0, "+NaN must sort above the numbers");
+        assert!(percentile(&xs, 100.0).is_nan());
+        // the untouched tail still reads clean values
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        // all-NaN input: defined (NaN), not a panic
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_negative_nan_sorts_low() {
+        let neg_nan = f64::from_bits(0xFFF8_0000_0000_0000);
+        let xs = [neg_nan, 5.0, 7.0];
+        assert!(percentile(&xs, 0.0).is_nan());
+        assert_eq!(percentile(&xs, 100.0), 7.0);
     }
 }

@@ -252,3 +252,64 @@ fn denied_seats_backfilled_by_sibling_release() {
     });
     done.store(true, Ordering::Relaxed);
 }
+
+/// Regression (PR 8): `map_samples` used to acquire
+/// `max_threads().min(n)` pool seats even when ceil-chunking covers
+/// all `n` samples with fewer workers — n=5 on a 4-thread budget gave
+/// chunk=2, so worker 3's slice was the empty `6..5`, a seat claimed
+/// from the shared fan-out budget just to process nothing. `setup()`
+/// runs exactly once per acquired seat, so counting its invocations
+/// observes the phantom seat directly.
+#[test]
+fn map_samples_never_acquires_empty_seats() {
+    use std::sync::atomic::AtomicUsize;
+    kernels::with_overrides(None, Some(4), || {
+        let setups = AtomicUsize::new(0);
+        let out = workspace::map_samples(
+            5,
+            || setups.fetch_add(1, Ordering::Relaxed),
+            |s, _ws, _state| s,
+        );
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        // ceil(5/4)=2-sample chunks cover n=5 with 3 workers; the
+        // buggy sizing acquired a 4th, empty seat
+        assert_eq!(
+            setups.load(Ordering::Relaxed),
+            3,
+            "map_samples acquired an empty-slice pool seat"
+        );
+    });
+}
+
+/// Property form of the empty-seat regression: for every (threads, n)
+/// cell, the seat count is exactly what ceil-chunk coverage needs —
+/// `ceil(n / chunk)` with `chunk = ceil(n / min(threads, n))` — and
+/// order is preserved.
+#[test]
+fn map_samples_seat_count_matches_chunk_coverage() {
+    use std::sync::atomic::AtomicUsize;
+    for threads in 1usize..=6 {
+        kernels::with_overrides(None, Some(threads), || {
+            for n in 1usize..=13 {
+                let chunk = n.div_ceil(threads.min(n));
+                let expected_seats = n.div_ceil(chunk);
+                let setups = AtomicUsize::new(0);
+                let out = workspace::map_samples(
+                    n,
+                    || setups.fetch_add(1, Ordering::Relaxed),
+                    |s, _ws, _state| s * 3,
+                );
+                assert_eq!(
+                    out,
+                    (0..n).map(|s| s * 3).collect::<Vec<_>>(),
+                    "ordering broke at threads={threads} n={n}"
+                );
+                assert_eq!(
+                    setups.load(Ordering::Relaxed),
+                    expected_seats,
+                    "seat count off at threads={threads} n={n}"
+                );
+            }
+        });
+    }
+}

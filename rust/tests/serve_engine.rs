@@ -1,0 +1,203 @@
+//! Serving-engine contracts (`serve`, `lrt-nvm serve`):
+//!
+//! 1. Backpressure: a bursty trace against a small bounded queue drops
+//!    deterministically, and the accounting closes — every offered
+//!    request ends as exactly one of completed or dropped.
+//! 2. Replay: the structured latency report is byte-identical across
+//!    runs of the same config — including runs with a live trainer
+//!    thread — and invariant to the kernel pool's thread budget (the
+//!    virtual clock, not the machine, is the time base; same contract
+//!    as the sweep engine's kill/re-run determinism).
+//! 3. Snapshot isolation: a reader pinned to epoch N is bit-unaffected
+//!    by concurrent epoch-N+1.. flushes, and never blocks on them.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+use lrt_nvm::nn::model::{AuxState, Params};
+use lrt_nvm::serve::{
+    self, fingerprint, CostModel, DropPolicy, ServeCfg, SnapshotStore,
+    TraceCfg, TraceKind,
+};
+use lrt_nvm::tensor::kernels;
+use lrt_nvm::util::rng::Rng;
+
+fn cfg(kind: TraceKind, seed: u64, requests: usize) -> ServeCfg {
+    let mut train = RunConfig::default();
+    train.offline_samples = 20; // CI-sized pretrain (cached across tests)
+    let mut trace = TraceCfg::new(kind, seed, requests);
+    trace.rate_rps = 2_000.0;
+    let mut c = ServeCfg::new(trace, train);
+    c.cost = CostModel::new(100, 250, 2);
+    c.train_every_us = 2_000;
+    c
+}
+
+#[test]
+fn bursty_trace_backpressure_accounting_closes() {
+    let mut c = cfg(TraceKind::Bursty, 5, 300);
+    c.train.scheme = Scheme::Inference;
+    c.queue_cap = 8;
+    c.policy.max_batch = 4;
+    // slow server: per-dispatch cost exceeds the burst interarrival
+    // gap, so the queue must saturate and drop
+    c.cost = CostModel::new(500, 1_000, 1);
+    let rep = serve::run(&c);
+    assert!(rep.dropped > 0, "bursty trace never saturated cap=8");
+    assert_eq!(rep.completed + rep.dropped, rep.requests);
+    assert!(rep.peak_depth <= c.queue_cap);
+    assert_eq!(
+        rep.batch_hist.iter().map(|&(k, c)| k as u64 * c).sum::<u64>(),
+        rep.completed,
+        "histogram samples != completed requests"
+    );
+    assert!(rep.p50_us <= rep.p99_us && rep.p99_us <= rep.p999_us);
+}
+
+#[test]
+fn drop_policies_account_identically_but_keep_different_requests() {
+    let mut newest = cfg(TraceKind::Bursty, 9, 250);
+    newest.train.scheme = Scheme::Inference;
+    newest.queue_cap = 6;
+    newest.cost = CostModel::new(500, 1_000, 1);
+    let mut oldest = newest.clone();
+    oldest.drop_policy = DropPolicy::Oldest;
+    let rn = serve::run(&newest);
+    let ro = serve::run(&oldest);
+    // same trace, same capacity: both close their books
+    assert_eq!(rn.completed + rn.dropped, rn.requests);
+    assert_eq!(ro.completed + ro.dropped, ro.requests);
+    assert!(rn.dropped > 0 && ro.dropped > 0);
+    // head-eviction serves fresher requests, so its completion
+    // latencies cannot be worse at the median
+    assert!(
+        ro.p50_us <= rn.p50_us,
+        "oldest-drop p50 {} > newest-drop p50 {}",
+        ro.p50_us,
+        rn.p50_us
+    );
+}
+
+#[test]
+fn latency_report_is_byte_identical_across_runs_and_thread_budgets() {
+    let mut c = cfg(TraceKind::Bursty, 7, 120);
+    c.train.scheme = Scheme::Lrt { variant: lrt_nvm::lrt::Variant::Biased };
+    c.train.batch = [2, 2, 2, 2, 4, 4]; // flush (and publish) quickly
+    let a = kernels::with_overrides(None, Some(1), || serve::run(&c))
+        .to_row()
+        .jsonl();
+    let b = kernels::with_overrides(None, Some(4), || serve::run(&c))
+        .to_row()
+        .jsonl();
+    let c2 = kernels::with_overrides(None, Some(4), || serve::run(&c))
+        .to_row()
+        .jsonl();
+    assert_eq!(b, c2, "same-config replay diverged");
+    assert_eq!(
+        a, b,
+        "thread budget leaked into the virtual-clock latency report"
+    );
+}
+
+#[test]
+fn trainer_run_serves_fresh_epochs_deterministically() {
+    let mut c = cfg(TraceKind::Poisson, 3, 150);
+    c.train.scheme = Scheme::Sgd; // commits every sample
+    let rep = serve::run(&c);
+    assert!(rep.snapshots_published > 0);
+    assert!(rep.final_epoch > 0, "no dispatch ever pinned a new epoch");
+    assert!(rep.epoch_switches > 0);
+    assert!(rep.final_epoch <= rep.snapshots_published);
+    let rep2 = serve::run(&c);
+    assert_eq!(rep.to_row().jsonl(), rep2.to_row().jsonl());
+}
+
+#[test]
+fn pinned_epoch_unaffected_by_concurrent_flushes() {
+    let mut rng = Rng::new(1);
+    let base = Params::init(&mut rng, 8);
+    let store =
+        Arc::new(SnapshotStore::new(base.clone(), AuxState::new()));
+
+    // Reader pins epoch 0 and keeps a private byte-copy to diff against.
+    let pinned = store.pin_at(0);
+    assert_eq!(pinned.epoch, 0);
+    let frozen_w: Vec<Vec<u32>> = pinned
+        .params
+        .w
+        .iter()
+        .map(|m| m.data.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    let frozen_sum = pinned.checksum;
+
+    // Writer storm: 40 publishes of *different* weights, racing the
+    // reader's re-verification below.
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let store = Arc::clone(&store);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut wrng = Rng::new(99);
+            for t in 0..40u64 {
+                let p = Params::init(&mut wrng, 8);
+                store.publish(10 * (t + 1), &p, &AuxState::new());
+            }
+            stop.store(true, Ordering::Release);
+        })
+    };
+
+    // The reader re-hashes its pinned snapshot the whole time the
+    // writer is publishing: any tearing (a flush mutating shared
+    // state) breaks the checksum immediately.
+    let mut verifications = 0u64;
+    while !stop.load(Ordering::Acquire) {
+        assert_eq!(
+            fingerprint(&pinned.params),
+            frozen_sum,
+            "pinned epoch mutated by a concurrent flush"
+        );
+        verifications += 1;
+    }
+    writer.join().unwrap();
+    assert!(verifications > 0);
+
+    // Bit-exact against the pre-storm copy, not just hash-equal.
+    for (mat, frozen) in pinned.params.w.iter().zip(frozen_w.iter()) {
+        for (v, &bits) in mat.data.iter().zip(frozen.iter()) {
+            assert_eq!(v.to_bits(), bits);
+        }
+    }
+    // And the store's own history moved on without touching the pin.
+    assert_eq!(store.published(), 40);
+    assert_eq!(store.pin_latest().epoch, 40);
+    assert_eq!(pinned.epoch, 0);
+
+    // Retirement prunes the history but never a held pin.
+    store.retire_before(u64::MAX);
+    assert_eq!(store.retained(), 1);
+    assert_eq!(fingerprint(&pinned.params), frozen_sum);
+}
+
+#[test]
+fn pin_at_is_monotone_in_time() {
+    let mut rng = Rng::new(2);
+    let store = SnapshotStore::new(
+        Params::init(&mut rng, 8),
+        AuxState::new(),
+    );
+    for t in 0..12u64 {
+        let p = Params::init(&mut rng, 8);
+        store.publish(100 * (t + 1), &p, &AuxState::new());
+    }
+    let mut last = 0u64;
+    for t in (0..1400u64).step_by(37) {
+        let e = store.pin_at(t).epoch;
+        assert!(
+            e >= last,
+            "pin_at({t}) regressed from epoch {last} to {e}"
+        );
+        last = e;
+    }
+    assert_eq!(last, 12);
+}
