@@ -886,6 +886,91 @@ fn main() {
         println!();
     }
 
+    println!("== NvmArray::commit fault-model overhead ==");
+    println!(
+        "(PR 9: commit dispatches to the write-verify slow path only \
+         when a fault model is installed; with FaultCfg::NONE the \
+         fault branch is one Option check, so 'off' must sit within \
+         noise of the pre-fault commit. The 'on' rows price the \
+         per-pulse hash draws each mechanism adds.)\n"
+    );
+    {
+        use lrt_nvm::nvm::{FaultCfg, NvmArray};
+        use lrt_nvm::quant::QW;
+        let mut r = Rng::new(23);
+        let m = Mat::from_fn(128, 128, |_, _| r.normal_f32(0.0, 0.4));
+        // two targets ~13 levels apart so every rep reprograms every
+        // non-stuck cell (commit skips cells already at level)
+        let lo = Mat::from_fn(128, 128, |i, j| m.at(i, j) - 0.05);
+        let hi = Mat::from_fn(128, 128, |i, j| m.at(i, j) + 0.05);
+        let cells = 128 * 128u64;
+
+        let mut defects = FaultCfg::NONE;
+        defects.defect_p = 0.01;
+        defects.write_fail_p = 0.01;
+        let mut full = defects;
+        full.var_sigma = 0.02;
+        full.wearout = true;
+        full.endurance = 1e9; // lifetime checks run, nothing freezes
+
+        let mut t7 = Table::new(vec![
+            "fault model", "commit us", "vs off", "pulses", "retries",
+        ]);
+        let mut json_lines: Vec<String> = Vec::new();
+        let mut off_us = 0.0f64;
+        for (label, cfg) in [
+            ("off (not installed)", FaultCfg::NONE),
+            ("defects+retry", defects),
+            ("full (var+wearout)", full),
+        ] {
+            let mut arr = NvmArray::program(&m, QW);
+            if cfg.enabled() {
+                arr.install_fault(&cfg, 0xBE);
+            }
+            let mut flip = 0u64;
+            let us = kernels::with_overrides(None, Some(1), || {
+                time_median(200, || {
+                    flip += 1;
+                    let target = if flip % 2 == 0 { &lo } else { &hi };
+                    std::hint::black_box(arr.commit(target));
+                })
+            });
+            if !cfg.enabled() {
+                off_us = us;
+            }
+            let (pulses, retries) = arr
+                .fault()
+                .map(|f| (f.counters.pulses_attempted, f.counters.retry_pulses))
+                .unwrap_or((arr.total_writes, 0));
+            t7.row(vec![
+                label.to_string(),
+                format!("{us:.1}"),
+                format!("{:.2}x", us / off_us.max(1e-9)),
+                format!("{pulses}"),
+                format!("{retries}"),
+            ]);
+            json_lines.push(format!(
+                "BENCH_JSON {{\"bench\":\"hotpath_fault\",\
+                 \"model\":\"{label}\",\"cells\":{cells},\
+                 \"commit_us\":{us:.2},\"vs_off\":{:.3},\
+                 \"pulses\":{pulses},\"retry_pulses\":{retries},{}}}",
+                us / off_us.max(1e-9),
+                run_meta(
+                    kernels::isa().name(),
+                    1,
+                    kernels::tile_j(),
+                    kernels::tile_k()
+                ),
+            ));
+        }
+        t7.print();
+        println!();
+        for line in &json_lines {
+            println!("{line}");
+        }
+        println!();
+    }
+
     println!("== batched vs per-sample engine steps ==");
     {
         use lrt_nvm::coordinator::config::{RunConfig, Scheme};

@@ -5,6 +5,7 @@ use crate::data::Env;
 use crate::lrt::Variant;
 use crate::nn::arch::DEFAULT_BATCH;
 use crate::nvm::drift::DriftCfg;
+use crate::nvm::fault::FaultCfg;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -97,6 +98,9 @@ pub struct RunConfig {
     pub lrt_variants: Option<[Variant; 6]>,
     /// Disable per-sample bias training (Table 3 "no bias training").
     pub train_bias: bool,
+    /// NVM cell fault model (strictly opt-in; `FaultCfg::NONE` keeps
+    /// every existing path byte-identical).
+    pub fault: FaultCfg,
 }
 
 impl Default for RunConfig {
@@ -122,6 +126,7 @@ impl Default for RunConfig {
             shift_period: 10_000,
             lrt_variants: None,
             train_bias: true,
+            fault: FaultCfg::NONE,
         }
     }
 }
@@ -160,6 +165,19 @@ impl RunConfig {
             }
             _ => DriftCfg::NONE,
         };
+        cfg.fault.defect_p = args.f64_opt("fault-defect", cfg.fault.defect_p);
+        cfg.fault.write_fail_p =
+            args.f64_opt("fault-write-fail", cfg.fault.write_fail_p);
+        cfg.fault.max_retries =
+            args.usize_opt("fault-retries", cfg.fault.max_retries as usize)
+                as u32;
+        cfg.fault.var_sigma = args.f64_opt("fault-var", cfg.fault.var_sigma);
+        cfg.fault.wearout = args.flag("fault-wearout");
+        cfg.fault.wearout_spread = args
+            .f64_opt("fault-wearout-spread", cfg.fault.wearout_spread);
+        cfg.fault.endurance =
+            args.f64_opt("fault-endurance", cfg.fault.endurance);
+        cfg.fault.seed = args.u64_opt("fault-seed", cfg.fault.seed);
         cfg
     }
 
@@ -259,6 +277,32 @@ impl RunConfig {
                 }
                 None => false,
             }),
+            // fault-model knobs mutate individual FaultCfg fields so
+            // grid axes compose (defect x write-fail sweeps etc.)
+            "fault_defect" => {
+                ok(p(value).map(|v| self.fault.defect_p = v).is_some())
+            }
+            "fault_write_fail" => {
+                ok(p(value).map(|v| self.fault.write_fail_p = v).is_some())
+            }
+            "fault_retries" => {
+                ok(p(value).map(|v| self.fault.max_retries = v).is_some())
+            }
+            "fault_var" => {
+                ok(p(value).map(|v| self.fault.var_sigma = v).is_some())
+            }
+            "fault_wearout" => {
+                ok(pb(value).map(|v| self.fault.wearout = v).is_some())
+            }
+            "fault_wearout_spread" => ok(p(value)
+                .map(|v| self.fault.wearout_spread = v)
+                .is_some()),
+            "fault_endurance" => {
+                ok(p(value).map(|v| self.fault.endurance = v).is_some())
+            }
+            "fault_seed" => {
+                ok(p(value).map(|v| self.fault.seed = v).is_some())
+            }
             _ => UnknownKey,
         }
     }
@@ -360,5 +404,64 @@ mod tests {
         assert_eq!(cfg.set("no_such_field", "1"), UnknownKey);
         assert_eq!(cfg.set("rank", "banana"), BadValue);
         assert_eq!(cfg.rank, 8, "failed set must not change the field");
+    }
+
+    #[test]
+    fn fault_keys_compose_and_default_to_none() {
+        use SetOutcome::{Applied, BadValue};
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.fault, FaultCfg::NONE);
+        assert!(!cfg.fault.enabled());
+        for (k, v) in [
+            ("fault_defect", "0.01"),
+            ("fault-write-fail", "0.02"),
+            ("fault_retries", "5"),
+            ("fault_var", "0.1"),
+            ("fault_wearout", "true"),
+            ("fault_wearout_spread", "0.5"),
+            ("fault_endurance", "1000"),
+            ("fault_seed", "7"),
+        ] {
+            assert_eq!(cfg.set(k, v), Applied, "{k}={v}");
+        }
+        assert!((cfg.fault.defect_p - 0.01).abs() < 1e-12);
+        assert!((cfg.fault.write_fail_p - 0.02).abs() < 1e-12);
+        assert_eq!(cfg.fault.max_retries, 5);
+        assert!((cfg.fault.var_sigma - 0.1).abs() < 1e-12);
+        assert!(cfg.fault.wearout);
+        assert!((cfg.fault.endurance - 1000.0).abs() < 1e-12);
+        assert_eq!(cfg.fault.seed, 7);
+        assert!(cfg.fault.enabled());
+        assert_eq!(cfg.set("fault_defect", "banana"), BadValue);
+        assert!((cfg.fault.defect_p - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_flags_from_args() {
+        let args = Args::parse(
+            [
+                "adapt",
+                "--fault-defect",
+                "0.05",
+                "--fault-write-fail",
+                "0.01",
+                "--fault-wearout",
+                "--fault-seed",
+                "3",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args);
+        assert!((cfg.fault.defect_p - 0.05).abs() < 1e-12);
+        assert!((cfg.fault.write_fail_p - 0.01).abs() < 1e-12);
+        assert!(cfg.fault.wearout);
+        assert_eq!(cfg.fault.seed, 3);
+        assert!(cfg.fault.enabled());
+        // no flags -> NONE
+        let none = RunConfig::from_args(&Args::parse(
+            ["adapt"].iter().map(|s| s.to_string()),
+        ));
+        assert_eq!(none.fault, FaultCfg::NONE);
     }
 }

@@ -10,7 +10,7 @@ use crate::nn::model::{
     self, apply_bias_updates, argmax, AuxState, Params,
 };
 use crate::nn::workspace::{self, Workspace};
-use crate::nvm::{drift, NvmArray};
+use crate::nvm::{drift, fault, NvmArray};
 use crate::quant::qw_bits;
 use crate::tensor::kernels;
 use crate::util::rng::Rng;
@@ -47,11 +47,24 @@ impl NativeDevice {
         aux: AuxState,
     ) -> NativeDevice {
         let qw = qw_bits(cfg.w_bits);
-        let arrays = params
+        let mut arrays: Vec<NvmArray> = params
             .w
             .iter()
             .map(|w| NvmArray::program(w, qw))
             .collect();
+        if cfg.fault.enabled() {
+            // i.i.d. per-device defect maps: the device's fault seed is
+            // FNV-mixed from (fault seed, device/run seed), then split
+            // per layer — see nvm::fault
+            let dev_seed =
+                fault::device_fault_seed(cfg.fault.seed, cfg.seed);
+            for (layer, arr) in arrays.iter_mut().enumerate() {
+                arr.install_fault(
+                    &cfg.fault,
+                    fault::array_fault_seed(dev_seed, layer),
+                );
+            }
+        }
         let lrt = LAYER_DIMS
             .iter()
             .map(|&(n_o, n_i)| LrtState::new(n_o, n_i, cfg.rank))
@@ -298,8 +311,41 @@ impl NativeDevice {
         let cfg = self.cfg.drift;
         for arr in &mut self.arrays {
             drift::apply(arr, &mut self.drift_rng, &cfg);
+            // stuck cells do not drift: re-pin their frozen levels
+            // (no-op without a fault model)
+            arr.reassert_stuck();
         }
         self.note_weight_change();
+    }
+
+    /// Re-derive and install the per-array fault maps under a device
+    /// fault seed — the sharded fleet's hydration hook (a carcass is
+    /// reused across records, so each hydration must re-key the maps
+    /// to its record's device).
+    pub(crate) fn install_fault_seed(&mut self, dev_fault_seed: u64) {
+        let fcfg = self.cfg.fault;
+        for (layer, arr) in self.arrays.iter_mut().enumerate() {
+            arr.install_fault(
+                &fcfg,
+                fault::array_fault_seed(dev_fault_seed, layer),
+            );
+        }
+    }
+
+    /// Aggregate fault telemetry across the weight arrays; `None`
+    /// when no fault model is configured (keeps NONE reports
+    /// byte-identical).
+    pub fn fault_summary(&self) -> Option<fault::FaultSummary> {
+        if !self.cfg.fault.enabled() {
+            return None;
+        }
+        let mut sum = fault::FaultSummary::default();
+        for arr in &self.arrays {
+            if let Some(fs) = arr.fault() {
+                fault::merge(&mut sum, fs.summarize(arr.len()));
+            }
+        }
+        Some(sum)
     }
 
     pub fn max_cell_writes(&self) -> u64 {
@@ -489,5 +535,82 @@ mod tests {
         }
         let after = dev.arrays[4].read();
         assert_ne!(before.data, after.data);
+    }
+
+    fn mk_faulty(scheme: Scheme, seed: u64) -> NativeDevice {
+        let mut cfg = RunConfig::default();
+        cfg.scheme = scheme;
+        cfg.seed = seed;
+        cfg.batch = [2, 2, 2, 2, 4, 4];
+        cfg.fault.defect_p = 0.02;
+        cfg.fault.write_fail_p = 0.05;
+        let mut rng = Rng::new(1);
+        let params = Params::init(&mut rng, cfg.w_bits);
+        NativeDevice::new(cfg, params, AuxState::new())
+    }
+
+    #[test]
+    fn fault_maps_are_per_device_iid_and_deterministic() {
+        let a = mk_faulty(Scheme::Sgd, 100);
+        let b = mk_faulty(Scheme::Sgd, 100);
+        let c = mk_faulty(Scheme::Sgd, 101);
+        for i in 0..a.arrays.len() {
+            assert_eq!(
+                a.arrays[i].fault().unwrap().stuck_flags(),
+                b.arrays[i].fault().unwrap().stuck_flags(),
+                "same device seed must give the same map (layer {i})"
+            );
+        }
+        // a different device draws a different map somewhere
+        assert!(
+            (0..a.arrays.len()).any(|i| {
+                a.arrays[i].fault().unwrap().stuck_flags()
+                    != c.arrays[i].fault().unwrap().stuck_flags()
+            }),
+            "device seeds 100 and 101 drew identical defect maps"
+        );
+        let sum = a.fault_summary().unwrap();
+        assert!(sum.factory_stuck > 0, "2% of ~90k cells must stick");
+        assert!(sum.cells > 0);
+        // no fault configured -> no summary, no model installed
+        let plain = mk(Scheme::Sgd);
+        assert!(plain.fault_summary().is_none());
+        assert!(plain.arrays.iter().all(|a| a.fault().is_none()));
+    }
+
+    #[test]
+    fn training_degrades_gracefully_through_defects() {
+        // training keeps running (and writing) with defects present
+        let mut dev = mk_faulty(Scheme::Sgd, 7);
+        for t in 0..6 {
+            dev.step(&image(t), (t % 10) as usize);
+        }
+        assert!(dev.total_writes() > 0);
+        let sum = dev.fault_summary().unwrap();
+        assert_eq!(
+            sum.pulses_attempted,
+            sum.pulse_successes + sum.retry_pulses + sum.retired,
+            "device-level retry accounting must close: {sum:?}"
+        );
+        assert_eq!(dev.total_writes(), sum.pulses_attempted);
+    }
+
+    #[test]
+    fn drift_does_not_move_stuck_cells() {
+        let mut dev = mk_faulty(Scheme::Inference, 5);
+        dev.cfg.drift = crate::nvm::drift::DriftCfg::analog(100.0);
+        let arr = &dev.arrays[4];
+        let stuck: Vec<usize> = (0..arr.len())
+            .filter(|&i| arr.fault().unwrap().is_stuck(i))
+            .collect();
+        assert!(!stuck.is_empty());
+        let before: Vec<f32> =
+            stuck.iter().map(|&i| dev.arrays[4].raw()[i]).collect();
+        for _ in 0..20 {
+            dev.drift();
+        }
+        let after: Vec<f32> =
+            stuck.iter().map(|&i| dev.arrays[4].raw()[i]).collect();
+        assert_eq!(before, after, "drift moved stuck cells");
     }
 }

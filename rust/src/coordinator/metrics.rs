@@ -2,6 +2,7 @@
 //! and energy accounting, and the run report benches print.
 
 use crate::nvm::energy;
+use crate::nvm::fault::FaultSummary;
 use crate::util::json::Json;
 use crate::util::stats::Ema;
 use crate::util::table::Row;
@@ -91,6 +92,9 @@ pub struct RunReport {
     pub flush_deferrals: u64,
     pub kappa_skips: u64,
     pub wall_secs: f64,
+    /// Fault telemetry — `Some` only when a fault model was installed,
+    /// so `FaultCfg::NONE` rows stay byte-identical to pre-fault runs.
+    pub fault: Option<FaultSummary>,
 }
 
 impl RunReport {
@@ -102,7 +106,7 @@ impl RunReport {
     /// `wall_secs`: rows must be a pure function of (config, seed) so a
     /// resumed sweep reproduces an uninterrupted one byte-for-byte.
     pub fn to_row(&self) -> Row {
-        Row::new()
+        let row = Row::new()
             .str("scheme", &self.scheme)
             .str("env", &self.env)
             .num("acc_ema", self.final_ema, 3)
@@ -113,7 +117,20 @@ impl RunReport {
             .num("energy_uj", self.write_energy_pj / 1e6, 1)
             .int("flush_commits", self.flush_commits)
             .int("flush_deferrals", self.flush_deferrals)
-            .int("kappa_skips", self.kappa_skips)
+            .int("kappa_skips", self.kappa_skips);
+        // fault columns are appended ONLY when a fault model ran, so
+        // FaultCfg::NONE output is byte-identical to pre-fault output
+        match &self.fault {
+            None => row,
+            Some(f) => row
+                .int("fault_stuck_cells", f.stuck_cells())
+                .num("fault_defect_rate", f.defect_rate(), 6)
+                .int("fault_factory_stuck", f.factory_stuck)
+                .int("fault_retired", f.retired)
+                .int("fault_wearouts", f.wearouts)
+                .int("fault_retry_pulses", f.retry_pulses)
+                .int("fault_pulses", f.pulses_attempted),
+        }
     }
 
     /// The (step, accEMA, maxWrites) series as a JSON array, for
@@ -134,7 +151,7 @@ impl RunReport {
     }
 
     pub fn summary_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<13} {:<13} ema={:.3} tail={:.3} maxW={:<8} totW={:<10} \
              E={:.1}uJ flush={}({} defer) skips={} {:.1}s",
             self.scheme,
@@ -148,7 +165,18 @@ impl RunReport {
             self.flush_deferrals,
             self.kappa_skips,
             self.wall_secs,
-        )
+        );
+        if let Some(f) = &self.fault {
+            line.push_str(&format!(
+                " faults[stuck={} ({:.4}) retired={} worn={} retries={}]",
+                f.stuck_cells(),
+                f.defect_rate(),
+                f.retired,
+                f.wearouts,
+                f.retry_pulses,
+            ));
+        }
+        line
     }
 }
 
@@ -184,6 +212,7 @@ mod tests {
             flush_deferrals: 1,
             kappa_skips: 0,
             wall_secs: 1.23,
+            fault: None,
         };
         let row = rep.to_row();
         assert_eq!(row.text("scheme"), Some("lrt-biased"));
@@ -192,10 +221,29 @@ mod tests {
         // wall time must never leak into structured rows
         assert!(row.value("wall_secs").is_none());
         assert!(!row.jsonl().contains("1.23"));
+        // no fault model -> no fault columns at all (byte-identity)
+        assert!(row.value("fault_stuck_cells").is_none());
+        assert!(!row.jsonl().contains("fault"));
         assert_eq!(
             rep.series_json().to_string_compact(),
             "[[10,0.5,3]]"
         );
+        // with a summary attached the counters surface
+        let mut with = rep.clone();
+        with.fault = Some(FaultSummary {
+            cells: 100,
+            factory_stuck: 4,
+            retired: 1,
+            wearouts: 0,
+            retry_pulses: 7,
+            pulses_attempted: 40,
+            pulse_successes: 32,
+        });
+        let frow = with.to_row();
+        assert_eq!(frow.text("fault_stuck_cells"), Some("5"));
+        assert_eq!(frow.text("fault_defect_rate"), Some("0.050000"));
+        assert_eq!(frow.text("fault_retry_pulses"), Some("7"));
+        assert!(with.summary_line().contains("faults[stuck=5"));
     }
 
     #[test]

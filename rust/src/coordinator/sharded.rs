@@ -51,7 +51,7 @@ use crate::data::online::{OnlineStream, Partition};
 use crate::lrt::{LrtSnapshot, LrtState};
 use crate::nn::arch::{LAYER_DIMS, N_LAYERS};
 use crate::nn::model::{AuxState, Params};
-use crate::nvm::{drift, NvmArray};
+use crate::nvm::{drift, fault, FaultCfg, NvmArray};
 use crate::tensor::kernels;
 use crate::util::hash::fnv1a64_words;
 use crate::util::rng::Rng;
@@ -103,6 +103,16 @@ pub struct DeviceRecord {
     pub metrics: Metrics,
     /// Drift injection rounds elapsed since deployment (lazy clock).
     pub drift_rounds: u64,
+    /// Device fault seed (`fault::device_fault_seed(cfg.fault.seed,
+    /// seed)`; 0 when faults are off). One compact word is enough to
+    /// re-derive the whole factory defect map at hydration, so 10^5+
+    /// devices get i.i.d. per-device maps for free.
+    pub fault_seed: u64,
+    /// Per-layer acquired-stuck cells (retired / worn out) — the part
+    /// of the defect map that is *not* re-derivable from the seed.
+    pub fault_acquired: Vec<Vec<(u32, f32)>>,
+    /// Per-layer fault counters at suspension.
+    pub fault_counters: Vec<fault::FaultCounters>,
     /// Final report, filled when `t` reaches `cfg.samples`.
     pub report: Option<RunReport>,
 }
@@ -111,9 +121,23 @@ impl DeviceRecord {
     /// A freshly deployed device: replicates `NativeDevice::new`'s RNG
     /// derivation exactly so a sharded device is indistinguishable from
     /// a `Trainer`-driven one.
-    pub fn fresh(device: usize, seed: u64, params: &Params, aux: &AuxState) -> DeviceRecord {
+    pub fn fresh(
+        device: usize,
+        seed: u64,
+        cfg: &RunConfig,
+        params: &Params,
+        aux: &AuxState,
+    ) -> DeviceRecord {
         let mut rng = Rng::new(seed ^ 0xDE71CE);
         let drift_rng = rng.fork(0xD217F7);
+        // matches NativeDevice::new's derivation with per-device
+        // cfg.seed, so a sharded device's defect map is identical to
+        // its `run_fleet` twin's
+        let fault_seed = if cfg.fault.enabled() {
+            fault::device_fault_seed(cfg.fault.seed, seed)
+        } else {
+            0
+        };
         DeviceRecord {
             device,
             seed,
@@ -131,6 +155,9 @@ impl DeviceRecord {
             drift_rng,
             metrics: Metrics::new(500),
             drift_rounds: 0,
+            fault_seed,
+            fault_acquired: vec![Vec::new(); N_LAYERS],
+            fault_counters: vec![fault::FaultCounters::default(); N_LAYERS],
             report: None,
         }
     }
@@ -155,6 +182,13 @@ impl DeviceRecord {
             .map(|o| o.capacity() * std::mem::size_of::<OverlayCell>())
             .sum::<usize>();
         n += self.totals.capacity() * std::mem::size_of::<(u64, u64)>();
+        n += self
+            .fault_acquired
+            .iter()
+            .map(|v| v.capacity() * std::mem::size_of::<(u32, f32)>())
+            .sum::<usize>();
+        n += self.fault_counters.capacity()
+            * std::mem::size_of::<fault::FaultCounters>();
         n += self.metrics.approx_bytes();
         if let Some(rep) = &self.report {
             n += rep.series.capacity() * std::mem::size_of::<(usize, f64, u64)>();
@@ -179,7 +213,16 @@ struct Carcass {
 
 impl Carcass {
     fn new(cfg: &RunConfig, params: &Params, aux: &AuxState) -> Carcass {
-        let dev = NativeDevice::new(cfg.clone(), params.clone(), aux.clone());
+        // Build fault-free so `pristine` is the true as-programmed image
+        // (NativeDevice::new would pin factory defects under the *fleet*
+        // seed; a carcass needs per-record maps, installed at hydration
+        // from each record's `fault_seed`). The real fault config is
+        // restored on the device afterwards so install/summary gating
+        // sees it.
+        let mut base = cfg.clone();
+        base.fault = FaultCfg::NONE;
+        let mut dev = NativeDevice::new(base, params.clone(), aux.clone());
+        dev.cfg.fault = cfg.fault;
         let pristine = dev.arrays.clone();
         Carcass { dev, pristine, arrays_dirty: false }
     }
@@ -197,9 +240,12 @@ impl Carcass {
 }
 
 /// Hydrate `car` from `rec`. Array order matters: pristine reset, then
-/// lazy drift catch-up (fresh draws for every cell), then the overlay —
-/// written cells end at their exact suspended values, unwritten cells
-/// at the pristine image plus exact-marginal drift.
+/// the record's fault map (factory defects re-derived from its seed),
+/// then lazy drift catch-up (fresh draws for every cell) with stuck
+/// cells re-pinned, then the overlay — written cells end at their exact
+/// suspended values, unwritten cells at the pristine image plus
+/// exact-marginal drift — and finally the acquired-stuck overlay +
+/// fault counters.
 fn hydrate(car: &mut Carcass, rec: &DeviceRecord, cfg: &RunConfig) {
     let dev = &mut car.dev;
     if car.arrays_dirty {
@@ -209,8 +255,15 @@ fn hydrate(car: &mut Carcass, rec: &DeviceRecord, cfg: &RunConfig) {
         car.arrays_dirty = false;
         dev.mark_weights_dirty();
     }
+    let fault_on = cfg.fault.enabled();
+    if fault_on {
+        // pristine reset above cleared any previous record's fault
+        // state (the pristine image is fault-free by construction)
+        dev.install_fault_seed(rec.fault_seed);
+    }
     let mut drift_rng = rec.drift_rng.clone();
-    let touches_arrays = rec.totals.iter().any(|&(tw, c)| tw > 0 || c > 0)
+    let touches_arrays = fault_on
+        || rec.totals.iter().any(|&(tw, c)| tw > 0 || c > 0)
         || (cfg.drift.enabled() && rec.drift_rounds > 0);
     if touches_arrays {
         if cfg.drift.enabled() && rec.drift_rounds > 0 {
@@ -221,6 +274,7 @@ fn hydrate(car: &mut Carcass, rec: &DeviceRecord, cfg: &RunConfig) {
                     &cfg.drift,
                     rec.drift_rounds,
                 );
+                arr.reassert_stuck();
             }
         }
         for (l, ov) in rec.overlay.iter().enumerate() {
@@ -233,6 +287,14 @@ fn hydrate(car: &mut Carcass, rec: &DeviceRecord, cfg: &RunConfig) {
             }
             let (tw, c) = rec.totals[l];
             dev.arrays[l].restore_totals(tw, c);
+        }
+        if fault_on {
+            for (l, arr) in dev.arrays.iter_mut().enumerate() {
+                arr.restore_fault(
+                    &rec.fault_acquired[l],
+                    rec.fault_counters[l],
+                );
+            }
         }
         car.arrays_dirty = true;
         dev.mark_weights_dirty();
@@ -286,6 +348,11 @@ fn extract(
         }
         rec.totals[l] = (arr.total_writes, arr.commits);
         rec.sched[l] = dev.sched[l].state();
+        if let Some(fs) = arr.fault() {
+            rec.fault_acquired[l].clear();
+            rec.fault_acquired[l].extend_from_slice(fs.acquired());
+            rec.fault_counters[l] = fs.counters;
+        }
     }
     if matches!(cfg.scheme, Scheme::Lrt { .. }) {
         if rec.lrt.len() != N_LAYERS {
@@ -602,6 +669,7 @@ pub fn run_sharded_fleet(scfg: &ShardedFleetCfg) -> Result<ShardedFleetReport> {
                 DeviceRecord::fresh(
                     d,
                     device_seed(cfg.seed, d),
+                    cfg,
                     &params,
                     &aux0,
                 )
@@ -786,6 +854,52 @@ mod tests {
         assert_eq!(rows[1].text("kind"), Some("sharded-fleet"));
         assert!(rep.mean_record_bytes > 0.0);
         assert!(rep.peak_resident_bytes > 0);
+    }
+
+    #[test]
+    fn faulty_records_are_wave_and_shard_invariant() {
+        // with the fault model on, suspend/resume must still be exact:
+        // factory maps re-derive from the record's fault_seed, acquired
+        // cells + counters round-trip through the record verbatim
+        let mut one = tiny(Scheme::Lrt { variant: Variant::Biased });
+        one.n_devices = 4;
+        one.keep_reports = 4;
+        one.cfg.fault.defect_p = 0.02;
+        one.cfg.fault.write_fail_p = 0.2;
+        one.cfg.fault.max_retries = 1;
+        one.cfg.fault.var_sigma = 0.05;
+        one.cfg.fault.seed = 11;
+        let mut many = one.clone();
+        many.wave = 7; // not a divisor of samples or batch
+        many.shard = 3; // 4 devices -> shards of 3 + 1
+        let a = run_sharded_fleet(&one).unwrap();
+        let b = run_sharded_fleet(&many).unwrap();
+        assert_eq!(a.devices.len(), 4);
+        for (ra, rb) in a.devices.iter().zip(b.devices.iter()) {
+            assert_eq!(ra.to_row().jsonl(), rb.to_row().jsonl());
+            assert_eq!(ra.series, rb.series);
+            assert_eq!(ra.fault, rb.fault);
+            assert!(ra.fault.is_some(), "fault telemetry missing");
+        }
+        // defect maps are i.i.d. per device (seed-mixed), not clones
+        let stuck: Vec<u64> = a
+            .devices
+            .iter()
+            .map(|r| r.fault.unwrap().factory_stuck)
+            .collect();
+        assert!(
+            stuck.windows(2).any(|w| w[0] != w[1]),
+            "per-device factory maps identical: {stuck:?}"
+        );
+        // retry accounting closes at the fleet level too
+        for r in &a.devices {
+            let f = r.fault.unwrap();
+            assert_eq!(
+                f.pulses_attempted,
+                f.pulse_successes + f.retry_pulses + f.retired,
+                "retry accounting leak"
+            );
+        }
     }
 
     #[test]

@@ -217,6 +217,7 @@ pub(crate) fn assemble_report(
         flush_deferrals: deferrals,
         kappa_skips: device.kappa_skips,
         wall_secs,
+        fault: device.fault_summary(),
     }
 }
 

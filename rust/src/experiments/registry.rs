@@ -281,6 +281,8 @@ pub fn all() -> Vec<&'static dyn Scenario> {
     static SHARDED_FLEET: sc::sharded_fleet::ShardedFleet =
         sc::sharded_fleet::ShardedFleet;
     static FED_AVG: sc::fed_avg::FedAvg = sc::fed_avg::FedAvg;
+    static FAULT_SWEEP: sc::fault_sweep::FaultSweep =
+        sc::fault_sweep::FaultSweep;
     vec![
         &FIG3,
         &FIG5,
@@ -296,6 +298,7 @@ pub fn all() -> Vec<&'static dyn Scenario> {
         &CLASS_INC,
         &SHARDED_FLEET,
         &FED_AVG,
+        &FAULT_SWEEP,
     ]
 }
 
@@ -806,6 +809,7 @@ mod tests {
         assert!(names.len() >= 12, "registry lost scenarios: {names:?}");
         assert!(find("fig6").is_some());
         assert!(find("drift-stress").is_some());
+        assert!(find("fault-sweep").is_some());
         assert!(find("nope").is_none());
     }
 }

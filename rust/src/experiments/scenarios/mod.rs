@@ -15,6 +15,7 @@ pub mod adapt;
 pub mod class_incremental;
 pub mod convex;
 pub mod drift_stress;
+pub mod fault_sweep;
 pub mod fed_avg;
 pub mod fleet;
 pub mod grads;

@@ -397,7 +397,14 @@ fn print_help() {
            adapt              one online-adaptation run (--scheme inference|\n\
                               bias|sgd|lrt|lrt-unbiased, --env control|shift|\n\
                               analog|digital, --samples N, --backend native|\n\
-                              artifact, --no-norm)\n\
+                              artifact, --no-norm). Fault injection (also in\n\
+                              serve and every scenario via config keys):\n\
+                              --fault-defect P (stuck-at cells), \n\
+                              --fault-write-fail P --fault-retries N\n\
+                              (write-verify), --fault-var SIGMA (programming\n\
+                              variation), --fault-wearout\n\
+                              --fault-endurance N --fault-wearout-spread S\n\
+                              (endurance wear-out), --fault-seed S\n\
            serve              latency-SLO batched inference under a seeded\n\
                               synthetic load trace, with a trainer thread\n\
                               publishing epoch-versioned weight snapshots\n\
@@ -415,7 +422,8 @@ fn print_help() {
          fig9 fig11 table1 table2 table3), the federated fleet runners\n\
          (fleet, sharded-fleet for 10^5+ device populations, fed-avg for\n\
          factor averaging vs isolated baselines), and deployment studies\n\
-         (drift-stress, class-incremental).\n\
+         (drift-stress, class-incremental, fault-sweep for graceful\n\
+         degradation under NVM cell faults).\n\
          Set LRT_FULL=1 for paper-scale workloads."
     );
 }

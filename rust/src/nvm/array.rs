@@ -1,5 +1,8 @@
 //! Quantized NVM weight array with per-cell write accounting.
 
+use super::fault::{
+    self, FaultCfg, FaultState, STUCK_HIGH, STUCK_LOW,
+};
 use crate::quant::Quantizer;
 use crate::tensor::Mat;
 
@@ -23,6 +26,9 @@ pub struct NvmArray {
     pub total_writes: u64,
     /// Number of commit operations (array-level program pulses).
     pub commits: u64,
+    /// Opt-in fault model (`None` = the perfect-memory fast path,
+    /// byte-identical to pre-fault behavior).
+    fault: Option<Box<FaultState>>,
 }
 
 impl NvmArray {
@@ -38,6 +44,64 @@ impl NvmArray {
             writes: vec![0; m.data.len()],
             total_writes: 0,
             commits: 0,
+            fault: None,
+        }
+    }
+
+    /// Install a seeded fault model (see [`super::fault`]): derives the
+    /// factory stuck-at defect map and pins those cells to their stuck
+    /// levels immediately. Replaces any previously installed state. No
+    /// write accounting — defects are a manufacturing condition, not
+    /// program pulses.
+    pub fn install_fault(&mut self, cfg: &FaultCfg, seed: u64) {
+        let fs = FaultState::new(self.values.len(), *cfg, seed);
+        self.fault = Some(Box::new(fs));
+        self.reassert_stuck();
+    }
+
+    /// The installed fault model, if any.
+    pub fn fault(&self) -> Option<&FaultState> {
+        self.fault.as_deref()
+    }
+
+    /// Re-pin every stuck cell to its frozen level (factory polarity
+    /// or acquired value). Drift perturbs the analog level of every
+    /// cell, but a defective cell's level does not move — callers
+    /// apply drift, then reassert. No-op without a fault model.
+    pub fn reassert_stuck(&mut self) {
+        let Some(fs) = self.fault.as_deref() else { return };
+        if fs.factory_stuck > 0 {
+            let lo = self.quant.decode(0);
+            let hi = self.quant.decode(self.quant.levels() as i32 - 1);
+            for (v, &s) in self.values.iter_mut().zip(fs.stuck_flags()) {
+                match s {
+                    STUCK_LOW => *v = lo,
+                    STUCK_HIGH => *v = hi,
+                    _ => {}
+                }
+            }
+        }
+        for &(i, lvl) in fs.acquired() {
+            self.values[i as usize] = lvl;
+        }
+    }
+
+    /// Hydrate acquired-stuck cells + fault counters from a suspended
+    /// device record (pairs with [`NvmArray::install_fault`], which
+    /// must run first to re-derive the factory map). Pins the frozen
+    /// levels; no write accounting.
+    pub fn restore_fault(
+        &mut self,
+        acquired: &[(u32, f32)],
+        counters: fault::FaultCounters,
+    ) {
+        let fs = self
+            .fault
+            .as_deref_mut()
+            .expect("restore_fault requires install_fault first");
+        fs.restore(acquired, counters);
+        for &(i, lvl) in acquired {
+            self.values[i as usize] = lvl;
         }
     }
 
@@ -78,9 +142,16 @@ impl NvmArray {
     /// Commit a new weight matrix. Only cells whose *code* changes are
     /// written (write-verify skips unchanged levels). Returns the number
     /// of cells written; the update density is `written / len`.
+    ///
+    /// With a fault model installed, stuck cells are skipped, each
+    /// pulse may fail and be retried (every pulse is a counted write),
+    /// and cells can retire or wear out — see [`super::fault`].
     pub fn commit(&mut self, new: &Mat) -> u64 {
         assert_eq!(new.rows, self.rows);
         assert_eq!(new.cols, self.cols);
+        if self.fault.is_some() {
+            return self.commit_faulty(new);
+        }
         let mut written = 0;
         for (i, (&nv, cell)) in
             new.data.iter().zip(self.values.iter_mut()).enumerate()
@@ -98,14 +169,82 @@ impl NvmArray {
         written
     }
 
+    /// The faulty-commit slow path: write-verify with bounded retry,
+    /// per-cell programming variation, retirement, and wear-out. Pulse
+    /// accounting closes exactly:
+    /// `pulses_attempted == pulse_successes + retry_pulses + retired`
+    /// (each attempted pulse either verifies, is a failed pulse that a
+    /// retry follows, or is the final failed pulse that retires the
+    /// cell). Per-pulse failure draws are keyed by the cell's write
+    /// counter at pulse time, so they are pure functions of the fault
+    /// seed and the write history — resume- and shard-invariant.
+    fn commit_faulty(&mut self, new: &Mat) -> u64 {
+        let mut fs =
+            self.fault.take().expect("commit_faulty without fault model");
+        let (lo, hi) = (self.quant.lo, self.quant.hi);
+        let mut written = 0u64;
+        for (i, (&nv, cell)) in
+            new.data.iter().zip(self.values.iter_mut()).enumerate()
+        {
+            if fs.is_stuck(i) {
+                continue; // defective cells take no program pulses
+            }
+            let new_code = self.quant.code(nv);
+            if new_code == self.quant.code(*cell) {
+                continue; // write-verify: level already correct
+            }
+            let target = self.quant.decode(new_code);
+            let mut attempt = 0u32;
+            loop {
+                let pulse = self.writes[i];
+                self.writes[i] += 1;
+                written += 1;
+                fs.counters.pulses_attempted += 1;
+                if !fs.pulse_fails(i, pulse) {
+                    fs.counters.pulse_successes += 1;
+                    *cell = (target * fs.scale(i)).clamp(lo, hi);
+                    break;
+                }
+                if attempt == fs.cfg.max_retries {
+                    // retry budget exhausted: retire the cell, stuck
+                    // at whatever level it last held
+                    fs.counters.retired += 1;
+                    fs.mark_acquired(i, *cell);
+                    break;
+                }
+                fs.counters.retry_pulses += 1;
+                attempt += 1;
+            }
+            // endurance wear-out: freeze once the write counter
+            // crosses the cell's drawn lifetime
+            if !fs.is_stuck(i) && fs.worn_out(i, self.writes[i]) {
+                fs.counters.wearouts += 1;
+                fs.mark_acquired(i, *cell);
+            }
+        }
+        self.total_writes += written;
+        self.commits += 1;
+        self.fault = Some(fs);
+        written
+    }
+
     /// Density a hypothetical commit would have, without applying it
     /// (the scheduler's rho_min gate input when running natively).
+    /// Stuck cells cannot be written and never count; a zero-length
+    /// array has density 0, not NaN.
     pub fn density_of(&self, new: &Mat) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
         let changed = new
             .data
             .iter()
             .zip(self.values.iter())
-            .filter(|(&nv, &cv)| self.quant.code(nv) != self.quant.code(cv))
+            .enumerate()
+            .filter(|&(i, (&nv, &cv))| {
+                self.fault.as_deref().map_or(true, |f| !f.is_stuck(i))
+                    && self.quant.code(nv) != self.quant.code(cv)
+            })
             .count();
         changed as f64 / self.values.len() as f64
     }
@@ -325,5 +464,168 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// Regression: `density_of` on a zero-length array must be 0, not
+    /// NaN (it divided by `values.len()` without the guard
+    /// `mean_cell_writes` has).
+    #[test]
+    fn density_of_empty_array_is_zero() {
+        let m = Mat::zeros(0, 0);
+        let arr = NvmArray::program(&m, QW);
+        let d = arr.density_of(&Mat::zeros(0, 0));
+        assert!(!d.is_nan());
+        assert_eq!(d, 0.0);
+    }
+
+    /// Installing a `FaultCfg::NONE` model routes commits through the
+    /// faulty slow path but must reproduce the perfect-memory results
+    /// bit for bit (no failure mode is active).
+    #[test]
+    fn faultless_model_matches_perfect_memory() {
+        prop::check("fault-none-parity", 10, |rng| {
+            let m = Mat::from_fn(4, 6, |_, _| rng.normal_f32(0.0, 0.3));
+            let mut a = NvmArray::program(&m, QW);
+            let mut b = NvmArray::program(&m, QW);
+            b.install_fault(&FaultCfg::NONE, 7);
+            for _ in 0..5 {
+                let new = Mat::from_fn(4, 6, |i, j| {
+                    a.read().at(i, j) + rng.normal_f32(0.0, 0.05)
+                });
+                let (wa, wb) = (a.commit(&new), b.commit(&new));
+                crate::prop_assert!(wa == wb, "written {wa} != {wb}");
+            }
+            crate::prop_assert!(a.raw() == b.raw(), "values diverged");
+            crate::prop_assert!(
+                a.total_writes == b.total_writes
+                    && a.cell_writes() == b.cell_writes(),
+                "write accounting diverged"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn factory_stuck_cells_take_no_pulses() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.defect_p = 1.0; // every cell stuck at a rail
+        let m = Mat::from_vec(1, 8, vec![0.25; 8]);
+        let mut arr = NvmArray::program(&m, QW);
+        arr.install_fault(&cfg, 11);
+        let fs = arr.fault().unwrap();
+        assert_eq!(fs.factory_stuck, 8);
+        // reads return the stuck rails, not the programmed value
+        let lo = QW.decode(0);
+        let hi = QW.decode(QW.levels() as i32 - 1);
+        assert!(arr.raw().iter().all(|&v| v == lo || v == hi));
+        let written = arr.commit(&Mat::from_vec(1, 8, vec![-0.5; 8]));
+        assert_eq!(written, 0);
+        assert_eq!(arr.total_writes, 0);
+        assert!(arr.raw().iter().all(|&v| v == lo || v == hi));
+        // a hypothetical commit sees zero writable density
+        assert_eq!(arr.density_of(&Mat::from_vec(1, 8, vec![-0.5; 8])), 0.0);
+    }
+
+    /// The retry-accounting closure the fault model guarantees:
+    /// every attempted pulse is exactly one of success / retried
+    /// failure / retiring failure, and every pulse is a counted write.
+    #[test]
+    fn retry_accounting_closes_exactly() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.write_fail_p = 0.4;
+        cfg.max_retries = 2;
+        let m = Mat::zeros(2, 8);
+        let mut arr = NvmArray::program(&m, QW);
+        arr.install_fault(&cfg, 5);
+        for k in 0..50u64 {
+            let v = if k % 2 == 0 { 0.5 } else { -0.5 };
+            arr.commit(&Mat::from_vec(2, 8, vec![v; 16]));
+        }
+        let c = arr.fault().unwrap().counters;
+        assert!(c.pulses_attempted > 0);
+        assert_eq!(
+            c.pulses_attempted,
+            c.pulse_successes + c.retry_pulses + c.retired,
+            "accounting leak: {c:?}"
+        );
+        assert_eq!(arr.total_writes, c.pulses_attempted);
+        let sum: u64 = arr.cell_writes().iter().sum();
+        assert_eq!(sum, arr.total_writes);
+        // at a 40% per-pulse failure rate over 800 cell-toggles some
+        // cells must have retired (p_retire per toggle = 0.4^3)
+        assert!(c.retired > 0, "expected retirements: {c:?}");
+        assert!(c.retry_pulses > 0);
+    }
+
+    #[test]
+    fn wearout_frozen_cells_never_change_again() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.wearout = true;
+        cfg.wearout_spread = 0.0;
+        cfg.endurance = 3.0;
+        let m = Mat::from_vec(1, 1, vec![0.0]);
+        let mut arr = NvmArray::program(&m, QW);
+        arr.install_fault(&cfg, 2);
+        for k in 0..3u64 {
+            let v = if k % 2 == 0 { 0.5 } else { -0.5 };
+            assert_eq!(arr.commit(&Mat::from_vec(1, 1, vec![v])), 1);
+        }
+        let frozen = arr.raw()[0];
+        let fs = arr.fault().unwrap();
+        assert_eq!(fs.counters.wearouts, 1);
+        assert_eq!(fs.acquired(), &[(0u32, frozen)]);
+        // the worn cell is dead: later commits cost nothing, change
+        // nothing
+        for k in 0..5u64 {
+            let v = if k % 2 == 0 { -0.75 } else { 0.75 };
+            assert_eq!(arr.commit(&Mat::from_vec(1, 1, vec![v])), 0);
+            assert_eq!(arr.raw()[0], frozen);
+        }
+        assert_eq!(arr.total_writes, 3);
+    }
+
+    #[test]
+    fn programming_variation_is_seed_deterministic() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.var_sigma = 0.3;
+        let m = Mat::zeros(2, 8);
+        let target = Mat::from_vec(2, 8, vec![0.5; 16]);
+        let mk = |seed: u64| {
+            let mut arr = NvmArray::program(&m, QW);
+            arr.install_fault(&cfg, seed);
+            arr.commit(&target);
+            arr.raw().to_vec()
+        };
+        assert_eq!(mk(9), mk(9));
+        assert_ne!(mk(9), mk(10));
+        // variation actually moves levels off the exact target
+        let exact = QW.q(0.5);
+        assert!(mk(9).iter().any(|&v| v != exact));
+        // and stays inside the quantizer range
+        assert!(mk(9).iter().all(|&v| (QW.lo..=QW.hi).contains(&v)));
+    }
+
+    /// Drift perturbs every analog level, but stuck cells are pinned:
+    /// `reassert_stuck` restores them exactly.
+    #[test]
+    fn reassert_stuck_pins_defects_after_drift() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.defect_p = 0.5;
+        let m = Mat::zeros(4, 8);
+        let mut arr = NvmArray::program(&m, QW);
+        arr.install_fault(&cfg, 21);
+        let before = arr.raw().to_vec();
+        let stuck: Vec<bool> = (0..32)
+            .map(|i| arr.fault().unwrap().is_stuck(i))
+            .collect();
+        assert!(stuck.iter().any(|&s| s));
+        let mut rng = crate::util::rng::Rng::new(3);
+        super::super::drift::apply_analog(&mut arr, &mut rng, 0.05);
+        arr.reassert_stuck();
+        for i in 0..32 {
+            if stuck[i] {
+                assert_eq!(arr.raw()[i], before[i], "stuck cell {i} moved");
+            }
+        }
     }
 }

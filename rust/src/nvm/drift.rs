@@ -33,7 +33,7 @@ impl DriftCfg {
     }
 
     pub fn digital(p0: f64) -> DriftCfg {
-        DriftCfg { every: 10, sigma0: 0.0, p0: 0.0 + p0 }
+        DriftCfg { every: 10, sigma0: 0.0, p0 }
     }
 
     pub fn enabled(&self) -> bool {
@@ -60,6 +60,12 @@ pub fn apply_analog(arr: &mut NvmArray, rng: &mut Rng, sigma_step: f64) {
 }
 
 /// Apply one round of independent bit flips to every cell's code.
+///
+/// The `code as u32` cast below is lossless by the quantizer contract:
+/// `Quantizer::code` clamps to `[0, levels - 1]` and can never return a
+/// negative code (NaN saturates to 0), so the unsigned reinterpretation
+/// and the `levels - 1` mask only ever see in-range values — pinned by
+/// `digital_cast_then_mask_is_sound` below.
 pub fn apply_digital(arr: &mut NvmArray, rng: &mut Rng, p_bit: f64) {
     let bits = arr.quant.bits;
     let quant = arr.quant;
@@ -295,5 +301,106 @@ mod tests {
         assert!((cfg.sigma_step() - 10.0 / (100_000f64).sqrt()).abs() < 1e-12);
         let cfg = DriftCfg::digital(10.0);
         assert!((cfg.p_step() - 1e-4).abs() < 1e-12);
+    }
+
+    /// Pin the signed/unsigned handling in [`apply_digital`]: quantizer
+    /// codes are clamped non-negative, so the `as u32` cast and the
+    /// `levels - 1` mask are lossless, even for analog levels pushed
+    /// far outside the clipping range, and drifted codes stay in range.
+    #[test]
+    fn digital_cast_then_mask_is_sound() {
+        use crate::quant::qw_bits;
+        use crate::util::prop;
+        prop::check("drift-digital-cast", 30, |rng| {
+            let q = if rng.bernoulli(0.5) {
+                QW
+            } else {
+                qw_bits(1 + rng.below(8) as u32)
+            };
+            let m = Mat::from_fn(2, 8, |_, _| rng.normal_f32(0.0, 2.0));
+            let mut arr = NvmArray::program(&m, q);
+            // adversarially push analog levels outside the clip range
+            for v in arr.raw_mut() {
+                *v += rng.normal_f32(0.0, 3.0);
+            }
+            for &v in arr.raw().iter() {
+                let c = q.code(v);
+                crate::prop_assert!(
+                    c >= 0 && c < q.levels() as i32,
+                    "code {c} out of range for {v}"
+                );
+                crate::prop_assert!(
+                    ((c as u32) & (q.levels() - 1)) as i32 == c,
+                    "mask changed in-range code {c}"
+                );
+            }
+            apply_digital(&mut arr, rng, 0.3);
+            for &v in arr.raw().iter() {
+                let c = q.code(v);
+                crate::prop_assert!(
+                    c >= 0 && c < q.levels() as i32,
+                    "post-drift code {c} out of range"
+                );
+                crate::prop_assert!(
+                    v >= q.lo && v <= q.hi,
+                    "post-drift value {v} outside [{}, {}]",
+                    q.lo,
+                    q.hi
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Drift is not a program pulse: no drift process may touch the
+    /// write accounting, and a commit after drift counts exactly the
+    /// code-changed cells.
+    #[test]
+    fn drift_never_counts_as_writes() {
+        use crate::util::prop;
+        prop::check("drift-accounting-isolation", 20, |rng| {
+            let m = Mat::from_fn(3, 8, |_, _| rng.normal_f32(0.0, 0.3));
+            let mut arr = NvmArray::program(&m, QW);
+            // seed some real writes first so counters are nonzero
+            let new = Mat::from_fn(3, 8, |i, j| {
+                m.at(i, j) + rng.normal_f32(0.0, 0.05)
+            });
+            arr.commit(&new);
+            let (tw, cm) = (arr.total_writes, arr.commits);
+            let writes = arr.cell_writes().to_vec();
+            apply_analog(&mut arr, rng, 0.02);
+            apply_digital(&mut arr, rng, 0.05);
+            apply_rounds(&mut arr, rng, &DriftCfg::analog(10.0), 7);
+            apply_rounds(&mut arr, rng, &DriftCfg::digital(10.0), 7);
+            apply(&mut arr, rng, &DriftCfg::analog(5.0));
+            crate::prop_assert!(
+                arr.total_writes == tw && arr.commits == cm,
+                "drift moved totals: {} -> {}, {} -> {}",
+                tw,
+                arr.total_writes,
+                cm,
+                arr.commits
+            );
+            crate::prop_assert!(
+                arr.cell_writes() == &writes[..],
+                "drift moved per-cell write counters"
+            );
+            // a commit after drift writes exactly the code-changed cells
+            let target = Mat::from_fn(3, 8, |i, j| {
+                arr.read().at(i, j) + rng.normal_f32(0.0, 0.05)
+            });
+            let expected = target
+                .data
+                .iter()
+                .zip(arr.raw().iter())
+                .filter(|(&t, &c)| QW.code(t) != QW.code(c))
+                .count() as u64;
+            let written = arr.commit(&target);
+            crate::prop_assert!(
+                written == expected,
+                "post-drift commit wrote {written}, expected {expected}"
+            );
+            Ok(())
+        });
     }
 }

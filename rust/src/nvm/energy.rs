@@ -8,6 +8,11 @@
 
 pub const WRITE_PJ_PER_BIT: f64 = 10.9;
 pub const READ_PJ_PER_BIT: f64 = 1.76;
+/// Mean cell endurance budget. Passive gauge via
+/// `NvmArray::endurance_used`; with wear-out enabled in
+/// [`super::fault::FaultCfg`] it is also the mean of the per-cell
+/// lifetime distribution — cells freeze once their write counter
+/// crosses their drawn lifetime.
 pub const ENDURANCE_WRITES: f64 = 1e6;
 pub const RRAM_UM2_PER_BIT: f64 = 0.085;
 pub const SRAM_UM2_PER_BIT: f64 = 0.242;

@@ -1,0 +1,446 @@
+//! Seeded, deterministic per-cell fault model for NVM arrays.
+//!
+//! Real FeFET/PCM/RRAM arrays are not perfect memories: cells arrive
+//! stuck from the fab, program pulses fail and need verify-retry,
+//! programming lands on a distribution rather than a level, and every
+//! counted write consumes a finite endurance budget. This module makes
+//! all four failure modes first-class and *strictly opt-in*:
+//! [`FaultCfg::NONE`] (the default everywhere) leaves every existing
+//! code path byte-identical, because [`crate::nvm::NvmArray`] only
+//! consults the model when one has been installed.
+//!
+//! Every random draw is a pure FNV-1a hash of `(tag, seed, cell, ...)`
+//! — there is no RNG state to suspend, resume, or keep in sync across
+//! shard/wave partitions. Two consequences fall out by construction:
+//! the same `(FaultCfg, seed)` always yields the same defect map, and
+//! the sharded fleet gets i.i.d. per-device maps from one compact
+//! `fault_seed` word per device record (mixed from the fleet fault seed
+//! and the device seed, `device_seed`-style).
+//!
+//! Failure modes:
+//! - **Manufacturing stuck-at defects** — with probability `defect_p` a
+//!   cell is stuck at the lowest or highest code (split evenly) from
+//!   the moment the array is programmed. Commits skip stuck cells;
+//!   reads return the stuck level.
+//! - **Write-verify retry** — each program pulse fails independently
+//!   with probability `write_fail_p`. A failed pulse leaves the old
+//!   level in place and is retried up to `max_retries` times; *every*
+//!   pulse (including retries) is a counted write. A cell that exhausts
+//!   its retry budget is retired: marked stuck at its current level and
+//!   skipped by all later commits.
+//! - **Programming variation** — each successful pulse lands on
+//!   `target * exp(var_sigma * N(0,1))` (per-cell lognormal scale,
+//!   FeFET-style), re-clipped to the quantizer range.
+//! - **Endurance wear-out** — each cell draws a lifetime
+//!   `endurance * exp(wearout_spread * N(0,1))` and freezes at its
+//!   current level once its write counter crosses it, turning the
+//!   passive `endurance_used()` gauge into an active failure mode.
+
+use crate::util::hash::fnv1a64_words;
+
+/// Domain-separation tags for the hash-derived draws. Each keyed family
+/// of draws lives in its own region of hash space.
+const TAG_DEVICE: u64 = 0xFA_0D_E7;
+const TAG_ARRAY: u64 = 0xFA_0A_44;
+const TAG_DEFECT: u64 = 0xFA_1D_EF;
+const TAG_VAR: u64 = 0xFA_25_CA;
+const TAG_LIFE: u64 = 0xFA_31_FE;
+const TAG_PULSE: u64 = 0xFA_49_01;
+
+/// Per-cell stuck states (the dense flag map in [`FaultState`]).
+pub const STUCK_NONE: u8 = 0;
+pub const STUCK_LOW: u8 = 1;
+pub const STUCK_HIGH: u8 = 2;
+/// Acquired in operation: retired after exhausting write-verify
+/// retries, or worn out past the cell's endurance lifetime.
+pub const STUCK_ACQUIRED: u8 = 3;
+
+/// Fault-injection configuration. All probabilities are per-cell or
+/// per-pulse; `NONE` disables every mechanism and is the default.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultCfg {
+    /// Manufacturing stuck-at defect probability per cell.
+    pub defect_p: f64,
+    /// Per-pulse program failure probability.
+    pub write_fail_p: f64,
+    /// Extra verify-retry pulses after a failed program pulse.
+    pub max_retries: u32,
+    /// Lognormal sigma of the per-pulse programming-variation scale
+    /// (0 disables).
+    pub var_sigma: f64,
+    /// Enable endurance wear-out (cells freeze past their lifetime).
+    pub wearout: bool,
+    /// Lognormal sigma of the per-cell lifetime draw (0 = every cell
+    /// gets exactly `endurance`).
+    pub wearout_spread: f64,
+    /// Mean cell lifetime in counted writes.
+    pub endurance: f64,
+    /// Fault-model seed, mixed (never used raw) into every draw.
+    pub seed: u64,
+}
+
+impl FaultCfg {
+    pub const NONE: FaultCfg = FaultCfg {
+        defect_p: 0.0,
+        write_fail_p: 0.0,
+        max_retries: 3,
+        var_sigma: 0.0,
+        wearout: false,
+        wearout_spread: 0.0,
+        endurance: super::energy::ENDURANCE_WRITES,
+        seed: 0,
+    };
+
+    /// Whether any failure mode is active. `false` means the array hot
+    /// path never even looks at the fault model.
+    pub fn enabled(&self) -> bool {
+        self.defect_p > 0.0
+            || self.write_fail_p > 0.0
+            || self.var_sigma > 0.0
+            || self.wearout
+    }
+}
+
+impl Default for FaultCfg {
+    fn default() -> Self {
+        FaultCfg::NONE
+    }
+}
+
+/// Map a hash word to a uniform in [0, 1) — same 53-bit construction as
+/// `Rng::f64`, so draw quality matches the repo's RNG.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Standard normal from two keyed hash draws (Box-Muller; `1 - u1`
+/// keeps the log argument in (0, 1]).
+fn normal(seed: u64, tag: u64, idx: u64) -> f64 {
+    let u1 = unit(fnv1a64_words(&[tag, seed, idx, 1]));
+    let u2 = unit(fnv1a64_words(&[tag, seed, idx, 2]));
+    (-2.0 * (1.0 - u1).ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// Per-device fault seed: one compact word a fleet record carries so
+/// 10^5+ devices get i.i.d. defect maps from `(fault seed, device
+/// seed)` alone.
+pub fn device_fault_seed(fault_seed: u64, device_seed: u64) -> u64 {
+    fnv1a64_words(&[TAG_DEVICE, fault_seed, device_seed])
+}
+
+/// Per-array (layer) fault seed under a device fault seed.
+pub fn array_fault_seed(device_fault_seed: u64, layer: usize) -> u64 {
+    fnv1a64_words(&[TAG_ARRAY, device_fault_seed, layer as u64])
+}
+
+/// Counters for faults *acquired in operation* — everything a
+/// suspended device record must carry verbatim (factory defects are
+/// re-derived from the seed instead).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Cells retired after exhausting the write-verify retry budget.
+    pub retired: u64,
+    /// Cells frozen by endurance wear-out.
+    pub wearouts: u64,
+    /// Failed pulses that were followed by a retry pulse.
+    pub retry_pulses: u64,
+    /// Every program pulse attempted (first tries + retries).
+    pub pulses_attempted: u64,
+    /// Pulses that verified successfully.
+    pub pulse_successes: u64,
+}
+
+/// Aggregate fault telemetry across a device's arrays — what reports
+/// and scenario rows surface.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultSummary {
+    pub cells: u64,
+    pub factory_stuck: u64,
+    pub retired: u64,
+    pub wearouts: u64,
+    pub retry_pulses: u64,
+    pub pulses_attempted: u64,
+    pub pulse_successes: u64,
+}
+
+impl FaultSummary {
+    /// Fraction of cells currently defective (factory + acquired).
+    pub fn defect_rate(&self) -> f64 {
+        if self.cells == 0 {
+            return 0.0;
+        }
+        (self.factory_stuck + self.retired + self.wearouts) as f64
+            / self.cells as f64
+    }
+
+    /// Total stuck cells of any origin.
+    pub fn stuck_cells(&self) -> u64 {
+        self.factory_stuck + self.retired + self.wearouts
+    }
+}
+
+/// Per-array fault state installed on an [`crate::nvm::NvmArray`].
+///
+/// The dense `stuck` map is the only O(cells) storage; variation scales
+/// and lifetimes are re-derived per draw from the seed (writes are
+/// sparse under LWD, so lazy hashing beats precomputed tables).
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    pub cfg: FaultCfg,
+    /// Array-level seed (see [`array_fault_seed`]).
+    pub seed: u64,
+    /// Per-cell stuck flags (`STUCK_*`).
+    stuck: Vec<u8>,
+    /// Sparse (cell, frozen level) list for acquired-stuck cells — the
+    /// part of the defect map that is NOT re-derivable from the seed,
+    /// so fleet records persist exactly this.
+    acquired: Vec<(u32, f32)>,
+    /// Factory stuck-at cells in this array (derived at install).
+    pub factory_stuck: u64,
+    pub counters: FaultCounters,
+}
+
+impl FaultState {
+    /// Derive the factory defect map for `len` cells. Returns the state
+    /// plus the list of `(cell, stuck_flag)` the array must apply to
+    /// its analog levels.
+    pub fn new(len: usize, cfg: FaultCfg, seed: u64) -> FaultState {
+        let mut stuck = vec![STUCK_NONE; len];
+        let mut factory_stuck = 0u64;
+        if cfg.defect_p > 0.0 {
+            for (i, s) in stuck.iter_mut().enumerate() {
+                let u = unit(fnv1a64_words(&[TAG_DEFECT, seed, i as u64]));
+                if u < cfg.defect_p {
+                    *s = if u < cfg.defect_p * 0.5 {
+                        STUCK_LOW
+                    } else {
+                        STUCK_HIGH
+                    };
+                    factory_stuck += 1;
+                }
+            }
+        }
+        FaultState {
+            cfg,
+            seed,
+            stuck,
+            acquired: Vec::new(),
+            factory_stuck,
+            counters: FaultCounters::default(),
+        }
+    }
+
+    pub fn is_stuck(&self, i: usize) -> bool {
+        self.stuck[i] != STUCK_NONE
+    }
+
+    pub fn stuck_flags(&self) -> &[u8] {
+        &self.stuck
+    }
+
+    /// Acquired-stuck cells (retired + worn out) with frozen levels.
+    pub fn acquired(&self) -> &[(u32, f32)] {
+        &self.acquired
+    }
+
+    /// Freeze a cell at `level` (retirement or wear-out).
+    pub fn mark_acquired(&mut self, i: usize, level: f32) {
+        debug_assert_eq!(self.stuck[i], STUCK_NONE);
+        self.stuck[i] = STUCK_ACQUIRED;
+        self.acquired.push((i as u32, level));
+    }
+
+    /// Restore the acquired-stuck overlay and counters from a
+    /// suspended device record (state restoration, not operation).
+    pub fn restore(
+        &mut self,
+        acquired: &[(u32, f32)],
+        counters: FaultCounters,
+    ) {
+        for &(i, v) in acquired {
+            self.stuck[i as usize] = STUCK_ACQUIRED;
+            self.acquired.push((i, v));
+        }
+        self.counters = counters;
+    }
+
+    /// Whether the pulse numbered `pulse` on cell `i` fails to program.
+    pub fn pulse_fails(&self, i: usize, pulse: u64) -> bool {
+        self.cfg.write_fail_p > 0.0
+            && unit(fnv1a64_words(&[TAG_PULSE, self.seed, i as u64, pulse]))
+                < self.cfg.write_fail_p
+    }
+
+    /// Per-cell programming-variation scale (lognormal around 1).
+    pub fn scale(&self, i: usize) -> f32 {
+        if self.cfg.var_sigma <= 0.0 {
+            return 1.0;
+        }
+        (self.cfg.var_sigma * normal(self.seed, TAG_VAR, i as u64)).exp()
+            as f32
+    }
+
+    /// Per-cell endurance lifetime in counted writes (>= 1).
+    pub fn lifetime(&self, i: usize) -> u64 {
+        let l = if self.cfg.wearout_spread <= 0.0 {
+            self.cfg.endurance
+        } else {
+            self.cfg.endurance
+                * (self.cfg.wearout_spread
+                    * normal(self.seed, TAG_LIFE, i as u64))
+                .exp()
+        };
+        (l.max(1.0)) as u64
+    }
+
+    /// Whether a cell with `writes` counted writes has worn out.
+    pub fn worn_out(&self, i: usize, writes: u64) -> bool {
+        self.cfg.wearout && writes >= self.lifetime(i)
+    }
+
+    /// This array's contribution to a device-level [`FaultSummary`].
+    pub fn summarize(&self, cells: usize) -> FaultSummary {
+        FaultSummary {
+            cells: cells as u64,
+            factory_stuck: self.factory_stuck,
+            retired: self.counters.retired,
+            wearouts: self.counters.wearouts,
+            retry_pulses: self.counters.retry_pulses,
+            pulses_attempted: self.counters.pulses_attempted,
+            pulse_successes: self.counters.pulse_successes,
+        }
+    }
+}
+
+/// Accumulate per-array summaries into a device-level one.
+pub fn merge(into: &mut FaultSummary, s: FaultSummary) {
+    into.cells += s.cells;
+    into.factory_stuck += s.factory_stuck;
+    into.retired += s.retired;
+    into.wearouts += s.wearouts;
+    into.retry_pulses += s.retry_pulses;
+    into.pulses_attempted += s.pulses_attempted;
+    into.pulse_successes += s.pulse_successes;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_disabled_and_default() {
+        assert!(!FaultCfg::NONE.enabled());
+        assert_eq!(FaultCfg::default(), FaultCfg::NONE);
+        assert_eq!(FaultCfg::NONE.endurance, 1e6);
+    }
+
+    #[test]
+    fn each_knob_enables() {
+        let mut c = FaultCfg::NONE;
+        c.defect_p = 0.01;
+        assert!(c.enabled());
+        let mut c = FaultCfg::NONE;
+        c.write_fail_p = 0.01;
+        assert!(c.enabled());
+        let mut c = FaultCfg::NONE;
+        c.var_sigma = 0.1;
+        assert!(c.enabled());
+        let mut c = FaultCfg::NONE;
+        c.wearout = true;
+        assert!(c.enabled());
+    }
+
+    #[test]
+    fn defect_map_is_deterministic_and_seed_dependent() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.defect_p = 0.05;
+        let a = FaultState::new(10_000, cfg, 42);
+        let b = FaultState::new(10_000, cfg, 42);
+        assert_eq!(a.stuck_flags(), b.stuck_flags());
+        let c = FaultState::new(10_000, cfg, 43);
+        assert_ne!(a.stuck_flags(), c.stuck_flags());
+        // rate is in the right ballpark (binomial, n=10^4, p=0.05)
+        let frac = a.factory_stuck as f64 / 10_000.0;
+        assert!((frac - 0.05).abs() < 0.01, "defect rate {frac}");
+        // both polarities occur
+        assert!(a.stuck_flags().iter().any(|&s| s == STUCK_LOW));
+        assert!(a.stuck_flags().iter().any(|&s| s == STUCK_HIGH));
+    }
+
+    #[test]
+    fn draws_are_pure_functions() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.write_fail_p = 0.3;
+        cfg.var_sigma = 0.2;
+        cfg.wearout = true;
+        cfg.wearout_spread = 0.5;
+        cfg.endurance = 100.0;
+        let fs = FaultState::new(64, cfg, 7);
+        for i in 0..64usize {
+            assert_eq!(fs.pulse_fails(i, 3), fs.pulse_fails(i, 3));
+            assert_eq!(fs.scale(i), fs.scale(i));
+            assert_eq!(fs.lifetime(i), fs.lifetime(i));
+            assert!(fs.lifetime(i) >= 1);
+        }
+        // distinct cells / pulses decorrelate
+        let fails: usize =
+            (0..1000).filter(|&p| fs.pulse_fails(0, p)).count();
+        assert!(
+            (fails as f64 / 1000.0 - 0.3).abs() < 0.07,
+            "pulse-fail rate {fails}/1000"
+        );
+    }
+
+    #[test]
+    fn lifetime_centers_on_endurance() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.wearout = true;
+        cfg.wearout_spread = 0.0;
+        cfg.endurance = 5.0;
+        let fs = FaultState::new(8, cfg, 1);
+        for i in 0..8 {
+            assert_eq!(fs.lifetime(i), 5);
+            assert!(!fs.worn_out(i, 4));
+            assert!(fs.worn_out(i, 5));
+        }
+    }
+
+    #[test]
+    fn seed_mixing_separates_devices_and_layers() {
+        let d0 = device_fault_seed(9, 100);
+        let d1 = device_fault_seed(9, 101);
+        assert_ne!(d0, d1);
+        assert_ne!(array_fault_seed(d0, 0), array_fault_seed(d0, 1));
+        assert_eq!(device_fault_seed(9, 100), d0);
+    }
+
+    #[test]
+    fn restore_roundtrips_acquired_state() {
+        let mut cfg = FaultCfg::NONE;
+        cfg.write_fail_p = 0.5;
+        let mut fs = FaultState::new(16, cfg, 3);
+        fs.mark_acquired(4, 0.25);
+        fs.counters.retired = 1;
+        fs.counters.pulses_attempted = 4;
+        fs.counters.retry_pulses = 3;
+        let mut back = FaultState::new(16, cfg, 3);
+        back.restore(fs.acquired(), fs.counters);
+        assert_eq!(back.stuck_flags(), fs.stuck_flags());
+        assert_eq!(back.acquired(), fs.acquired());
+        assert_eq!(back.counters, fs.counters);
+    }
+
+    #[test]
+    fn summary_defect_rate() {
+        let s = FaultSummary {
+            cells: 200,
+            factory_stuck: 6,
+            retired: 2,
+            wearouts: 2,
+            ..FaultSummary::default()
+        };
+        assert!((s.defect_rate() - 0.05).abs() < 1e-12);
+        assert_eq!(s.stuck_cells(), 10);
+        assert_eq!(FaultSummary::default().defect_rate(), 0.0);
+    }
+}

@@ -11,5 +11,7 @@
 pub mod array;
 pub mod drift;
 pub mod energy;
+pub mod fault;
 
 pub use array::NvmArray;
+pub use fault::FaultCfg;

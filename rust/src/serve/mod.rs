@@ -189,6 +189,10 @@ pub struct ServeReport {
     pub epoch_switches: u64,
     pub makespan_us: u64,
     pub virtual_rps: f64,
+    /// Pins that skipped a checksum-failed snapshot (see
+    /// [`SnapshotStore::checksum_fallbacks`]); 0 unless corruption was
+    /// injected or real memory faults hit resident weights.
+    pub checksum_fallbacks: u64,
     pub batch_hist: Vec<(usize, u64)>,
     /// Real elapsed time of the run — diagnostics/BENCH_JSON only,
     /// never part of `to_row`.
@@ -207,7 +211,7 @@ impl ServeReport {
                 })
                 .collect(),
         );
-        Row::new()
+        let mut row = Row::new()
             .str("bench", "serve")
             .str("trace", self.trace)
             .int("seed", self.seed)
@@ -229,8 +233,13 @@ impl ServeReport {
             .int("final_epoch", self.final_epoch)
             .int("epoch_switches", self.epoch_switches)
             .int("makespan_us", self.makespan_us)
-            .num("virtual_rps", self.virtual_rps, 1)
-            .detail("batch_hist", hist)
+            .num("virtual_rps", self.virtual_rps, 1);
+        // emitted only when degradation actually occurred, so healthy
+        // runs stay byte-identical to pre-fault baselines
+        if self.checksum_fallbacks > 0 {
+            row = row.int("checksum_fallbacks", self.checksum_fallbacks);
+        }
+        row.detail("batch_hist", hist)
     }
 }
 
@@ -431,6 +440,7 @@ pub fn run(cfg: &ServeCfg) -> ServeReport {
         } else {
             completed as f64 / (makespan_us as f64 / US_PER_SEC)
         },
+        checksum_fallbacks: store.checksum_fallbacks(),
         batch_hist: hist.nonzero(),
         wall_secs: wall_start.elapsed().as_secs_f64(),
     }
@@ -474,6 +484,18 @@ mod tests {
         let a = run(&cfg).to_row().jsonl();
         let b = run(&cfg).to_row().jsonl();
         assert_eq!(a, b, "serve replay diverged");
+    }
+
+    #[test]
+    fn healthy_runs_emit_no_fallback_column() {
+        let mut cfg = small_cfg(TraceKind::Poisson, 5, 40);
+        cfg.train.scheme = Scheme::Inference;
+        let rep = run(&cfg);
+        assert_eq!(rep.checksum_fallbacks, 0);
+        assert!(
+            !rep.to_row().jsonl().contains("checksum_fallbacks"),
+            "healthy rows must stay byte-identical to pre-fault output"
+        );
     }
 
     #[test]

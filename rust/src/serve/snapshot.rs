@@ -45,6 +45,36 @@ pub struct WeightSnapshot {
     pub params: Params,
     pub aux: AuxState,
     pub checksum: u64,
+    /// Cached pin-time validation verdict (`VERIFY_*`): the full
+    /// re-hash against `checksum` runs at most once per snapshot.
+    verify: AtomicU64,
+}
+
+/// `WeightSnapshot::verify` states.
+const VERIFY_PENDING: u64 = 0;
+const VERIFY_OK: u64 = 1;
+const VERIFY_BAD: u64 = 2;
+
+impl WeightSnapshot {
+    /// Validate the resident parameter bytes against the publish-time
+    /// checksum. First call re-hashes and caches the verdict; later
+    /// calls are an atomic load. Detects in-place corruption of
+    /// resident weights (the NVM failure mode `nvm::fault` models at
+    /// the cell level) between publish and pin.
+    fn verify_ok(&self) -> bool {
+        match self.verify.load(Ordering::Acquire) {
+            VERIFY_OK => true,
+            VERIFY_BAD => false,
+            _ => {
+                let ok = fingerprint(&self.params) == self.checksum;
+                self.verify.store(
+                    if ok { VERIFY_OK } else { VERIFY_BAD },
+                    Ordering::Release,
+                );
+                ok
+            }
+        }
+    }
 }
 
 /// FNV-1a over every parameter tensor's f32 bit pattern (weights,
@@ -83,6 +113,9 @@ pub struct SnapshotStore {
     inner: Mutex<Vec<Arc<WeightSnapshot>>>,
     /// Publish counter, readable without the lock (progress metrics).
     epochs: AtomicU64,
+    /// Pins that had to skip a checksum-failed snapshot and serve an
+    /// older epoch instead (graceful-degradation telemetry).
+    checksum_fallbacks: AtomicU64,
 }
 
 impl SnapshotStore {
@@ -96,10 +129,12 @@ impl SnapshotStore {
             params,
             aux,
             checksum,
+            verify: AtomicU64::new(VERIFY_PENDING),
         });
         SnapshotStore {
             inner: Mutex::new(vec![base]),
             epochs: AtomicU64::new(0),
+            checksum_fallbacks: AtomicU64::new(0),
         }
     }
 
@@ -123,6 +158,7 @@ impl SnapshotStore {
             params,
             aux,
             checksum,
+            verify: AtomicU64::new(VERIFY_PENDING),
         });
         let mut inner = self.inner.lock().unwrap();
         if let Some(last) = inner.last() {
@@ -138,17 +174,36 @@ impl SnapshotStore {
     }
 
     /// Pin the latest snapshot published at or before virtual time
-    /// `t_us`. Never blocks on an in-flight publish: the clone/checksum
-    /// work happens outside the lock, so the wait here is bounded by an
-    /// O(1) push.
+    /// `t_us` whose resident weights still match their publish-time
+    /// checksum. A snapshot that fails validation is skipped (never
+    /// served again — the verdict is cached) and the scan falls back
+    /// to the last good epoch, counting the event in
+    /// [`SnapshotStore::checksum_fallbacks`]. If every eligible
+    /// snapshot is bad the oldest retained one is served anyway:
+    /// degraded answers beat refusing to serve, and the counter makes
+    /// the degradation observable. Never blocks on an in-flight
+    /// publish; each snapshot is re-hashed at most once (first pin),
+    /// after which validation is an atomic load.
     pub fn pin_at(&self, t_us: u64) -> Arc<WeightSnapshot> {
         let inner = self.inner.lock().unwrap();
-        inner
-            .iter()
-            .rev()
-            .find(|s| s.vtime_us <= t_us)
-            .unwrap_or_else(|| &inner[0])
-            .clone()
+        let mut fell_back = false;
+        for s in inner.iter().rev() {
+            if s.vtime_us > t_us {
+                continue;
+            }
+            if s.verify_ok() {
+                if fell_back {
+                    self.checksum_fallbacks
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                return s.clone();
+            }
+            fell_back = true;
+        }
+        if fell_back {
+            self.checksum_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        inner[0].clone()
     }
 
     /// Pin the newest snapshot regardless of time.
@@ -181,6 +236,39 @@ impl SnapshotStore {
     /// Snapshots currently retained (retirement telemetry).
     pub fn retained(&self) -> usize {
         self.inner.lock().unwrap().len()
+    }
+
+    /// Pins that skipped a checksum-failed snapshot (see
+    /// [`SnapshotStore::pin_at`]).
+    pub fn checksum_fallbacks(&self) -> u64 {
+        self.checksum_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Fault-injection hook: flip one bit in epoch `epoch`'s resident
+    /// weights *without* touching its stored checksum — the in-place
+    /// NVM corruption `pin_at` validation exists to catch. Readers that
+    /// already pinned the epoch keep their (uncorrupted) `Arc`; only
+    /// future pins see the corrupted copy. Returns whether the epoch
+    /// was found. Test/scenario use only.
+    pub fn corrupt_epoch(&self, epoch: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        for slot in inner.iter_mut() {
+            if slot.epoch == epoch {
+                let mut params = slot.params.clone();
+                let bits = params.w[0].data[0].to_bits() ^ 1;
+                params.w[0].data[0] = f32::from_bits(bits);
+                *slot = Arc::new(WeightSnapshot {
+                    epoch: slot.epoch,
+                    vtime_us: slot.vtime_us,
+                    params,
+                    aux: slot.aux.clone(),
+                    checksum: slot.checksum,
+                    verify: AtomicU64::new(VERIFY_PENDING),
+                });
+                return true;
+            }
+        }
+        false
     }
 }
 
@@ -230,6 +318,40 @@ mod tests {
         assert_eq!(pinned.epoch, 0);
         assert_eq!(fingerprint(&pinned.params), sum_before);
         assert_eq!(pinned.checksum, sum_before);
+    }
+
+    #[test]
+    fn corrupted_snapshot_falls_back_to_last_good_epoch() {
+        let store = SnapshotStore::new(params(1), AuxState::new());
+        store.publish(100, &params(2), &AuxState::new());
+        store.publish(200, &params(3), &AuxState::new());
+        assert!(store.corrupt_epoch(2));
+        assert!(!store.corrupt_epoch(99), "unknown epoch");
+        // pin at t=500 would pick epoch 2; validation rejects it and
+        // falls back to epoch 1, counting the event once
+        assert_eq!(store.checksum_fallbacks(), 0);
+        let pinned = store.pin_at(500);
+        assert_eq!(pinned.epoch, 1);
+        assert_eq!(store.checksum_fallbacks(), 1);
+        assert_eq!(fingerprint(&pinned.params), pinned.checksum);
+        // the bad verdict is cached: the next pin falls back again
+        // without re-hashing epoch 2 (still counted)
+        assert_eq!(store.pin_at(500).epoch, 1);
+        assert_eq!(store.checksum_fallbacks(), 2);
+        // pins that never meet the corrupted epoch count nothing
+        assert_eq!(store.pin_at(150).epoch, 1);
+        assert_eq!(store.checksum_fallbacks(), 2);
+    }
+
+    #[test]
+    fn all_bad_snapshots_degrade_to_oldest_without_panicking() {
+        let store = SnapshotStore::new(params(1), AuxState::new());
+        store.publish(100, &params(2), &AuxState::new());
+        assert!(store.corrupt_epoch(0));
+        assert!(store.corrupt_epoch(1));
+        let pinned = store.pin_at(500);
+        assert_eq!(pinned.epoch, 0, "oldest retained wins when all bad");
+        assert_eq!(store.checksum_fallbacks(), 1);
     }
 
     #[test]

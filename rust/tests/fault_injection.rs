@@ -1,0 +1,248 @@
+//! Acceptance tests for the NVM fault-injection layer (ISSUE 9):
+//!
+//! 1. defect maps are deterministic per device and invariant to how the
+//!    fleet is partitioned — a sharded run (shards + waves crossing
+//!    device lifetimes) reproduces the clone-a-device `run_fleet`
+//!    per-device reports bit-for-bit with faults on;
+//! 2. write-verify retry accounting closes exactly: every attempted
+//!    pulse is a success, a counted retry, or the terminal pulse of a
+//!    retired cell — and every pulse is a counted write;
+//! 3. wear-out is graceful and final: a worn cell's level never moves
+//!    again, training continues;
+//! 4. the serving path degrades instead of panicking when a snapshot
+//!    fails checksum validation;
+//! 5. the fault-sweep scenario is registered, and a killed+resumed
+//!    sweep is byte-identical to an uninterrupted one;
+//! 6. `FaultCfg::NONE` output is byte-identical to a config that never
+//!    mentions faults at all.
+
+use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+use lrt_nvm::coordinator::fleet::run_fleet;
+use lrt_nvm::coordinator::sharded::{run_sharded_fleet, ShardedFleetCfg};
+use lrt_nvm::coordinator::trainer::{pretrain_cached, Trainer};
+use lrt_nvm::experiments as exp;
+use lrt_nvm::lrt::Variant;
+use lrt_nvm::nvm::NvmArray;
+use lrt_nvm::quant::QW;
+use lrt_nvm::tensor::Mat;
+use lrt_nvm::util::cli::Args;
+use lrt_nvm::util::rng::Rng;
+
+fn faulty_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.scheme = Scheme::Lrt { variant: Variant::Biased };
+    cfg.samples = 30;
+    cfg.offline_samples = 50;
+    cfg.batch = [5, 5, 5, 5, 10, 10];
+    cfg.log_every = 10;
+    cfg.fault.defect_p = 0.02;
+    cfg.fault.write_fail_p = 0.1;
+    cfg.fault.max_retries = 2;
+    cfg.fault.var_sigma = 0.05;
+    cfg.fault.seed = 17;
+    cfg
+}
+
+#[test]
+fn faulty_sharded_run_matches_cloned_fleet_bitwise() {
+    let cfg = faulty_cfg();
+    let n = 3;
+    let baseline = run_fleet(&cfg, n);
+
+    let mut scfg = ShardedFleetCfg::new(cfg, n);
+    // shard < fleet and a wave dividing neither samples nor batch, so
+    // every device suspends/resumes mid-flush with live fault state
+    scfg.shard = 2;
+    scfg.wave = 7;
+    scfg.keep_reports = n;
+    let sharded = run_sharded_fleet(&scfg).unwrap();
+
+    assert_eq!(baseline.devices.len(), n);
+    assert_eq!(sharded.devices.len(), n);
+    for (d, (a, b)) in baseline
+        .devices
+        .iter()
+        .zip(sharded.devices.iter())
+        .enumerate()
+    {
+        assert_eq!(
+            a.to_row().jsonl(),
+            b.to_row().jsonl(),
+            "device {d} diverged between cloned and sharded engines"
+        );
+        assert_eq!(a.series, b.series, "device {d} series diverged");
+        let fa = a.fault.expect("fleet device missing fault telemetry");
+        let fb = b.fault.expect("sharded device missing fault telemetry");
+        assert_eq!(fa, fb, "device {d} fault summary diverged");
+        assert!(fa.cells > 0);
+    }
+    // devices draw i.i.d. maps, not copies of one map
+    let stuck: Vec<u64> = baseline
+        .devices
+        .iter()
+        .map(|r| r.fault.unwrap().factory_stuck)
+        .collect();
+    assert!(
+        stuck.windows(2).any(|w| w[0] != w[1]),
+        "per-device factory defect maps identical: {stuck:?}"
+    );
+}
+
+#[test]
+fn retry_accounting_closes_and_every_pulse_is_a_counted_write() {
+    let mut rng = Rng::new(5);
+    let m = Mat::from_fn(24, 24, |_, _| rng.normal_f32(0.0, 0.4));
+    let mut arr = NvmArray::program(&m, QW);
+    let mut cfg = lrt_nvm::nvm::FaultCfg::NONE;
+    cfg.defect_p = 0.05;
+    cfg.write_fail_p = 0.3;
+    cfg.max_retries = 2;
+    arr.install_fault(&cfg, 99);
+    for round in 0..6u64 {
+        let target = Mat::from_fn(24, 24, |r, c| {
+            let sign = if (r + c) % 2 == 0 { 1.0 } else { -1.0 };
+            m.at(r, c) + 0.07 * (round as f32 + 1.0) * sign
+        });
+        arr.commit(&target);
+    }
+    let f = arr.fault().unwrap().counters;
+    assert!(f.pulses_attempted > 0, "no pulses exercised");
+    assert_eq!(
+        f.pulses_attempted,
+        f.pulse_successes + f.retry_pulses + f.retired,
+        "retry accounting leak"
+    );
+    // every pulse — success, retry, or terminal failure — burned a write
+    assert_eq!(arr.total_writes, f.pulses_attempted);
+    assert_eq!(
+        arr.cell_writes().iter().sum::<u64>(),
+        f.pulses_attempted
+    );
+}
+
+#[test]
+fn worn_out_cells_freeze_but_training_continues() {
+    let mut rng = Rng::new(6);
+    let m = Mat::from_fn(16, 16, |_, _| rng.normal_f32(0.0, 0.4));
+    let mut arr = NvmArray::program(&m, QW);
+    let mut cfg = lrt_nvm::nvm::FaultCfg::NONE;
+    cfg.wearout = true;
+    cfg.wearout_spread = 0.0;
+    cfg.endurance = 3.0; // freeze after 3 counted writes
+    arr.install_fault(&cfg, 7);
+    let mut frozen: Vec<(usize, f32)> = Vec::new();
+    for round in 0..8u64 {
+        let target = Mat::from_fn(16, 16, |r, c| {
+            m.at(r, c) + 0.05 * (round as f32 + 1.0)
+        });
+        arr.commit(&target);
+        // previously frozen cells must not have moved
+        for &(i, v) in &frozen {
+            assert_eq!(arr.raw()[i], v, "worn cell {i} moved");
+        }
+        frozen = arr
+            .fault()
+            .unwrap()
+            .acquired()
+            .iter()
+            .map(|&(i, v)| (i as usize, v))
+            .collect();
+    }
+    let f = arr.fault().unwrap().counters;
+    assert!(f.wearouts > 0, "endurance=3 never wore a cell out");
+    // writes kept landing on surviving cells after the first wear-outs
+    assert!(arr.total_writes > 3 * f.wearouts);
+}
+
+#[test]
+fn serve_snapshot_corruption_degrades_without_panicking() {
+    use lrt_nvm::nn::model::{AuxState, Params};
+    use lrt_nvm::serve::SnapshotStore;
+    let params = Params::init(&mut Rng::new(1), 4);
+    let store = SnapshotStore::new(params.clone(), AuxState::new());
+    let mut p2 = params.clone();
+    p2.w[0].data[0] += 0.5;
+    store.publish(100, &p2, &AuxState::new());
+    assert!(store.corrupt_epoch(1));
+    let snap = store.pin_at(1_000);
+    assert_eq!(snap.epoch, 0, "must fall back to the last good epoch");
+    assert_eq!(store.checksum_fallbacks(), 1);
+    // total corruption still serves (oldest retained), never panics
+    assert!(store.corrupt_epoch(0));
+    let worst = store.pin_at(1_000);
+    assert_eq!(worst.epoch, 0);
+    assert_eq!(store.checksum_fallbacks(), 2);
+}
+
+#[test]
+fn fault_sweep_is_registered_and_kill_resume_is_byte_identical() {
+    let sc = exp::find("fault-sweep").expect("fault-sweep not registered");
+    let mut args = Args::default();
+    args.command = "run".into();
+    args.positional.push("fault-sweep".into());
+    // tiny grid: 2 defect x 1 write-fail x 2 schemes = 4 cells
+    for (k, v) in [
+        ("samples", "20"),
+        ("offline", "30"),
+        ("defects", "0,0.02"),
+        ("write-fails", "0.1"),
+        ("schemes", "lrt,sgd"),
+    ] {
+        args.options.insert(k.into(), v.into());
+    }
+    let dir = std::env::temp_dir();
+    let a = dir.join(format!("lrt-fault-a-{}.jsonl", std::process::id()));
+    let b = dir.join(format!("lrt-fault-b-{}.jsonl", std::process::id()));
+    let full = exp::run_sweep(sc, &args, &exp::SweepOptions::to_file(a.clone()))
+        .unwrap();
+    assert!(full.complete);
+    assert_eq!(full.cells_total, 4);
+    // the faulty cells report realized defect rates and retry totals
+    let faulty: Vec<_> = full
+        .rows
+        .iter()
+        .filter(|r| r.text("defect_p") == Some("0.02"))
+        .collect();
+    assert_eq!(faulty.len(), 2);
+    for row in &faulty {
+        assert_ne!(row.text("defect_rate"), Some("0.000000"));
+        assert_ne!(row.text("stuck_cells"), Some("0"));
+        assert!(row.text("retry_pulses").is_some());
+        assert!(row.text("wearouts").is_some());
+        assert!(row.text("acc_ema").is_some());
+    }
+    // killed after one cell, then resumed: bytes match the full run
+    let mut part = exp::SweepOptions::to_file(b.clone());
+    part.limit = Some(1);
+    assert!(!exp::run_sweep(sc, &args, &part).unwrap().complete);
+    let mut resume = exp::SweepOptions::to_file(b.clone());
+    resume.resume = true;
+    assert!(exp::run_sweep(sc, &args, &resume).unwrap().complete);
+    let fa = std::fs::read_to_string(&a).unwrap();
+    let fb = std::fs::read_to_string(&b).unwrap();
+    assert_eq!(fa, fb, "resumed fault-sweep differs from uninterrupted");
+    let _ = std::fs::remove_file(&a);
+    let _ = std::fs::remove_file(&b);
+}
+
+#[test]
+fn fault_none_is_byte_identical_to_a_fault_free_config() {
+    let mut base = RunConfig::default();
+    base.samples = 25;
+    base.offline_samples = 40;
+    base.scheme = Scheme::Lrt { variant: Variant::Biased };
+    base.log_every = 10;
+    // "never heard of faults" vs "explicitly zeroed fault knobs"
+    let mut zeroed = base.clone();
+    zeroed.fault.defect_p = 0.0;
+    zeroed.fault.write_fail_p = 0.0;
+    zeroed.fault.seed = 1234; // seed alone must not enable anything
+    let (p1, a1) = pretrain_cached(&base);
+    let (p2, a2) = pretrain_cached(&zeroed);
+    let r1 = Trainer::new(base, p1, a1).run();
+    let r2 = Trainer::new(zeroed, p2, a2).run();
+    assert_eq!(r1.to_row().jsonl(), r2.to_row().jsonl());
+    assert_eq!(r1.series, r2.series);
+    assert!(r1.fault.is_none());
+    assert!(!r1.to_row().jsonl().contains("fault"));
+}
