@@ -809,6 +809,74 @@ fn main() {
         println!();
     }
 
+    println!("== fleet telemetry sketches: constant bytes vs population ==");
+    println!(
+        "(util::sketch: the fleet summary's percentile columns come \
+         from merged per-device sketches — Welford moments, log-binned \
+         quantile histograms, a power-sum write quACK. The whole \
+         fleet-level telemetry state must stay a constant few KB as the \
+         population grows 10^3 -> 10^5; BENCH_JSON hotpath_sketch \
+         lines pin that flatness.)\n"
+    );
+    {
+        use lrt_nvm::coordinator::config::{RunConfig, Scheme};
+        use lrt_nvm::coordinator::sharded::{
+            run_sharded_fleet, ShardedFleetCfg,
+        };
+        let mut t5b = Table::new(vec![
+            "population",
+            "telemetry B",
+            "p99 writes",
+            "p999 acc ema",
+            "records/s",
+        ]);
+        let mut json_lines: Vec<String> = Vec::new();
+        for population in [1_000usize, 10_000, 100_000] {
+            let mut cfg = RunConfig::default();
+            cfg.scheme = Scheme::Inference;
+            cfg.samples = 1;
+            cfg.offline_samples = 0; // scale bench, not accuracy
+            let mut scfg = ShardedFleetCfg::new(cfg, population);
+            scfg.shard = 256;
+            let rep = std::cell::RefCell::new(None);
+            let us = time_median(1, || {
+                *rep.borrow_mut() =
+                    Some(run_sharded_fleet(&scfg).unwrap());
+            });
+            let rep = rep.into_inner().unwrap();
+            let telemetry_bytes = rep.telemetry_bytes();
+            let records_per_s = population as f64 / (us / 1e6);
+            t5b.row(vec![
+                format!("{population}"),
+                format!("{telemetry_bytes}"),
+                format!("{:.0}", rep.telemetry.cell_writes.quantile(99.0)),
+                format!("{:.3}", rep.ema_sketch.quantile(99.9)),
+                format!("{records_per_s:.0}"),
+            ]);
+            json_lines.push(format!(
+                "BENCH_JSON {{\"bench\":\"hotpath_sketch\",\
+                 \"population\":{population},\
+                 \"telemetry_bytes\":{telemetry_bytes},\
+                 \"p99_writes\":{:.0},\"p999_acc_ema\":{:.3},\
+                 \"records_per_s\":{records_per_s:.1},{}}}",
+                rep.telemetry.cell_writes.quantile(99.0),
+                rep.ema_sketch.quantile(99.9),
+                run_meta(
+                    kernels::isa().name(),
+                    kernels::max_threads(),
+                    kernels::tile_j(),
+                    kernels::tile_k()
+                ),
+            ));
+        }
+        t5b.print();
+        println!();
+        for line in &json_lines {
+            println!("{line}");
+        }
+        println!();
+    }
+
     println!("== serving engine: latency under synthetic load ==");
     println!(
         "(lrt-nvm serve hot path: virtual-clock discrete-event loop, \

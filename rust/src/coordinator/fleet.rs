@@ -23,20 +23,29 @@
 use anyhow::{bail, Result};
 
 use super::config::RunConfig;
-use super::metrics::RunReport;
+use super::metrics::{DeviceTelemetry, RunReport};
 use super::trainer::{pretrain, Trainer};
 use crate::lrt::LrtState;
 use crate::tensor::{kernels, Mat};
 use crate::util::hash::fnv1a64_words;
-use crate::util::stats;
+use crate::util::sketch::{Moments, QuantileSketch};
 use crate::util::table::Row;
 
 /// Aggregate statistics of a fleet run.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub devices: Vec<RunReport>,
+    /// Population mean/std of final accuracy EMA, from `ema_moments`
+    /// (Welford — same accumulator as the sharded engine, so the two
+    /// report identical numbers for identical populations).
     pub mean_final_ema: f64,
     pub std_final_ema: f64,
+    /// Mergeable moment accumulator behind the mean/std above.
+    pub ema_moments: Moments,
+    /// Quantile sketch of per-device final accuracy EMAs (tail columns).
+    pub ema_sketch: QuantileSketch,
+    /// Union of all devices' telemetry sketches.
+    pub telemetry: DeviceTelemetry,
     pub worst_cell_writes: u64,
     pub total_energy_pj: f64,
     /// Bytes each device would upload per flush if federating its
@@ -46,6 +55,13 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
+    /// Bytes of fleet-level sketch state — constant in fleet size.
+    pub fn telemetry_bytes(&self) -> usize {
+        self.ema_moments.approx_bytes()
+            + self.ema_sketch.approx_bytes()
+            + self.telemetry.approx_bytes()
+    }
+
     /// Structured emission: one row per device plus a `fleet` summary
     /// row carrying the aggregate and federated-payload numbers.
     pub fn to_rows(&self) -> Vec<Row> {
@@ -66,6 +82,33 @@ impl FleetReport {
                 .int("devices", self.devices.len() as u64)
                 .num("mean_acc_ema", self.mean_final_ema, 3)
                 .num("std_acc_ema", self.std_final_ema, 3)
+                // same percentile column set as the sharded engine's
+                // summary row, off the same merged sketches
+                .num("p01_acc_ema", self.ema_sketch.quantile(1.0), 3)
+                .num("p50_acc_ema", self.ema_sketch.quantile(50.0), 3)
+                .num("p99_acc_ema", self.ema_sketch.quantile(99.0), 3)
+                .num("p999_acc_ema", self.ema_sketch.quantile(99.9), 3)
+                .num(
+                    "p50_writes",
+                    self.telemetry.cell_writes.quantile(50.0),
+                    0,
+                )
+                .num(
+                    "p99_writes",
+                    self.telemetry.cell_writes.quantile(99.0),
+                    0,
+                )
+                .num(
+                    "p999_writes",
+                    self.telemetry.cell_writes.quantile(99.9),
+                    0,
+                )
+                .num("p99_loss", self.telemetry.loss.quantile(99.0), 3)
+                .int("telemetry_bytes", self.telemetry_bytes() as u64)
+                .detail(
+                    "write_sketch",
+                    self.telemetry.write_stream.to_json(),
+                )
                 .int("worst_cell_writes", self.worst_cell_writes)
                 .num("total_energy_uj", self.total_energy_pj / 1e6, 1)
                 .int(
@@ -114,7 +157,17 @@ pub fn run_fleet(cfg: &RunConfig, n_devices: usize) -> FleetReport {
         Trainer::new(dcfg, params.clone(), aux.clone()).run()
     });
 
-    let emas: Vec<f64> = devices.iter().map(|r| r.final_ema).collect();
+    // device-order aggregation through the same mergeable summaries the
+    // sharded engine streams (Welford moments instead of the old
+    // cancellation-prone sum-of-squares path in `stats`)
+    let mut ema = Moments::new();
+    let mut ema_sketch = QuantileSketch::for_unit();
+    let mut telemetry = DeviceTelemetry::default();
+    for rep in &devices {
+        ema.push(rep.final_ema);
+        ema_sketch.push(rep.final_ema);
+        telemetry.merge(&rep.telemetry);
+    }
     let rank = cfg.rank;
     let fed: usize = crate::nn::arch::LAYER_DIMS
         .iter()
@@ -125,8 +178,11 @@ pub fn run_fleet(cfg: &RunConfig, n_devices: usize) -> FleetReport {
         .map(|&(n_o, n_i)| n_o * n_i * 2)
         .sum();
     FleetReport {
-        mean_final_ema: stats::mean(&emas),
-        std_final_ema: stats::std_unbiased(&emas),
+        mean_final_ema: ema.mean(),
+        std_final_ema: ema.std_unbiased(),
+        ema_moments: ema,
+        ema_sketch,
+        telemetry,
         worst_cell_writes: devices
             .iter()
             .map(|r| r.max_cell_writes)

@@ -4,6 +4,7 @@
 use crate::nvm::energy;
 use crate::nvm::fault::FaultSummary;
 use crate::util::json::Json;
+use crate::util::sketch::{PowerSumSketch, QuantileSketch};
 use crate::util::stats::Ema;
 use crate::util::table::Row;
 
@@ -18,6 +19,11 @@ pub struct Metrics {
     /// (step, ema accuracy, max cell writes) series for figures.
     pub series: Vec<(usize, f64, u64)>,
     pub loss_sum: f64,
+    /// Constant-size summary of the per-sample loss stream: unlike
+    /// `loss_sum` it keeps the tail (p99 loss), and unlike `series` it
+    /// never grows with the stream. Bins are preallocated in `new`, so
+    /// the hot-path `record` push stays allocation-free.
+    pub loss_sketch: QuantileSketch,
 }
 
 impl Metrics {
@@ -30,6 +36,7 @@ impl Metrics {
             tail_window,
             series: Vec::new(),
             loss_sum: 0.0,
+            loss_sketch: QuantileSketch::for_loss(),
         }
     }
 
@@ -38,6 +45,7 @@ impl Metrics {
         self.correct += correct as usize;
         self.acc_ema.update(correct as u8 as f64);
         self.loss_sum += loss;
+        self.loss_sketch.push(loss);
         self.tail.push_back(correct);
         if self.tail.len() > self.tail_window {
             self.tail.pop_front();
@@ -71,6 +79,54 @@ impl Metrics {
         self.tail.capacity() * std::mem::size_of::<bool>()
             + self.series.capacity()
                 * std::mem::size_of::<(usize, f64, u64)>()
+            + self.loss_sketch.approx_bytes()
+    }
+}
+
+/// Constant-size per-device telemetry sketches (`util::sketch`), built
+/// by `assemble_report` from the device's final state and merged up the
+/// fleet's shard/wave tree. Total footprint is a few KB per device
+/// regardless of samples seen or cells trained — the fleet engines ship
+/// these instead of per-device rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceTelemetry {
+    /// Distribution of per-cell write counts across all weight arrays
+    /// (the wear histogram behind the fleet's p99 write columns).
+    pub cell_writes: QuantileSketch,
+    /// Power-sum quACK over hashed (seed, layer, cell) write events —
+    /// five words that audit exactly which cells wrote, mergeable and
+    /// subtractable across the fleet.
+    pub write_stream: PowerSumSketch,
+    /// Per-sample loss distribution (carried over from
+    /// `Metrics::loss_sketch`).
+    pub loss: QuantileSketch,
+}
+
+impl Default for DeviceTelemetry {
+    fn default() -> DeviceTelemetry {
+        DeviceTelemetry {
+            cell_writes: QuantileSketch::for_counts(),
+            write_stream: PowerSumSketch::new(),
+            loss: QuantileSketch::for_loss(),
+        }
+    }
+}
+
+impl DeviceTelemetry {
+    /// Fold another device's sketches into this one (exact integer
+    /// merges: order never matters, so shard/wave partitioning cannot
+    /// change the result).
+    pub fn merge(&mut self, other: &DeviceTelemetry) {
+        self.cell_writes.merge(&other.cell_writes);
+        self.write_stream.merge(&other.write_stream);
+        self.loss.merge(&other.loss);
+    }
+
+    /// Resident bytes — constant in stream length and population size.
+    pub fn approx_bytes(&self) -> usize {
+        self.cell_writes.approx_bytes()
+            + self.write_stream.approx_bytes()
+            + self.loss.approx_bytes()
     }
 }
 
@@ -95,6 +151,11 @@ pub struct RunReport {
     /// Fault telemetry — `Some` only when a fault model was installed,
     /// so `FaultCfg::NONE` rows stay byte-identical to pre-fault runs.
     pub fault: Option<FaultSummary>,
+    /// Mergeable sketch telemetry. Deliberately NOT emitted by
+    /// `to_row` — per-run rows stay byte-identical to previous
+    /// releases; the fleet engines merge these and publish percentile
+    /// columns on their summary rows instead.
+    pub telemetry: DeviceTelemetry,
 }
 
 impl RunReport {
@@ -213,6 +274,7 @@ mod tests {
             kappa_skips: 0,
             wall_secs: 1.23,
             fault: None,
+            telemetry: DeviceTelemetry::default(),
         };
         let row = rep.to_row();
         assert_eq!(row.text("scheme"), Some("lrt-biased"));

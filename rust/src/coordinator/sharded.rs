@@ -44,7 +44,7 @@ use anyhow::{bail, Result};
 use super::config::{RunConfig, Scheme};
 use super::device::NativeDevice;
 use super::fleet::{aggregate_factors, device_seed};
-use super::metrics::{Metrics, RunReport};
+use super::metrics::{DeviceTelemetry, Metrics, RunReport};
 use super::scheduler::SchedState;
 use super::trainer::{assemble_report, pretrain_cached};
 use crate::data::online::{OnlineStream, Partition};
@@ -55,6 +55,7 @@ use crate::nvm::{drift, fault, FaultCfg, NvmArray};
 use crate::tensor::kernels;
 use crate::util::hash::fnv1a64_words;
 use crate::util::rng::Rng;
+use crate::util::sketch::{Moments, QuantileSketch};
 use crate::util::table::Row;
 
 /// Domain tag mixed into federated-aggregation RNG seeds.
@@ -193,6 +194,7 @@ impl DeviceRecord {
         if let Some(rep) = &self.report {
             n += rep.series.capacity() * std::mem::size_of::<(usize, f64, u64)>();
             n += rep.scheme.len() + rep.env.len();
+            n += rep.telemetry.approx_bytes();
         }
         n
     }
@@ -463,11 +465,24 @@ pub struct ShardedFleetReport {
     pub shard: usize,
     pub wave: usize,
     pub federated: bool,
-    /// Streaming mean/std of per-device final accuracy EMA (one-pass
-    /// sum/sum-of-squares; `std` uses the unbiased n-1 form and the
-    /// n < 2 zero convention of `stats::std_unbiased`).
+    /// Streaming mean/std of per-device final accuracy EMA, from the
+    /// [`Moments`] accumulator in `ema_moments` (Welford update; the
+    /// old one-pass sum-of-squares form cancelled catastrophically for
+    /// large fleets of near-identical EMAs). `std` uses the unbiased
+    /// n-1 form and the n < 2 zero convention of `stats::std_unbiased`.
     pub mean_final_ema: f64,
     pub std_final_ema: f64,
+    /// The streaming moment accumulator the mean/std above came from
+    /// (mergeable: partial fleet runs combine via `Moments::merge`).
+    pub ema_moments: Moments,
+    /// Quantile sketch of per-device final accuracy EMAs — the p99
+    /// *device*, not the mean device, is the deployment constraint
+    /// under per-device conductance variation.
+    pub ema_sketch: QuantileSketch,
+    /// Union of every device's telemetry sketches (cell-write wear
+    /// histogram, write-event quACK, loss distribution), merged up the
+    /// shard/wave tree at constant size.
+    pub telemetry: DeviceTelemetry,
     pub worst_cell_writes: u64,
     pub total_writes: u64,
     pub total_energy_pj: f64,
@@ -489,6 +504,14 @@ pub struct ShardedFleetReport {
 }
 
 impl ShardedFleetReport {
+    /// Bytes of fleet-level sketch state — constant in population size
+    /// (the `hotpath_sketch` bench pins this across 10^3..10^5 devices).
+    pub fn telemetry_bytes(&self) -> usize {
+        self.ema_moments.approx_bytes()
+            + self.ema_sketch.approx_bytes()
+            + self.telemetry.approx_bytes()
+    }
+
     /// One streaming summary row (plus, when `keep_reports` retained
     /// any, the kept device rows first — mirroring `FleetReport`).
     pub fn to_rows(&self) -> Vec<Row> {
@@ -511,6 +534,23 @@ impl ShardedFleetReport {
             .boolean("federated", self.federated)
             .num("mean_acc_ema", self.mean_final_ema, 3)
             .num("std_acc_ema", self.std_final_ema, 3)
+            // population percentiles off the merged sketches: the
+            // accuracy tail (p01 = worst-percentile device) and the
+            // wear tail (p999 writes) that mean/std columns hide
+            .num("p01_acc_ema", self.ema_sketch.quantile(1.0), 3)
+            .num("p50_acc_ema", self.ema_sketch.quantile(50.0), 3)
+            .num("p99_acc_ema", self.ema_sketch.quantile(99.0), 3)
+            .num("p999_acc_ema", self.ema_sketch.quantile(99.9), 3)
+            .num("p50_writes", self.telemetry.cell_writes.quantile(50.0), 0)
+            .num("p99_writes", self.telemetry.cell_writes.quantile(99.0), 0)
+            .num(
+                "p999_writes",
+                self.telemetry.cell_writes.quantile(99.9),
+                0,
+            )
+            .num("p99_loss", self.telemetry.loss.quantile(99.0), 3)
+            .int("telemetry_bytes", self.telemetry_bytes() as u64)
+            .detail("write_sketch", self.telemetry.write_stream.to_json())
             .int("worst_cell_writes", self.worst_cell_writes)
             .int("total_writes", self.total_writes)
             .num("total_energy_uj", self.total_energy_pj / 1e6, 1)
@@ -647,10 +687,15 @@ pub fn run_sharded_fleet(scfg: &ShardedFleetCfg) -> Result<ShardedFleetReport> {
     let pool: Mutex<Vec<Carcass>> = Mutex::new(Vec::new());
 
     // streaming aggregates (one pass; no per-device state survives the
-    // shard that produced it beyond these scalars)
-    let mut n_done = 0u64;
-    let mut ema_sum = 0.0f64;
-    let mut ema_sumsq = 0.0f64;
+    // shard that produced it beyond these constant-size summaries).
+    // Moments replaces the old sum/sum-of-squares pair: that form
+    // cancels catastrophically once n·mean² dwarfs the spread (10^5
+    // near-identical EMAs put both accumulators ~10^5 where f64 spacing
+    // exceeds the true sum of squares), and its .max(0.0) clamp
+    // silently reported std = 0 for exactly those fleets.
+    let mut ema = Moments::new();
+    let mut ema_sketch = QuantileSketch::for_unit();
+    let mut telemetry = DeviceTelemetry::default();
     let mut worst_cell_writes = 0u64;
     let mut total_writes = 0u64;
     let mut total_energy_pj = 0.0f64;
@@ -699,9 +744,13 @@ pub fn run_sharded_fleet(scfg: &ShardedFleetCfg) -> Result<ShardedFleetReport> {
             record_bytes_sum += bytes;
             max_record_bytes = max_record_bytes.max(bytes);
             let rep = rec.report.expect("completed record has a report");
-            n_done += 1;
-            ema_sum += rep.final_ema;
-            ema_sumsq += rep.final_ema * rep.final_ema;
+            // device order, independent of shard/wave partitioning, so
+            // the f64 push sequence (and thus the Moments rounding) is
+            // identical across equivalent runs; the sketch merges are
+            // exact integer adds and order-free regardless
+            ema.push(rep.final_ema);
+            ema_sketch.push(rep.final_ema);
+            telemetry.merge(&rep.telemetry);
             worst_cell_writes = worst_cell_writes.max(rep.max_cell_writes);
             total_writes += rep.total_writes;
             total_energy_pj += rep.write_energy_pj;
@@ -712,14 +761,7 @@ pub fn run_sharded_fleet(scfg: &ShardedFleetCfg) -> Result<ShardedFleetReport> {
         shard_start = shard_end;
     }
 
-    let mean = if n_done > 0 { ema_sum / n_done as f64 } else { 0.0 };
-    let std = if n_done >= 2 {
-        ((ema_sumsq - n_done as f64 * mean * mean).max(0.0)
-            / (n_done - 1) as f64)
-            .sqrt()
-    } else {
-        0.0
-    };
+    let n_done = ema.count();
     let rank = cfg.rank;
     let fed: usize = LAYER_DIMS
         .iter()
@@ -738,8 +780,11 @@ pub fn run_sharded_fleet(scfg: &ShardedFleetCfg) -> Result<ShardedFleetReport> {
         shard: scfg.shard,
         wave,
         federated: scfg.federate,
-        mean_final_ema: mean,
-        std_final_ema: std,
+        mean_final_ema: ema.mean(),
+        std_final_ema: ema.std_unbiased(),
+        ema_moments: ema,
+        ema_sketch,
+        telemetry,
         worst_cell_writes,
         total_writes,
         total_energy_pj,
@@ -900,6 +945,45 @@ mod tests {
                 "retry accounting leak"
             );
         }
+    }
+
+    #[test]
+    fn summary_row_carries_percentile_columns() {
+        let rep =
+            run_sharded_fleet(&tiny(Scheme::Lrt { variant: Variant::Biased }))
+                .unwrap();
+        let rows = rep.to_rows();
+        let summary = rows.last().unwrap();
+        for col in [
+            "p01_acc_ema",
+            "p50_acc_ema",
+            "p99_acc_ema",
+            "p999_acc_ema",
+            "p50_writes",
+            "p99_writes",
+            "p999_writes",
+            "p99_loss",
+            "telemetry_bytes",
+        ] {
+            assert!(summary.value(col).is_some(), "missing column {col}");
+        }
+        assert!(summary.jsonl().contains("\"write_sketch\""));
+        // the sketches really aggregated the population
+        assert_eq!(rep.ema_moments.count(), 3);
+        assert_eq!(rep.ema_sketch.count(), 3);
+        assert!(rep.telemetry.cell_writes.count() > 0);
+        assert_eq!(
+            rep.telemetry.loss.count() as usize,
+            3 * rep.wave,
+            "one loss per device-sample"
+        );
+        // Welford mean/std match the definitionally-exact reference on
+        // the kept EMAs (n=3 here, so cancellation is not in play —
+        // the 10^5-value cancellation case is pinned in util::sketch)
+        assert!(rep.std_final_ema >= 0.0);
+        assert!(
+            rep.ema_sketch.quantile(99.0) >= rep.ema_sketch.quantile(1.0)
+        );
     }
 
     #[test]

@@ -7,11 +7,16 @@ use std::sync::{Mutex, OnceLock};
 
 use super::config::{RunConfig, Scheme};
 use super::device::NativeDevice;
-use super::metrics::{Metrics, RunReport};
+use super::metrics::{DeviceTelemetry, Metrics, RunReport};
 use crate::data::online::{OnlineStream, Partition};
 use crate::nn::model::{self, Params};
 use crate::nn::workspace::{self, Workspace};
+use crate::util::hash::fnv1a64_words;
 use crate::util::rng::Rng;
+
+/// Domain tag for hashed write-event identifiers fed to the power-sum
+/// sketch (keeps them disjoint from the other fnv-derived id spaces).
+const WRITE_EVENT_TAG: u64 = 0x57E1_7E5u64;
 
 /// Offline pretraining: quantized SGD with max-norm on the offline
 /// partition (the paper's cloud-side phase before deployment).
@@ -198,6 +203,36 @@ pub(crate) fn assemble_report(
 ) -> RunReport {
     let (commits, deferrals) = device.flush_stats();
     let total_writes = device.total_writes();
+    // Constant-size telemetry sketches off the final device state. One
+    // O(cells) pass — assemble_report already scans every cell for the
+    // write maximum and totals, so this is the same order of work. The
+    // (usually dominant) untouched cells fold into one push_n: the
+    // histogram is order-free integer counts, so this is bit-identical
+    // to pushing each zero individually.
+    let mut telemetry = DeviceTelemetry {
+        loss: metrics.loss_sketch.clone(),
+        ..DeviceTelemetry::default()
+    };
+    let mut zero_cells = 0u64;
+    for (l, arr) in device.arrays.iter().enumerate() {
+        for (i, &w) in arr.cell_writes().iter().enumerate() {
+            if w == 0 {
+                zero_cells += 1;
+            } else {
+                telemetry.cell_writes.push(w as f64);
+                telemetry.write_stream.insert_n(
+                    fnv1a64_words(&[
+                        WRITE_EVENT_TAG,
+                        cfg.seed,
+                        l as u64,
+                        i as u64,
+                    ]),
+                    w,
+                );
+            }
+        }
+    }
+    telemetry.cell_writes.push_n(0.0, zero_cells);
     RunReport {
         scheme: cfg.scheme.name().to_string(),
         env: cfg.env.name().to_string(),
@@ -218,6 +253,7 @@ pub(crate) fn assemble_report(
         kappa_skips: device.kappa_skips,
         wall_secs,
         fault: device.fault_summary(),
+        telemetry,
     }
 }
 

@@ -15,7 +15,12 @@
 //! (`--tol ema=0.01,total_writes=50`) override the band for named
 //! fields — the intended use is diffing an fma-tier sweep against the
 //! scalar anchor sweep, where the README's documented bands apply to a
-//! handful of metrics. Every mismatch is one counted difference:
+//! handful of metrics. The fleet summary percentile columns
+//! (`p99_writes`, `p999_acc_ema`, `p99_loss`, ...) come from integer
+//! count histograms merged with exact arithmetic, so they need no
+//! tolerance band within one kernel tier: leave them at the bit-exact
+//! default, and only name them in `--tol` when diffing across tiers
+//! whose per-step numerics legitimately drift. Every mismatch is one counted difference:
 //! missing/extra cells, row-count changes, missing fields, numeric
 //! values outside the band, and unequal non-numeric values. The CLI
 //! exits non-zero when the count is non-zero, so the command gates CI

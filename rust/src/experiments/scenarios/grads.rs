@@ -74,11 +74,11 @@ impl Scenario for Fig9 {
             }
         }
         let mx: Vec<f64> = maxima.iter().map(|&v| v as f64).collect();
+        let pcts = stats::percentiles(&mx, &[100.0, 50.0]);
         rows.push(
             Row::new().str("point", "summary").num(
                 "max_over_median",
-                stats::percentile(&mx, 100.0)
-                    / stats::percentile(&mx, 50.0).max(1e-9),
+                pcts[0] / pcts[1].max(1e-9),
                 1,
             ),
         );

@@ -57,7 +57,7 @@ use crate::data::online::Partition;
 use crate::data::OnlineStream;
 use crate::nn::{model, workspace};
 use crate::util::json::Json;
-use crate::util::stats::{mean, percentile};
+use crate::util::stats::{mean, percentiles};
 use crate::util::table::Row;
 
 /// Full configuration of one serving run.
@@ -410,6 +410,13 @@ pub fn run(cfg: &ServeCfg) -> ServeReport {
 
     debug_assert_eq!(completed + q.dropped, n as u64);
     let makespan_us = free_at;
+    // One clone + sort for all three ranks (this used to be three
+    // `percentile` calls, each sorting the full latency vector). Values
+    // are bit-identical to the per-call form. A constant-memory
+    // alternative for unbounded traces is `util::sketch`'s
+    // QuantileSketch (±12.5% on the virtual-µs scale); the exact sorted
+    // path is kept here because the trace length is already bounded.
+    let pcts = percentiles(&latencies, &[50.0, 99.0, 99.9]);
     ServeReport {
         trace: cfg.trace.kind.name(),
         seed: cfg.trace.seed,
@@ -418,9 +425,9 @@ pub fn run(cfg: &ServeCfg) -> ServeReport {
         dropped: q.dropped,
         batches: hist.dispatches(),
         mean_batch: hist.mean_batch(),
-        p50_us: percentile(&latencies, 50.0),
-        p99_us: percentile(&latencies, 99.0),
-        p999_us: percentile(&latencies, 99.9),
+        p50_us: pcts[0],
+        p99_us: pcts[1],
+        p999_us: pcts[2],
         mean_us: mean(&latencies),
         max_us: latencies.iter().cloned().fold(0.0, f64::max),
         peak_depth: q.peak_depth,

@@ -9,5 +9,6 @@ pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sketch;
 pub mod stats;
 pub mod table;

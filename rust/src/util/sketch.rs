@@ -1,0 +1,823 @@
+//! Constant-size, deterministic, mergeable stream summaries for
+//! fleet-scale telemetry (ROADMAP direction 2).
+//!
+//! At 10^5–10^6 simulated devices, shipping per-device rows is the
+//! telemetry bottleneck, and naive streaming aggregates are numerical
+//! traps: the one-pass sum-of-squares variance catastrophically cancels
+//! for near-identical inputs (see `Moments`). Every summary here is
+//!
+//! * **constant-size** — `approx_bytes()` is independent of how many
+//!   values were pushed (pinned by a property test);
+//! * **deterministic** — pure IEEE-754 / integer arithmetic, no libm
+//!   calls whose rounding could differ across platforms, so replayed
+//!   runs are byte-identical;
+//! * **mergeable** — `merge(sketch(A), sketch(B))` summarizes `A ∪ B`,
+//!   so per-device summaries fold up the shard/wave tree. The integer
+//!   sketches ([`QuantileSketch`], [`PowerSumSketch`]) merge *exactly*
+//!   (bit-identical to sketching the union, associative, commutative);
+//!   [`Moments`] merges up to f64 rounding (Chan's formula).
+
+use crate::util::json::Json;
+
+/// Streaming count/mean/variance accumulator: Welford's update with
+/// Chan et al.'s parallel merge, computed relative to a per-sketch
+/// origin (the first pushed value).
+///
+/// This replaces the one-pass sum/sum-of-squares formula
+/// `(Σx² − n·mean²) / (n−1)`, which cancels catastrophically when the
+/// spread is small against the magnitude: with 10^5 values near 0.9,
+/// both accumulators sit near 10^5-scale where f64 spacing is ~10^-11,
+/// so their difference is a multiple of that quantum — orders of
+/// magnitude above the true sum of squares — and the customary
+/// `.max(0.0)` clamp silently turns the resulting negative variance
+/// into a fake 0.0. Welford's recurrence never subtracts two large
+/// accumulators, and shifting by the origin keeps the running mean at
+/// the *spread's* scale, so its per-step rounding is harmless too.
+///
+/// `m2` is a sum of `delta * delta2` terms whose factors always share a
+/// sign (the new mean lies between the old mean and the sample), so the
+/// variance is non-negative by construction — no masking clamp needed.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Moments {
+    n: u64,
+    /// First pushed value; all running state is relative to it.
+    origin: f64,
+    /// Running mean minus `origin`.
+    mean_off: f64,
+    /// Sum of squared deviations from the running mean.
+    m2: f64,
+}
+
+impl Moments {
+    pub fn new() -> Moments {
+        Moments::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.origin = x;
+        }
+        self.n += 1;
+        let d = x - self.origin;
+        let delta = d - self.mean_off;
+        self.mean_off += delta / self.n as f64;
+        let delta2 = d - self.mean_off;
+        self.m2 += delta * delta2;
+    }
+
+    /// Chan et al. pairwise combine: after this, `self` summarizes the
+    /// union of both streams. Exact in `n`; mean/variance agree with
+    /// sequentially pushing the union up to f64 rounding.
+    pub fn merge(&mut self, other: &Moments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        // re-express other's running mean relative to our origin (a
+        // pure translation: m2 is origin-invariant)
+        let other_off = (other.origin - self.origin) + other.mean_off;
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let delta = other_off - self.mean_off;
+        self.mean_off += delta * (n2 / n);
+        self.m2 += other.m2 + delta * delta * (n1 * n2 / n);
+        self.n += other.n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean (0.0 for an empty sketch, matching `stats::mean`).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.origin + self.mean_off
+        }
+    }
+
+    /// Unbiased (n−1) variance; 0.0 for n < 2 like `stats::std_unbiased`.
+    pub fn var_unbiased(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_unbiased(&self) -> f64 {
+        self.var_unbiased().sqrt()
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+    }
+}
+
+/// Mergeable quantile sketch: a fixed-bin log-spaced histogram over the
+/// declared range `[2^lo_exp, 2^hi_exp)`.
+///
+/// Layout is log-linear: each power-of-two octave splits into
+/// `2^sub_bits` linearly spaced sub-bins, so the bin index is pure bit
+/// manipulation of the f64 (exponent + top mantissa bits) — no `ln()`
+/// whose libm rounding could differ across platforms. Two extra bins
+/// catch underflow (x < 2^lo_exp — including zeros, negatives, and
+/// NaN) and overflow (x ≥ 2^hi_exp, including +∞); the exact min/max
+/// are tracked besides, so those ranks return exact endpoints.
+///
+/// **Error bound** (documented and property-tested): for pushed values
+/// inside the declared range, `quantile(p)` never under-estimates the
+/// exact nearest-rank quantile of the pushed multiset and
+/// over-estimates it by at most a factor `1 + 2^-sub_bits` (one bin's
+/// edge ratio). Rank handling itself is exact — the returned bin is
+/// the first whose cumulative count covers `ceil(p/100 · n)`; only the
+/// value within the bin is quantized. `quantile(100)` returns the
+/// exact maximum. Out-of-range values clamp into the underflow /
+/// overflow bins and report as the tracked min / max.
+///
+/// Merging requires identical `(lo_exp, hi_exp, sub_bits)` configs and
+/// is exact: counts add as integers, so `sketch(A ∪ B)` is
+/// bit-identical to `merge(sketch(A), sketch(B))` and merge order never
+/// matters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    lo_exp: i32,
+    hi_exp: i32,
+    sub_bits: u32,
+    /// `counts[0]` underflow, `counts[last]` overflow, log-linear bins
+    /// between — `(hi_exp - lo_exp) << sub_bits` of them.
+    counts: Vec<u64>,
+    n: u64,
+    min: f64,
+    max: f64,
+}
+
+/// 2^e as an f64, via bit assembly (e must be a normal exponent).
+fn exp2i(e: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+impl QuantileSketch {
+    /// Range `[2^lo_exp, 2^hi_exp)` with `2^sub_bits` sub-bins per
+    /// octave (relative error bound `2^-sub_bits`).
+    pub fn new(lo_exp: i32, hi_exp: i32, sub_bits: u32) -> QuantileSketch {
+        assert!(lo_exp < hi_exp, "quantile sketch: empty range");
+        assert!(
+            (-1022..=1023).contains(&lo_exp)
+                && (-1022..=1023).contains(&hi_exp),
+            "quantile sketch: exponents must be normal"
+        );
+        assert!(sub_bits <= 16, "quantile sketch: sub_bits too large");
+        let bins = ((hi_exp - lo_exp) as usize) << sub_bits;
+        QuantileSketch {
+            lo_exp,
+            hi_exp,
+            sub_bits,
+            counts: vec![0; bins + 2],
+            n: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Non-negative count-like streams (per-cell writes, virtual-µs
+    /// latencies): range [1, 2^32), relative error ≤ 2^-3 = 12.5%.
+    pub fn for_counts() -> QuantileSketch {
+        QuantileSketch::new(0, 32, 3)
+    }
+
+    /// Probability-like streams (accuracy EMAs): range [2^-7, 1) with
+    /// 1.0 landing exactly on the tracked max; rel. error ≤ 3.125%.
+    pub fn for_unit() -> QuantileSketch {
+        QuantileSketch::new(-7, 0, 5)
+    }
+
+    /// Per-sample loss streams (cross-entropy scale): range
+    /// [2^-10, 2^6), relative error ≤ 2^-4 = 6.25%.
+    pub fn for_loss() -> QuantileSketch {
+        QuantileSketch::new(-10, 6, 4)
+    }
+
+    fn bin_index(&self, x: f64) -> usize {
+        // NaN, negatives, zeros, and sub-range values all land in the
+        // underflow bin (the comparison is false for NaN)
+        if !(x >= exp2i(self.lo_exp)) {
+            return 0;
+        }
+        if x >= exp2i(self.hi_exp) {
+            return self.counts.len() - 1;
+        }
+        let bits = x.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        let sub =
+            ((bits >> (52 - self.sub_bits)) & ((1u64 << self.sub_bits) - 1))
+                as usize;
+        1 + ((((e - self.lo_exp) as usize) << self.sub_bits) + sub)
+    }
+
+    /// Upper edge of in-range bin `b` (1-based over the log-linear
+    /// bins). Exact dyadic arithmetic: deterministic across platforms.
+    fn upper_edge(&self, b: usize) -> f64 {
+        let li = b - 1;
+        let s = (1usize << self.sub_bits) as f64;
+        let e = self.lo_exp + (li >> self.sub_bits) as i32;
+        let sub = (li & ((1 << self.sub_bits) - 1)) as f64;
+        exp2i(e) * (1.0 + (sub + 1.0) / s)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.push_n(x, 1);
+    }
+
+    /// Push `m` copies of `x` in O(1) — bit-identical to `m` pushes
+    /// (counts are order-free integer adds; min/max are idempotent).
+    pub fn push_n(&mut self, x: f64, m: u64) {
+        if m == 0 {
+            return;
+        }
+        let b = self.bin_index(x);
+        self.counts[b] += m;
+        self.n += m;
+        // f64::min/max ignore NaN, so a poisoned sample can inflate the
+        // underflow count but never corrupts the tracked endpoints
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Merge another sketch over the same declared range (panics on a
+    /// config mismatch — merging incompatible bins would be silent
+    /// garbage).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert!(
+            (self.lo_exp, self.hi_exp, self.sub_bits)
+                == (other.lo_exp, other.hi_exp, other.sub_bits),
+            "quantile sketch merge: mismatched configs \
+             ({},{},{}) vs ({},{},{})",
+            self.lo_exp,
+            self.hi_exp,
+            self.sub_bits,
+            other.lo_exp,
+            other.hi_exp,
+            other.sub_bits,
+        );
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// p-th quantile estimate, p in [0, 100] (nearest-rank; 0.0 for an
+    /// empty sketch). See the type docs for the error bound.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.n as f64).ceil().max(1.0);
+        let rank = if rank >= self.n as f64 { self.n } else { rank as u64 };
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                if b == 0 {
+                    return self.min;
+                }
+                if b == self.counts.len() - 1 {
+                    return self.max;
+                }
+                // clamping to the exact max only tightens the bound
+                return self.upper_edge(b).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Exact minimum pushed (`+∞` while empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact maximum pushed (`-∞` while empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Guaranteed relative over-estimation bound for in-range values:
+    /// `2^-sub_bits`.
+    pub fn rel_error_bound(&self) -> f64 {
+        exp2i(-(self.sub_bits as i32))
+    }
+
+    /// Resident bytes — a function of the declared range only, never of
+    /// the stream length.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.counts.capacity() * std::mem::size_of::<u64>()
+    }
+}
+
+/// Modulus for [`PowerSumSketch`]: the Mersenne prime 2^61 − 1.
+pub const POWER_SUM_MODULUS: u64 = (1u64 << 61) - 1;
+
+/// Number of power sums a [`PowerSumSketch`] keeps.
+pub const POWER_SUMS: usize = 4;
+
+fn addmod(a: u64, b: u64) -> u64 {
+    // both < 2^61, so the sum fits u64 with room to spare
+    (a + b) % POWER_SUM_MODULUS
+}
+
+fn mulmod(a: u64, b: u64) -> u64 {
+    ((a as u128 * b as u128) % POWER_SUM_MODULUS as u128) as u64
+}
+
+/// Power-sum stream sketch in the quACK style: the first
+/// [`POWER_SUMS`] power sums of the inserted identifiers over the
+/// prime modulus [`POWER_SUM_MODULUS`], plus an exact element count —
+/// five words total, independent of stream length.
+///
+/// `sums[i] = Σ_x x^(i+1) mod P` over the inserted multiset. Sketches
+/// merge by element-wise modular addition (exactly associative and
+/// commutative: `sketch(A ∪ B) == merge(sketch(A), sketch(B))`
+/// bit-for-bit), and a sketch of a sub-stream can be subtracted back
+/// out ([`PowerSumSketch::sub`]) — the difference is the sketch of the
+/// set difference, which is how quACKs decode missing elements. With
+/// one element outstanding, [`PowerSumSketch::decode_one`] recovers it
+/// from the first power sum alone.
+///
+/// Identifiers should be nonzero mod P (hashed ids in practice —
+/// power sums of 0 contribute nothing beyond the count).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PowerSumSketch {
+    sums: [u64; POWER_SUMS],
+    count: u64,
+}
+
+impl PowerSumSketch {
+    pub fn new() -> PowerSumSketch {
+        PowerSumSketch::default()
+    }
+
+    pub fn insert(&mut self, x: u64) {
+        self.insert_n(x, 1);
+    }
+
+    /// Insert `x` with multiplicity `m` in O(k) — identical to `m`
+    /// separate inserts (the power sums scale linearly in multiplicity).
+    pub fn insert_n(&mut self, x: u64, m: u64) {
+        if m == 0 {
+            return;
+        }
+        let v = x % POWER_SUM_MODULUS;
+        let mm = m % POWER_SUM_MODULUS;
+        let mut pw = v;
+        for s in self.sums.iter_mut() {
+            *s = addmod(*s, mulmod(mm, pw));
+            pw = mulmod(pw, v);
+        }
+        self.count += m;
+    }
+
+    /// Element-wise modular add: `self` becomes the sketch of the
+    /// multiset union.
+    pub fn merge(&mut self, other: &PowerSumSketch) {
+        for (s, o) in self.sums.iter_mut().zip(other.sums.iter()) {
+            *s = addmod(*s, *o);
+        }
+        self.count += other.count;
+    }
+
+    /// Subtract a sketch of a sub-stream: `self` becomes the sketch of
+    /// the multiset difference (caller guarantees `other` really is a
+    /// sub-stream; counts saturate at zero otherwise).
+    pub fn sub(&mut self, other: &PowerSumSketch) {
+        for (s, o) in self.sums.iter_mut().zip(other.sums.iter()) {
+            *s = addmod(*s, POWER_SUM_MODULUS - *o % POWER_SUM_MODULUS);
+        }
+        self.count = self.count.saturating_sub(other.count);
+    }
+
+    /// With exactly one element outstanding, the first power sum *is*
+    /// that element (mod P).
+    pub fn decode_one(&self) -> Option<u64> {
+        if self.count == 1 {
+            Some(self.sums[0])
+        } else {
+            None
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0 && self.sums.iter().all(|&s| s == 0)
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+    }
+
+    /// JSONL payload: `[count, s1.., ]` with the power sums as hex
+    /// strings (they exceed f64's 2^53 exact-integer range, so a
+    /// `Json::Num` would corrupt them).
+    pub fn to_json(&self) -> Json {
+        let mut arr = vec![Json::Num(self.count as f64)];
+        arr.extend(
+            self.sums.iter().map(|s| Json::Str(format!("{s:016x}"))),
+        );
+        Json::Arr(arr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    // ---- Moments ----
+
+    /// The headline bugfix regression: 10^5+ near-identical EMAs
+    /// (0.9 + 1e-9·noise) destroy the old one-pass sum-of-squares
+    /// formula, while Welford matches the two-pass reference.
+    ///
+    /// The old formula's failure here is *guaranteed*, not a flake:
+    /// Σx² and n·mean² both land near 10^5, where consecutive f64s are
+    /// ~1.45e-11 apart, so their difference is an exact multiple of
+    /// that quantum while the true sum of squares is ~1e-14 — the
+    /// computed difference is either 0 (clamped) or ≥ 1000× too large.
+    #[test]
+    fn welford_survives_catastrophic_cancellation() {
+        let mut rng = Rng::new(42);
+        let n = 120_000usize;
+        let mut xs = Vec::with_capacity(n);
+        for _ in 0..n {
+            xs.push(0.9 + 1e-9 * rng.f64());
+        }
+        let mut m = Moments::new();
+        let (mut sum, mut sumsq) = (0.0f64, 0.0f64);
+        for &x in &xs {
+            m.push(x);
+            sum += x;
+            sumsq += x * x;
+        }
+        // the exact formula run_sharded_fleet used before this fix
+        let nf = n as f64;
+        let mean = sum / nf;
+        let old_std =
+            ((sumsq - nf * mean * mean).max(0.0) / (nf - 1.0)).sqrt();
+        let exact = stats::std_unbiased(&xs);
+        assert!(
+            exact > 2e-10 && exact < 4e-10,
+            "data sanity: exact std {exact}"
+        );
+        let old_rel = (old_std - exact).abs() / exact;
+        assert!(
+            old_std == 0.0 || old_rel > 5.0,
+            "old formula should be catastrophically wrong: \
+             old={old_std:e} exact={exact:e} rel={old_rel:e}"
+        );
+        // shifted Welford tracks the two-pass reference to ~1e-12
+        // relative on this data (asserted with headroom)
+        let new_rel = (m.std_unbiased() - exact).abs() / exact;
+        assert!(
+            new_rel < 1e-9,
+            "welford diverged: new={:e} exact={exact:e} rel={new_rel:e}",
+            m.std_unbiased()
+        );
+        assert!((m.mean() - mean).abs() / mean < 1e-12);
+        assert_eq!(m.count(), n as u64);
+    }
+
+    #[test]
+    fn moments_empty_and_single_conventions() {
+        let m = Moments::new();
+        assert_eq!(m.count(), 0);
+        assert_eq!(m.mean(), 0.0);
+        assert_eq!(m.std_unbiased(), 0.0);
+        let mut m = Moments::new();
+        m.push(0.7);
+        assert_eq!(m.mean(), 0.7);
+        assert_eq!(m.std_unbiased(), 0.0, "n < 2 convention");
+        // merging an empty sketch is the identity, both ways
+        let mut a = m;
+        a.merge(&Moments::new());
+        assert_eq!(a, m);
+        let mut b = Moments::new();
+        b.merge(&m);
+        assert_eq!(b, m);
+    }
+
+    #[test]
+    fn moments_matches_two_pass_reference() {
+        check("moments vs two-pass", 32, |rng| {
+            let n = 2 + rng.below(400);
+            let scale = exp2i(rng.below(20) as i32 - 10);
+            let xs: Vec<f64> =
+                (0..n).map(|_| scale * (rng.f64() - 0.5)).collect();
+            let mut m = Moments::new();
+            for &x in &xs {
+                m.push(x);
+            }
+            let (em, es) = (stats::mean(&xs), stats::std_unbiased(&xs));
+            prop_assert!(
+                (m.mean() - em).abs() <= 1e-12 * em.abs().max(scale),
+                "mean {} vs {em}",
+                m.mean()
+            );
+            prop_assert!(
+                (m.std_unbiased() - es).abs() <= 1e-10 * es.abs().max(1e-300),
+                "std {} vs {es}",
+                m.std_unbiased()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn moments_merge_is_associative_commutative_and_union_consistent() {
+        check("moments merge laws", 32, |rng| {
+            let mk = |rng: &mut Rng, n: usize| {
+                let mut m = Moments::new();
+                let xs: Vec<f64> =
+                    (0..n).map(|_| rng.f64() * 3.0 - 1.0).collect();
+                for &x in &xs {
+                    m.push(x);
+                }
+                (m, xs)
+            };
+            let (a, xa) = mk(rng, 1 + rng.below(50));
+            let (b, xb) = mk(rng, 1 + rng.below(50));
+            let (c, _) = mk(rng, 1 + rng.below(50));
+            let close = |p: &Moments, q: &Moments| -> bool {
+                p.count() == q.count()
+                    && (p.mean() - q.mean()).abs() < 1e-12
+                    && (p.var_unbiased() - q.var_unbiased()).abs() < 1e-12
+            };
+            // commutativity (within rounding)
+            let mut ab = a;
+            ab.merge(&b);
+            let mut ba = b;
+            ba.merge(&a);
+            prop_assert!(close(&ab, &ba), "merge not commutative");
+            // associativity (within rounding)
+            let mut ab_c = ab;
+            ab_c.merge(&c);
+            let mut bc = b;
+            bc.merge(&c);
+            let mut a_bc = a;
+            a_bc.merge(&bc);
+            prop_assert!(close(&ab_c, &a_bc), "merge not associative");
+            // merge vs sequentially pushing the union
+            let mut seq = Moments::new();
+            for &x in xa.iter().chain(xb.iter()) {
+                seq.push(x);
+            }
+            prop_assert!(
+                close(&ab, &seq),
+                "merge {:?} vs sequential {:?}",
+                ab,
+                seq
+            );
+            // variance is non-negative by construction (no clamp)
+            prop_assert!(ab.var_unbiased() >= 0.0, "negative variance");
+            Ok(())
+        });
+    }
+
+    // ---- QuantileSketch ----
+
+    #[test]
+    fn quantile_union_is_bit_identical_to_merge() {
+        check("quantile merge = union", 32, |rng| {
+            let gen = |rng: &mut Rng, n: usize| -> Vec<f64> {
+                (0..n).map(|_| rng.f64() * 1e6).collect()
+            };
+            let xa = gen(rng, rng.below(200));
+            let xb = gen(rng, rng.below(200));
+            let xc = gen(rng, rng.below(200));
+            let sk = |xs: &[f64]| {
+                let mut s = QuantileSketch::for_counts();
+                for &x in xs {
+                    s.push(x);
+                }
+                s
+            };
+            let (a, b, c) = (sk(&xa), sk(&xb), sk(&xc));
+            // union vs merge: bit-identical struct equality
+            let mut union: Vec<f64> = xa.clone();
+            union.extend(&xb);
+            let mut ab = a.clone();
+            ab.merge(&b);
+            prop_assert!(ab == sk(&union), "merge != sketch of union");
+            // exactly commutative and associative
+            let mut ba = b.clone();
+            ba.merge(&a);
+            prop_assert!(ab == ba, "quantile merge not commutative");
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            prop_assert!(ab_c == a_bc, "quantile merge not associative");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantile_error_bound_vs_exact_sort() {
+        check("quantile error bound", 32, |rng| {
+            let n = 1 + rng.below(500);
+            // in-range data for for_counts(): [1, 2^32)
+            let xs: Vec<f64> = (0..n)
+                .map(|_| 1.0 + rng.f64() * rng.f64() * 1e6)
+                .collect();
+            let mut s = QuantileSketch::for_counts();
+            for &x in &xs {
+                s.push(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(f64::total_cmp);
+            let gamma = 1.0 + s.rel_error_bound();
+            for &p in &[1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9] {
+                let rank =
+                    ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+                let exact = sorted[rank.min(n) - 1];
+                let est = s.quantile(p);
+                prop_assert!(
+                    est >= exact * (1.0 - 1e-12),
+                    "p{p}: est {est} under-estimates exact {exact}"
+                );
+                prop_assert!(
+                    est <= exact * gamma * (1.0 + 1e-12),
+                    "p{p}: est {est} above bound {} (exact {exact})",
+                    exact * gamma
+                );
+            }
+            // p=100 is the tracked max, exactly
+            prop_assert!(
+                s.quantile(100.0) == sorted[n - 1],
+                "p100 not exact max"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantile_handles_zeros_out_of_range_and_nan() {
+        let mut s = QuantileSketch::for_counts();
+        // zeros dominate: low quantiles return the exact min (0.0)
+        s.push_n(0.0, 70);
+        s.push_n(100.0, 30);
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.quantile(50.0), 0.0);
+        assert!(s.quantile(99.0) >= 100.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 100.0);
+        // overflow clamps to the tracked max
+        s.push(1e12);
+        assert_eq!(s.quantile(100.0), 1e12);
+        // NaN inflates the underflow count but not the endpoints
+        s.push(f64::NAN);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 1e12);
+        // empty sketch convention
+        assert_eq!(QuantileSketch::for_unit().quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn push_n_equals_repeated_push() {
+        let mut a = QuantileSketch::for_loss();
+        let mut b = QuantileSketch::for_loss();
+        for &(x, m) in &[(0.01, 5u64), (1.7, 3), (0.0, 2), (64.0, 1)] {
+            a.push_n(x, m);
+            for _ in 0..m {
+                b.push(x);
+            }
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched configs")]
+    fn quantile_merge_rejects_mismatched_configs() {
+        let mut a = QuantileSketch::for_counts();
+        a.merge(&QuantileSketch::for_unit());
+    }
+
+    // ---- PowerSumSketch ----
+
+    #[test]
+    fn power_sum_modular_identities() {
+        check("power-sum identities", 32, |rng| {
+            let gen = |rng: &mut Rng, n: usize| -> Vec<u64> {
+                (0..n).map(|_| rng.next_u64()).collect()
+            };
+            let xa = gen(rng, rng.below(64));
+            let xb = gen(rng, 1 + rng.below(64));
+            let xc = gen(rng, rng.below(64));
+            let sk = |xs: &[u64]| {
+                let mut s = PowerSumSketch::new();
+                for &x in xs {
+                    s.insert(x);
+                }
+                s
+            };
+            let (a, b, c) = (sk(&xa), sk(&xb), sk(&xc));
+            // union == merge, bit-identical
+            let mut union = xa.clone();
+            union.extend(&xb);
+            let mut ab = a;
+            ab.merge(&b);
+            prop_assert!(ab == sk(&union), "merge != sketch of union");
+            // exactly commutative and associative
+            let mut ba = b;
+            ba.merge(&a);
+            prop_assert!(ab == ba, "power-sum merge not commutative");
+            let mut ab_c = ab;
+            ab_c.merge(&c);
+            let mut bc = b;
+            bc.merge(&c);
+            let mut a_bc = a;
+            a_bc.merge(&bc);
+            prop_assert!(ab_c == a_bc, "power-sum merge not associative");
+            // subtracting a sub-stream recovers the rest exactly
+            let mut diff = ab;
+            diff.sub(&a);
+            prop_assert!(diff == b, "sub(A∪B, A) != B");
+            // multiplicity: insert_n(x, m) == m inserts of x
+            let x = rng.next_u64();
+            let m = 1 + rng.below(100) as u64;
+            let mut by_n = PowerSumSketch::new();
+            by_n.insert_n(x, m);
+            let mut by_loop = PowerSumSketch::new();
+            for _ in 0..m {
+                by_loop.insert(x);
+            }
+            prop_assert!(by_n == by_loop, "insert_n != repeated insert");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn power_sum_decodes_a_single_outstanding_element() {
+        let mut fleet = PowerSumSketch::new();
+        let ids = [0xDEAD_BEEFu64, 0xFEED_FACE, 0x0123_4567_89AB_CDEF];
+        for &id in &ids {
+            fleet.insert(id);
+        }
+        // a straggler reported everything but the last write
+        let mut partial = PowerSumSketch::new();
+        partial.insert(ids[0]);
+        partial.insert(ids[1]);
+        let mut missing = fleet;
+        missing.sub(&partial);
+        assert_eq!(
+            missing.decode_one(),
+            Some(ids[2] % POWER_SUM_MODULUS)
+        );
+        assert_eq!(fleet.decode_one(), None, "3 outstanding: no decode");
+        // empty sketch and exact cancellation
+        let mut zero = fleet;
+        zero.sub(&fleet);
+        assert!(zero.is_empty());
+    }
+
+    // ---- constant size ----
+
+    #[test]
+    fn approx_bytes_constant_in_stream_length() {
+        let mut m = Moments::new();
+        let mut q = QuantileSketch::for_counts();
+        let mut p = PowerSumSketch::new();
+        let (b_m, b_q, b_p) =
+            (m.approx_bytes(), q.approx_bytes(), p.approx_bytes());
+        let mut rng = Rng::new(7);
+        for i in 0..10_000u64 {
+            m.push(rng.f64());
+            q.push(rng.f64() * 1e9);
+            p.insert(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        assert_eq!(m.approx_bytes(), b_m);
+        assert_eq!(q.approx_bytes(), b_q);
+        assert_eq!(p.approx_bytes(), b_p);
+        // and a few words really means a few words
+        assert!(b_p <= 48, "power-sum sketch grew: {b_p} B");
+    }
+}

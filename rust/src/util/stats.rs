@@ -60,6 +60,26 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
     let mut v = xs.to_vec();
     v.sort_by(f64::total_cmp);
+    interpolate(&v, p)
+}
+
+/// Several percentiles of the same data with a single clone + sort
+/// (the serve report reads p50/p99/p999 off one latency vector; three
+/// `percentile` calls meant three sorts). Each result is bit-identical
+/// to the corresponding single-`percentile` call, including the NaN
+/// total-order behavior documented there; empty input yields 0.0 for
+/// every requested rank.
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; ps.len()];
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    ps.iter().map(|&p| interpolate(&v, p)).collect()
+}
+
+/// Linear interpolation into already-sorted, non-empty data.
+fn interpolate(v: &[f64], p: f64) -> f64 {
     let idx = (p / 100.0) * (v.len() - 1) as f64;
     let lo = idx.floor() as usize;
     let hi = idx.ceil() as usize;
@@ -121,5 +141,28 @@ mod tests {
         let xs = [neg_nan, 5.0, 7.0];
         assert!(percentile(&xs, 0.0).is_nan());
         assert_eq!(percentile(&xs, 100.0), 7.0);
+    }
+
+    #[test]
+    fn percentiles_matches_percentile_bitwise() {
+        let xs = [9.0, 1.0, 4.0, 4.0, 2.5, 8.0, 0.5];
+        let ps = [0.0, 12.5, 50.0, 99.0, 99.9, 100.0];
+        let batch = percentiles(&xs, &ps);
+        assert_eq!(batch.len(), ps.len());
+        for (i, &p) in ps.iter().enumerate() {
+            assert!(
+                batch[i].to_bits() == percentile(&xs, p).to_bits(),
+                "p{p}: batch {} vs single {}",
+                batch[i],
+                percentile(&xs, p)
+            );
+        }
+        // empty input and NaN contract carry over
+        assert_eq!(percentiles(&[], &ps), vec![0.0; ps.len()]);
+        let poisoned = [3.0, f64::NAN, 1.0, 2.0];
+        let got = percentiles(&poisoned, &[0.0, 50.0, 100.0]);
+        assert_eq!(got[0], 1.0);
+        assert!((got[1] - 2.5).abs() < 1e-12);
+        assert!(got[2].is_nan());
     }
 }

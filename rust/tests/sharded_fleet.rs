@@ -53,10 +53,23 @@ fn sharded_run_is_bit_identical_to_cloned_fleet() {
             "device {d} diverged between cloned and sharded engines"
         );
         assert_eq!(a.series, b.series, "device {d} series diverged");
+        // per-device sketch telemetry is part of the fidelity contract:
+        // the wear histogram, write-event quACK, and loss sketch must
+        // survive suspend/resume bit-for-bit
+        assert_eq!(
+            a.telemetry, b.telemetry,
+            "device {d} telemetry sketches diverged"
+        );
     }
     assert!(
         (baseline.mean_final_ema - sharded.mean_final_ema).abs() < 1e-12
     );
+    // both engines push the same f64 sequence in device order into the
+    // same accumulators, so the merged fleet-level sketches (and the
+    // Welford moments) are bit-identical, not merely close
+    assert_eq!(baseline.ema_moments, sharded.ema_moments);
+    assert_eq!(baseline.ema_sketch, sharded.ema_sketch);
+    assert_eq!(baseline.telemetry, sharded.telemetry);
     assert_eq!(baseline.worst_cell_writes, sharded.worst_cell_writes);
     assert_eq!(
         baseline.federated_payload_bytes,
@@ -81,6 +94,17 @@ fn hundred_thousand_records_fit_in_shard_bounded_memory() {
     assert_eq!(rows.len(), 1);
     assert_eq!(rows[0].text("kind"), Some("sharded-fleet"));
     assert_eq!(rows[0].text("population"), Some("100000"));
+    // the percentile columns ride the same single row: telemetry for
+    // 10^5 devices costs a constant few KB of sketch state, not a
+    // population-sized vector
+    assert!(rows[0].text("p99_writes").is_some());
+    assert!(rows[0].text("p999_acc_ema").is_some());
+    let telemetry_bytes = rep.telemetry_bytes();
+    assert!(
+        telemetry_bytes < 16 * 1024,
+        "fleet sketch state not constant-size: {telemetry_bytes} B"
+    );
+    assert_eq!(rep.ema_sketch.count(), 100_000);
 
     // record-size arithmetic, not vibes: the accounting sums actual
     // buffer lengths per record, and the peak resident set is one
@@ -135,4 +159,40 @@ fn federation_changes_factors_but_not_the_baseline_contract() {
         rep2.devices[0].to_row().jsonl()
     );
     assert_eq!(rep.agg_rel_err_mean, rep2.agg_rel_err_mean);
+}
+
+#[test]
+fn fleet_sketch_quantiles_bound_the_exact_population_statistics() {
+    // the merged accuracy-EMA sketch vs the exact per-device values it
+    // summarized: nearest-rank quantiles must respect the documented
+    // bound (never under-estimate; over-estimate <= one bin's ratio)
+    let cfg = lrt_cfg();
+    let n = 5;
+    let mut scfg = ShardedFleetCfg::new(cfg, n);
+    scfg.keep_reports = n;
+    let rep = run_sharded_fleet(&scfg).unwrap();
+    assert_eq!(rep.devices.len(), n);
+    let mut emas: Vec<f64> =
+        rep.devices.iter().map(|r| r.final_ema).collect();
+    emas.sort_by(f64::total_cmp);
+    // Welford mean/std agree with the definitionally-exact two-pass
+    // form on the same values
+    let exact_mean = emas.iter().sum::<f64>() / n as f64;
+    assert!((rep.mean_final_ema - exact_mean).abs() < 1e-12);
+    // p=100 is exact; interior ranks respect the bound for in-range
+    // values (EMAs below the sketch floor report the exact min)
+    assert_eq!(rep.ema_sketch.quantile(100.0), emas[n - 1]);
+    let gamma = 1.0 + rep.ema_sketch.rel_error_bound();
+    for &p in &[50.0, 99.0] {
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+        let exact = emas[rank.min(n) - 1];
+        let est = rep.ema_sketch.quantile(p);
+        if exact >= 1.0 / 128.0 {
+            assert!(est >= exact * (1.0 - 1e-12), "p{p}: {est} < {exact}");
+            assert!(
+                est <= exact * gamma * (1.0 + 1e-12),
+                "p{p}: {est} above bound (exact {exact})"
+            );
+        }
+    }
 }
